@@ -1,0 +1,48 @@
+//! Algorithm-selection sweep: the coordinator as an "improved MPI".
+//!
+//! The paper's conclusion observes that native MPI collective selection
+//! "can easily be improved, and sometimes quite considerably". This
+//! example sweeps the paper's count grids on the simulated Hydra system
+//! and prints, for every (operation, count), which algorithm the
+//! autotuner picks, what the native library would have delivered, and
+//! the speed-up — i.e. the selection table a better library would ship.
+//!
+//! Run: `MLANE_REPS=5 cargo run --release --example autotune`
+
+use mlane::coordinator::{Algorithm, Collectives, Op};
+use mlane::harness::{ALLTOALL_COUNTS, BCAST_COUNTS, SCATTER_COUNTS};
+use mlane::model::PersonaName;
+use mlane::topology::Cluster;
+
+fn sweep(coll: &Collectives, name: &str, counts: &[u64], mk: impl Fn(u64) -> Op) {
+    println!("--- {name} ---");
+    println!(
+        "{:>9} {:<24} {:>12} {:>12} {:>8}",
+        "c", "winner", "winner(us)", "native(us)", "speedup"
+    );
+    for &c in counts {
+        let op = mk(c);
+        let native = coll.run(op, Algorithm::Native);
+        let (best, m) = coll.autotune(op, &coll.default_candidates(op));
+        println!(
+            "{:>9} {:<24} {:>12.2} {:>12.2} {:>8.2}",
+            c,
+            format!("{} ({})", m.algorithm, best.label()),
+            m.summary.avg,
+            native.summary.avg,
+            native.summary.avg / m.summary.avg
+        );
+    }
+    println!();
+}
+
+fn main() {
+    let cluster = Cluster::hydra(2);
+    for persona in [PersonaName::OpenMpi, PersonaName::IntelMpi, PersonaName::Mpich] {
+        let coll = Collectives::new(cluster, persona);
+        println!("=== persona: {} ===\n", persona.label());
+        sweep(&coll, "bcast", BCAST_COUNTS, |c| Op::Bcast { root: 0, c });
+        sweep(&coll, "scatter", SCATTER_COUNTS, |c| Op::Scatter { root: 0, c });
+        sweep(&coll, "alltoall", ALLTOALL_COUNTS, |c| Op::Alltoall { c });
+    }
+}

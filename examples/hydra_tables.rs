@@ -1,0 +1,34 @@
+//! Reproduce the paper's headline tables on the simulated Hydra system
+//! and compare against the transcribed paper anchors.
+//!
+//! Regenerates Table 12 (full-lane Bcast vs native MPI_Bcast, Open MPI)
+//! and Table 41 (full-lane Alltoall vs native MPI_Alltoall, Open MPI) —
+//! the two tables where the paper's most quotable results live (the ~5×
+//! full-lane broadcast win; the native alltoall mid-size collapse) —
+//! then prints simulated-vs-paper ratios for every anchor cell.
+//!
+//! Run: `MLANE_REPS=10 cargo run --release --example hydra_tables`
+
+use mlane::harness::{anchors, run_table, table};
+
+fn main() {
+    for num in [12u32, 41] {
+        let spec = table(num).expect("registry table");
+        let out = run_table(&spec);
+        print!("{}", out.render());
+        println!();
+    }
+
+    println!("--- anchor comparison (shape check; see EXPERIMENTS.md) ---");
+    println!(
+        "{:>6} {:<28} {:>9} {:>12} {:>12} {:>7}",
+        "table", "section", "c", "paper(us)", "sim(us)", "ratio"
+    );
+    for c in anchors::compare_all() {
+        println!(
+            "{:>6} {:<28} {:>9} {:>12.2} {:>12.2} {:>7.2}",
+            c.anchor.table, c.anchor.section, c.anchor.c, c.anchor.paper_avg_us,
+            c.simulated_avg_us, c.ratio
+        );
+    }
+}

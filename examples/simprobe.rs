@@ -1,0 +1,9 @@
+use mlane::{algorithms::alltoall, model::CostModel, sim::Simulator, topology::Cluster};
+fn main() {
+    let cl = Cluster::hydra(2);
+    let s = alltoall::build(cl, 869, alltoall::AlltoallAlg::KLane);
+    let m = CostModel::hydra_baseline();
+    let sim = Simulator::new(&s, &m);
+    let mut st = sim.new_state();
+    for rep in 0..6 { sim.run_into(&mut st, rep); }
+}

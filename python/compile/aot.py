@@ -1,0 +1,89 @@
+"""AOT export: lower the L2 node-phase graphs to HLO text artifacts.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` rust crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/gen_hlo.py.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+
+Emits one ``<name>__n<n>_c<c>.hlo.txt`` per (phase, shape) combination plus
+``manifest.txt`` (tab-separated: name, n, c, dtype, input shapes, file)
+that the rust runtime uses to locate executables.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Shapes the rust exec runtime requests. Node sizes are small because the
+# exec backend runs p = N*n OS threads; counts cover the eager/rendezvous
+# range the examples use. Element type is int32 (the paper uses MPI_INT).
+NODE_SIZES = (4, 8)
+COUNTS = (16, 256, 1024)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def phases(n: int, c: int):
+    """(name, jitted fn, example args) for every node phase at (n, c)."""
+    return [
+        ("node_alltoall", jax.jit(model.node_alltoall), (spec(n, n, c),)),
+        ("node_allgather", jax.jit(model.node_allgather), (spec(n, c),)),
+        (
+            "node_scatter",
+            jax.jit(lambda x: model.node_scatter(x, n)),
+            (spec(n * c),),
+        ),
+        ("node_bcast", jax.jit(lambda x: model.node_bcast(x, n)), (spec(c),)),
+        ("shuffle_step", jax.jit(model.shuffle_step), (spec(n, n, c),)),
+        ("checksum", jax.jit(model.payload_checksum), (spec(n * c),)),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--node-sizes", type=int, nargs="*", default=list(NODE_SIZES))
+    ap.add_argument("--counts", type=int, nargs="*", default=list(COUNTS))
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for n in args.node_sizes:
+        for c in args.counts:
+            for name, fn, specs in phases(n, c):
+                fname = f"{name}__n{n}_c{c}.hlo.txt"
+                path = os.path.join(args.out_dir, fname)
+                text = to_hlo_text(fn.lower(*specs))
+                with open(path, "w") as f:
+                    f.write(text)
+                shapes = ";".join(
+                    "x".join(map(str, s.shape)) or "scalar" for s in specs
+                )
+                manifest.append(f"{name}\t{n}\t{c}\tint32\t{shapes}\t{fname}")
+                print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

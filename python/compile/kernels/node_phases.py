@@ -1,0 +1,148 @@
+"""L1 Pallas kernels: node-local data-redistribution phases.
+
+The k-lane and full-lane algorithms (paper §2.2–2.3) interleave off-node
+point-to-point communication with node-local collective phases performed
+over shared memory. In this reproduction the node-local phases are real
+compute kernels: tiled block permutations written in Pallas.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): each grid cell moves one
+(rank, block) tile through VMEM via a ``BlockSpec`` index map — the
+HBM↔VMEM schedule plays the role of the shared-memory bus in the paper's
+§2.4 model. The kernels are copy-bound: no MXU work, roofline = memory
+bandwidth.
+
+All kernels use ``interpret=True``: CPU-PJRT cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the rust runtime
+(PJRT CPU client) can run after AOT export.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # see module docstring
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def alltoall_pack(x):
+    """Node-local alltoall (block transpose): y[i, j] = x[j, i].
+
+    x: (n, n, c). Grid (n, n); each cell moves one block of c elements.
+    The output tile (i, j) reads input tile (j, i) — the permutation lives
+    entirely in the BlockSpec index maps, the kernel body is a straight
+    VMEM-resident copy.
+    """
+    n, n2, c = x.shape
+    assert n == n2, f"alltoall_pack needs a square block matrix, got {x.shape}"
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(n, n),
+        in_specs=[pl.BlockSpec((1, 1, c), lambda i, j: (j, i, 0))],
+        out_specs=pl.BlockSpec((1, 1, c), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n, c), x.dtype),
+        interpret=INTERPRET,
+    )(x)
+
+
+def allgather_concat(x):
+    """Node-local allgather: y[i, j] = x[j] for all on-node ranks i.
+
+    x: (n, c) -> y: (n, n, c). Completion phase of the full-lane broadcast
+    (paper §2.2): each rank's c/n-block is collected by everyone.
+    """
+    n, c = x.shape
+
+    def _gather_kernel(x_ref, o_ref):
+        o_ref[0, 0, :] = x_ref[0, :]
+
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(n, n),
+        in_specs=[pl.BlockSpec((1, c), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((1, 1, c), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n, c), x.dtype),
+        interpret=INTERPRET,
+    )(x)
+
+
+def scatter_slice(x, n):
+    """Node-local scatter: split the root's flat buffer into n blocks.
+
+    x: (n*c,) -> y: (n, c), y[i] = x[i*c:(i+1)*c]. Entry phase of the
+    full-lane algorithms on the root node (paper §2.2).
+    """
+    (m,) = x.shape
+    assert m % n == 0, f"buffer of {m} elements not divisible into {n} blocks"
+    c = m // n
+
+    def _slice_kernel(x_ref, o_ref):
+        o_ref[0, :] = x_ref[...]
+
+    return pl.pallas_call(
+        _slice_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((c,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), x.dtype),
+        interpret=INTERPRET,
+    )(x)
+
+
+def bcast_tile(x, n):
+    """Node-local broadcast: replicate the root's block to n ranks.
+
+    x: (c,) -> y: (n, c), y[i] = x. Used by the adapted k-lane algorithms
+    (paper §2.3) when a local root hands a received block to the k lane
+    processors (and finally to all n on-node ranks).
+    """
+    (c,) = x.shape
+
+    def _tile_kernel(x_ref, o_ref):
+        o_ref[0, :] = x_ref[...]
+
+    return pl.pallas_call(
+        _tile_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((c,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((1, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), x.dtype),
+        interpret=INTERPRET,
+    )(x)
+
+
+def checksum(x, tile=1024):
+    """Wrap-around int32 sum of a flat int32 buffer -> shape (1,).
+
+    Tiled accumulating reduction: grid cell i adds the sum of tile i into
+    the single output element (sequential grid => no race in interpret or
+    TPU semantics). Used by the exec runtime to validate payloads.
+    """
+    (m,) = x.shape
+    t = min(tile, m)
+    if m % t != 0:  # pad to a whole number of tiles; zeros don't change the sum
+        pad = t - m % t
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+        m += pad
+
+    def _kernel(x_ref, o_ref):
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.sum(x_ref[...]).reshape(1)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // t,),
+        in_specs=[pl.BlockSpec((t,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.int32),
+        interpret=INTERPRET,
+    )(x)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas node-phase kernels.
+
+These are the *semantic definitions* of the node-local data-redistribution
+phases used by the k-lane / full-lane algorithms (paper §2.2–2.3):
+
+- ``alltoall_pack``  — node-local alltoall: block transpose.
+- ``allgather_concat`` — node-local allgather: every on-node rank ends up
+  with every rank's block (full-lane bcast completion phase).
+- ``scatter_slice``  — node-local scatter: root's flat buffer split into
+  per-rank blocks (full-lane bcast/scatter entry phase).
+- ``bcast_tile``     — node-local broadcast: root's block replicated to all
+  on-node ranks (k-lane adapted algorithms, §2.3).
+- ``checksum``       — wrap-around int32 payload checksum used by the exec
+  runtime to validate delivered data.
+
+Every kernel in ``kernels/`` must match its oracle exactly (integer data,
+bitwise equality).
+"""
+
+import jax.numpy as jnp
+
+
+def alltoall_pack(x):
+    """x: (n, n, c); x[i, j] = block rank i sends to rank j.
+
+    Returns y with y[i, j] = x[j, i] — i.e. y[i] is the receive buffer of
+    rank i (block j arrived from rank j).
+    """
+    return jnp.swapaxes(x, 0, 1)
+
+
+def allgather_concat(x):
+    """x: (n, c) per-rank blocks. Returns y: (n, n, c), y[i, j] = x[j]."""
+    n = x.shape[0]
+    return jnp.broadcast_to(x[None, :, :], (n, n, x.shape[1]))
+
+
+def scatter_slice(x, n):
+    """x: (n*c,) root buffer. Returns y: (n, c), y[i] = x[i*c:(i+1)*c]."""
+    return x.reshape(n, -1)
+
+
+def bcast_tile(x, n):
+    """x: (c,) root block. Returns y: (n, c), y[i] = x."""
+    return jnp.broadcast_to(x[None, :], (n, x.shape[0]))
+
+
+def checksum(x):
+    """Wrap-around int32 sum of a flat buffer. Returns shape (1,) int32."""
+    return jnp.sum(x, dtype=jnp.int32).reshape(1)

@@ -1,0 +1,50 @@
+"""L2: node-phase compute graphs composed from the L1 Pallas kernels.
+
+Each function here is a complete node-local phase of one of the paper's
+k-lane / full-lane algorithms (§2.2–2.3), expressed as a jax computation
+that calls the Pallas kernels in ``kernels/node_phases.py``. ``aot.py``
+lowers these once, at the shapes the rust exec runtime requests, to HLO
+text under ``artifacts/`` — python never runs on the request path.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import node_phases as k
+
+
+def node_alltoall(x):
+    """Node-local alltoall phase: (n, n, c) block matrix transpose."""
+    return k.alltoall_pack(x)
+
+
+def node_allgather(x):
+    """Node-local allgather phase: (n, c) -> (n, n, c)."""
+    return k.allgather_concat(x)
+
+
+def node_scatter(x, n):
+    """Node-local scatter phase: flat (n*c,) root buffer -> (n, c)."""
+    return k.scatter_slice(x, n)
+
+
+def node_bcast(x, n):
+    """Node-local broadcast phase: (c,) root block -> (n, c)."""
+    return k.bcast_tile(x, n)
+
+
+def payload_checksum(x):
+    """Validation checksum over a flat int32 payload -> (1,)."""
+    return k.checksum(x)
+
+
+def shuffle_step(x):
+    """One full-lane alltoall node step (paper §2.2), fused.
+
+    x: (n, n, c) — on-node send blocks. Combines the node-local alltoall
+    (combine blocks headed to the same destination node) with a payload
+    checksum of the packed result, so the exec runtime gets both the
+    packed buffer and an integrity witness from a single executable.
+    """
+    packed = k.alltoall_pack(x)
+    csum = k.checksum(packed.reshape(-1))
+    return packed, csum

@@ -1,0 +1,168 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Every Pallas node-phase kernel must match its pure-jnp oracle bitwise on
+integer data. Fixed-shape smoke tests plus hypothesis sweeps over shapes
+and dtypes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import node_phases as k
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rnd(shape, dtype=np.int32, seed=0):
+    rng = np.random.default_rng(seed)
+    if np.issubdtype(dtype, np.integer):
+        info = np.iinfo(dtype)
+        return rng.integers(info.min // 2, info.max // 2, size=shape, dtype=dtype)
+    return rng.standard_normal(shape).astype(dtype)
+
+
+# ---------- fixed-shape smoke tests ----------
+
+class TestAlltoallPack:
+    def test_identity_on_diagonal(self):
+        x = rnd((4, 4, 8))
+        y = np.asarray(k.alltoall_pack(x))
+        for i in range(4):
+            np.testing.assert_array_equal(y[i, i], x[i, i])
+
+    def test_matches_ref(self):
+        x = rnd((8, 8, 16), seed=1)
+        np.testing.assert_array_equal(
+            np.asarray(k.alltoall_pack(x)), np.asarray(ref.alltoall_pack(x))
+        )
+
+    def test_involution(self):
+        x = rnd((4, 4, 4), seed=2)
+        y = np.asarray(k.alltoall_pack(np.asarray(k.alltoall_pack(x))))
+        np.testing.assert_array_equal(y, x)
+
+    def test_rejects_nonsquare(self):
+        with pytest.raises(AssertionError):
+            k.alltoall_pack(rnd((4, 5, 8)))
+
+
+class TestAllgatherConcat:
+    def test_matches_ref(self):
+        x = rnd((8, 32), seed=3)
+        np.testing.assert_array_equal(
+            np.asarray(k.allgather_concat(x)), np.asarray(ref.allgather_concat(x))
+        )
+
+    def test_every_rank_gets_every_block(self):
+        x = rnd((4, 8), seed=4)
+        y = np.asarray(k.allgather_concat(x))
+        for i in range(4):
+            for j in range(4):
+                np.testing.assert_array_equal(y[i, j], x[j])
+
+
+class TestScatterSlice:
+    def test_matches_ref(self):
+        x = rnd((64,), seed=5)
+        np.testing.assert_array_equal(
+            np.asarray(k.scatter_slice(x, 8)), np.asarray(ref.scatter_slice(x, 8))
+        )
+
+    def test_blocks_partition_input(self):
+        x = rnd((32,), seed=6)
+        y = np.asarray(k.scatter_slice(x, 4))
+        np.testing.assert_array_equal(y.reshape(-1), x)
+
+    def test_rejects_indivisible(self):
+        with pytest.raises(AssertionError):
+            k.scatter_slice(rnd((10,)), 3)
+
+
+class TestBcastTile:
+    def test_matches_ref(self):
+        x = rnd((16,), seed=7)
+        np.testing.assert_array_equal(
+            np.asarray(k.bcast_tile(x, 8)), np.asarray(ref.bcast_tile(x, 8))
+        )
+
+    def test_all_rows_equal_root(self):
+        x = rnd((8,), seed=8)
+        y = np.asarray(k.bcast_tile(x, 6))
+        assert y.shape == (6, 8)
+        for i in range(6):
+            np.testing.assert_array_equal(y[i], x)
+
+
+class TestChecksum:
+    def test_matches_ref(self):
+        x = rnd((1000,), seed=9)
+        np.testing.assert_array_equal(
+            np.asarray(k.checksum(x)), np.asarray(ref.checksum(x))
+        )
+
+    def test_wraparound(self):
+        x = np.full((4,), 2**30, dtype=np.int32)
+        got = int(np.asarray(k.checksum(x))[0])
+        want = int(np.asarray(ref.checksum(jnp.asarray(x)))[0])
+        assert got == want
+
+    def test_tiling_boundary(self):
+        # exercise padding: length not a multiple of the tile
+        x = rnd((1025,), seed=10)
+        np.testing.assert_array_equal(
+            np.asarray(k.checksum(x, tile=256)), np.asarray(ref.checksum(x))
+        )
+
+    def test_small_buffer(self):
+        x = np.array([1, -2, 3], dtype=np.int32)
+        assert int(np.asarray(k.checksum(x))[0]) == 2
+
+
+# ---------- hypothesis sweeps ----------
+
+dims = st.integers(min_value=1, max_value=9)
+counts = st.integers(min_value=1, max_value=130)
+int_dtypes = st.sampled_from([np.int32, np.int8, np.uint16])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@given(n=dims, c=counts, dtype=int_dtypes, seed=seeds)
+def test_alltoall_pack_prop(n, c, dtype, seed):
+    x = rnd((n, n, c), dtype, seed)
+    np.testing.assert_array_equal(
+        np.asarray(k.alltoall_pack(x)), np.asarray(ref.alltoall_pack(x))
+    )
+
+
+@given(n=dims, c=counts, dtype=int_dtypes, seed=seeds)
+def test_allgather_concat_prop(n, c, dtype, seed):
+    x = rnd((n, c), dtype, seed)
+    np.testing.assert_array_equal(
+        np.asarray(k.allgather_concat(x)), np.asarray(ref.allgather_concat(x))
+    )
+
+
+@given(n=dims, c=counts, dtype=int_dtypes, seed=seeds)
+def test_scatter_slice_prop(n, c, dtype, seed):
+    x = rnd((n * c,), dtype, seed)
+    np.testing.assert_array_equal(
+        np.asarray(k.scatter_slice(x, n)), np.asarray(ref.scatter_slice(x, n))
+    )
+
+
+@given(n=dims, c=counts, dtype=int_dtypes, seed=seeds)
+def test_bcast_tile_prop(n, c, dtype, seed):
+    x = rnd((c,), dtype, seed)
+    np.testing.assert_array_equal(
+        np.asarray(k.bcast_tile(x, n)), np.asarray(ref.bcast_tile(x, n))
+    )
+
+
+@given(m=st.integers(min_value=1, max_value=5000), seed=seeds)
+def test_checksum_prop(m, seed):
+    x = rnd((m,), np.int32, seed)
+    np.testing.assert_array_equal(np.asarray(k.checksum(x)), np.asarray(ref.checksum(x)))

@@ -1,0 +1,90 @@
+//! Ablation benches for the design choices DESIGN.md §5 calls out:
+//!
+//! 1. k-lane broadcast: full node-bcast-on-receive (the paper's
+//!    implementation, §3) vs the theoretical two-phase variant
+//!    (k-way bcast + final k × n/k-way fan-out).
+//! 2. Alltoall: round-robin (message-size optimal) vs Bruck message
+//!    combining (round optimal) — where does the crossover sit?
+//! 3. Full-lane speed-up vs number of physical lanes (the §2.4
+//!    question: does k lanes buy a k-fold speed-up?).
+//! 4. Eager/rendezvous threshold sensitivity.
+
+use mlane::algorithms::{allgather, alltoall, bcast};
+use mlane::model::CostModel;
+use mlane::sim;
+use mlane::topology::Cluster;
+
+fn quiet() -> CostModel {
+    let mut m = CostModel::hydra_baseline();
+    m.jitter_mean = 0.0;
+    m
+}
+
+fn t(s: &mlane::schedule::Schedule, m: &CostModel) -> f64 {
+    sim::measure(s, m, 3, 1, 7).avg
+}
+
+fn main() {
+    let cl = Cluster::hydra(2);
+    let m = quiet();
+
+    println!("=== ablation 1: k-lane bcast, full node bcast vs two-phase ===");
+    println!("{:>4} {:>10} {:>14} {:>14} {:>8}", "k", "c", "full(us)", "two-phase(us)", "ratio");
+    for k in [2u32, 4, 6] {
+        for c in [1000u64, 100_000, 1_000_000] {
+            let full = t(&bcast::build(cl, 0, c, bcast::BcastAlg::KLane { k, two_phase: false }), &m);
+            let two = t(&bcast::build(cl, 0, c, bcast::BcastAlg::KLane { k, two_phase: true }), &m);
+            println!("{:>4} {:>10} {:>14.2} {:>14.2} {:>8.2}", k, c, full, two, full / two);
+        }
+    }
+
+    println!("\n=== ablation 2: alltoall round-robin vs Bruck (k = 2) ===");
+    println!("{:>10} {:>14} {:>14} {:>10}", "c", "roundrobin", "bruck", "winner");
+    for c in [1u64, 6, 9, 53, 87, 521, 869] {
+        let rr = t(&alltoall::build(cl, c, alltoall::AlltoallAlg::KPorted { k: 2 }), &m);
+        let br = t(&alltoall::build(cl, c, alltoall::AlltoallAlg::Bruck { k: 2 }), &m);
+        println!(
+            "{:>10} {:>14.2} {:>14.2} {:>10}",
+            c,
+            rr,
+            br,
+            if br < rr { "bruck" } else { "roundrobin" }
+        );
+    }
+
+    println!("\n=== ablation 3: full-lane bcast speed-up vs physical lanes ===");
+    println!("{:>6} {:>14} {:>10}", "lanes", "t(us)", "speedup");
+    let c = 1_000_000u64;
+    let mut base = None;
+    for lanes in [1u32, 2, 4, 8] {
+        let mut mm = quiet();
+        mm.phys_lanes = lanes;
+        let s = bcast::build(Cluster::new(36, 32, lanes.min(32)), 0, c, bcast::BcastAlg::FullLane);
+        let v = t(&s, &mm);
+        let b = *base.get_or_insert(v);
+        println!("{:>6} {:>14.2} {:>10.2}", lanes, v, b / v);
+    }
+
+    println!("\n=== ablation 4: allgather algorithm family (extension ops) ===");
+    println!("{:>10} {:>12} {:>12} {:>12} {:>12}", "c", "ring", "rd", "bruck(2)", "full-lane");
+    for c in [1u64, 87, 869] {
+        let tt = |alg| t(&allgather::build(cl, c, alg), &m);
+        println!(
+            "{:>10} {:>12.2} {:>12.2} {:>12.2} {:>12.2}",
+            c,
+            tt(allgather::AllgatherAlg::Ring),
+            tt(allgather::AllgatherAlg::RecursiveDoubling),
+            tt(allgather::AllgatherAlg::Bruck { k: 2 }),
+            tt(allgather::AllgatherAlg::FullLane),
+        );
+    }
+
+    println!("\n=== ablation 5: eager threshold sensitivity (bcast binomial, c=1000) ===");
+    println!("{:>12} {:>14}", "eager(bytes)", "t(us)");
+    for eager in [0u64, 1024, 4096, 16384, 65536] {
+        let mut mm = quiet();
+        mm.eager_net = eager;
+        let s = bcast::build(cl, 0, 1000, bcast::BcastAlg::Binomial);
+        println!("{:>12} {:>14.2}", eager, t(&s, &mm));
+    }
+}

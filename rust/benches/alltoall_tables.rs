@@ -1,0 +1,9 @@
+//! Paper §4.4 (Tables 38–49): alltoall on the full Hydra system —
+//! k-lane (32 virtual lanes), k-ported (k=1..6), full-lane and native
+//! MPI_Alltoall, for all three library personas.
+
+mod bench_common;
+
+fn main() {
+    bench_common::run_tables("alltoall (Tables 38-49)", 38..=49);
+}

@@ -1,0 +1,9 @@
+//! Paper §4.2 (Tables 8–22): broadcast on the full Hydra system —
+//! k-lane (k=1..6), k-ported (k=1..6), full-lane and native MPI_Bcast,
+//! for all three library personas.
+
+mod bench_common;
+
+fn main() {
+    bench_common::run_tables("broadcast (Tables 8-22)", 8..=22);
+}

@@ -1,0 +1,37 @@
+//! Shared driver for the table-regeneration benches (criterion is not
+//! available offline; these are `harness = false` benches that both
+//! *time* the regeneration and *emit* the paper-format tables + CSVs).
+
+use std::time::Instant;
+
+use mlane::harness::{run_table, table};
+
+/// Repetition count for bench runs (kept modest: the simulator's jitter
+/// converges quickly; override with MLANE_REPS).
+pub fn bench_reps() -> String {
+    std::env::var("MLANE_REPS").unwrap_or_else(|_| "5".into())
+}
+
+/// Regenerate a contiguous range of paper tables, print them, write CSVs
+/// under bench_out/, and report wall time per table.
+pub fn run_tables(title: &str, numbers: impl IntoIterator<Item = u32>) {
+    std::env::set_var("MLANE_REPS", bench_reps());
+    let dir = std::path::Path::new("bench_out");
+    println!("=== {title} ===");
+    let t_all = Instant::now();
+    for n in numbers {
+        let spec = table(n).unwrap_or_else(|| panic!("no table {n}"));
+        let t0 = Instant::now();
+        let out = run_table(&spec);
+        let dt = t0.elapsed();
+        print!("{}", out.render());
+        let csv = out.write_csv(dir).expect("csv write");
+        println!(
+            "[bench] table {:>2} regenerated in {:>8.2?}  -> {}",
+            n,
+            dt,
+            csv.display()
+        );
+    }
+    println!("[bench] {title}: total {:.2?}", t_all.elapsed());
+}

@@ -1,0 +1,83 @@
+//! Engine micro-benchmarks (the §Perf targets in DESIGN.md):
+//! * simulator event throughput at Hydra scale;
+//! * schedule-build throughput;
+//! * exec-backend wallclock on a small cluster (channels vs XLA phases).
+
+use std::time::Instant;
+
+use mlane::algorithms::{alltoall, bcast};
+use mlane::exec::ExecRuntime;
+use mlane::model::CostModel;
+use mlane::runtime::XlaService;
+use mlane::sim::Simulator;
+use mlane::topology::Cluster;
+
+fn main() {
+    let m = CostModel::hydra_baseline();
+
+    println!("=== simulator throughput (hydra-scale klane alltoall) ===");
+    let cl = Cluster::hydra(2);
+    let t0 = Instant::now();
+    let s = alltoall::build(cl, 869, alltoall::AlltoallAlg::KLane);
+    let t_build = t0.elapsed();
+    println!("schedule build: {:.2?} ({} transfers)", t_build, s.num_transfers());
+
+    let t0 = Instant::now();
+    let sim = Simulator::new(&s, &m);
+    println!("sim preprocess: {:.2?}", t0.elapsed());
+
+    let reps = 5;
+    let t0 = Instant::now();
+    let mut events = 0u64;
+    for rep in 0..reps {
+        events += sim.run(rep as u64).events;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "sim run: {:.2?} for {reps} reps, {:.2}M events/s",
+        dt,
+        events as f64 / dt.as_secs_f64() / 1e6
+    );
+
+    println!("\n=== simulator throughput (kported bcast, many small rounds) ===");
+    let s = bcast::build(cl, 0, 100, bcast::BcastAlg::KPorted { k: 2 });
+    let sim = Simulator::new(&s, &m);
+    let t0 = Instant::now();
+    let n = 2000;
+    let mut events = 0u64;
+    for rep in 0..n {
+        events += sim.run(rep as u64).events;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{} runs in {:.2?}: {:.2}M events/s, {:.1}us/run",
+        n,
+        dt,
+        events as f64 / dt.as_secs_f64() / 1e6,
+        dt.as_secs_f64() * 1e6 / n as f64
+    );
+
+    println!("\n=== exec backend (4x4, klane alltoall c=1024) ===");
+    let cl = Cluster::new(4, 4, 2);
+    let s = alltoall::build(cl, 1024, alltoall::AlltoallAlg::KLane);
+    let rt = ExecRuntime::channels();
+    let rep = rt.run(&s, 10, 2).expect("exec");
+    let bytes = s.offnode_bytes() + s.onnode_bytes();
+    println!(
+        "channels: avg={:.1}us min={:.1}us  ({:.1} MB/s effective)",
+        rep.summary.avg,
+        rep.summary.min,
+        bytes as f64 / rep.summary.avg
+    );
+
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        let rt = ExecRuntime::with_xla(XlaService::start(std::path::Path::new("artifacts")).unwrap());
+        let rep = rt.run(&s, 10, 2).expect("exec xla");
+        println!(
+            "xla phases: avg={:.1}us min={:.1}us  (xla_phases={})",
+            rep.summary.avg, rep.summary.min, rep.xla_phases
+        );
+    } else {
+        println!("xla phases: skipped (no artifacts)");
+    }
+}

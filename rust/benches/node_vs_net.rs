@@ -1,0 +1,10 @@
+//! Paper §4.1 (Tables 2–7): compute-node vs. network performance —
+//! alltoall on p = 32 processes placed as N=32 single-core nodes vs one
+//! 32-core node, k-ported implementation vs native MPI_Alltoall, for all
+//! three library personas.
+
+mod bench_common;
+
+fn main() {
+    bench_common::run_tables("node vs network alltoall (Tables 2-7)", 2..=7);
+}

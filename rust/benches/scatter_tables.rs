@@ -1,0 +1,9 @@
+//! Paper §4.3 (Tables 23–37): scatter on the full Hydra system —
+//! k-lane (k=1..6), k-ported (k=1..6), full-lane and native MPI_Scatter,
+//! for all three library personas.
+
+mod bench_common;
+
+fn main() {
+    bench_common::run_tables("scatter (Tables 23-37)", 23..=37);
+}

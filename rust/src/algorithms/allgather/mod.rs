@@ -1,0 +1,266 @@
+//! Allgather algorithms. Block `j` (c elements) originates at rank `j`;
+//! every rank must end holding all p blocks.
+//!
+//! Allgather is the completion phase of the full-lane broadcast (§2.2)
+//! and a first-class collective in the multi-lane family ([Träff 2019;
+//! Träff & Hunold 2020]); the paper's §2.4 questions about shared-memory
+//! sustained bandwidth apply to it directly.
+//!
+//! * [`AllgatherAlg::Ring`] — p-1 rounds, bandwidth-optimal; the shape
+//!   used inside the full-lane broadcast on non-power-of-two nodes.
+//! * [`AllgatherAlg::RecursiveDoubling`] — log2 p rounds (p a power of
+//!   two; falls back to ring otherwise).
+//! * [`AllgatherAlg::Bruck`] — the k-ported dissemination algorithm:
+//!   ⌈log_{k+1} p⌉ rounds for any p; round d sends all held blocks to
+//!   the k peers at distance e·(k+1)^d.
+//! * [`AllgatherAlg::FullLane`] — problem splitting (§2.2): n concurrent
+//!   inter-node allgathers (one per core class), then a node-local
+//!   allgather of the collected class columns.
+
+use crate::algorithms::common::*;
+use crate::schedule::{BlockSet, Collective, LocalOpKind, Schedule};
+use crate::topology::Cluster;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllgatherAlg {
+    Ring,
+    RecursiveDoubling,
+    Bruck { k: u32 },
+    FullLane,
+}
+
+impl AllgatherAlg {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllgatherAlg::Ring => "allgather/ring",
+            AllgatherAlg::RecursiveDoubling => "allgather/recursive-doubling",
+            AllgatherAlg::Bruck { .. } => "allgather/bruck",
+            AllgatherAlg::FullLane => "allgather/full-lane",
+        }
+    }
+}
+
+pub fn build(cl: Cluster, c: u64, alg: AllgatherAlg) -> Schedule {
+    match alg {
+        AllgatherAlg::Ring => ring(cl, c),
+        AllgatherAlg::RecursiveDoubling => {
+            if is_pow2(cl.p()) {
+                recursive_doubling(cl, c)
+            } else {
+                ring(cl, c)
+            }
+        }
+        AllgatherAlg::Bruck { k } => bruck(cl, c, k),
+        AllgatherAlg::FullLane => fulllane(cl, c),
+    }
+}
+
+/// Ring allgather: p-1 rounds; in round r rank i forwards the block that
+/// originated at (i - r) mod p to (i + 1) mod p. Bandwidth-optimal.
+pub fn ring(cl: Cluster, c: u64) -> Schedule {
+    let p = cl.p();
+    let mut s = Schedule::new(cl, Collective::Allgather { c }, AllgatherAlg::Ring.name());
+    for r in 0..p.saturating_sub(1) {
+        for i in 0..p {
+            let origin = ring_allgather_origin(i, r, p) as u64;
+            s.add_at(r as usize, i, (i + 1) % p, BlockSet::single(origin));
+        }
+    }
+    s.finalize();
+    s
+}
+
+/// Recursive doubling: log2 p exchange rounds (p must be a power of two).
+pub fn recursive_doubling(cl: Cluster, c: u64) -> Schedule {
+    let p = cl.p();
+    assert!(is_pow2(p), "recursive doubling needs p = 2^m");
+    let mut s = Schedule::new(
+        cl,
+        Collective::Allgather { c },
+        AllgatherAlg::RecursiveDoubling.name(),
+    );
+    for d in 0..ceil_log(p, 2) {
+        for i in 0..p {
+            let peer = i ^ (1 << d);
+            let (lo, hi) = rd_group(i, d);
+            s.add_at(d as usize, i, peer, BlockSet::range(lo as u64, hi as u64));
+        }
+    }
+    s.finalize();
+    s
+}
+
+/// Bruck/dissemination allgather at radix k+1: round d (weight
+/// w = (k+1)^d) sends, for e = 1..k, all currently-held blocks to rank
+/// i - e·w (blocks travel "down" so rank i accumulates origins
+/// i, i+1, …). ⌈log_{k+1} p⌉ rounds for any p, k sends per round.
+pub fn bruck(cl: Cluster, c: u64, k: u32) -> Schedule {
+    let p = cl.p();
+    let pu = p as u64;
+    let mut s =
+        Schedule::new(cl, Collective::Allgather { c }, AllgatherAlg::Bruck { k }.name());
+    // After processing weights < w, rank i holds origins {i .. i+have-1}
+    // (mod p) where have = min(w, p) … standard dissemination invariant
+    // at radix k+1: have grows ×(k+1) per round.
+    let mut have = 1u64;
+    let mut round = 0usize;
+    while have < pu {
+        for e in 1..=k as u64 {
+            let step = e * have;
+            if step >= pu {
+                break;
+            }
+            // send current window, clipped so the receiver's window stays
+            // contiguous and ≤ p blocks total
+            let send = have.min(pu - step);
+            for i in 0..p {
+                let dst = ((i as u64 + pu - step) % pu) as u32;
+                // origins i .. i+send-1 (mod p) — ≤ 2 runs
+                let start = i as u64;
+                let blocks = if start + send <= pu {
+                    BlockSet::range(start, start + send)
+                } else {
+                    BlockSet::range(start, pu).union(BlockSet::range(0, start + send - pu))
+                };
+                s.add_at(round, i, dst, blocks);
+            }
+        }
+        have = (have * (k as u64 + 1)).min(pu);
+        round += 1;
+    }
+    s.finalize();
+    s
+}
+
+/// §2.2 full-lane allgather: per core class u, an inter-node ring
+/// allgather collects {block of (B, u) : all B} at every node; a final
+/// node-local allgather spreads the n class columns to all cores.
+pub fn fulllane(cl: Cluster, c: u64) -> Schedule {
+    let n = cl.cores;
+    let nn = cl.nodes;
+    let mut s =
+        Schedule::new(cl, Collective::Allgather { c }, AllgatherAlg::FullLane.name());
+    // Phase 1 — n concurrent inter-node ring allgathers (class u moves
+    // blocks {B·n + u}).
+    let p1 = nn.saturating_sub(1) as usize;
+    for r in 0..nn.saturating_sub(1) {
+        for u in 0..n {
+            for a in 0..nn {
+                let origin_node = ring_allgather_origin(a, r, nn);
+                let block = (origin_node * n + u) as u64;
+                s.add_at(
+                    r as usize,
+                    cl.rank_of(a, u),
+                    cl.rank_of((a + 1) % nn, u),
+                    BlockSet::single(block),
+                );
+            }
+        }
+    }
+    // Phase 2 — node-local allgather of class columns: core u of node A
+    // holds blocks {B·n + u : all B}; a local ring spreads all columns.
+    for r in 0..n.saturating_sub(1) {
+        for a in 0..nn {
+            for u in 0..n {
+                let origin_core = ring_allgather_origin(u, r, n);
+                let blocks = BlockSet::strided(origin_core as u64, n as u64, nn as u64);
+                let t = s.transfer(
+                    cl.rank_of(a, u),
+                    cl.rank_of(a, (u + 1) % n),
+                    blocks,
+                );
+                let rd = s.round_mut(p1 + r as usize);
+                rd.transfers.push(t);
+                rd.node_phase = Some(LocalOpKind::Allgather);
+            }
+        }
+    }
+    s.finalize();
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::validate::{validate, validate_ports};
+
+    fn check(cl: Cluster, alg: AllgatherAlg, ports: u32) {
+        let s = build(cl, 8, alg);
+        validate(&s).unwrap_or_else(|v| panic!("{} invalid: {v}", s.algorithm));
+        validate_ports(&s, ports).unwrap_or_else(|v| panic!("{} ports: {v}", s.algorithm));
+    }
+
+    #[test]
+    fn ring_valid() {
+        for (nodes, cores) in [(1, 1), (2, 3), (4, 4), (3, 5)] {
+            check(Cluster::new(nodes, cores, 2), AllgatherAlg::Ring, 1);
+        }
+    }
+
+    #[test]
+    fn recursive_doubling_valid_pow2() {
+        for (nodes, cores) in [(2, 2), (4, 4), (2, 8)] {
+            check(Cluster::new(nodes, cores, 2), AllgatherAlg::RecursiveDoubling, 1);
+        }
+        // non-power-of-two silently falls back to ring
+        let s = build(Cluster::new(3, 3, 1), 8, AllgatherAlg::RecursiveDoubling);
+        assert_eq!(s.algorithm, "allgather/ring");
+    }
+
+    #[test]
+    fn rd_round_count() {
+        let s = recursive_doubling(Cluster::new(4, 4, 2), 8);
+        assert_eq!(s.rounds.len(), 4); // log2(16)
+    }
+
+    #[test]
+    fn bruck_valid_various_k() {
+        for (nodes, cores) in [(2, 3), (4, 4), (3, 5), (1, 7)] {
+            let cl = Cluster::new(nodes, cores, 2);
+            for k in 1..=4 {
+                check(cl, AllgatherAlg::Bruck { k }, k);
+            }
+        }
+    }
+
+    #[test]
+    fn bruck_round_count() {
+        let cl = Cluster::new(2, 8, 2); // p = 16
+        for (k, want) in [(1u32, 4u32), (2, 3), (3, 2), (15, 1)] {
+            let s = bruck(cl, 4, k);
+            assert_eq!(s.rounds.len() as u32, want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn fulllane_valid() {
+        for (nodes, cores) in [(2, 2), (4, 4), (3, 5), (2, 7)] {
+            check(Cluster::new(nodes, cores, 2), AllgatherAlg::FullLane, 1);
+        }
+    }
+
+    #[test]
+    fn fulllane_round_count() {
+        // (N-1) inter-node + (n-1) local ring rounds
+        let s = fulllane(Cluster::new(4, 3, 2), 8);
+        assert_eq!(s.rounds.len(), 3 + 2);
+    }
+
+    #[test]
+    fn ring_is_bandwidth_optimal() {
+        // every rank sends exactly (p-1)·c elements
+        let cl = Cluster::new(2, 3, 1);
+        let c = 8u64;
+        let s = ring(cl, c);
+        for i in 0..cl.p() {
+            let sent: u64 = s
+                .rounds
+                .iter()
+                .flat_map(|r| &r.transfers)
+                .filter(|t| t.src == i)
+                .map(|t| t.bytes)
+                .sum();
+            assert_eq!(sent, (cl.p() as u64 - 1) * c * 4);
+        }
+    }
+}

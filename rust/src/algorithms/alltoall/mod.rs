@@ -1,0 +1,419 @@
+//! Alltoall algorithms (paper §2.1–2.3). Block `i·p + j` (c elements)
+//! travels from rank `i` to rank `j`; every rank starts with its p
+//! outgoing blocks.
+//!
+//! * [`AlltoallAlg::KPorted`] — §2.1 round-robin: ⌈(p-1)/k⌉ rounds, every
+//!   block sent and received exactly once (message-size optimal).
+//! * [`AlltoallAlg::Bruck`] — radix-(k+1) message combining: ⌈log_{k+1}
+//!   p⌉ rounds at the cost of data traveling multiple hops.
+//! * [`AlltoallAlg::KLane`] — §2.3: N-1 node rounds of n sub-steps each
+//!   (in a sub-step all n cores of a node send to *distinct* cores of the
+//!   target node, saturating the k lanes), then a node-local alltoall.
+//! * [`AlltoallAlg::FullLane`] — §2.2: node-local alltoall that combines
+//!   blocks by destination core class, then n concurrent inter-node
+//!   rotation alltoalls. The complete data is communicated twice.
+//! * [`AlltoallAlg::Pairwise`] — native baseline: p-1 rotation rounds.
+
+
+use crate::schedule::{BlockSet, Collective, LocalOpKind, Schedule};
+use crate::topology::Cluster;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlltoallAlg {
+    KPorted { k: u32 },
+    Bruck { k: u32 },
+    KLane,
+    FullLane,
+    Pairwise,
+}
+
+impl AlltoallAlg {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlltoallAlg::KPorted { .. } => "alltoall/k-ported",
+            AlltoallAlg::Bruck { .. } => "alltoall/bruck",
+            AlltoallAlg::KLane => "alltoall/k-lane",
+            AlltoallAlg::FullLane => "alltoall/full-lane",
+            AlltoallAlg::Pairwise => "alltoall/pairwise",
+        }
+    }
+}
+
+pub fn build(cl: Cluster, c: u64, alg: AlltoallAlg) -> Schedule {
+    match alg {
+        AlltoallAlg::KPorted { k } => kported(cl, c, k),
+        AlltoallAlg::Bruck { k } => bruck(cl, c, k),
+        AlltoallAlg::KLane => klane(cl, c),
+        AlltoallAlg::FullLane => fulllane(cl, c),
+        AlltoallAlg::Pairwise => pairwise(cl, c),
+    }
+}
+
+#[inline]
+fn bid(p: u32, src: u32, dst: u32) -> u64 {
+    src as u64 * p as u64 + dst as u64
+}
+
+/// §2.1 k-ported round-robin alltoall: in round r, rank i sends its
+/// blocks to the k "next" peers i + rk + 1 … i + rk + k and receives
+/// from the k "previous" ones. ⌈(p-1)/k⌉ rounds.
+pub fn kported(cl: Cluster, c: u64, k: u32) -> Schedule {
+    let p = cl.p();
+    let mut s =
+        Schedule::new(cl, Collective::Alltoall { c }, AlltoallAlg::KPorted { k }.name());
+    let mut round = 0usize;
+    let mut off = 1u32;
+    while off < p {
+        for e in 0..k.min(p - off) {
+            let d = off + e;
+            for i in 0..p {
+                let j = (i + d) % p;
+                s.add_at(round, i, j, BlockSet::single(bid(p, i, j)));
+            }
+        }
+        off += k;
+        round += 1;
+    }
+    s.finalize();
+    s
+}
+
+/// Native baseline: pairwise rotation alltoall (1-ported), p-1 rounds.
+pub fn pairwise(cl: Cluster, c: u64) -> Schedule {
+    kported_named(cl, c, 1, AlltoallAlg::Pairwise.name())
+}
+
+fn kported_named(cl: Cluster, c: u64, k: u32, name: &'static str) -> Schedule {
+    let mut s = kported(cl, c, k);
+    s.algorithm = name;
+    s
+}
+
+/// Radix-(k+1) Bruck message-combining alltoall: ⌈log_{k+1} p⌉ rounds;
+/// in digit round d (weight w = (k+1)^d), every rank sends to the k peers
+/// at distance e·w (e = 1..k) all held blocks whose remaining journey has
+/// digit e at position d.
+///
+/// A block (s → t) with offset δ = (t - s) mod p sits at rank
+/// h = (s + δ mod w) mod p before digit d is processed; the transfer to
+/// h + e·w carries, for each low-part λ < w with digit_d(λ + e·w …) — i.e.
+/// the ids {(h-λ)·p + ((h-λ) + λ + e·w + m·w·(k+1))} for m = 0, 1, … —
+/// emitted as ≤ 2 strided runs per λ (wrap-around splits one run).
+pub fn bruck(cl: Cluster, c: u64, k: u32) -> Schedule {
+    let p = cl.p();
+    let pu = p as u64;
+    let mut s =
+        Schedule::new(cl, Collective::Alltoall { c }, AlltoallAlg::Bruck { k }.name());
+    let radix = (k + 1) as u64;
+    let mut w = 1u64; // (k+1)^d
+    let mut round = 0usize;
+    while w < pu {
+        for h in 0..p {
+            let hu = h as u64;
+            for e in 1..=k as u64 {
+                if e * w >= pu {
+                    break;
+                }
+                let dst = ((hu + e * w) % pu) as u32;
+                let mut blocks = BlockSet::empty();
+                for lambda in 0..w.min(pu) {
+                    // δ = λ + e·w + m·w·radix, δ < p
+                    let d0 = lambda + e * w;
+                    if d0 >= pu {
+                        break;
+                    }
+                    let stride = w * radix;
+                    let m_max = (pu - 1 - d0) / stride; // inclusive
+                    let src = (hu + pu - lambda) % pu;
+                    // t = (src + δ) mod p; id = src·p + t. As m grows, t
+                    // increases by `stride` until it wraps past p.
+                    let t0 = (src + d0) % pu;
+                    let len = m_max + 1;
+                    // number of terms before t wraps
+                    let before_wrap = if t0 >= pu { 0 } else { (pu - t0).div_ceil(stride).min(len) };
+                    if before_wrap > 0 {
+                        blocks.push_run(src * pu + t0, stride, before_wrap);
+                    }
+                    if before_wrap < len {
+                        let t1 = (t0 + before_wrap * stride) % pu;
+                        blocks.push_run(src * pu + t1, stride, len - before_wrap);
+                    }
+                }
+                if !blocks.is_empty() {
+                    s.add_at(round, h, dst, blocks);
+                }
+            }
+        }
+        w *= radix;
+        round += 1;
+    }
+    s.finalize();
+    s
+}
+
+/// §2.3 k-lane alltoall: N-1 node rounds; in node round r every core
+/// (A, i) posts nonblocking sends of its blocks for node B = A + r,
+/// arranged so the n (src, dst) core pairings are distinct ("in each
+/// step the n processors on a node send and receive from different
+/// processors"); the sub-step ordering is left to the lanes, exactly as
+/// the implementation posts one waitall per node round (§3). A final
+/// node-local alltoall exchanges the on-node blocks. k is not a
+/// parameter of the algorithm (§4.4).
+pub fn klane(cl: Cluster, c: u64) -> Schedule {
+    let p = cl.p();
+    let n = cl.cores;
+    let nn = cl.nodes;
+    let mut s = Schedule::new(cl, Collective::Alltoall { c }, AlltoallAlg::KLane.name());
+    let mut round = 0usize;
+    for r in 1..nn {
+        for a in 0..nn {
+            let b = (a + r) % nn;
+            for step in 0..n {
+                for i in 0..n {
+                    let j = (i + step) % n;
+                    let src = cl.rank_of(a, i);
+                    let dst = cl.rank_of(b, j);
+                    s.add_at(round, src, dst, BlockSet::single(bid(p, src, dst)));
+                }
+            }
+        }
+        round += 1;
+    }
+    // Final round: node-local alltoall (one local waitall: every core
+    // exchanges its remaining n-1 on-node blocks).
+    for a in 0..nn {
+        for i in 0..n {
+            for r in 1..n {
+                let src = cl.rank_of(a, i);
+                let dst = cl.rank_of(a, (i + r) % n);
+                let t = s.transfer(src, dst, BlockSet::single(bid(p, src, dst)));
+                let rd = s.round_mut(round);
+                rd.transfers.push(t);
+                rd.node_phase = Some(LocalOpKind::Alltoall);
+            }
+        }
+    }
+    s.finalize();
+    s
+}
+
+/// §2.2 full-lane alltoall.
+///
+/// Phase 1 (node-local alltoall, combining): core (A, j) hands core
+/// (A, i) its blocks destined to core class i on every node — after the
+/// phase, core (A, i) holds all of node A's blocks for core class i.
+/// Phase 2: n concurrent rotation alltoalls, one per core class, over
+/// the N nodes; the class-i exchange (A → B) carries node A's n·c
+/// elements for (B, i). The complete data is communicated twice.
+pub fn fulllane(cl: Cluster, c: u64) -> Schedule {
+    let p = cl.p();
+    let pu = p as u64;
+    let n = cl.cores;
+    let nn = cl.nodes;
+    let mut s = Schedule::new(cl, Collective::Alltoall { c }, AlltoallAlg::FullLane.name());
+    let mut round = 0usize;
+    // Phase 1 — node-local rotation alltoall of per-class slices.
+    for r in 1..n {
+        for a in 0..nn {
+            for j in 0..n {
+                let i = (j + r) % n;
+                let src = cl.rank_of(a, j);
+                let dst = cl.rank_of(a, i);
+                // blocks (A,j) -> (B,i) for all B: stride n over dst ranks
+                let blocks = BlockSet::strided(src as u64 * pu + i as u64, n as u64, nn as u64);
+                let t = s.transfer(src, dst, blocks);
+                let rd = s.round_mut(round);
+                rd.transfers.push(t);
+                rd.node_phase = Some(LocalOpKind::Alltoall);
+            }
+        }
+        round += 1;
+    }
+    // Phase 2 — per core class i, rotation alltoall over nodes.
+    for r in 1..nn {
+        for a in 0..nn {
+            let b = (a + r) % nn;
+            for i in 0..n {
+                let src = cl.rank_of(a, i);
+                let dst = cl.rank_of(b, i);
+                // blocks (A,j) -> (B,i) for all j: ids (A·n+j)·p + B·n+i,
+                // stride p over j.
+                let first = (a as u64 * n as u64) * pu + b as u64 * n as u64 + i as u64;
+                let blocks = BlockSet::strided(first, pu, n as u64);
+                s.add_at(round, src, dst, blocks);
+            }
+        }
+        round += 1;
+    }
+    s.finalize();
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::validate::{validate, validate_ports};
+
+    fn check(cl: Cluster, alg: AlltoallAlg, port_limit: u32) {
+        let s = build(cl, 4, alg);
+        validate(&s).unwrap_or_else(|v| panic!("{} invalid: {v}", s.algorithm));
+        validate_ports(&s, port_limit)
+            .unwrap_or_else(|v| panic!("{} ports: {v}", s.algorithm));
+    }
+
+    #[test]
+    fn kported_valid() {
+        let cl = Cluster::new(3, 4, 2);
+        for k in [1, 2, 3, 5, 11] {
+            check(cl, AlltoallAlg::KPorted { k }, k);
+        }
+    }
+
+    #[test]
+    fn kported_round_count() {
+        let cl = Cluster::new(2, 8, 2); // p = 16
+        for (k, want) in [(1u32, 15usize), (2, 8), (3, 5), (5, 3), (15, 1)] {
+            let s = kported(cl, 4, k);
+            assert_eq!(s.rounds.len(), want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn kported_message_size_optimal() {
+        // every block crosses exactly once: total bytes = p(p-1)·c·4
+        let cl = Cluster::new(2, 3, 1);
+        let c = 4u64;
+        let s = kported(cl, c, 2);
+        let total: u64 =
+            s.rounds.iter().flat_map(|r| &r.transfers).map(|t| t.bytes).sum();
+        let p = cl.p() as u64;
+        assert_eq!(total, p * (p - 1) * c * 4);
+    }
+
+    #[test]
+    fn pairwise_is_one_ported() {
+        let cl = Cluster::new(2, 4, 1);
+        check(cl, AlltoallAlg::Pairwise, 1);
+        let s = pairwise(cl, 4);
+        assert_eq!(s.rounds.len(), cl.p() as usize - 1);
+    }
+
+    #[test]
+    fn bruck_valid() {
+        for (nodes, cores) in [(2, 2), (2, 4), (3, 3), (2, 8), (5, 2)] {
+            let cl = Cluster::new(nodes, cores, 2);
+            for k in 1..=3 {
+                check(cl, AlltoallAlg::Bruck { k }, k);
+            }
+        }
+    }
+
+    #[test]
+    fn bruck_round_count() {
+        let cl = Cluster::new(2, 8, 2); // p = 16
+        for (k, want) in [(1u32, 4u32), (2, 3), (3, 2), (15, 1)] {
+            let s = bruck(cl, 4, k);
+            assert_eq!(s.rounds.len() as u32, want, "k={k}");
+            assert_eq!(want, crate::algorithms::common::ceil_log(16, k + 1));
+        }
+    }
+
+    #[test]
+    fn bruck_sends_more_data_than_optimal() {
+        // message combining: total traffic strictly exceeds the p(p-1)c
+        // optimum for p > 2 (each block travels multiple hops).
+        let cl = Cluster::new(2, 4, 1);
+        let c = 4u64;
+        let opt = cl.p() as u64 * (cl.p() as u64 - 1) * c * 4;
+        let s = bruck(cl, c, 1);
+        let total: u64 =
+            s.rounds.iter().flat_map(|r| &r.transfers).map(|t| t.bytes).sum();
+        assert!(total > opt, "bruck {total} <= optimal {opt}");
+    }
+
+    #[test]
+    fn klane_valid() {
+        for (nodes, cores) in [(2, 2), (3, 4), (4, 3), (2, 5)] {
+            let cl = Cluster::new(nodes, cores, 2);
+            // one waitall per node round: n nonblocking sends per rank
+            check(cl, AlltoallAlg::KLane, cores);
+        }
+    }
+
+    #[test]
+    fn klane_round_structure() {
+        // N-1 node rounds + 1 local round (one waitall each, §3)
+        let cl = Cluster::new(3, 4, 2);
+        let s = klane(cl, 4);
+        assert_eq!(s.rounds.len(), (3 - 1) + 1);
+    }
+
+    #[test]
+    fn klane_saturates_offnode_every_round() {
+        // every node round moves n·n messages off-node per node — the
+        // full off-node bandwidth possible with k lanes (§2.3)
+        let cl = Cluster::new(3, 4, 2);
+        let s = klane(cl, 4);
+        for round in &s.rounds[..3 - 1] {
+            let off = round
+                .transfers
+                .iter()
+                .filter(|t| !cl.same_node(t.src, t.dst))
+                .count();
+            assert_eq!(off, 3 * 4 * 4);
+        }
+        // distinct pairings: each rank sends exactly n and receives n
+        let mut sends = vec![0u32; cl.p() as usize];
+        for t in &s.rounds[0].transfers {
+            sends[t.src as usize] += 1;
+        }
+        assert!(sends.iter().all(|&x| x == 4));
+    }
+
+    #[test]
+    fn fulllane_valid() {
+        for (nodes, cores) in [(2, 2), (3, 4), (4, 3), (2, 5), (5, 3)] {
+            let cl = Cluster::new(nodes, cores, 2);
+            check(cl, AlltoallAlg::FullLane, 1);
+        }
+    }
+
+    #[test]
+    fn fulllane_communicates_data_twice() {
+        // §2.2: total traffic = 2 × p²c (once on-node, once off-node;
+        // self-node blocks only once… on-node phase moves ALL blocks,
+        // off-node phase moves the (N-1)/N fraction headed off-node).
+        let cl = Cluster::new(2, 3, 1);
+        let c = 4u64;
+        let p = cl.p() as u64;
+        let s = fulllane(cl, c);
+        let on = s.onnode_bytes();
+        let off = s.offnode_bytes();
+        // phase 1 moves p·(p - p/n… every rank sends n-1 messages of N·c:
+        let n = 3u64;
+        let nn = 2u64;
+        assert_eq!(on, p * (n - 1) * nn * c * 4);
+        assert_eq!(off, nn * (nn - 1) * n * n * c * 4);
+    }
+
+    #[test]
+    fn fulllane_round_structure() {
+        // (n-1) local + (N-1) network rounds
+        let cl = Cluster::new(4, 3, 2);
+        let s = fulllane(cl, 4);
+        assert_eq!(s.rounds.len(), 2 + 3);
+    }
+
+    #[test]
+    fn hydra_scale_schedules_build() {
+        // p = 1152: make sure the big builders stay tractable.
+        let cl = Cluster::hydra(2);
+        let s = klane(cl, 1);
+        // (N-1) node rounds × n·p transfers + (n-1)·p local
+        assert_eq!(s.num_transfers(), (35 * 32 + 31) * 1152);
+        let s = fulllane(cl, 1);
+        validate_ports(&s, 1).unwrap();
+        let s = bruck(cl, 1, 2);
+        validate_ports(&s, 2).unwrap();
+    }
+}

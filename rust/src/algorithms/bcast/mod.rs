@@ -1,0 +1,449 @@
+//! Broadcast algorithms (paper §2.1–2.3).
+//!
+//! * [`BcastAlg::KPorted`] — divide-and-conquer over all p ranks, each
+//!   root sending the full payload to k new subroots per round (§2.1).
+//! * [`BcastAlg::KLane`] — the adapted k-lane algorithm (§2.3): the
+//!   k-ported pattern over *nodes*, with k on-node cores jointly playing
+//!   the k ports; a node-local broadcast distributes the payload on
+//!   arrival. `two_phase = false` is the paper's implementation (full
+//!   node broadcast on receive); `two_phase = true` is the theoretical
+//!   variant (k-way broadcast on receive + final k × n/k-way broadcast).
+//! * [`BcastAlg::FullLane`] — the problem-splitting algorithm of §2.2
+//!   ([Träff 2019; Träff & Hunold 2020]): root-node scatter, n concurrent
+//!   inter-node broadcasts, node-local allgather.
+//! * [`BcastAlg::Binomial`] / [`BcastAlg::ScatterAllgather`] — the
+//!   native-library baselines (small-/large-count `MPI_Bcast`).
+
+use crate::algorithms::common::*;
+use crate::schedule::{BlockSet, Collective, LocalOpKind, Schedule};
+use crate::topology::{Cluster, Rank};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BcastAlg {
+    KPorted { k: u32 },
+    KLane { k: u32, two_phase: bool },
+    FullLane,
+    Binomial,
+    ScatterAllgather,
+}
+
+impl BcastAlg {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BcastAlg::KPorted { .. } => "bcast/k-ported",
+            BcastAlg::KLane { two_phase: false, .. } => "bcast/k-lane",
+            BcastAlg::KLane { two_phase: true, .. } => "bcast/k-lane-2phase",
+            BcastAlg::FullLane => "bcast/full-lane",
+            BcastAlg::Binomial => "bcast/binomial",
+            BcastAlg::ScatterAllgather => "bcast/scatter-allgather",
+        }
+    }
+}
+
+/// Build the broadcast schedule: `root` broadcasts `c` elements.
+pub fn build(cl: Cluster, root: Rank, c: u64, alg: BcastAlg) -> Schedule {
+    match alg {
+        BcastAlg::KPorted { k } => kported(cl, root, c, k),
+        BcastAlg::KLane { k, two_phase } => klane(cl, root, c, k, two_phase),
+        BcastAlg::FullLane => fulllane(cl, root, c),
+        BcastAlg::Binomial => binomial(cl, root, c),
+        BcastAlg::ScatterAllgather => scatter_allgather(cl, root, c),
+    }
+}
+
+fn payload() -> BlockSet {
+    BlockSet::single(0)
+}
+
+/// §2.1 k-ported divide-and-conquer broadcast: ⌈log_{k+1} p⌉ rounds,
+/// c elements per send.
+pub fn kported(cl: Cluster, root: Rank, c: u64, k: u32) -> Schedule {
+    let mut s = Schedule::new(
+        cl,
+        Collective::Bcast { root, c, segments: 1 },
+        BcastAlg::KPorted { k }.name(),
+    );
+    for e in dnc_tree(cl.p(), root, k) {
+        s.add_at(e.round, e.src, e.dst, payload());
+    }
+    s.finalize();
+    s
+}
+
+/// Native baseline: binomial tree over all p ranks.
+pub fn binomial(cl: Cluster, root: Rank, c: u64) -> Schedule {
+    let mut s = Schedule::new(
+        cl,
+        Collective::Bcast { root, c, segments: 1 },
+        BcastAlg::Binomial.name(),
+    );
+    for e in binomial_tree(cl.p(), root) {
+        s.add_at(e.round, e.src, e.dst, payload());
+    }
+    s.finalize();
+    s
+}
+
+/// Native large-count baseline (van de Geijn): binomial scatter of p
+/// segments followed by a ring allgather over all p ranks.
+pub fn scatter_allgather(cl: Cluster, root: Rank, c: u64) -> Schedule {
+    let p = cl.p();
+    let mut s = Schedule::new(
+        cl,
+        Collective::Bcast { root, c, segments: p },
+        BcastAlg::ScatterAllgather.name(),
+    );
+    // Scatter phase: segment v is destined to vrank v (real rank
+    // unvrank(v)); scatter-tree edges carry vrank ranges = segment ranges.
+    let scatter_rounds = ceil_log(p, 2) as usize;
+    for e in binomial_scatter_tree(p) {
+        s.add_at(
+            e.round,
+            unvrank(e.src, root, p),
+            unvrank(e.dst, root, p),
+            BlockSet::range(e.lo as u64, e.hi as u64),
+        );
+    }
+    // Allgather phase (ring in vrank space): p-1 rounds.
+    for r in 0..p - 1 {
+        for v in 0..p {
+            let origin = ring_allgather_origin(v, r, p) as u64;
+            let src = unvrank(v, root, p);
+            let dst = unvrank((v + 1) % p, root, p);
+            s.add_at(scatter_rounds + r as usize, src, dst, BlockSet::single(origin));
+        }
+    }
+    s.finalize();
+    s
+}
+
+/// §2.3 adapted k-lane broadcast.
+pub fn klane(cl: Cluster, root: Rank, c: u64, k: u32, two_phase: bool) -> Schedule {
+    assert!(k <= cl.cores, "k-lane bcast needs k <= n");
+    let mut s = Schedule::new(
+        cl,
+        Collective::Bcast { root, c, segments: 1 },
+        BcastAlg::KLane { k, two_phase }.name(),
+    );
+    let n = cl.cores;
+    let root_node = cl.node_of(root);
+
+    // Node-local broadcast from `entry` core; returns first round after it.
+    // In the full (paper-implementation) variant this reaches all n cores;
+    // in the two-phase variant only the k lane cores 0..k.
+    let local_bcast = |s: &mut Schedule, node: u32, entry: u32, at: usize| -> usize {
+        let width = if two_phase { k } else { n };
+        // Broadcast over the core set {entry} ∪ {0..width} — when entry is
+        // outside 0..width, route through a tree over width+1 slots.
+        let cores: Vec<u32> = if entry < width {
+            (0..width).collect()
+        } else {
+            std::iter::once(entry).chain(0..width).collect()
+        };
+        let rootpos = cores.iter().position(|&x| x == entry).unwrap() as u32;
+        let m = cores.len() as u32;
+        if m <= 1 {
+            return at;
+        }
+        let mut last = at;
+        for e in binomial_tree(m, rootpos) {
+            let round = at + e.round;
+            let src = cl.rank_of(node, cores[e.src as usize]);
+            let dst = cl.rank_of(node, cores[e.dst as usize]);
+            let t = s.transfer(src, dst, payload());
+            let r = s.round_mut(round);
+            r.transfers.push(t);
+            r.node_phase = Some(LocalOpKind::Bcast);
+            last = last.max(round + 1);
+        }
+        last
+    };
+
+    // Final two-phase fan-out: lane core i broadcasts to cores {j >= k :
+    // j % k == i}; all groups concurrent. Returns rounds used (max depth).
+    let final_fanout = |s: &mut Schedule, node: u32, at: usize| -> usize {
+        let mut last = at;
+        for i in 0..k {
+            let group: Vec<u32> =
+                std::iter::once(i).chain((k..n).filter(|j| j % k == i)).collect();
+            let m = group.len() as u32;
+            if m <= 1 {
+                continue;
+            }
+            for e in binomial_tree(m, 0) {
+                let round = at + e.round;
+                let src = cl.rank_of(node, group[e.src as usize]);
+                let dst = cl.rank_of(node, group[e.dst as usize]);
+                let t = s.transfer(src, dst, payload());
+                let r = s.round_mut(round);
+                r.transfers.push(t);
+                r.node_phase = Some(LocalOpKind::Bcast);
+                last = last.max(round + 1);
+            }
+        }
+        last
+    };
+
+    // Recursive node-level divide and conquer. `ready` = first round in
+    // which the node's lane cores may send. Tracks the last network round
+    // per node so the two-phase fan-out can be appended afterwards.
+    let mut net_done: Vec<usize> = vec![0; cl.nodes as usize];
+    // Explicit stack: (node_lo, node_hi, root_node, ready_round)
+    let entry_ready = local_bcast(&mut s, root_node, cl.core_of(root), 0);
+    let mut stack = vec![(0u32, cl.nodes, root_node, entry_ready)];
+    while let Some((lo, hi, rn, ready)) = stack.pop() {
+        net_done[rn as usize] = net_done[rn as usize].max(ready);
+        let len = hi - lo;
+        if len <= 1 {
+            continue;
+        }
+        let parts = (k + 1).min(len);
+        let base = len / parts;
+        let extra = len % parts;
+        let mut start = lo;
+        let mut lane = 0u32;
+        for i in 0..parts {
+            let sz = base + u32::from(i < extra);
+            let (plo, phi) = (start, start + sz);
+            start = phi;
+            if (plo..phi).contains(&rn) {
+                stack.push((plo, phi, rn, ready + 1));
+            } else {
+                let sub = plo;
+                // lane core `lane` of rn sends the payload to core 0 of sub
+                let src_core = if two_phase || lane < k { lane } else { lane % k };
+                s.add_at(ready, cl.rank_of(rn, src_core), cl.rank_of(sub, 0), payload());
+                net_done[rn as usize] = net_done[rn as usize].max(ready + 1);
+                let sub_ready = local_bcast(&mut s, sub, 0, ready + 1);
+                stack.push((plo, phi, sub, sub_ready));
+                lane += 1;
+            }
+        }
+    }
+    if two_phase {
+        let max_round = s.rounds.len();
+        for node in 0..cl.nodes {
+            final_fanout(&mut s, node, max_round.max(net_done[node as usize]));
+        }
+    }
+    s.finalize();
+    s
+}
+
+/// §2.2 full-lane broadcast: root-node scatter into n blocks of c/n,
+/// n concurrent inter-node binomial broadcasts (one per core class),
+/// node-local allgather (recursive doubling when n is a power of two,
+/// ring otherwise).
+pub fn fulllane(cl: Cluster, root: Rank, c: u64) -> Schedule {
+    let n = cl.cores;
+    let nn = cl.nodes;
+    let mut s = Schedule::new(
+        cl,
+        Collective::Bcast { root, c, segments: n },
+        BcastAlg::FullLane.name(),
+    );
+    let root_node = cl.node_of(root);
+    let root_core = cl.core_of(root);
+
+    // Phase 1 — root-node scatter: segment v goes to core unvrank(v).
+    let p1 = ceil_log(n, 2) as usize;
+    for e in binomial_scatter_tree(n) {
+        let t = s.transfer(
+            cl.rank_of(root_node, unvrank(e.src, root_core, n)),
+            cl.rank_of(root_node, unvrank(e.dst, root_core, n)),
+            BlockSet::range(e.lo as u64, e.hi as u64),
+        );
+        let r = s.round_mut(e.round);
+        r.transfers.push(t);
+        r.node_phase = Some(LocalOpKind::Scatter);
+    }
+
+    // Phase 2 — per core class u: binomial broadcast of segment
+    // v = (u - root_core) mod n over the N nodes.
+    let p2 = p1 + ceil_log(nn, 2) as usize;
+    for u in 0..n {
+        let v = (u + n - root_core) % n;
+        for e in binomial_tree(nn, root_node) {
+            s.add_at(
+                p1 + e.round,
+                cl.rank_of(e.src, u),
+                cl.rank_of(e.dst, u),
+                BlockSet::single(v as u64),
+            );
+        }
+    }
+
+    // Phase 3 — node-local allgather of the n segments.
+    if is_pow2(n) {
+        for d in 0..ceil_log(n, 2) {
+            for node in 0..nn {
+                for vc in 0..n {
+                    let peer = vc ^ (1 << d);
+                    let (glo, ghi) = rd_group(vc, d);
+                    // vcore vc holds segments of its group; send to peer.
+                    let blocks = BlockSet::range(glo as u64, ghi as u64);
+                    let src = cl.rank_of(node, unvrank(vc, root_core, n));
+                    let dst = cl.rank_of(node, unvrank(peer, root_core, n));
+                    let t = s.transfer(src, dst, blocks);
+                    let r = s.round_mut(p2 + d as usize);
+                    r.transfers.push(t);
+                    r.node_phase = Some(LocalOpKind::Allgather);
+                }
+            }
+        }
+    } else {
+        for r in 0..n - 1 {
+            for node in 0..nn {
+                for vc in 0..n {
+                    let origin = ring_allgather_origin(vc, r, n) as u64;
+                    let src = cl.rank_of(node, unvrank(vc, root_core, n));
+                    let dst = cl.rank_of(node, unvrank((vc + 1) % n, root_core, n));
+                    let t = s.transfer(src, dst, BlockSet::single(origin));
+                    let rd = s.round_mut(p2 + r as usize);
+                    rd.transfers.push(t);
+                    rd.node_phase = Some(LocalOpKind::Allgather);
+                }
+            }
+        }
+    }
+    s.finalize();
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::validate::{validate, validate_ports};
+
+    fn check(cl: Cluster, root: Rank, alg: BcastAlg, port_limit: u32) {
+        let s = build(cl, root, 64, alg);
+        validate(&s).unwrap_or_else(|v| panic!("{} invalid: {v}", s.algorithm));
+        validate_ports(&s, port_limit)
+            .unwrap_or_else(|v| panic!("{} ports: {v}", s.algorithm));
+    }
+
+    #[test]
+    fn kported_valid_all_k() {
+        let cl = Cluster::new(4, 4, 2);
+        for k in 1..=4 {
+            for root in [0, 5, 15] {
+                check(cl, root, BcastAlg::KPorted { k }, k);
+            }
+        }
+    }
+
+    #[test]
+    fn kported_round_count() {
+        let cl = Cluster::hydra(2);
+        for k in 1..=6 {
+            let s = kported(cl, 0, 100, k);
+            assert_eq!(s.rounds.len() as u32, ceil_log(1152, k + 1), "k={k}");
+        }
+    }
+
+    #[test]
+    fn binomial_valid() {
+        for (nodes, cores) in [(1, 8), (4, 4), (3, 5)] {
+            let cl = Cluster::new(nodes, cores, 1);
+            for root in [0, cl.p() - 1] {
+                check(cl, root, BcastAlg::Binomial, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_allgather_valid() {
+        for (nodes, cores) in [(2, 4), (3, 3)] {
+            let cl = Cluster::new(nodes, cores, 1);
+            for root in [0, 3] {
+                check(cl, root, BcastAlg::ScatterAllgather, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_allgather_moves_less_data_offnode() {
+        // van de Geijn moves ~2c per rank vs log(p)·c for binomial.
+        let cl = Cluster::new(8, 4, 1);
+        let sag = build(cl, 0, 32_000, BcastAlg::ScatterAllgather);
+        let bin = build(cl, 0, 32_000, BcastAlg::Binomial);
+        assert!(
+            sag.offnode_bytes() < bin.offnode_bytes(),
+            "sag {} >= bin {}",
+            sag.offnode_bytes(),
+            bin.offnode_bytes()
+        );
+    }
+
+    #[test]
+    fn klane_valid_full_variant() {
+        let cl = Cluster::new(4, 6, 3);
+        for k in 1..=3 {
+            for root in [0, 7, 23] {
+                check(cl, root, BcastAlg::KLane { k, two_phase: false }, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn klane_valid_two_phase() {
+        let cl = Cluster::new(4, 6, 3);
+        for k in 1..=3 {
+            for root in [0, 7, 23] {
+                check(cl, root, BcastAlg::KLane { k, two_phase: true }, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn klane_hydra_shapes() {
+        // Full-size sanity: schedules build and respect 1 send per rank
+        // per round at the paper's dimensions.
+        let cl = Cluster::hydra(2);
+        for k in [1, 2, 6] {
+            let s = klane(cl, 0, 1000, k, false);
+            validate_ports(&s, 1).unwrap();
+            assert!(s.num_transfers() >= (cl.p() - 1) as usize);
+        }
+    }
+
+    #[test]
+    fn fulllane_valid() {
+        for (nodes, cores) in [(4, 4), (3, 5), (2, 8)] {
+            let cl = Cluster::new(nodes, cores, 2);
+            for root in [0, cl.p() / 2] {
+                check(cl, root, BcastAlg::FullLane, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn fulllane_round_count_pow2() {
+        // log n (scatter) + log N (bcast) + log n (rd allgather)
+        let cl = Cluster::new(4, 8, 2);
+        let s = fulllane(cl, 0, 64);
+        assert_eq!(s.rounds.len(), 3 + 2 + 3);
+    }
+
+    #[test]
+    fn fulllane_offnode_traffic_is_c_minus_c_over_n_per_edge() {
+        // §2.2: "The amount of data leaving the root node is c - c/N"
+        // (uniform trees: each of n segments of c/n crosses N-1 times in
+        // total over the binomial tree => total off-node = c·(N-1)).
+        let cl = Cluster::new(4, 4, 2);
+        let c = 64u64;
+        let s = fulllane(cl, 0, c);
+        assert_eq!(s.offnode_bytes(), c * 4 * (4 - 1));
+    }
+
+    #[test]
+    fn kported_sends_full_payload_every_round() {
+        let cl = Cluster::new(2, 2, 1);
+        let s = kported(cl, 0, 100, 1);
+        for round in &s.rounds {
+            for t in &round.transfers {
+                assert_eq!(t.bytes, 400);
+            }
+        }
+    }
+}

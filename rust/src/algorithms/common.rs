@@ -1,0 +1,345 @@
+//! Shared communication-tree machinery used by the algorithm builders.
+//!
+//! Everything here works over an abstract index space `0..m` (global
+//! ranks, a node's cores, or node ids); builders map indices to ranks.
+
+/// An edge emitted by a tree generator: in `round`, `src` sends to `dst`,
+/// and `dst` becomes responsible for the index range `[lo, hi)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Edge {
+    pub round: usize,
+    pub src: u32,
+    pub dst: u32,
+    pub lo: u32,
+    pub hi: u32,
+}
+
+/// k-ported divide-and-conquer tree (paper §2.1).
+///
+/// All indices start in range `[0, m)` with the given `root`. Each round
+/// every active root divides its range into `k+1` near-equal subranges
+/// (sizes differ by ≤ 1) and sends to a new local root (the first index)
+/// of every subrange not containing it. Rounds are globally aligned:
+/// depth-d splits all land in round d. Terminates when ranges are
+/// singletons; total rounds = ⌈log_{k+1} m⌉.
+pub fn dnc_tree(m: u32, root: u32, k: u32) -> Vec<Edge> {
+    assert!(m >= 1 && root < m && k >= 1);
+    let mut edges = Vec::new();
+    // (lo, hi, root, round)
+    let mut stack = vec![(0u32, m, root, 0usize)];
+    while let Some((lo, hi, r, round)) = stack.pop() {
+        let len = hi - lo;
+        if len <= 1 {
+            continue;
+        }
+        let parts = (k + 1).min(len);
+        // Near-equal split: first `extra` parts get base+1.
+        let base = len / parts;
+        let extra = len % parts;
+        let mut s = lo;
+        for i in 0..parts {
+            let sz = base + u32::from(i < extra);
+            let (plo, phi) = (s, s + sz);
+            s = phi;
+            if (plo..phi).contains(&r) {
+                stack.push((plo, phi, r, round + 1));
+            } else {
+                let nr = plo; // paper: "r_i could be chosen as s_i"
+                edges.push(Edge { round, src: r, dst: nr, lo: plo, hi: phi });
+                stack.push((plo, phi, nr, round + 1));
+            }
+        }
+    }
+    edges.sort_by_key(|e| (e.round, e.src, e.dst));
+    edges
+}
+
+/// Binomial tree (the k = 1 divide-and-conquer specialisation used by the
+/// native baselines and node-local phases), over indices `0..m` rooted at
+/// `root`. Uses the classic virtual-rank formulation: in round t, vranks
+/// `< 2^t` send to `vrank + 2^t`. ⌈log2 m⌉ rounds. The edge's `[lo, hi)`
+/// is the *virtual* rank range `dst` becomes responsible for (map back
+/// with [`unvrank`]).
+pub fn binomial_tree(m: u32, root: u32) -> Vec<Edge> {
+    assert!(m >= 1 && root < m);
+    let mut edges = Vec::new();
+    let mut t = 0usize;
+    let mut reach = 1u32;
+    while reach < m {
+        for v in 0..reach.min(m) {
+            let w = v + reach;
+            if w < m {
+                let src = (v + root) % m;
+                let dst = (w + root) % m;
+                // dst becomes responsible for vranks [w, min(w + reach, m))
+                edges.push(Edge { round: t, src, dst, lo: w, hi: (w + reach).min(m) });
+            }
+        }
+        reach <<= 1;
+        t += 1;
+    }
+    edges
+}
+
+/// Map a virtual rank (relative to `root`) back to a real index.
+pub fn unvrank(v: u32, root: u32, m: u32) -> u32 {
+    (v + root) % m
+}
+
+/// Binomial *scatter* tree in virtual-rank space (root = vrank 0):
+/// recursive halving, so a holder only ever forwards subranges it has
+/// already received — unlike [`binomial_tree`], which is a broadcast
+/// ordering. Edge (round, src, dst, lo, hi): src hands vranks [lo, hi)
+/// to dst = lo. ⌈log2 m⌉ rounds; each vrank ≥ 1 receives exactly once.
+pub fn binomial_scatter_tree(m: u32) -> Vec<Edge> {
+    assert!(m >= 1);
+    let mut edges = Vec::new();
+    // (lo, hi, round): holder is vrank `lo`, responsible for [lo, hi).
+    let mut stack = vec![(0u32, m, 0usize)];
+    while let Some((lo, hi, round)) = stack.pop() {
+        let len = hi - lo;
+        if len <= 1 {
+            continue;
+        }
+        let mid = lo + len.div_ceil(2);
+        edges.push(Edge { round, src: lo, dst: mid, lo: mid, hi });
+        stack.push((lo, mid, round + 1));
+        stack.push((mid, hi, round + 1));
+    }
+    edges.sort_by_key(|e| (e.round, e.src));
+    edges
+}
+
+/// Ring-allgather pairing: in round r (0-based, of m-1), index i sends to
+/// (i+1) mod m the block that originated at (i - r) mod m.
+pub fn ring_allgather_origin(i: u32, r: u32, m: u32) -> u32 {
+    (i + m - r % m) % m
+}
+
+/// Recursive-doubling allgather grouping (m must be a power of two):
+/// in round d, index i exchanges with i XOR 2^d all blocks of its
+/// 2^d-aligned group. Returns the group [lo, hi) whose blocks i holds
+/// *before* round d.
+pub fn rd_group(i: u32, d: u32) -> (u32, u32) {
+    let w = 1u32 << d;
+    let lo = i & !(w - 1);
+    (lo, lo + w)
+}
+
+/// Pairwise/rotation alltoall pairing: in round r (1..m), index i sends
+/// to (i + r) mod m and receives from (i - r) mod m. Works for any m.
+pub fn rotation_peer(i: u32, r: u32, m: u32) -> (u32, u32) {
+    ((i + r) % m, (i + m - r % m) % m)
+}
+
+pub fn is_pow2(m: u32) -> bool {
+    m != 0 && m & (m - 1) == 0
+}
+
+/// ⌈log_{b} m⌉ for b ≥ 2.
+pub fn ceil_log(m: u32, b: u32) -> u32 {
+    assert!(b >= 2 && m >= 1);
+    let mut rounds = 0;
+    let mut reach = 1u64;
+    while reach < m as u64 {
+        reach *= b as u64;
+        rounds += 1;
+    }
+    rounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn covered(m: u32, root: u32, edges: &[Edge]) -> bool {
+        let mut have: HashSet<u32> = HashSet::from([root]);
+        let max_round = edges.iter().map(|e| e.round).max().unwrap_or(0);
+        for round in 0..=max_round {
+            let this: Vec<_> = edges.iter().filter(|e| e.round == round).collect();
+            for e in &this {
+                assert!(have.contains(&e.src), "round {round}: src {} has no data", e.src);
+            }
+            for e in this {
+                have.insert(e.dst);
+            }
+        }
+        (0..m).all(|i| have.contains(&i))
+    }
+
+    #[test]
+    fn dnc_covers_all_roots() {
+        for m in [1u32, 2, 3, 7, 8, 13, 36, 100] {
+            for k in [1u32, 2, 3, 5] {
+                for root in [0, m / 2, m - 1] {
+                    let edges = dnc_tree(m, root, k);
+                    assert!(covered(m, root, &edges), "m={m} k={k} root={root}");
+                    assert_eq!(edges.len() as u32, m - 1, "each index receives once");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dnc_vrank_binomial_equivalence_note() {
+        // binomial is NOT dnc with k=1 (different subtree labelling), but
+        // both must cover with the same round count.
+        let (m, root) = (32, 9);
+        let d = dnc_tree(m, root, 1);
+        let b = binomial_tree(m, root);
+        let dr = d.iter().map(|e| e.round).max().unwrap();
+        let br = b.iter().map(|e| e.round).max().unwrap();
+        assert_eq!(dr, br);
+    }
+
+    #[test]
+    fn dnc_round_count() {
+        // ⌈log_{k+1} p⌉ rounds (paper §2.1)
+        for (m, k, want) in
+            [(8u32, 1u32, 3u32), (9, 2, 2), (36, 2, 4), (1152, 1, 11), (1152, 5, 4)]
+        {
+            let edges = dnc_tree(m, 0, k);
+            let rounds = edges.iter().map(|e| e.round).max().unwrap() as u32 + 1;
+            assert_eq!(rounds, want, "m={m} k={k}");
+            assert_eq!(ceil_log(m, k + 1), want);
+        }
+    }
+
+    #[test]
+    fn dnc_port_limit_k() {
+        let k = 3;
+        let edges = dnc_tree(50, 7, k);
+        let max_round = edges.iter().map(|e| e.round).max().unwrap();
+        for round in 0..=max_round {
+            let mut sends = std::collections::HashMap::new();
+            for e in edges.iter().filter(|e| e.round == round) {
+                *sends.entry(e.src).or_insert(0u32) += 1;
+            }
+            assert!(sends.values().all(|&s| s <= k));
+        }
+    }
+
+    #[test]
+    fn dnc_ranges_partition() {
+        let edges = dnc_tree(10, 3, 2);
+        // each non-root index appears as dst exactly once
+        let mut seen = HashSet::new();
+        for e in &edges {
+            assert!(seen.insert(e.dst), "dst {} twice", e.dst);
+            assert!(e.lo <= e.dst && e.dst < e.hi);
+        }
+        assert!(!seen.contains(&3));
+        assert_eq!(seen.len(), 9);
+    }
+
+    #[test]
+    fn binomial_covers_and_rounds() {
+        for m in [1u32, 2, 5, 8, 32, 33] {
+            for root in [0, m - 1] {
+                let edges = binomial_tree(m, root);
+                assert!(covered(m, root, &edges), "m={m} root={root}");
+                if m > 1 {
+                    let rounds = edges.iter().map(|e| e.round).max().unwrap() as u32 + 1;
+                    assert_eq!(rounds, ceil_log(m, 2));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn binomial_port_limit_one() {
+        let edges = binomial_tree(32, 5);
+        let max_round = edges.iter().map(|e| e.round).max().unwrap();
+        for round in 0..=max_round {
+            let mut src_seen = HashSet::new();
+            let mut dst_seen = HashSet::new();
+            for e in edges.iter().filter(|e| e.round == round) {
+                assert!(src_seen.insert(e.src));
+                assert!(dst_seen.insert(e.dst));
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_tree_causal_and_complete() {
+        for m in [1u32, 2, 3, 7, 8, 13, 32, 36, 100] {
+            let edges = binomial_scatter_tree(m);
+            assert_eq!(edges.len() as u32, m - 1.min(m));
+            // causality: src must hold [lo, hi) when it sends, i.e. its
+            // responsibility range still covers the sent range.
+            let mut resp: Vec<(u32, u32)> = vec![(0, m); m as usize];
+            for i in 1..m {
+                resp[i as usize] = (i, i); // nothing yet
+            }
+            let max_round = edges.iter().map(|e| e.round).max().unwrap_or(0);
+            for round in 0..=max_round {
+                for e in edges.iter().filter(|e| e.round == round) {
+                    let (rlo, rhi) = resp[e.src as usize];
+                    assert!(rlo <= e.lo && e.hi <= rhi, "m={m} {e:?} resp=({rlo},{rhi})");
+                }
+                for e in edges.iter().filter(|e| e.round == round) {
+                    resp[e.dst as usize] = (e.lo, e.hi);
+                    resp[e.src as usize].1 = e.lo; // src keeps [rlo, e.lo)
+                }
+            }
+            // completeness: every vrank ends responsible exactly for itself
+            for v in 0..m {
+                assert_eq!(resp[v as usize], (v, v + 1), "m={m} v={v}");
+            }
+            if m > 1 {
+                assert_eq!(max_round as u32 + 1, ceil_log(m, 2), "m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_allgather_delivers_all() {
+        let m = 5u32;
+        // holder -> set of origins held
+        let mut held: Vec<HashSet<u32>> = (0..m).map(|i| HashSet::from([i])).collect();
+        for r in 0..m - 1 {
+            let moves: Vec<(u32, u32, u32)> = (0..m)
+                .map(|i| (i, (i + 1) % m, ring_allgather_origin(i, r, m)))
+                .collect();
+            for (src, dst, origin) in moves {
+                assert!(
+                    held[src as usize].contains(&origin),
+                    "r={r} src={src} origin={origin}"
+                );
+                held[dst as usize].insert(origin);
+            }
+        }
+        for i in 0..m {
+            assert_eq!(held[i as usize].len(), m as usize);
+        }
+    }
+
+    #[test]
+    fn rd_group_growth() {
+        assert_eq!(rd_group(5, 0), (5, 6));
+        assert_eq!(rd_group(5, 1), (4, 6));
+        assert_eq!(rd_group(5, 2), (4, 8));
+    }
+
+    #[test]
+    fn rotation_peer_inverse() {
+        let m = 7;
+        for r in 1..m {
+            for i in 0..m {
+                let (to, _from) = rotation_peer(i, r, m);
+                let (_to2, from2) = rotation_peer(to, r, m);
+                assert_eq!(from2, i);
+            }
+        }
+    }
+
+    #[test]
+    fn ceil_log_values() {
+        assert_eq!(ceil_log(1, 2), 0);
+        assert_eq!(ceil_log(2, 2), 1);
+        assert_eq!(ceil_log(1152, 2), 11);
+        assert_eq!(ceil_log(1152, 3), 7);
+        assert_eq!(ceil_log(36, 7), 2);
+    }
+}

@@ -1,0 +1,174 @@
+//! Gather algorithms, obtained by *schedule reversal* from scatter.
+//!
+//! The paper (§2): "The gather operation is the dual of the scatter
+//! operation, and not treated further here." We treat it anyway, via the
+//! classic duality: reversing a scatter schedule — rounds in reverse
+//! order, every transfer's direction flipped — yields a valid gather
+//! schedule with identical round count, port usage and traffic. The
+//! reversal is generic ([`reverse_scatter`]), so every scatter algorithm
+//! (k-ported §2.1, adapted k-lane §2.3, full-lane §2.2, binomial,
+//! linear) comes with its gather dual for free.
+
+use crate::algorithms::scatter::{self, ScatterAlg};
+use crate::schedule::{Collective, Round, Schedule};
+use crate::topology::{Cluster, Rank};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GatherAlg {
+    KPorted { k: u32 },
+    KLane { k: u32 },
+    FullLane,
+    Binomial,
+    Linear,
+}
+
+impl GatherAlg {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GatherAlg::KPorted { .. } => "gather/k-ported",
+            GatherAlg::KLane { .. } => "gather/k-lane",
+            GatherAlg::FullLane => "gather/full-lane",
+            GatherAlg::Binomial => "gather/binomial",
+            GatherAlg::Linear => "gather/linear",
+        }
+    }
+
+    fn dual(&self) -> ScatterAlg {
+        match *self {
+            GatherAlg::KPorted { k } => ScatterAlg::KPorted { k },
+            GatherAlg::KLane { k } => ScatterAlg::KLane { k },
+            GatherAlg::FullLane => ScatterAlg::FullLane,
+            GatherAlg::Binomial => ScatterAlg::Binomial,
+            GatherAlg::Linear => ScatterAlg::Linear,
+        }
+    }
+}
+
+pub fn build(cl: Cluster, root: Rank, c: u64, alg: GatherAlg) -> Schedule {
+    let s = scatter::build(cl, root, c, alg.dual());
+    reverse_scatter(s, alg.name())
+}
+
+/// Reverse a scatter schedule into its gather dual.
+///
+/// Correctness: in the scatter, a transfer in round r moves blocks B
+/// from `src` to `dst`, and after round r the blocks' holder chain leads
+/// to their destinations. Reversed and flipped, block `b`'s path is
+/// walked backwards: rank `b` holds it initially (gather layout), each
+/// flipped transfer hands it to the scatter-sender, and the last flipped
+/// transfer (the scatter's first) delivers it to the root. Round
+/// alignment is preserved, so port legality carries over.
+pub fn reverse_scatter(mut s: Schedule, name: &'static str) -> Schedule {
+    let (root, c) = match s.op {
+        Collective::Scatter { root, c } => (root, c),
+        other => panic!("reverse_scatter on {other:?}"),
+    };
+    s.op = Collective::Gather { root, c };
+    s.algorithm = name;
+    s.rounds.reverse();
+    for round in &mut s.rounds {
+        for t in &mut round.transfers {
+            std::mem::swap(&mut t.src, &mut t.dst);
+        }
+    }
+    // Node-phase hints: a reversed Scatter phase is a Gather-style fan-in
+    // the exec XLA path has no artifact for — drop the hints.
+    for round in &mut s.rounds {
+        round.node_phase = None;
+    }
+    s
+}
+
+/// Reverse any gather schedule's rounds again to recover the scatter
+/// (used by tests to pin the duality as an involution).
+pub fn reverse_gather(mut s: Schedule, name: &'static str) -> Schedule {
+    let (root, c) = match s.op {
+        Collective::Gather { root, c } => (root, c),
+        other => panic!("reverse_gather on {other:?}"),
+    };
+    s.op = Collective::Scatter { root, c };
+    s.algorithm = name;
+    s.rounds.reverse();
+    for round in &mut s.rounds {
+        for t in &mut round.transfers {
+            std::mem::swap(&mut t.src, &mut t.dst);
+        }
+    }
+    s
+}
+
+/// A Round helper for tests.
+pub fn round_of(transfers: Vec<crate::schedule::Transfer>) -> Round {
+    Round::of(transfers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::validate::{validate, validate_ports};
+
+    fn check(cl: Cluster, root: Rank, alg: GatherAlg, ports: u32) {
+        let s = build(cl, root, 8, alg);
+        validate(&s).unwrap_or_else(|v| panic!("{} invalid: {v}", s.algorithm));
+        validate_ports(&s, ports).unwrap_or_else(|v| panic!("{} ports: {v}", s.algorithm));
+    }
+
+    #[test]
+    fn all_duals_valid() {
+        for (nodes, cores, lanes) in [(2, 3, 2), (4, 4, 2), (3, 5, 3), (1, 6, 2)] {
+            let cl = Cluster::new(nodes, cores, lanes);
+            for root in [0, cl.p() - 1, cl.p() / 2] {
+                check(cl, root, GatherAlg::Binomial, 1);
+                check(cl, root, GatherAlg::Linear, 1);
+                check(cl, root, GatherAlg::FullLane, 1);
+                for k in 1..=lanes {
+                    check(cl, root, GatherAlg::KPorted { k }, k);
+                    check(cl, root, GatherAlg::KLane { k }, 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn duality_preserves_structure() {
+        let cl = Cluster::new(4, 4, 2);
+        let sc = scatter::build(cl, 3, 16, ScatterAlg::KPorted { k: 2 });
+        let ga = build(cl, 3, 16, GatherAlg::KPorted { k: 2 });
+        assert_eq!(sc.rounds.len(), ga.rounds.len());
+        assert_eq!(sc.num_transfers(), ga.num_transfers());
+        assert_eq!(sc.offnode_bytes(), ga.offnode_bytes());
+    }
+
+    #[test]
+    fn reversal_is_involution() {
+        let cl = Cluster::new(3, 4, 2);
+        let sc = scatter::build(cl, 5, 8, ScatterAlg::Binomial);
+        let ga = reverse_scatter(sc.clone(), "gather/binomial");
+        let back = reverse_gather(ga, "scatter/binomial");
+        assert_eq!(back.rounds.len(), sc.rounds.len());
+        for (a, b) in back.rounds.iter().zip(&sc.rounds) {
+            assert_eq!(a.transfers.len(), b.transfers.len());
+            for (x, y) in a.transfers.iter().zip(&b.transfers) {
+                assert_eq!((x.src, x.dst), (y.src, y.dst));
+                assert_eq!(x.blocks, y.blocks);
+            }
+        }
+    }
+
+    #[test]
+    fn root_receives_exactly_total() {
+        // gather dual of the message-size-optimal scatter: (p-1)·c
+        // elements arrive at the root.
+        let cl = Cluster::new(2, 4, 2);
+        let c = 8u64;
+        let s = build(cl, 0, c, GatherAlg::KPorted { k: 2 });
+        let ingress: u64 = s
+            .rounds
+            .iter()
+            .flat_map(|r| &r.transfers)
+            .filter(|t| t.dst == 0)
+            .map(|t| t.bytes)
+            .sum();
+        assert_eq!(ingress, (cl.p() as u64 - 1) * c * 4);
+    }
+}

@@ -1,0 +1,7 @@
+//! Collective algorithm builders: each compiles to a `schedule::Schedule`.
+pub mod bcast;
+pub mod scatter;
+pub mod gather;
+pub mod allgather;
+pub mod alltoall;
+pub mod common;

@@ -1,0 +1,426 @@
+//! Scatter algorithms (paper §2.1–2.3). Block `j` (c elements) is
+//! destined to rank `j`; the root initially holds all p blocks.
+//!
+//! * [`ScatterAlg::KPorted`] — §2.1 divide-and-conquer: round- and
+//!   message-size-optimal (the root's data leaves it exactly once).
+//! * [`ScatterAlg::KLane`] — §2.3 adaptation: the k-ported pattern over
+//!   nodes; on each node a local scatter hands the k per-subrange
+//!   payloads to the k lane cores, which perform the k sends.
+//! * [`ScatterAlg::FullLane`] — §2.2: root-node scatter into n
+//!   per-core-class sub-problems solved by n concurrent inter-node
+//!   binomial scatters. Round-optimal up to +1 (⌈log n⌉ + ⌈log N⌉).
+//! * [`ScatterAlg::Binomial`] / [`ScatterAlg::Linear`] — native baselines.
+
+use crate::algorithms::common::*;
+use crate::schedule::{BlockSet, Collective, LocalOpKind, Schedule};
+use crate::topology::{Cluster, Rank};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScatterAlg {
+    KPorted { k: u32 },
+    KLane { k: u32 },
+    FullLane,
+    Binomial,
+    Linear,
+}
+
+impl ScatterAlg {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScatterAlg::KPorted { .. } => "scatter/k-ported",
+            ScatterAlg::KLane { .. } => "scatter/k-lane",
+            ScatterAlg::FullLane => "scatter/full-lane",
+            ScatterAlg::Binomial => "scatter/binomial",
+            ScatterAlg::Linear => "scatter/linear",
+        }
+    }
+}
+
+pub fn build(cl: Cluster, root: Rank, c: u64, alg: ScatterAlg) -> Schedule {
+    match alg {
+        ScatterAlg::KPorted { k } => kported(cl, root, c, k),
+        ScatterAlg::KLane { k } => klane(cl, root, c, k),
+        ScatterAlg::FullLane => fulllane(cl, root, c),
+        ScatterAlg::Binomial => binomial(cl, root, c),
+        ScatterAlg::Linear => linear(cl, root, c),
+    }
+}
+
+/// Blocks destined to real ranks `(vlo + shift) % m .. (vhi + shift) % m`
+/// — a contiguous vrank range mapped back through a root shift, which can
+/// wrap around into at most two runs.
+fn vrange_blocks(vlo: u32, vhi: u32, shift: u32, m: u32) -> BlockSet {
+    let lo = (vlo + shift) % m;
+    let len = vhi - vlo;
+    if lo + len <= m {
+        BlockSet::range(lo as u64, (lo + len) as u64)
+    } else {
+        BlockSet::range(lo as u64, m as u64)
+            .union(BlockSet::range(0, (lo + len - m) as u64))
+    }
+}
+
+/// §2.1 k-ported divide-and-conquer scatter: ⌈log_{k+1} p⌉ rounds, total
+/// data leaving the root exactly once.
+pub fn kported(cl: Cluster, root: Rank, c: u64, k: u32) -> Schedule {
+    let mut s = Schedule::new(
+        cl,
+        Collective::Scatter { root, c },
+        ScatterAlg::KPorted { k }.name(),
+    );
+    for e in dnc_tree(cl.p(), root, k) {
+        // dnc ranges are real rank ranges; block ids are real rank ids.
+        s.add_at(e.round, e.src, e.dst, BlockSet::range(e.lo as u64, e.hi as u64));
+    }
+    s.finalize();
+    s
+}
+
+/// Native baseline: binomial (recursive-halving) scatter.
+pub fn binomial(cl: Cluster, root: Rank, c: u64) -> Schedule {
+    let p = cl.p();
+    let mut s =
+        Schedule::new(cl, Collective::Scatter { root, c }, ScatterAlg::Binomial.name());
+    for e in binomial_scatter_tree(p) {
+        s.add_at(
+            e.round,
+            unvrank(e.src, root, p),
+            unvrank(e.dst, root, p),
+            vrange_blocks(e.lo, e.hi, root, p),
+        );
+    }
+    s.finalize();
+    s
+}
+
+/// Native baseline: linear scatter — the root sends each block directly,
+/// one per round (what several MPI libraries do for large counts).
+pub fn linear(cl: Cluster, root: Rank, c: u64) -> Schedule {
+    let p = cl.p();
+    let mut s =
+        Schedule::new(cl, Collective::Scatter { root, c }, ScatterAlg::Linear.name());
+    let mut round = 0;
+    for j in 0..p {
+        if j != root {
+            s.add_at(round, root, j, BlockSet::single(j as u64));
+            round += 1;
+        }
+    }
+    s.finalize();
+    s
+}
+
+/// §2.3 adapted k-lane scatter.
+///
+/// Node-level divide and conquer: at each level the holder core performs
+/// a node-local scatter handing each lane core the blocks of one node
+/// subrange (one "MPI_Scatter step" in the paper, a binomial tree over
+/// the ≤ k+1 participating cores here), then the lane cores concurrently
+/// send to the subrange roots' entry cores. When a node's range becomes
+/// a single node, the holder core scatters the node's n blocks locally.
+pub fn klane(cl: Cluster, root: Rank, c: u64, k: u32) -> Schedule {
+    assert!(k <= cl.cores, "k-lane scatter needs k <= n");
+    let n = cl.cores;
+    let mut s =
+        Schedule::new(cl, Collective::Scatter { root, c }, ScatterAlg::KLane { k }.name());
+    let root_node = cl.node_of(root);
+
+    // Blocks destined to a contiguous node range = contiguous rank range.
+    let node_range_blocks =
+        |lo: u32, hi: u32| BlockSet::range((lo * n) as u64, (hi * n) as u64);
+
+    // (node_lo, node_hi, node, holder_core, at_round)
+    let mut stack = vec![(0u32, cl.nodes, root_node, cl.core_of(root), 0usize)];
+    while let Some((lo, hi, nd, holder, at)) = stack.pop() {
+        let len = hi - lo;
+        if len <= 1 {
+            // Final node-local scatter of this node's n blocks.
+            if n > 1 {
+                for e in binomial_scatter_tree(n) {
+                    let src = cl.rank_of(nd, unvrank(e.src, holder, n));
+                    let dst = cl.rank_of(nd, unvrank(e.dst, holder, n));
+                    let blocks = vrange_blocks(e.lo, e.hi, holder, n);
+                    // block ids are global ranks: shift into this node
+                    let blocks: BlockSet =
+                        blocks.iter().map(|b| (nd * n) as u64 + b).collect();
+                    let t = s.transfer(src, dst, blocks);
+                    let r = s.round_mut(at + e.round);
+                    r.transfers.push(t);
+                    r.node_phase = Some(LocalOpKind::Scatter);
+                }
+            }
+            continue;
+        }
+        // Divide the node range into ≤ k+1 parts.
+        let parts = (k + 1).min(len);
+        let base = len / parts;
+        let extra = len % parts;
+        let mut bounds = Vec::with_capacity(parts as usize + 1);
+        let mut st = lo;
+        bounds.push(st);
+        for i in 0..parts {
+            st += base + u32::from(i < extra);
+            bounds.push(st);
+        }
+        // Identify the root part and the send parts.
+        let mut send_parts: Vec<(u32, u32)> = Vec::new();
+        let mut own_part = (lo, hi);
+        for w in bounds.windows(2) {
+            if (w[0]..w[1]).contains(&nd) {
+                own_part = (w[0], w[1]);
+            } else {
+                send_parts.push((w[0], w[1]));
+            }
+        }
+        // The paper's k senders: the holder plus k-1 helper lane cores
+        // ("A receiving processor on a node scatters to k-1 processors
+        // which then concurrently do the k send operations", §2.3). With
+        // k = 1 there is no local scatter at all — the holder sends
+        // everything itself, one part per network sub-round. Parts are
+        // assigned to senders cyclically.
+        let q = send_parts.len() as u32;
+        let helpers: Vec<u32> = (0..n)
+            .filter(|&cc| cc != holder)
+            .take((k.saturating_sub(1)).min(q.saturating_sub(1)) as usize)
+            .collect();
+        let senders: Vec<u32> =
+            std::iter::once(holder).chain(helpers.iter().copied()).collect();
+        let ns = senders.len() as u32;
+        let mut local_rounds = 0usize;
+        if !helpers.is_empty() {
+            // Binomial local scatter over the senders (slot 0 = holder);
+            // helper slot j gets the union of its assigned parts' blocks.
+            let slot_blocks = |slot: u32| -> BlockSet {
+                let mut blocks = BlockSet::empty();
+                for i in 0..q {
+                    if i % ns == slot {
+                        let (plo, phi) = send_parts[i as usize];
+                        blocks = blocks.union(node_range_blocks(plo, phi));
+                    }
+                }
+                blocks
+            };
+            for e in binomial_scatter_tree(ns) {
+                let mut blocks = BlockSet::empty();
+                for slot in e.lo..e.hi {
+                    blocks = blocks.union(slot_blocks(slot));
+                }
+                if blocks.is_empty() {
+                    continue;
+                }
+                let src = cl.rank_of(nd, senders[e.src as usize]);
+                let dst = cl.rank_of(nd, senders[e.dst as usize]);
+                let t = s.transfer(src, dst, blocks);
+                let r = s.round_mut(at + e.round);
+                r.transfers.push(t);
+                r.node_phase = Some(LocalOpKind::Scatter);
+                local_rounds = local_rounds.max(e.round + 1);
+            }
+        }
+        // Network rounds: sender of part i transmits in sub-round i/ns.
+        let net_round = at + local_rounds;
+        let mut last_net = net_round;
+        for (i, &(plo, phi)) in send_parts.iter().enumerate() {
+            let sub = plo;
+            let sub_round = net_round + i / ns as usize;
+            let src = cl.rank_of(nd, senders[i % ns as usize]);
+            s.add_at(sub_round, src, cl.rank_of(sub, 0), node_range_blocks(plo, phi));
+            stack.push((plo, phi, sub, 0, sub_round + 1));
+            last_net = last_net.max(sub_round);
+        }
+        stack.push((own_part.0, own_part.1, nd, holder, last_net + 1));
+    }
+    s.finalize();
+    s
+}
+
+/// §2.2 full-lane scatter: root-node local scatter (core class u receives
+/// all blocks for core-u ranks), then n concurrent binomial scatters over
+/// the N nodes. ⌈log n⌉ + ⌈log N⌉ rounds; data leaving the root node is
+/// sent exactly once.
+pub fn fulllane(cl: Cluster, root: Rank, c: u64) -> Schedule {
+    let n = cl.cores;
+    let nn = cl.nodes;
+    let mut s =
+        Schedule::new(cl, Collective::Scatter { root, c }, ScatterAlg::FullLane.name());
+    let root_node = cl.node_of(root);
+    let root_core = cl.core_of(root);
+
+    // Blocks for core class u across a node vrange (nodes shifted by
+    // root_node): {B*n + u : B in real node range}, ≤ 2 strided runs.
+    let class_blocks = |u: u32, vlo: u32, vhi: u32| -> BlockSet {
+        let lo = (vlo + root_node) % nn;
+        let len = vhi - vlo;
+        let mut set = BlockSet::empty();
+        if lo + len <= nn {
+            set.push_run((lo * n + u) as u64, n as u64, len as u64);
+        } else {
+            set.push_run((lo * n + u) as u64, n as u64, (nn - lo) as u64);
+            set.push_run(u as u64, n as u64, (lo + len - nn) as u64);
+        }
+        set
+    };
+
+    // Phase 1 — root-node local scatter: core class u = all blocks
+    // {B*n + u : all B}; cores addressed in vrank space from root_core.
+    let p1 = ceil_log(n, 2) as usize;
+    for e in binomial_scatter_tree(n) {
+        let mut blocks = BlockSet::empty();
+        for v in e.lo..e.hi {
+            let u = unvrank(v, root_core, n);
+            blocks = blocks.union(class_blocks(u, 0, nn));
+        }
+        let t = s.transfer(
+            cl.rank_of(root_node, unvrank(e.src, root_core, n)),
+            cl.rank_of(root_node, unvrank(e.dst, root_core, n)),
+            blocks,
+        );
+        let r = s.round_mut(e.round);
+        r.transfers.push(t);
+        r.node_phase = Some(LocalOpKind::Scatter);
+    }
+
+    // Phase 2 — per core class u: binomial scatter over N nodes (vrank
+    // space shifted by root_node), all n classes concurrent.
+    for u in 0..n {
+        for e in binomial_scatter_tree(nn) {
+            s.add_at(
+                p1 + e.round,
+                cl.rank_of(unvrank(e.src, root_node, nn), u),
+                cl.rank_of(unvrank(e.dst, root_node, nn), u),
+                class_blocks(u, e.lo, e.hi),
+            );
+        }
+    }
+    s.finalize();
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::validate::{validate, validate_ports};
+
+    fn check(cl: Cluster, root: Rank, alg: ScatterAlg, port_limit: u32) {
+        let s = build(cl, root, 16, alg);
+        validate(&s).unwrap_or_else(|v| panic!("{} invalid: {v}", s.algorithm));
+        validate_ports(&s, port_limit)
+            .unwrap_or_else(|v| panic!("{} ports: {v}", s.algorithm));
+    }
+
+    #[test]
+    fn kported_valid() {
+        let cl = Cluster::new(4, 4, 2);
+        for k in 1..=4 {
+            for root in [0, 6, 15] {
+                check(cl, root, ScatterAlg::KPorted { k }, k);
+            }
+        }
+    }
+
+    #[test]
+    fn kported_message_size_optimal() {
+        // total data leaving the root = (p-1)·c (each block sent from the
+        // root's subtree chain exactly once — total traffic over all
+        // transfers is Σ depth·…; message-size optimality here: the root
+        // itself sends exactly (p-1)·c elements).
+        let cl = Cluster::new(2, 4, 1);
+        let c = 16u64;
+        let s = kported(cl, 0, c, 2);
+        let root_bytes: u64 = s
+            .rounds
+            .iter()
+            .flat_map(|r| &r.transfers)
+            .filter(|t| t.src == 0)
+            .map(|t| t.bytes)
+            .sum();
+        assert_eq!(root_bytes, (cl.p() as u64 - 1) * c * 4);
+    }
+
+    #[test]
+    fn binomial_valid() {
+        for (nodes, cores) in [(1, 8), (4, 4), (3, 5)] {
+            let cl = Cluster::new(nodes, cores, 1);
+            for root in [0, cl.p() - 1] {
+                check(cl, root, ScatterAlg::Binomial, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn linear_valid() {
+        let cl = Cluster::new(2, 3, 1);
+        for root in [0, 5] {
+            check(cl, root, ScatterAlg::Linear, 1);
+        }
+        let s = linear(cl, 0, 4);
+        assert_eq!(s.rounds.len(), 5); // p-1 rounds
+    }
+
+    #[test]
+    fn klane_valid() {
+        for (nodes, cores, lanes) in [(4, 4, 2), (3, 6, 3), (2, 4, 1), (6, 5, 4)] {
+            let cl = Cluster::new(nodes, cores, lanes);
+            for k in 1..=lanes {
+                for root in [0, cl.p() - 1, cl.p() / 2] {
+                    check(cl, root, ScatterAlg::KLane { k }, 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn klane_hydra_ports() {
+        let cl = Cluster::hydra(2);
+        for k in [1, 3, 6] {
+            let s = klane(cl, 0, 9, k);
+            validate_ports(&s, 1).unwrap();
+        }
+    }
+
+    #[test]
+    fn fulllane_valid() {
+        for (nodes, cores) in [(4, 4), (3, 5), (2, 8), (5, 3)] {
+            let cl = Cluster::new(nodes, cores, 2);
+            for root in [0, cl.p() / 2, cl.p() - 1] {
+                check(cl, root, ScatterAlg::FullLane, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn fulllane_round_count() {
+        // ⌈log n⌉ + ⌈log N⌉ (paper §2.2: ≤ ⌈log p⌉ + 1)
+        let cl = Cluster::new(4, 8, 2);
+        let s = fulllane(cl, 0, 16);
+        assert_eq!(s.rounds.len() as u32, ceil_log(8, 2) + ceil_log(4, 2));
+    }
+
+    #[test]
+    fn fulllane_root_node_egress_optimal() {
+        // §2.2: the amount of data leaving the root *node* is exactly
+        // total minus the root node's own share = (N-1)·n·c elements
+        // (intermediate nodes forward more — that's tree traffic, not
+        // root egress).
+        let cl = Cluster::new(4, 4, 2);
+        let c = 16u64;
+        let s = fulllane(cl, 0, c);
+        let root_node_egress: u64 = s
+            .rounds
+            .iter()
+            .flat_map(|r| &r.transfers)
+            .filter(|t| cl.node_of(t.src) == 0 && cl.node_of(t.dst) != 0)
+            .map(|t| t.bytes)
+            .sum();
+        assert_eq!(root_node_egress, (4 - 1) * 4 * c * 4);
+    }
+
+    #[test]
+    fn vrange_blocks_wraps() {
+        let b = vrange_blocks(2, 5, 6, 8); // vranks 2..5 shifted by 6 mod 8 = {0,1,2}... real {(2+6)%8, (3+6)%8, (4+6)%8} = {0,1,2}
+        assert_eq!(b.iter().collect::<Vec<_>>(), vec![0, 1, 2]);
+        let b = vrange_blocks(1, 4, 6, 8); // {7, 0, 1}
+        assert!(b.contains(7) && b.contains(0) && b.contains(1));
+        assert_eq!(b.count(), 3);
+    }
+}

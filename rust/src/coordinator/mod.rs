@@ -1,0 +1,333 @@
+//! The coordinator: a single façade over topology, algorithms, personas
+//! and the two backends — the "improved MPI library" the paper's
+//! conclusion calls for ("the native MPI library implementations … can
+//! easily be improved, and sometimes quite considerably").
+//!
+//! * [`Collectives::run`] builds + times any (operation, algorithm)
+//!   combination on the simulator;
+//! * [`Collectives::execute`] runs it for real on the threaded backend;
+//! * [`Collectives::autotune`] picks the fastest algorithm for an
+//!   operation and size — the algorithm-selection layer real libraries
+//!   get wrong in the paper's tables.
+
+use anyhow::Result;
+
+use crate::algorithms::{allgather, alltoall, bcast, gather, scatter};
+use crate::exec::{ExecReport, ExecRuntime};
+use crate::model::{Persona, PersonaName};
+use crate::schedule::Schedule;
+use crate::sim;
+use crate::topology::{Cluster, Rank};
+use crate::util::Summary;
+
+/// A collective operation request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Bcast { root: Rank, c: u64 },
+    Scatter { root: Rank, c: u64 },
+    Gather { root: Rank, c: u64 },
+    Allgather { c: u64 },
+    Alltoall { c: u64 },
+}
+
+impl Op {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Bcast { .. } => "bcast",
+            Op::Scatter { .. } => "scatter",
+            Op::Gather { .. } => "gather",
+            Op::Allgather { .. } => "allgather",
+            Op::Alltoall { .. } => "alltoall",
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        match self {
+            Op::Bcast { c, .. }
+            | Op::Scatter { c, .. }
+            | Op::Gather { c, .. }
+            | Op::Allgather { c }
+            | Op::Alltoall { c } => *c,
+        }
+    }
+}
+
+/// Unified algorithm selector across the three operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// §2.1 k-ported algorithm with the given k.
+    KPorted { k: u32 },
+    /// §2.3 adapted k-lane algorithm (k ignored for alltoall, §4.4).
+    KLane { k: u32 },
+    /// §2.2 problem-splitting full-lane algorithm.
+    FullLane,
+    /// Radix-(k+1) message-combining (alltoall only).
+    Bruck { k: u32 },
+    /// The persona's native MPI_<op> (with its observed quirks).
+    Native,
+}
+
+impl Algorithm {
+    pub fn label(&self) -> String {
+        match self {
+            Algorithm::KPorted { k } => format!("{k}-ported"),
+            Algorithm::KLane { k } => format!("{k}-lane"),
+            Algorithm::FullLane => "full-lane".into(),
+            Algorithm::Bruck { k } => format!("bruck({k})"),
+            Algorithm::Native => "native".into(),
+        }
+    }
+}
+
+/// One measurement row (matches the paper's table columns).
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub algorithm: String,
+    pub k: u32,
+    pub c: u64,
+    pub summary: Summary,
+}
+
+pub struct Collectives {
+    pub cluster: Cluster,
+    pub persona: Persona,
+    pub reps: usize,
+    pub warmup: usize,
+    pub seed: u64,
+}
+
+impl Collectives {
+    pub fn new(cluster: Cluster, persona: PersonaName) -> Self {
+        Self {
+            cluster,
+            persona: Persona::get(persona),
+            reps: sim::default_reps(),
+            warmup: 2,
+            seed: 0xC0FFEE,
+        }
+    }
+
+    /// Compile (op, algorithm) to a schedule plus the persona's native
+    /// quirk adjustment (1.0/0.0 for non-native algorithms).
+    pub fn schedule(&self, op: Op, alg: Algorithm) -> (Schedule, f64, f64) {
+        let cl = self.cluster;
+        match (op, alg) {
+            (Op::Bcast { root, c }, Algorithm::KPorted { k }) => {
+                (bcast::build(cl, root, c, bcast::BcastAlg::KPorted { k }), 0.0, 1.0)
+            }
+            (Op::Bcast { root, c }, Algorithm::KLane { k }) => (
+                bcast::build(cl, root, c, bcast::BcastAlg::KLane { k, two_phase: false }),
+                0.0,
+                1.0,
+            ),
+            (Op::Bcast { root, c }, Algorithm::FullLane) => {
+                (bcast::build(cl, root, c, bcast::BcastAlg::FullLane), 0.0, 1.0)
+            }
+            (Op::Bcast { root, c }, Algorithm::Native) => {
+                let n = self.persona.native_bcast(cl, root, c);
+                (n.schedule, n.quirk_add, n.quirk_mult)
+            }
+            (Op::Bcast { .. }, Algorithm::Bruck { .. }) => {
+                panic!("bruck is an alltoall algorithm")
+            }
+            (Op::Scatter { root, c }, Algorithm::KPorted { k }) => {
+                (scatter::build(cl, root, c, scatter::ScatterAlg::KPorted { k }), 0.0, 1.0)
+            }
+            (Op::Scatter { root, c }, Algorithm::KLane { k }) => {
+                (scatter::build(cl, root, c, scatter::ScatterAlg::KLane { k }), 0.0, 1.0)
+            }
+            (Op::Scatter { root, c }, Algorithm::FullLane) => {
+                (scatter::build(cl, root, c, scatter::ScatterAlg::FullLane), 0.0, 1.0)
+            }
+            (Op::Scatter { root, c }, Algorithm::Native) => {
+                let n = self.persona.native_scatter(cl, root, c);
+                (n.schedule, n.quirk_add, n.quirk_mult)
+            }
+            (Op::Scatter { .. }, Algorithm::Bruck { .. }) => {
+                panic!("bruck is an alltoall algorithm")
+            }
+            (Op::Alltoall { c }, Algorithm::KPorted { k }) => {
+                (alltoall::build(cl, c, alltoall::AlltoallAlg::KPorted { k }), 0.0, 1.0)
+            }
+            (Op::Alltoall { c }, Algorithm::KLane { .. }) => {
+                (alltoall::build(cl, c, alltoall::AlltoallAlg::KLane), 0.0, 1.0)
+            }
+            (Op::Alltoall { c }, Algorithm::FullLane) => {
+                (alltoall::build(cl, c, alltoall::AlltoallAlg::FullLane), 0.0, 1.0)
+            }
+            (Op::Alltoall { c }, Algorithm::Bruck { k }) => {
+                (alltoall::build(cl, c, alltoall::AlltoallAlg::Bruck { k }), 0.0, 1.0)
+            }
+            (Op::Alltoall { c }, Algorithm::Native) => {
+                let n = self.persona.native_alltoall(cl, c);
+                (n.schedule, n.quirk_add, n.quirk_mult)
+            }
+            // Gather: every scatter algorithm's dual (paper §2: "the
+            // gather operation is the dual of the scatter operation").
+            (Op::Gather { root, c }, Algorithm::KPorted { k }) => {
+                (gather::build(cl, root, c, gather::GatherAlg::KPorted { k }), 0.0, 1.0)
+            }
+            (Op::Gather { root, c }, Algorithm::KLane { k }) => {
+                (gather::build(cl, root, c, gather::GatherAlg::KLane { k }), 0.0, 1.0)
+            }
+            (Op::Gather { root, c }, Algorithm::FullLane) => {
+                (gather::build(cl, root, c, gather::GatherAlg::FullLane), 0.0, 1.0)
+            }
+            (Op::Gather { root, c }, Algorithm::Native) => {
+                // libraries use binomial gather across sizes
+                (gather::build(cl, root, c, gather::GatherAlg::Binomial), 0.0, 1.0)
+            }
+            (Op::Gather { .. }, Algorithm::Bruck { .. }) => {
+                panic!("bruck is not a gather algorithm")
+            }
+            // Allgather.
+            (Op::Allgather { c }, Algorithm::KPorted { k } | Algorithm::Bruck { k }) => {
+                (allgather::build(cl, c, allgather::AllgatherAlg::Bruck { k }), 0.0, 1.0)
+            }
+            (Op::Allgather { c }, Algorithm::KLane { .. } | Algorithm::FullLane) => {
+                (allgather::build(cl, c, allgather::AllgatherAlg::FullLane), 0.0, 1.0)
+            }
+            (Op::Allgather { c }, Algorithm::Native) => {
+                // ring for large, recursive doubling for small (MPI-like)
+                let alg = if c * 4 <= 8192 {
+                    allgather::AllgatherAlg::RecursiveDoubling
+                } else {
+                    allgather::AllgatherAlg::Ring
+                };
+                (allgather::build(cl, c, alg), 0.0, 1.0)
+            }
+        }
+    }
+
+    /// Simulate (op, algorithm) under the persona's cost model and
+    /// return paper-style (avg, min) of the slowest rank.
+    pub fn run(&self, op: Op, alg: Algorithm) -> Measurement {
+        let (schedule, add, mult) = self.schedule(op, alg);
+        let raw = sim::measure(&schedule, &self.persona.model, self.reps, self.warmup, self.seed);
+        let adj = |t: f64| t * mult + add;
+        Measurement {
+            algorithm: schedule.algorithm.to_string(),
+            k: match alg {
+                Algorithm::KPorted { k } | Algorithm::KLane { k } | Algorithm::Bruck { k } => k,
+                _ => self.cluster.lanes,
+            },
+            c: op.count(),
+            summary: Summary {
+                avg: adj(raw.avg),
+                min: adj(raw.min),
+                max: adj(raw.max),
+                reps: raw.reps,
+            },
+        }
+    }
+
+    /// Execute (op, algorithm) for real on the threaded backend.
+    pub fn execute(&self, op: Op, alg: Algorithm, rt: &ExecRuntime) -> Result<ExecReport> {
+        let (schedule, _, _) = self.schedule(op, alg);
+        rt.run(&schedule, self.reps, self.warmup)
+    }
+
+    /// Pick the fastest algorithm (by simulated average) among the
+    /// candidates. This is the coordinator's answer to the paper's
+    /// conclusion that native selection "can easily be improved".
+    pub fn autotune(&self, op: Op, candidates: &[Algorithm]) -> (Algorithm, Measurement) {
+        assert!(!candidates.is_empty());
+        let mut best: Option<(Algorithm, Measurement)> = None;
+        for &alg in candidates {
+            let m = self.run(op, alg);
+            if best.as_ref().is_none_or(|(_, b)| m.summary.avg < b.summary.avg) {
+                best = Some((alg, m));
+            }
+        }
+        best.unwrap()
+    }
+
+    /// Sensible candidate set per operation.
+    pub fn default_candidates(&self, op: Op) -> Vec<Algorithm> {
+        let lanes = self.cluster.lanes;
+        match op {
+            Op::Bcast { .. } | Op::Scatter { .. } | Op::Gather { .. } => vec![
+                Algorithm::KPorted { k: 1 },
+                Algorithm::KPorted { k: lanes },
+                Algorithm::KLane { k: lanes },
+                Algorithm::FullLane,
+                Algorithm::Native,
+            ],
+            Op::Allgather { .. } => vec![
+                Algorithm::Bruck { k: 1 },
+                Algorithm::Bruck { k: lanes },
+                Algorithm::FullLane,
+                Algorithm::Native,
+            ],
+            Op::Alltoall { .. } => vec![
+                Algorithm::KPorted { k: 1 },
+                Algorithm::KPorted { k: lanes },
+                Algorithm::Bruck { k: lanes },
+                Algorithm::KLane { k: lanes },
+                Algorithm::FullLane,
+                Algorithm::Native,
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coll() -> Collectives {
+        let mut c = Collectives::new(Cluster::new(4, 4, 2), PersonaName::OpenMpi);
+        c.reps = 3;
+        c.warmup = 1;
+        c
+    }
+
+    #[test]
+    fn run_all_op_alg_pairs() {
+        let c = coll();
+        for op in [
+            Op::Bcast { root: 0, c: 64 },
+            Op::Scatter { root: 0, c: 16 },
+            Op::Gather { root: 0, c: 16 },
+            Op::Allgather { c: 16 },
+            Op::Alltoall { c: 8 },
+        ] {
+            for alg in c.default_candidates(op) {
+                let m = c.run(op, alg);
+                assert!(m.summary.avg > 0.0, "{op:?} {alg:?}");
+                assert!(m.summary.min <= m.summary.avg);
+            }
+        }
+    }
+
+    #[test]
+    fn native_quirks_applied() {
+        let mut c = Collectives::new(Cluster::hydra(2), PersonaName::IntelMpi);
+        c.reps = 2;
+        c.warmup = 0;
+        let m = c.run(Op::Bcast { root: 0, c: 1 }, Algorithm::Native);
+        assert!(m.summary.avg > 900.0, "Intel small-bcast floor: {}", m.summary.avg);
+    }
+
+    #[test]
+    fn autotune_beats_native_where_paper_says_so() {
+        // Table 12: full-lane bcast ≫ native MPI_Bcast at c = 1e6.
+        let mut c = Collectives::new(Cluster::hydra(2), PersonaName::OpenMpi);
+        c.reps = 2;
+        c.warmup = 0;
+        let op = Op::Bcast { root: 0, c: 1_000_000 };
+        let native = c.run(op, Algorithm::Native);
+        let (best_alg, best) = c.autotune(op, &c.default_candidates(op));
+        assert!(best.summary.avg < native.summary.avg, "autotune should beat native");
+        assert!(
+            matches!(best_alg, Algorithm::FullLane | Algorithm::KPorted { .. }),
+            "{best_alg:?}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "bruck is an alltoall algorithm")]
+    fn bruck_rejected_for_bcast() {
+        coll().schedule(Op::Bcast { root: 0, c: 4 }, Algorithm::Bruck { k: 2 });
+    }
+}

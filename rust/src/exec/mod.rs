@@ -1,0 +1,467 @@
+//! Threaded execution backend ("mini-MPI"): really runs a [`Schedule`]
+//! on real buffers, with one OS thread per rank, mailbox-based
+//! nonblocking message passing, and per-round waitall — the same
+//! semantics the simulator models. Used to (a) prove every schedule's
+//! data movement is correct on actual payloads and (b) measure real
+//! wallclock for the end-to-end examples.
+//!
+//! Node-local phases (consecutive rounds tagged with the same
+//! [`LocalOpKind`] hint whose transfers are *all* on-node) form a *phase
+//! group*. In [`PhaseMode::Xla`] a node leader executes a whole group as
+//! one call into the AOT-compiled artifacts (see [`crate::runtime`]) —
+//! the three-layer integration point: L3 coordination, L2/L1 compute.
+//! Groups whose shape has no artifact fall back to channel execution.
+
+mod payload;
+mod phases;
+
+#[cfg(test)]
+mod tests;
+
+pub use payload::{block_elem, gen_block};
+
+use std::collections::HashMap;
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::XlaService;
+use crate::schedule::{LocalOpKind, Schedule, Sizing, Transfer};
+use crate::util::stats::{RepCollector, Summary};
+
+/// How node-phase rounds are executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PhaseMode {
+    /// Always pairwise messages through mailboxes.
+    Channels,
+    /// Use XLA artifacts for hinted phase groups when shapes match.
+    Xla,
+}
+
+/// Execution report for one collective run.
+#[derive(Clone, Debug)]
+pub struct ExecReport {
+    pub summary: Summary,
+    /// Blocks verified against the payload generator at the final rep.
+    pub blocks_verified: u64,
+    /// Phase-group executions that went through XLA artifacts.
+    pub xla_phases: u64,
+}
+
+/// A message: the transfer's blocks with their payloads.
+pub(crate) type Message = Vec<(u64, Vec<i32>)>;
+
+/// Per-rank block storage, shared with phase leaders.
+pub(crate) type Store = Mutex<HashMap<u64, Vec<i32>>>;
+
+/// Per-rank mailbox keyed by (src, round).
+#[derive(Default)]
+struct Mailbox {
+    slots: Mutex<HashMap<(u32, u32), Message>>,
+    bell: Condvar,
+}
+
+impl Mailbox {
+    fn put(&self, key: (u32, u32), msg: Message) {
+        let prev = self.slots.lock().unwrap().insert(key, msg);
+        debug_assert!(prev.is_none(), "duplicate message key {key:?}");
+        self.bell.notify_all();
+    }
+
+    fn take(&self, key: (u32, u32)) -> Message {
+        let mut slots = self.slots.lock().unwrap();
+        loop {
+            if let Some(m) = slots.remove(&key) {
+                return m;
+            }
+            slots = self.bell.wait(slots).unwrap();
+        }
+    }
+}
+
+/// One rank's view of a round.
+pub(crate) struct RankRound {
+    round: u32,
+    sends: Vec<Transfer>,
+    recvs: Vec<(u32, u32)>, // (src, round) mailbox keys
+}
+
+/// A maximal run of same-kind hinted rounds, with everything the XLA
+/// leader path needs. `c_eff` is the uniform per-(src,dst)-pair element
+/// count (concatenating multi-block pairs); `None` if non-uniform.
+#[derive(Clone, Debug)]
+pub(crate) struct PhaseGroup {
+    pub kind: LocalOpKind,
+    pub first_round: u32,
+    pub last_round: u32,
+    pub pure_local: bool,
+    pub c_eff: Option<u64>,
+    /// Uniform per-source element count of the group's *first* round
+    /// (the per-core contribution an allgather artifact needs).
+    pub c_contrib: Option<u64>,
+}
+
+#[derive(Clone)]
+enum Step {
+    Rounds(std::ops::Range<usize>), // indexes into the rank's RankRound list
+    Phase(usize),                   // index into the phase-group list
+}
+
+pub struct ExecRuntime {
+    pub mode: PhaseMode,
+    pub xla: Option<XlaService>,
+    /// Maximum rank count we are willing to spawn threads for.
+    pub max_threads: u32,
+}
+
+impl ExecRuntime {
+    pub fn channels() -> Self {
+        Self { mode: PhaseMode::Channels, xla: None, max_threads: 256 }
+    }
+
+    pub fn with_xla(svc: XlaService) -> Self {
+        Self { mode: PhaseMode::Xla, xla: Some(svc), max_threads: 256 }
+    }
+
+    /// Execute the schedule `reps + warmup` times, verifying delivered
+    /// payloads on the last repetition.
+    pub fn run(&self, schedule: &Schedule, reps: usize, warmup: usize) -> Result<ExecReport> {
+        let p = schedule.p();
+        if p > self.max_threads {
+            bail!("exec backend refuses p = {p} > {} threads", self.max_threads);
+        }
+        let cl = schedule.cluster;
+
+        // ---- preprocess: per-rank rounds ----
+        let mut rank_rounds: Vec<Vec<RankRound>> = (0..p).map(|_| Vec::new()).collect();
+        for (ri, round) in schedule.rounds.iter().enumerate() {
+            for t in &round.transfers {
+                let rr = &mut rank_rounds[t.src as usize];
+                if rr.last().map(|r| r.round) != Some(ri as u32) {
+                    rr.push(RankRound { round: ri as u32, sends: vec![], recvs: vec![] });
+                }
+                rr.last_mut().unwrap().sends.push(t.clone());
+                let rr = &mut rank_rounds[t.dst as usize];
+                if rr.last().map(|r| r.round) != Some(ri as u32) {
+                    rr.push(RankRound { round: ri as u32, sends: vec![], recvs: vec![] });
+                }
+                rr.last_mut().unwrap().recvs.push((t.src, ri as u32));
+            }
+        }
+
+        // ---- phase groups ----
+        let groups = find_groups(schedule);
+        let runnable: Vec<bool> = groups
+            .iter()
+            .map(|g| {
+                self.mode == PhaseMode::Xla
+                    && self.xla.is_some()
+                    && g.pure_local
+                    && phases::runnable(g, cl.cores)
+            })
+            .collect();
+
+        // ---- per-rank step programs ----
+        let progs: Vec<Vec<Step>> = (0..p as usize)
+            .map(|r| build_steps(&rank_rounds[r], &groups, &runnable))
+            .collect();
+
+        // Every core of every node must reach the node barrier for each
+        // runnable group — verify participation, else demote the group.
+        // (All our builders' local collectives involve every core.)
+        let mut phase_participants = vec![0u32; groups.len()];
+        for prog in &progs {
+            for s in prog {
+                if let Step::Phase(gi) = s {
+                    phase_participants[*gi] += 1;
+                }
+            }
+        }
+        for (gi, &n) in phase_participants.iter().enumerate() {
+            if runnable[gi] && n != p {
+                bail!(
+                    "phase group {gi} ({:?}) reaches {n}/{p} ranks — builder bug",
+                    groups[gi].kind
+                );
+            }
+        }
+
+        // ---- shared state ----
+        let mailboxes: Arc<Vec<Mailbox>> =
+            Arc::new((0..p).map(|_| Mailbox::default()).collect());
+        let stores: Arc<Vec<Store>> =
+            Arc::new((0..p).map(|_| Mutex::new(HashMap::new())).collect());
+        let rep_barrier = Arc::new(Barrier::new(p as usize + 1));
+        let node_barriers: Arc<Vec<Barrier>> = Arc::new(
+            (0..cl.nodes).map(|_| Barrier::new(cl.cores as usize)).collect(),
+        );
+        let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let xla_count = Arc::new(Mutex::new(0u64));
+
+        let schedule = Arc::new(schedule.clone());
+        let groups = Arc::new(groups);
+        let total_reps = reps + warmup;
+
+        let mut handles = Vec::new();
+        for rank in 0..p {
+            let ctx = WorkerCtx {
+                rank,
+                schedule: schedule.clone(),
+                rounds: std::mem::take(&mut rank_rounds[rank as usize]),
+                steps: progs[rank as usize].clone(),
+                groups: groups.clone(),
+                xla: self.xla.clone(),
+                xla_count: xla_count.clone(),
+                mailboxes: mailboxes.clone(),
+                stores: stores.clone(),
+                rep_barrier: rep_barrier.clone(),
+                node_barriers: node_barriers.clone(),
+                errors: errors.clone(),
+                total_reps,
+            };
+            handles.push(std::thread::spawn(move || ctx.run()));
+        }
+
+        // Main thread paces reps and measures wallclock between barriers.
+        let mut col = RepCollector::new(warmup, reps);
+        for _rep in 0..total_reps {
+            rep_barrier.wait(); // workers reset stores, ready to start
+            let t0 = Instant::now();
+            rep_barrier.wait(); // workers finished the collective
+            col.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+        let errs = errors.lock().unwrap();
+        if !errs.is_empty() {
+            bail!("exec verification failed: {}", errs.join("; "));
+        }
+
+        let blocks: u64 =
+            (0..p).map(|r| schedule.op.required_blocks(r, p).count()).sum();
+        let xla_phases = *xla_count.lock().unwrap();
+        drop(errs);
+        Ok(ExecReport { summary: col.summary(), blocks_verified: blocks, xla_phases })
+    }
+}
+
+/// Scan the schedule for maximal runs of same-kind hinted rounds and
+/// compute their properties.
+pub(crate) fn find_groups(schedule: &Schedule) -> Vec<PhaseGroup> {
+    let cl = schedule.cluster;
+    let mut groups = Vec::new();
+    let mut i = 0usize;
+    while i < schedule.rounds.len() {
+        let Some(kind) = schedule.rounds[i].node_phase else {
+            i += 1;
+            continue;
+        };
+        let first = i;
+        while i + 1 < schedule.rounds.len() && schedule.rounds[i + 1].node_phase == Some(kind)
+        {
+            i += 1;
+        }
+        // Properties over the group's transfers.
+        let mut pure_local = true;
+        let mut pair_elems: HashMap<(u32, u32), u64> = HashMap::new();
+        for round in &schedule.rounds[first..=i] {
+            for t in &round.transfers {
+                pure_local &= cl.same_node(t.src, t.dst);
+                *pair_elems.entry((t.src, t.dst)).or_insert(0) += t.bytes / 4;
+            }
+        }
+        let mut c_eff = None;
+        let mut uniform = true;
+        for &e in pair_elems.values() {
+            match c_eff {
+                None => c_eff = Some(e),
+                Some(v) if v != e => uniform = false,
+                _ => {}
+            }
+        }
+        // Per-source contribution in the group's first round.
+        let mut src_elems: HashMap<u32, u64> = HashMap::new();
+        for t in &schedule.rounds[first].transfers {
+            *src_elems.entry(t.src).or_insert(0) += t.bytes / 4;
+        }
+        let mut c_contrib = None;
+        let mut contrib_uniform = true;
+        for &e in src_elems.values() {
+            match c_contrib {
+                None => c_contrib = Some(e),
+                Some(v) if v != e => contrib_uniform = false,
+                _ => {}
+            }
+        }
+        groups.push(PhaseGroup {
+            kind,
+            first_round: first as u32,
+            last_round: i as u32,
+            pure_local,
+            c_eff: if uniform { c_eff } else { None },
+            c_contrib: if contrib_uniform { c_contrib } else { None },
+        });
+        i += 1;
+    }
+    groups
+}
+
+fn build_steps(rounds: &[RankRound], groups: &[PhaseGroup], runnable: &[bool]) -> Vec<Step> {
+    let in_runnable = |round: u32| -> Option<usize> {
+        groups
+            .iter()
+            .enumerate()
+            .find(|(gi, g)| runnable[*gi] && round >= g.first_round && round <= g.last_round)
+            .map(|(gi, _)| gi)
+    };
+    let mut steps = Vec::new();
+    let mut i = 0usize;
+    while i < rounds.len() {
+        if let Some(gi) = in_runnable(rounds[i].round) {
+            let g = &groups[gi];
+            while i < rounds.len() && rounds[i].round <= g.last_round {
+                i += 1;
+            }
+            steps.push(Step::Phase(gi));
+        } else {
+            let start = i;
+            while i < rounds.len() && in_runnable(rounds[i].round).is_none() {
+                i += 1;
+            }
+            steps.push(Step::Rounds(start..i));
+        }
+    }
+    steps
+}
+
+struct WorkerCtx {
+    rank: u32,
+    schedule: Arc<Schedule>,
+    rounds: Vec<RankRound>,
+    steps: Vec<Step>,
+    groups: Arc<Vec<PhaseGroup>>,
+    xla: Option<XlaService>,
+    xla_count: Arc<Mutex<u64>>,
+    mailboxes: Arc<Vec<Mailbox>>,
+    stores: Arc<Vec<Store>>,
+    rep_barrier: Arc<Barrier>,
+    node_barriers: Arc<Vec<Barrier>>,
+    errors: Arc<Mutex<Vec<String>>>,
+    total_reps: usize,
+}
+
+impl WorkerCtx {
+    fn run(self) {
+        let schedule = &*self.schedule;
+        let p = schedule.p();
+        let cl = schedule.cluster;
+        let sizing = schedule.op.sizing();
+        let node = cl.node_of(self.rank);
+        let core = cl.core_of(self.rank);
+
+        for rep in 0..self.total_reps {
+            {
+                let mut st = self.stores[self.rank as usize].lock().unwrap();
+                st.clear();
+                for b in schedule.op.initial_blocks(self.rank, p).iter() {
+                    st.insert(b, gen_block(b, block_elems(&sizing, b)));
+                }
+            }
+            self.rep_barrier.wait(); // aligned start (the "MPI_Barrier")
+
+            for step in &self.steps {
+                match step {
+                    Step::Rounds(range) => self.do_rounds(range.clone()),
+                    Step::Phase(gi) => {
+                        let g = &self.groups[*gi];
+                        self.node_barriers[node as usize].wait();
+                        if core == 0 {
+                            let r = phases::run_leader(
+                                schedule,
+                                g,
+                                node,
+                                self.xla.as_ref().unwrap(),
+                                &self.stores,
+                            );
+                            match r {
+                                Ok(()) => *self.xla_count.lock().unwrap() += 1,
+                                Err(e) => self
+                                    .errors
+                                    .lock()
+                                    .unwrap()
+                                    .push(format!("node {node} phase: {e}")),
+                            }
+                        }
+                        self.node_barriers[node as usize].wait();
+                    }
+                }
+            }
+
+            self.rep_barrier.wait(); // end of rep
+
+            if rep == self.total_reps - 1 {
+                self.verify(p, &sizing);
+            }
+        }
+    }
+
+    fn do_rounds(&self, range: std::ops::Range<usize>) {
+        for rr in &self.rounds[range] {
+            for t in &rr.sends {
+                let msg: Message = {
+                    let st = self.stores[self.rank as usize].lock().unwrap();
+                    t.blocks
+                        .iter()
+                        .map(|b| {
+                            let data = st.get(&b).unwrap_or_else(|| {
+                                panic!(
+                                    "rank {} round {} missing block {b} ({})",
+                                    self.rank, rr.round, self.schedule.algorithm
+                                )
+                            });
+                            (b, data.clone())
+                        })
+                        .collect()
+                };
+                self.mailboxes[t.dst as usize].put((self.rank, rr.round), msg);
+            }
+            for &key in &rr.recvs {
+                let msg = self.mailboxes[self.rank as usize].take(key);
+                let mut st = self.stores[self.rank as usize].lock().unwrap();
+                for (b, data) in msg {
+                    st.insert(b, data);
+                }
+            }
+        }
+    }
+
+    fn verify(&self, p: u32, sizing: &Sizing) {
+        let st = self.stores[self.rank as usize].lock().unwrap();
+        for b in self.schedule.op.required_blocks(self.rank, p).iter() {
+            let want = gen_block(b, block_elems(sizing, b));
+            match st.get(&b) {
+                None => self
+                    .errors
+                    .lock()
+                    .unwrap()
+                    .push(format!("rank {}: missing block {b}", self.rank)),
+                Some(got) if *got != want => self
+                    .errors
+                    .lock()
+                    .unwrap()
+                    .push(format!("rank {}: corrupt block {b}", self.rank)),
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Per-block element count (Split sizing depends on the block id).
+pub(crate) fn block_elems(sizing: &Sizing, b: u64) -> u64 {
+    match sizing {
+        Sizing::Uniform { elems } => *elems,
+        Sizing::Split { .. } => sizing.elems(b),
+    }
+}

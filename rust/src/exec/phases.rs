@@ -1,0 +1,246 @@
+//! XLA-driven execution of node-local phase groups.
+//!
+//! A node leader (core 0) executes a whole phase group as one artifact
+//! call: it assembles the input array from the member ranks' block
+//! stores (they are parked at the node barrier, so the stores are
+//! quiescent), calls [`XlaService::run`], and writes the outputs back.
+//! Semantics are identical to executing the group's transfers pairwise
+//! — the integration tests cross-check both paths block-for-block.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use super::{PhaseGroup, Store};
+use crate::runtime::XlaService;
+use crate::schedule::{LocalOpKind, Schedule};
+
+/// Shapes lowered by aot.py (NODE_SIZES × COUNTS in python/compile/aot.py).
+fn artifact_shape_available(n: u32, c: u64) -> bool {
+    matches!(n, 4 | 8) && matches!(c, 16 | 256 | 1024)
+}
+
+/// Can this group be run through an artifact at all?
+pub(crate) fn runnable(g: &PhaseGroup, cores: u32) -> bool {
+    let c = match g.kind {
+        LocalOpKind::Alltoall | LocalOpKind::Bcast => g.c_eff,
+        LocalOpKind::Allgather => g.c_contrib,
+        LocalOpKind::Scatter => None,
+    };
+    c.is_some_and(|c| artifact_shape_available(cores, c))
+}
+
+/// Execute one phase group on one node through the XLA service.
+pub(crate) fn run_leader(
+    schedule: &Schedule,
+    g: &PhaseGroup,
+    node: u32,
+    svc: &XlaService,
+    stores: &[Store],
+) -> Result<()> {
+    match g.kind {
+        LocalOpKind::Alltoall => alltoall(schedule, g, node, svc, stores),
+        LocalOpKind::Bcast => bcast(schedule, g, node, svc, stores),
+        LocalOpKind::Allgather => allgather(schedule, g, node, svc, stores),
+        LocalOpKind::Scatter => Err(anyhow!("scatter groups are not XLA-runnable")),
+    }
+}
+
+/// The (src_core, dst_core) → ordered block ids moved within the group on
+/// this node. Blocks per pair are concatenated in ascending id order.
+fn pair_blocks(
+    schedule: &Schedule,
+    g: &PhaseGroup,
+    node: u32,
+) -> HashMap<(u32, u32), Vec<u64>> {
+    let cl = schedule.cluster;
+    let mut pairs: HashMap<(u32, u32), Vec<u64>> = HashMap::new();
+    for round in &schedule.rounds[g.first_round as usize..=g.last_round as usize] {
+        for t in &round.transfers {
+            if cl.node_of(t.src) != node {
+                continue;
+            }
+            pairs
+                .entry((cl.core_of(t.src), cl.core_of(t.dst)))
+                .or_default()
+                .extend(t.blocks.iter());
+        }
+    }
+    for v in pairs.values_mut() {
+        v.sort_unstable();
+    }
+    pairs
+}
+
+/// Node-local alltoall: input x[i][j] = concat of blocks core i sends to
+/// core j; artifact transposes; write back y[i][j] (= x[j][i]) to core j…
+/// i.e. the blocks core j *receives from* core i land at core j.
+fn alltoall(
+    schedule: &Schedule,
+    g: &PhaseGroup,
+    node: u32,
+    svc: &XlaService,
+    stores: &[Store],
+) -> Result<()> {
+    let cl = schedule.cluster;
+    let n = cl.cores as usize;
+    let c = g.c_eff.ok_or_else(|| anyhow!("non-uniform group"))? as usize;
+    let pairs = pair_blocks(schedule, g, node);
+
+    let mut x = vec![0i32; n * n * c];
+    for (&(i, j), blocks) in &pairs {
+        let src_rank = cl.rank_of(node, i);
+        let st = stores[src_rank as usize].lock().unwrap();
+        let off = (i as usize * n + j as usize) * c;
+        let mut pos = off;
+        for b in blocks {
+            let d = st.get(b).ok_or_else(|| anyhow!("core {i} missing block {b}"))?;
+            x[pos..pos + d.len()].copy_from_slice(d);
+            pos += d.len();
+        }
+        debug_assert_eq!(pos - off, c, "pair ({i},{j}) underfilled");
+    }
+
+    let y = svc.run("node_alltoall", cl.cores, c as u64, x)?;
+
+    // y[j][i] (after transpose) = x[i][j]: core j receives from core i.
+    for (&(i, j), blocks) in &pairs {
+        let dst_rank = cl.rank_of(node, j);
+        let mut st = stores[dst_rank as usize].lock().unwrap();
+        let off = (j as usize * n + i as usize) * c;
+        let mut pos = off;
+        for b in blocks {
+            let len = crate::exec::block_elems(&schedule.op.sizing(), *b) as usize;
+            st.insert(*b, y[pos..pos + len].to_vec());
+            pos += len;
+        }
+    }
+    Ok(())
+}
+
+/// Node-local broadcast: the group's root core (the unique core that only
+/// sends in the group's first round) replicates one payload to all cores.
+fn bcast(
+    schedule: &Schedule,
+    g: &PhaseGroup,
+    node: u32,
+    svc: &XlaService,
+    stores: &[Store],
+) -> Result<()> {
+    let cl = schedule.cluster;
+    // Entry core and blocks: the src of the group's earliest transfer on
+    // this node.
+    let mut entry: Option<(u32, Vec<u64>)> = None;
+    'outer: for round in &schedule.rounds[g.first_round as usize..=g.last_round as usize] {
+        for t in &round.transfers {
+            if cl.node_of(t.src) == node {
+                entry = Some((cl.core_of(t.src), t.blocks.iter().collect()));
+                break 'outer;
+            }
+        }
+    }
+    let Some((root_core, blocks)) = entry else { return Ok(()) }; // group absent on node
+
+    // Destination cores this group reaches.
+    let mut dsts: Vec<u32> = Vec::new();
+    for round in &schedule.rounds[g.first_round as usize..=g.last_round as usize] {
+        for t in &round.transfers {
+            if cl.node_of(t.dst) == node {
+                dsts.push(cl.core_of(t.dst));
+            }
+        }
+    }
+    dsts.sort_unstable();
+    dsts.dedup();
+
+    let src_rank = cl.rank_of(node, root_core);
+    let mut payload = Vec::new();
+    {
+        let st = stores[src_rank as usize].lock().unwrap();
+        for b in &blocks {
+            payload.extend_from_slice(
+                st.get(b).ok_or_else(|| anyhow!("root missing block {b}"))?,
+            );
+        }
+    }
+    let c = payload.len() as u64;
+    let y = svc.run("node_bcast", cl.cores, c, payload)?;
+    let cc = c as usize;
+    for &dcore in &dsts {
+        let dst_rank = cl.rank_of(node, dcore);
+        let mut st = stores[dst_rank as usize].lock().unwrap();
+        let row = &y[dcore as usize * cc..(dcore as usize + 1) * cc];
+        let mut pos = 0usize;
+        for b in &blocks {
+            let len = crate::exec::block_elems(&schedule.op.sizing(), *b) as usize;
+            st.insert(*b, row[pos..pos + len].to_vec());
+            pos += len;
+        }
+    }
+    Ok(())
+}
+
+/// Node-local allgather: core j's contribution = the blocks it sends in
+/// the group's *first* round (ring and recursive-doubling both start by
+/// sending the own block set); artifact replicates all contributions to
+/// every core.
+fn allgather(
+    schedule: &Schedule,
+    g: &PhaseGroup,
+    node: u32,
+    svc: &XlaService,
+    stores: &[Store],
+) -> Result<()> {
+    let cl = schedule.cluster;
+    let n = cl.cores as usize;
+    // Contribution of each core: blocks it holds at group start that the
+    // group will disseminate = blocks it sends in the first round.
+    let mut contrib: HashMap<u32, Vec<u64>> = HashMap::new();
+    for t in &schedule.rounds[g.first_round as usize].transfers {
+        if cl.node_of(t.src) == node {
+            contrib
+                .entry(cl.core_of(t.src))
+                .or_default()
+                .extend(t.blocks.iter());
+        }
+    }
+    for v in contrib.values_mut() {
+        v.sort_unstable();
+        v.dedup();
+    }
+    if contrib.len() != n {
+        return Err(anyhow!(
+            "allgather group: {}/{n} cores contribute — unsupported shape",
+            contrib.len()
+        ));
+    }
+    let c = g.c_contrib.ok_or_else(|| anyhow!("non-uniform contributions"))? as usize;
+
+    let mut x = vec![0i32; n * c];
+    for (&j, blocks) in &contrib {
+        let src_rank = cl.rank_of(node, j);
+        let st = stores[src_rank as usize].lock().unwrap();
+        let mut pos = j as usize * c;
+        for b in blocks {
+            let d = st.get(b).ok_or_else(|| anyhow!("core {j} missing block {b}"))?;
+            x[pos..pos + d.len()].copy_from_slice(d);
+            pos += d.len();
+        }
+    }
+
+    let y = svc.run("node_allgather", cl.cores, c as u64, x)?;
+    // y[i][j] = contribution of core j, delivered to every core i.
+    for i in 0..n {
+        let dst_rank = cl.rank_of(node, i as u32);
+        let mut st = stores[dst_rank as usize].lock().unwrap();
+        for (&j, blocks) in &contrib {
+            let mut pos = (i * n + j as usize) * c;
+            for b in blocks {
+                let len = crate::exec::block_elems(&schedule.op.sizing(), *b) as usize;
+                st.insert(*b, y[pos..pos + len].to_vec());
+                pos += len;
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! Exec-backend integration tests: every algorithm really moves the
+//! right bytes, and the XLA phase path agrees with the channel path.
+
+use super::*;
+use crate::algorithms::{alltoall, bcast, scatter};
+use crate::topology::Cluster;
+
+fn channels() -> ExecRuntime {
+    ExecRuntime::channels()
+}
+
+fn xla_runtime() -> Option<ExecRuntime> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping XLA path: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(ExecRuntime::with_xla(XlaService::start(dir).unwrap()))
+}
+
+#[test]
+fn bcast_all_algorithms_execute() {
+    let cl = Cluster::new(4, 4, 2);
+    for alg in [
+        bcast::BcastAlg::KPorted { k: 2 },
+        bcast::BcastAlg::KLane { k: 2, two_phase: false },
+        bcast::BcastAlg::KLane { k: 2, two_phase: true },
+        bcast::BcastAlg::FullLane,
+        bcast::BcastAlg::Binomial,
+        bcast::BcastAlg::ScatterAllgather,
+    ] {
+        let s = bcast::build(cl, 3, 64, alg);
+        let rep = channels().run(&s, 2, 1).unwrap_or_else(|e| panic!("{}: {e}", s.algorithm));
+        assert!(rep.blocks_verified > 0, "{}", s.algorithm);
+    }
+}
+
+#[test]
+fn scatter_all_algorithms_execute() {
+    let cl = Cluster::new(4, 4, 2);
+    for alg in [
+        scatter::ScatterAlg::KPorted { k: 2 },
+        scatter::ScatterAlg::KLane { k: 2 },
+        scatter::ScatterAlg::FullLane,
+        scatter::ScatterAlg::Binomial,
+        scatter::ScatterAlg::Linear,
+    ] {
+        let s = scatter::build(cl, 5, 16, alg);
+        let rep = channels().run(&s, 2, 1).unwrap_or_else(|e| panic!("{}: {e}", s.algorithm));
+        assert_eq!(rep.blocks_verified, cl.p() as u64, "{}", s.algorithm);
+    }
+}
+
+#[test]
+fn alltoall_all_algorithms_execute() {
+    let cl = Cluster::new(3, 4, 2);
+    for alg in [
+        alltoall::AlltoallAlg::KPorted { k: 3 },
+        alltoall::AlltoallAlg::Bruck { k: 2 },
+        alltoall::AlltoallAlg::KLane,
+        alltoall::AlltoallAlg::FullLane,
+        alltoall::AlltoallAlg::Pairwise,
+    ] {
+        let s = alltoall::build(cl, 8, alg);
+        let rep = channels().run(&s, 2, 1).unwrap_or_else(|e| panic!("{}: {e}", s.algorithm));
+        assert_eq!(rep.blocks_verified, (cl.p() as u64).pow(2), "{}", s.algorithm);
+    }
+}
+
+#[test]
+fn wallclock_is_positive_and_warmup_discarded() {
+    let cl = Cluster::new(2, 2, 1);
+    let s = bcast::build(cl, 0, 1024, bcast::BcastAlg::Binomial);
+    let rep = channels().run(&s, 5, 2).unwrap();
+    assert_eq!(rep.summary.reps, 5);
+    assert!(rep.summary.min > 0.0);
+    assert!(rep.summary.avg >= rep.summary.min);
+}
+
+#[test]
+fn xla_phase_path_klane_alltoall() {
+    // klane alltoall's final local phase is a pure-local Alltoall group;
+    // with n = 4 cores and c = 16 the artifact exists.
+    let Some(rt) = xla_runtime() else { return };
+    let cl = Cluster::new(3, 4, 2);
+    let s = alltoall::build(cl, 16, alltoall::AlltoallAlg::KLane);
+    let rep = rt.run(&s, 2, 0).unwrap();
+    assert!(rep.xla_phases > 0, "expected XLA phase execution");
+    // correctness already asserted by internal verification
+}
+
+#[test]
+fn xla_phase_path_fulllane_alltoall() {
+    // fulllane phase 1 pairs carry N·c elements: N = 4 nodes, c = 4 →
+    // c_eff = 16, artifact (n=4, c=16) exists.
+    let Some(rt) = xla_runtime() else { return };
+    let cl = Cluster::new(4, 4, 2);
+    let s = alltoall::build(cl, 4, alltoall::AlltoallAlg::FullLane);
+    let rep = rt.run(&s, 2, 0).unwrap();
+    assert!(rep.xla_phases > 0);
+}
+
+#[test]
+fn xla_phase_path_fulllane_bcast_allgather() {
+    // fulllane bcast on 4 nodes × 4 cores with c = 64: segments of 16
+    // elements; the final allgather group has c_contrib = 16.
+    let Some(rt) = xla_runtime() else { return };
+    let cl = Cluster::new(4, 4, 2);
+    let s = bcast::build(cl, 0, 64, bcast::BcastAlg::FullLane);
+    let rep = rt.run(&s, 2, 0).unwrap();
+    assert!(rep.xla_phases > 0);
+}
+
+#[test]
+fn xla_and_channel_paths_agree() {
+    // Same schedule, both modes: identical verification outcome and
+    // blocks — the cross-check that the XLA phase semantics are right.
+    let Some(rt) = xla_runtime() else { return };
+    let cl = Cluster::new(3, 4, 1);
+    let s = alltoall::build(cl, 16, alltoall::AlltoallAlg::KLane);
+    let a = channels().run(&s, 1, 0).unwrap();
+    let b = rt.run(&s, 1, 0).unwrap();
+    assert_eq!(a.blocks_verified, b.blocks_verified);
+    assert_eq!(a.xla_phases, 0);
+    assert!(b.xla_phases > 0);
+}
+
+#[test]
+fn refuses_oversized_clusters() {
+    let cl = Cluster::hydra(2);
+    let s = bcast::build(cl, 0, 4, bcast::BcastAlg::Binomial);
+    let err = channels().run(&s, 1, 0).unwrap_err();
+    assert!(err.to_string().contains("refuses"), "{err}");
+}
+
+#[test]
+fn single_rank_schedule() {
+    let cl = Cluster::new(1, 1, 1);
+    let s = bcast::build(cl, 0, 8, bcast::BcastAlg::Binomial);
+    let rep = channels().run(&s, 1, 0).unwrap();
+    assert_eq!(rep.blocks_verified, 1);
+}
+
+#[test]
+fn gather_all_algorithms_execute() {
+    use crate::algorithms::gather;
+    let cl = Cluster::new(3, 4, 2);
+    for alg in [
+        gather::GatherAlg::KPorted { k: 2 },
+        gather::GatherAlg::KLane { k: 2 },
+        gather::GatherAlg::FullLane,
+        gather::GatherAlg::Binomial,
+        gather::GatherAlg::Linear,
+    ] {
+        let s = gather::build(cl, 5, 16, alg);
+        let rep = channels().run(&s, 1, 0).unwrap_or_else(|e| panic!("{}: {e}", s.algorithm));
+        // root needs all p blocks; everyone else keeps its own
+        assert!(rep.blocks_verified >= cl.p() as u64, "{}", s.algorithm);
+    }
+}
+
+#[test]
+fn allgather_all_algorithms_execute() {
+    use crate::algorithms::allgather;
+    let cl = Cluster::new(2, 4, 2);
+    for alg in [
+        allgather::AllgatherAlg::Ring,
+        allgather::AllgatherAlg::RecursiveDoubling,
+        allgather::AllgatherAlg::Bruck { k: 2 },
+        allgather::AllgatherAlg::FullLane,
+    ] {
+        let s = allgather::build(cl, 16, alg);
+        let rep = channels().run(&s, 1, 0).unwrap_or_else(|e| panic!("{}: {e}", s.algorithm));
+        assert_eq!(rep.blocks_verified, (cl.p() as u64) * cl.p() as u64, "{}", s.algorithm);
+    }
+}

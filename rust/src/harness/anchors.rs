@@ -1,0 +1,134 @@
+//! Paper reference anchors: measured values transcribed from the
+//! paper's tables (avg µs of the slowest rank), used to check that the
+//! simulation reproduces the paper's *shape* — who wins, by roughly what
+//! factor, where the crossovers sit — without pretending to match a real
+//! OmniPath testbed absolutely.
+
+use super::{run_table, table};
+
+/// One transcribed cell of a paper table.
+#[derive(Clone, Copy, Debug)]
+pub struct Anchor {
+    pub table: u32,
+    /// Section heading substring to match (e.g. "k = 2 lanes").
+    pub section: &'static str,
+    pub c: u64,
+    pub paper_avg_us: f64,
+}
+
+/// Key cells from every experiment family (small + large count per
+/// series; the full tables live in the paper).
+pub fn anchors() -> Vec<Anchor> {
+    vec![
+        // §4.1 — Table 2 (Open MPI k-ported alltoall, node vs net)
+        Anchor { table: 2, section: "N=32", c: 1, paper_avg_us: 20.14 },
+        Anchor { table: 2, section: "N=32", c: 31250, paper_avg_us: 448.03 },
+        Anchor { table: 2, section: "N=1", c: 1, paper_avg_us: 17.85 },
+        Anchor { table: 2, section: "N=1", c: 31250, paper_avg_us: 4618.21 },
+        // Table 3 (Open MPI native alltoall)
+        Anchor { table: 3, section: "N=32", c: 31250, paper_avg_us: 2087.67 },
+        Anchor { table: 3, section: "N=1", c: 31250, paper_avg_us: 4400.47 },
+        // §4.2 — broadcast, Open MPI
+        Anchor { table: 8, section: "k = 1", c: 1000000, paper_avg_us: 19657.63 },
+        Anchor { table: 8, section: "k = 2", c: 1000000, paper_avg_us: 28057.86 },
+        Anchor { table: 10, section: "1-ported", c: 1000000, paper_avg_us: 9206.83 },
+        Anchor { table: 10, section: "2-ported", c: 1000000, paper_avg_us: 8600.59 },
+        Anchor { table: 12, section: "Full-lane", c: 1000000, paper_avg_us: 3309.16 },
+        Anchor { table: 12, section: "MPI_Bcast", c: 60000, paper_avg_us: 642.72 },
+        Anchor { table: 12, section: "MPI_Bcast", c: 100000, paper_avg_us: 8753.50 },
+        Anchor { table: 12, section: "MPI_Bcast", c: 1000000, paper_avg_us: 18067.27 },
+        // Intel
+        Anchor { table: 17, section: "MPI_Bcast", c: 1, paper_avg_us: 965.34 },
+        Anchor { table: 17, section: "Full-lane", c: 1000000, paper_avg_us: 4268.80 },
+        // mpich
+        Anchor { table: 22, section: "MPI_Bcast", c: 1000000, paper_avg_us: 5779.13 },
+        Anchor { table: 22, section: "Full-lane", c: 1000000, paper_avg_us: 4878.80 },
+        // §4.3 — scatter, Open MPI
+        Anchor { table: 23, section: "1 lane", c: 869, paper_avg_us: 458.39 },
+        Anchor { table: 25, section: "1-ported", c: 869, paper_avg_us: 453.82 },
+        Anchor { table: 26, section: "6-ported", c: 869, paper_avg_us: 388.39 },
+        Anchor { table: 27, section: "Full-lane", c: 869, paper_avg_us: 1444.02 },
+        Anchor { table: 27, section: "MPI_Scatter", c: 869, paper_avg_us: 1001.17 },
+        // §4.4 — alltoall, Open MPI
+        Anchor { table: 38, section: "32 virtual", c: 1, paper_avg_us: 827.90 },
+        Anchor { table: 38, section: "32 virtual", c: 869, paper_avg_us: 11848.12 },
+        Anchor { table: 39, section: "1-ported", c: 1, paper_avg_us: 2210.90 },
+        Anchor { table: 39, section: "1-ported", c: 869, paper_avg_us: 11784.61 },
+        Anchor { table: 41, section: "Full-lane", c: 1, paper_avg_us: 121.41 },
+        Anchor { table: 41, section: "Full-lane", c: 869, paper_avg_us: 12233.77 },
+        Anchor { table: 41, section: "MPI_Alltoall", c: 521, paper_avg_us: 166279.34 },
+    ]
+}
+
+/// Comparison of a simulated cell against its paper anchor.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    pub anchor: Anchor,
+    pub simulated_avg_us: f64,
+    /// simulated / paper.
+    pub ratio: f64,
+}
+
+/// Run all anchored tables and report simulated-vs-paper ratios.
+/// Expensive (full Hydra-scale sims); used by `mlane compare` and the
+/// EXPERIMENTS.md generation, not by unit tests.
+pub fn compare_all() -> Vec<Comparison> {
+    let mut out = Vec::new();
+    let mut by_table: std::collections::BTreeMap<u32, Vec<Anchor>> = Default::default();
+    for a in anchors() {
+        by_table.entry(a.table).or_default().push(a);
+    }
+    for (num, anchs) in by_table {
+        let Some(spec) = table(num) else { continue };
+        let result = run_table(&spec);
+        for a in anchs {
+            let cell = result
+                .rows
+                .iter()
+                .find(|r| r.c == a.c && r.section.contains(a.section));
+            if let Some(cell) = cell {
+                out.push(Comparison {
+                    anchor: a,
+                    simulated_avg_us: cell.avg,
+                    ratio: cell.avg / a.paper_avg_us,
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_reference_existing_tables() {
+        for a in anchors() {
+            let t = table(a.table).unwrap_or_else(|| panic!("table {} missing", a.table));
+            assert!(
+                t.sections.iter().any(|s| s.heading.contains(a.section)),
+                "table {}: no section matching {:?} in {:?}",
+                a.table,
+                a.section,
+                t.sections.iter().map(|s| &s.heading).collect::<Vec<_>>()
+            );
+            assert!(
+                t.sections.iter().any(|s| s.counts.contains(&a.c)),
+                "table {}: count {} not swept",
+                a.table,
+                a.c
+            );
+        }
+    }
+
+    #[test]
+    fn anchors_cover_all_experiment_families() {
+        let tables: std::collections::HashSet<u32> =
+            anchors().iter().map(|a| a.table).collect();
+        // node-vs-net, bcast × 3 libraries, scatter, alltoall
+        for required in [2, 3, 8, 12, 17, 22, 23, 27, 38, 41] {
+            assert!(tables.contains(&required), "table {required} unanchored");
+        }
+    }
+}

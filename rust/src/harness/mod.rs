@@ -1,0 +1,488 @@
+//! Table-regeneration harness: every table in the paper's evaluation
+//! (Tables 2–49) has a [`TableSpec`] here; running it prints the same
+//! rows (k, n, N, p, c, avg µs, min µs) the paper reports and writes a
+//! CSV under `bench_out/`.
+//!
+//! Table numbering follows the paper exactly:
+//! * 2–7 — §4.1 node-vs-network alltoall at p = 32 (k-ported / native,
+//!   per library);
+//! * 8–22 — §4.2 broadcast (k-lane k=1..6, k-ported k=1..6, full-lane +
+//!   native; × three libraries);
+//! * 23–37 — §4.3 scatter (same grid);
+//! * 38–49 — §4.4 alltoall (k-lane, k-ported k=1..6, full-lane + native;
+//!   × three libraries).
+
+pub mod anchors;
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+
+use crate::coordinator::{Algorithm, Collectives, Op};
+use crate::model::PersonaName;
+use crate::topology::Cluster;
+
+/// Count sweeps used by the paper (§4.2–4.4; MPI_INT elements).
+pub const BCAST_COUNTS: &[u64] =
+    &[1, 6, 10, 60, 100, 600, 1000, 6000, 10000, 60000, 100000, 600000, 1000000];
+pub const SCATTER_COUNTS: &[u64] = &[1, 6, 9, 53, 87, 521, 869];
+pub const ALLTOALL_COUNTS: &[u64] = &[1, 6, 9, 53, 87, 521, 869];
+/// §4.1 sweep (p = 32).
+pub const NODE_VS_NET_COUNTS: &[u64] =
+    &[1, 2, 4, 19, 32, 188, 313, 1875, 3125, 18750, 31250];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Bcast,
+    Scatter,
+    Alltoall,
+}
+
+impl OpKind {
+    fn op(&self, c: u64) -> Op {
+        match self {
+            OpKind::Bcast => Op::Bcast { root: 0, c },
+            OpKind::Scatter => Op::Scatter { root: 0, c },
+            OpKind::Alltoall => Op::Alltoall { c },
+        }
+    }
+}
+
+/// One series within a table (the paper's tables stack 1–3 of these).
+#[derive(Clone, Debug)]
+pub struct Section {
+    pub heading: String,
+    pub cluster: Cluster,
+    pub op: OpKind,
+    pub alg: Algorithm,
+    pub counts: &'static [u64],
+}
+
+#[derive(Clone, Debug)]
+pub struct TableSpec {
+    /// Paper table number (2–49).
+    pub number: u32,
+    pub caption: String,
+    pub persona: PersonaName,
+    pub sections: Vec<Section>,
+}
+
+/// One output row, matching the paper's columns.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub section: String,
+    pub k: u32,
+    pub n: u32,
+    pub nodes: u32,
+    pub p: u32,
+    pub c: u64,
+    pub avg: f64,
+    pub min: f64,
+}
+
+pub struct TableOut {
+    pub spec: TableSpec,
+    pub rows: Vec<Row>,
+}
+
+/// Run every section of a table on the simulator.
+pub fn run_table(spec: &TableSpec) -> TableOut {
+    let mut rows = Vec::new();
+    for sec in &spec.sections {
+        let coll = Collectives::new(sec.cluster, spec.persona);
+        for &c in sec.counts {
+            let m = coll.run(sec.op.op(c), sec.alg);
+            rows.push(Row {
+                section: sec.heading.clone(),
+                k: m.k,
+                n: sec.cluster.cores,
+                nodes: sec.cluster.nodes,
+                p: sec.cluster.p(),
+                c,
+                avg: m.summary.avg,
+                min: m.summary.min,
+            });
+        }
+    }
+    TableOut { spec: spec.clone(), rows }
+}
+
+impl TableOut {
+    /// Paper-style text rendering.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "Table {}: {} [{}]",
+            self.spec.number,
+            self.spec.caption,
+            self.spec.persona.label()
+        );
+        let mut current = String::new();
+        for r in &self.rows {
+            if r.section != current {
+                current = r.section.clone();
+                let _ = writeln!(out, "  -- {current} --");
+                let _ = writeln!(
+                    out,
+                    "  {:>2} {:>4} {:>4} {:>5} {:>9} {:>12} {:>12}",
+                    "k", "n", "N", "p", "c", "avg(us)", "min(us)"
+                );
+            }
+            let _ = writeln!(
+                out,
+                "  {:>2} {:>4} {:>4} {:>5} {:>9} {:>12.2} {:>12.2}",
+                r.k, r.n, r.nodes, r.p, r.c, r.avg, r.min
+            );
+        }
+        out
+    }
+
+    /// Write CSV to `bench_out/table_<nn>.csv`.
+    pub fn write_csv(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("table_{:02}.csv", self.spec.number));
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "table,persona,section,k,n,N,p,c,avg_us,min_us")?;
+        for r in &self.rows {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{},{},{:.2},{:.2}",
+                self.spec.number,
+                self.spec.persona.label(),
+                r.section,
+                r.k,
+                r.n,
+                r.nodes,
+                r.p,
+                r.c,
+                r.avg,
+                r.min
+            )?;
+        }
+        Ok(path)
+    }
+}
+
+fn hydra() -> Cluster {
+    Cluster::hydra(2)
+}
+
+fn persona_ord(i: usize) -> PersonaName {
+    [PersonaName::OpenMpi, PersonaName::IntelMpi, PersonaName::Mpich][i]
+}
+
+/// The full registry: every table of the paper.
+pub fn registry() -> Vec<TableSpec> {
+    let mut tables = Vec::new();
+
+    // ---- §4.1: Tables 2–7 (node vs network, p = 32) ----
+    let net32 = Cluster::new(32, 1, 2); // N=32, n=1 (both rails usable, §4.1)
+    let node32 = Cluster::new(1, 32, 2); // N=1, n=32
+    for (i, &(kported, base)) in [(true, 2u32), (false, 3u32)].iter().enumerate() {
+        let _ = i;
+        for pi in 0..3 {
+            let number = base + (pi as u32) * 2;
+            let (label, alg) = if kported {
+                ("k-ported alltoall", Algorithm::KPorted { k: 31 })
+            } else {
+                ("MPI_Alltoall", Algorithm::Native)
+            };
+            tables.push(TableSpec {
+                number,
+                caption: format!("{label}, N=32/n=1 vs N=1/n=32, p=32"),
+                persona: persona_ord(pi),
+                sections: vec![
+                    Section {
+                        heading: format!("{label} N=32"),
+                        cluster: net32,
+                        op: OpKind::Alltoall,
+                        alg,
+                        counts: NODE_VS_NET_COUNTS,
+                    },
+                    Section {
+                        heading: format!("{label} N=1"),
+                        cluster: node32,
+                        op: OpKind::Alltoall,
+                        alg,
+                        counts: NODE_VS_NET_COUNTS,
+                    },
+                ],
+            });
+        }
+    }
+
+    // ---- §4.2: Tables 8–22 (bcast) ----
+    for pi in 0..3u32 {
+        let base = 8 + pi * 5;
+        let persona = persona_ord(pi as usize);
+        let klane_sec = |ks: std::ops::RangeInclusive<u32>| -> Vec<Section> {
+            ks.map(|k| Section {
+                heading: format!("Bcast, k = {k} lanes"),
+                cluster: hydra(),
+                op: OpKind::Bcast,
+                alg: Algorithm::KLane { k },
+                counts: BCAST_COUNTS,
+            })
+            .collect()
+        };
+        let kported_sec = |ks: std::ops::RangeInclusive<u32>| -> Vec<Section> {
+            ks.map(|k| Section {
+                heading: format!("Bcast, {k}-ported"),
+                cluster: hydra(),
+                op: OpKind::Bcast,
+                alg: Algorithm::KPorted { k },
+                counts: BCAST_COUNTS,
+            })
+            .collect()
+        };
+        tables.push(TableSpec {
+            number: base,
+            caption: "k-lane Bcast for k=1,2,3 on Hydra".into(),
+            persona,
+            sections: klane_sec(1..=3),
+        });
+        tables.push(TableSpec {
+            number: base + 1,
+            caption: "k-lane Bcast for k=4,5,6 on Hydra".into(),
+            persona,
+            sections: klane_sec(4..=6),
+        });
+        tables.push(TableSpec {
+            number: base + 2,
+            caption: "k-ported Bcast for k=1,2,3 on Hydra".into(),
+            persona,
+            sections: kported_sec(1..=3),
+        });
+        tables.push(TableSpec {
+            number: base + 3,
+            caption: "k-ported Bcast for k=4,5,6 on Hydra".into(),
+            persona,
+            sections: kported_sec(4..=6),
+        });
+        tables.push(TableSpec {
+            number: base + 4,
+            caption: "full-lane Bcast and native MPI_Bcast on Hydra".into(),
+            persona,
+            sections: vec![
+                Section {
+                    heading: "Full-lane Bcast".into(),
+                    cluster: hydra(),
+                    op: OpKind::Bcast,
+                    alg: Algorithm::FullLane,
+                    counts: BCAST_COUNTS,
+                },
+                Section {
+                    heading: "MPI_Bcast".into(),
+                    cluster: hydra(),
+                    op: OpKind::Bcast,
+                    alg: Algorithm::Native,
+                    counts: BCAST_COUNTS,
+                },
+            ],
+        });
+    }
+
+    // ---- §4.3: Tables 23–37 (scatter) ----
+    for pi in 0..3u32 {
+        let base = 23 + pi * 5;
+        let persona = persona_ord(pi as usize);
+        let klane_sec = |ks: std::ops::RangeInclusive<u32>| -> Vec<Section> {
+            ks.map(|k| Section {
+                heading: format!("Scatter, {k} lane{}", if k == 1 { "" } else { "s" }),
+                cluster: hydra(),
+                op: OpKind::Scatter,
+                alg: Algorithm::KLane { k },
+                counts: SCATTER_COUNTS,
+            })
+            .collect()
+        };
+        let kported_sec = |ks: std::ops::RangeInclusive<u32>| -> Vec<Section> {
+            ks.map(|k| Section {
+                heading: format!("Scatter, {k}-ported"),
+                cluster: hydra(),
+                op: OpKind::Scatter,
+                alg: Algorithm::KPorted { k },
+                counts: SCATTER_COUNTS,
+            })
+            .collect()
+        };
+        tables.push(TableSpec {
+            number: base,
+            caption: "k-lane Scatter for k=1,2,3 on Hydra".into(),
+            persona,
+            sections: klane_sec(1..=3),
+        });
+        tables.push(TableSpec {
+            number: base + 1,
+            caption: "k-lane Scatter for k=4,5,6 on Hydra".into(),
+            persona,
+            sections: klane_sec(4..=6),
+        });
+        tables.push(TableSpec {
+            number: base + 2,
+            caption: "k-ported Scatter for k=1,2,3 on Hydra".into(),
+            persona,
+            sections: kported_sec(1..=3),
+        });
+        tables.push(TableSpec {
+            number: base + 3,
+            caption: "k-ported Scatter for k=4,5,6 on Hydra".into(),
+            persona,
+            sections: kported_sec(4..=6),
+        });
+        tables.push(TableSpec {
+            number: base + 4,
+            caption: "full-lane Scatter and native MPI_Scatter on Hydra".into(),
+            persona,
+            sections: vec![
+                Section {
+                    heading: "Full-lane Scatter".into(),
+                    cluster: hydra(),
+                    op: OpKind::Scatter,
+                    alg: Algorithm::FullLane,
+                    counts: SCATTER_COUNTS,
+                },
+                Section {
+                    heading: "MPI_Scatter".into(),
+                    cluster: hydra(),
+                    op: OpKind::Scatter,
+                    alg: Algorithm::Native,
+                    counts: SCATTER_COUNTS,
+                },
+            ],
+        });
+    }
+
+    // ---- §4.4: Tables 38–49 (alltoall) ----
+    for pi in 0..3u32 {
+        let base = 38 + pi * 4;
+        let persona = persona_ord(pi as usize);
+        let kported_sec = |ks: std::ops::RangeInclusive<u32>| -> Vec<Section> {
+            ks.map(|k| Section {
+                heading: format!("Alltoall, {k}-ported"),
+                cluster: hydra(),
+                op: OpKind::Alltoall,
+                alg: Algorithm::KPorted { k },
+                counts: ALLTOALL_COUNTS,
+            })
+            .collect()
+        };
+        tables.push(TableSpec {
+            number: base,
+            caption: "k-lane Alltoall (32 virtual lanes) on Hydra".into(),
+            persona,
+            sections: vec![Section {
+                heading: "Alltoall, 32 virtual lanes".into(),
+                cluster: hydra(),
+                op: OpKind::Alltoall,
+                alg: Algorithm::KLane { k: 1 },
+                counts: ALLTOALL_COUNTS,
+            }],
+        });
+        tables.push(TableSpec {
+            number: base + 1,
+            caption: "k-ported Alltoall for k=1,2,3 on Hydra".into(),
+            persona,
+            sections: kported_sec(1..=3),
+        });
+        tables.push(TableSpec {
+            number: base + 2,
+            caption: "k-ported Alltoall for k=4,5,6 on Hydra".into(),
+            persona,
+            sections: kported_sec(4..=6),
+        });
+        tables.push(TableSpec {
+            number: base + 3,
+            caption: "full-lane Alltoall and native MPI_Alltoall on Hydra".into(),
+            persona,
+            sections: vec![
+                Section {
+                    heading: "Full-lane Alltoall".into(),
+                    cluster: hydra(),
+                    op: OpKind::Alltoall,
+                    alg: Algorithm::FullLane,
+                    counts: ALLTOALL_COUNTS,
+                },
+                Section {
+                    heading: "MPI_Alltoall".into(),
+                    cluster: hydra(),
+                    op: OpKind::Alltoall,
+                    alg: Algorithm::Native,
+                    counts: ALLTOALL_COUNTS,
+                },
+            ],
+        });
+    }
+
+    tables.sort_by_key(|t| t.number);
+    tables
+}
+
+/// Look up one table by paper number.
+pub fn table(number: u32) -> Option<TableSpec> {
+    registry().into_iter().find(|t| t.number == number)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_tables_2_through_49() {
+        let r = registry();
+        assert_eq!(r.len(), 48);
+        let numbers: Vec<u32> = r.iter().map(|t| t.number).collect();
+        assert_eq!(numbers, (2..=49).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn personas_cycle_correctly() {
+        // Table 8 = Open MPI, 13 = Intel, 18 = mpich (paper order).
+        assert_eq!(table(8).unwrap().persona, PersonaName::OpenMpi);
+        assert_eq!(table(13).unwrap().persona, PersonaName::IntelMpi);
+        assert_eq!(table(18).unwrap().persona, PersonaName::Mpich);
+        // Alltoall: 38 open, 42 intel, 46 mpich.
+        assert_eq!(table(38).unwrap().persona, PersonaName::OpenMpi);
+        assert_eq!(table(46).unwrap().persona, PersonaName::Mpich);
+    }
+
+    #[test]
+    fn node_vs_net_tables_use_p32() {
+        let t = table(2).unwrap();
+        for s in &t.sections {
+            assert_eq!(s.cluster.p(), 32);
+        }
+    }
+
+    #[test]
+    fn small_table_runs_and_renders() {
+        // Shrink to one tiny section for test speed.
+        let mut t = table(12).unwrap();
+        t.sections.truncate(1);
+        t.sections[0].cluster = Cluster::new(3, 4, 2);
+        t.sections[0].counts = &[1, 600];
+        std::env::set_var("MLANE_REPS", "2");
+        let out = run_table(&t);
+        std::env::remove_var("MLANE_REPS");
+        assert_eq!(out.rows.len(), 2);
+        let text = out.render();
+        assert!(text.contains("Table 12"), "{text}");
+        assert!(text.contains("avg(us)"));
+    }
+
+    #[test]
+    fn csv_written() {
+        let mut t = table(27).unwrap();
+        t.sections.truncate(1);
+        t.sections[0].cluster = Cluster::new(2, 4, 2);
+        t.sections[0].counts = &[1];
+        std::env::set_var("MLANE_REPS", "2");
+        let out = run_table(&t);
+        std::env::remove_var("MLANE_REPS");
+        let dir = std::env::temp_dir().join("mlane_csv_test");
+        let path = out.write_csv(&dir).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.lines().count() >= 2);
+        assert!(text.starts_with("table,persona"));
+    }
+}

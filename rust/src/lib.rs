@@ -1,0 +1,11 @@
+//! `mlane` — k-ported vs. k-lane collective algorithms.
+pub mod topology;
+pub mod schedule;
+pub mod algorithms;
+pub mod model;
+pub mod sim;
+pub mod exec;
+pub mod runtime;
+pub mod coordinator;
+pub mod harness;
+pub mod util;

@@ -1,0 +1,299 @@
+//! `mlane` CLI — leader entrypoint for the k-ported / k-lane collective
+//! library.
+//!
+//! ```text
+//! mlane table <N> [--persona openmpi|intelmpi|mpich] [--csv DIR]
+//! mlane tables [--csv DIR]                    # regenerate all 48 tables
+//! mlane run --op bcast|scatter|alltoall --alg kported|klane|fulllane|bruck|native
+//!           [--k K] [--c C] [--nodes N] [--cores n] [--lanes L]
+//!           [--backend sim|exec|xla] [--persona P]
+//! mlane autotune --op <op> [--c C] [--nodes N] [--cores n] [--lanes L]
+//! mlane compare                               # simulated vs paper anchors
+//! mlane validate [--nodes N] [--cores n]      # check schedule invariants
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use mlane::coordinator::{Algorithm, Collectives, Op};
+use mlane::exec::ExecRuntime;
+use mlane::harness::{self, anchors};
+use mlane::model::PersonaName;
+use mlane::runtime::XlaService;
+use mlane::schedule::validate::{validate, validate_ports};
+use mlane::topology::Cluster;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal argument parser: positional command + `--key value` flags.
+struct Args {
+    cmd: String,
+    pos: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut argv = std::env::args().skip(1);
+    let cmd = argv.next().unwrap_or_else(|| "help".into());
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    while let Some(a) = argv.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let val = argv.next().ok_or_else(|| anyhow!("--{key} needs a value"))?;
+            flags.insert(key.to_string(), val);
+        } else {
+            pos.push(a);
+        }
+    }
+    Ok(Args { cmd, pos, flags })
+}
+
+impl Args {
+    fn flag<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("bad --{key} value: {v}")),
+        }
+    }
+
+    fn persona(&self) -> Result<PersonaName> {
+        Ok(match self.flags.get("persona").map(String::as_str) {
+            None | Some("openmpi") => PersonaName::OpenMpi,
+            Some("intelmpi") => PersonaName::IntelMpi,
+            Some("mpich") => PersonaName::Mpich,
+            Some(other) => bail!("unknown persona {other}"),
+        })
+    }
+
+    fn cluster(&self) -> Result<Cluster> {
+        let nodes = self.flag("nodes", 36u32)?;
+        let cores = self.flag("cores", 32u32)?;
+        let lanes = self.flag("lanes", 2u32)?;
+        Ok(Cluster::new(nodes, cores, lanes))
+    }
+
+    fn op(&self) -> Result<Op> {
+        let c = self.flag("c", 1000u64)?;
+        Ok(match self.flags.get("op").map(String::as_str) {
+            Some("bcast") | None => Op::Bcast { root: 0, c },
+            Some("scatter") => Op::Scatter { root: 0, c },
+            Some("gather") => Op::Gather { root: 0, c },
+            Some("allgather") => Op::Allgather { c },
+            Some("alltoall") => Op::Alltoall { c },
+            Some(other) => bail!("unknown op {other}"),
+        })
+    }
+
+    fn algorithm(&self) -> Result<Algorithm> {
+        let k = self.flag("k", 2u32)?;
+        Ok(match self.flags.get("alg").map(String::as_str) {
+            Some("kported") | None => Algorithm::KPorted { k },
+            Some("klane") => Algorithm::KLane { k },
+            Some("fulllane") => Algorithm::FullLane,
+            Some("bruck") => Algorithm::Bruck { k },
+            Some("native") => Algorithm::Native,
+            Some(other) => bail!("unknown algorithm {other}"),
+        })
+    }
+}
+
+fn run() -> Result<()> {
+    let args = parse_args()?;
+    match args.cmd.as_str() {
+        "table" => cmd_table(&args),
+        "tables" => cmd_tables(&args),
+        "run" => cmd_run(&args),
+        "autotune" => cmd_autotune(&args),
+        "compare" => cmd_compare(),
+        "trace" => cmd_trace(&args),
+        "validate" => cmd_validate(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other} (try `mlane help`)"),
+    }
+}
+
+const HELP: &str = "mlane — k-ported vs. k-lane collective algorithms (Träff 2020 reproduction)
+
+commands:
+  table <N>   regenerate paper table N (2..49)   [--csv DIR]
+  tables      regenerate all tables              [--csv DIR]
+  run         run one collective                 [--op --alg --k --c --nodes --cores --lanes --backend --persona]
+  autotune    pick the fastest algorithm         [--op --c --nodes --cores --lanes --persona]
+  compare     simulated vs paper anchor cells
+  trace       emit a Chrome-trace of one simulated run  [--op --alg ... --out FILE]
+  validate    check schedule invariants          [--nodes --cores --lanes]
+
+environment: MLANE_REPS (simulated repetitions, default 20)";
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let n: u32 = args
+        .pos
+        .first()
+        .ok_or_else(|| anyhow!("usage: mlane table <N>"))?
+        .parse()
+        .context("table number")?;
+    let spec = harness::table(n).ok_or_else(|| anyhow!("no table {n} (range 2..49)"))?;
+    let out = harness::run_table(&spec);
+    print!("{}", out.render());
+    if let Some(dir) = args.flags.get("csv") {
+        let p = out.write_csv(std::path::Path::new(dir))?;
+        eprintln!("csv: {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let dir = args.flags.get("csv").cloned().unwrap_or_else(|| "bench_out".into());
+    for spec in harness::registry() {
+        let out = harness::run_table(&spec);
+        print!("{}", out.render());
+        let p = out.write_csv(std::path::Path::new(&dir))?;
+        eprintln!("csv: {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cl = args.cluster()?;
+    let op = args.op()?;
+    let alg = args.algorithm()?;
+    let coll = Collectives::new(cl, args.persona()?);
+    match args.flags.get("backend").map(String::as_str) {
+        Some("sim") | None => {
+            let m = coll.run(op, alg);
+            println!(
+                "{} {} p={} c={}  avg={:.2}us min={:.2}us  ({} reps)",
+                op.kind(),
+                m.algorithm,
+                cl.p(),
+                m.c,
+                m.summary.avg,
+                m.summary.min,
+                m.summary.reps
+            );
+        }
+        Some(backend @ ("exec" | "xla")) => {
+            let rt = if backend == "xla" {
+                ExecRuntime::with_xla(XlaService::start(std::path::Path::new("artifacts"))?)
+            } else {
+                ExecRuntime::channels()
+            };
+            let rep = coll.execute(op, alg, &rt)?;
+            println!(
+                "{} p={} c={}  wallclock avg={:.2}us min={:.2}us  blocks={} xla_phases={}",
+                op.kind(),
+                cl.p(),
+                op.count(),
+                rep.summary.avg,
+                rep.summary.min,
+                rep.blocks_verified,
+                rep.xla_phases
+            );
+        }
+        Some(other) => bail!("unknown backend {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_autotune(args: &Args) -> Result<()> {
+    let cl = args.cluster()?;
+    let op = args.op()?;
+    let coll = Collectives::new(cl, args.persona()?);
+    let candidates = coll.default_candidates(op);
+    println!("autotune {} c={} on {}x{} (k={} lanes):", op.kind(), op.count(), cl.nodes, cl.cores, cl.lanes);
+    for &alg in &candidates {
+        let m = coll.run(op, alg);
+        println!("  {:24} avg={:.2}us min={:.2}us", m.algorithm, m.summary.avg, m.summary.min);
+    }
+    let (best, m) = coll.autotune(op, &candidates);
+    println!("winner: {} ({:.2}us)", best.label(), m.summary.avg);
+    Ok(())
+}
+
+fn cmd_compare() -> Result<()> {
+    println!("simulated vs paper anchors (ratio = simulated / paper):");
+    println!(
+        "{:>6} {:<28} {:>9} {:>12} {:>12} {:>7}",
+        "table", "section", "c", "paper(us)", "sim(us)", "ratio"
+    );
+    for c in anchors::compare_all() {
+        println!(
+            "{:>6} {:<28} {:>9} {:>12.2} {:>12.2} {:>7.2}",
+            c.anchor.table,
+            c.anchor.section,
+            c.anchor.c,
+            c.anchor.paper_avg_us,
+            c.simulated_avg_us,
+            c.ratio
+        );
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    use mlane::algorithms::{alltoall, bcast, scatter};
+    let nodes = args.flag("nodes", 4u32)?;
+    let cores = args.flag("cores", 4u32)?;
+    let lanes = args.flag("lanes", 2u32)?;
+    let cl = Cluster::new(nodes, cores, lanes);
+    let mut count = 0;
+    let mut check = |s: mlane::schedule::Schedule, ports: u32| -> Result<()> {
+        validate(&s).map_err(|v| anyhow!("{}: {v}", s.algorithm))?;
+        validate_ports(&s, ports).map_err(|v| anyhow!("{} ports: {v}", s.algorithm))?;
+        count += 1;
+        Ok(())
+    };
+    for k in 1..=lanes.min(cores) {
+        check(bcast::build(cl, 0, 64, bcast::BcastAlg::KPorted { k }), k)?;
+        check(bcast::build(cl, 0, 64, bcast::BcastAlg::KLane { k, two_phase: false }), 1)?;
+        check(scatter::build(cl, 0, 16, scatter::ScatterAlg::KPorted { k }), k)?;
+        check(scatter::build(cl, 0, 16, scatter::ScatterAlg::KLane { k }), 1)?;
+        check(alltoall::build(cl, 8, alltoall::AlltoallAlg::KPorted { k }), k)?;
+        check(alltoall::build(cl, 8, alltoall::AlltoallAlg::Bruck { k }), k)?;
+    }
+    check(bcast::build(cl, 0, 64, bcast::BcastAlg::FullLane), 1)?;
+    check(bcast::build(cl, 0, 64, bcast::BcastAlg::Binomial), 1)?;
+    check(scatter::build(cl, 0, 16, scatter::ScatterAlg::FullLane), 1)?;
+    check(alltoall::build(cl, 8, alltoall::AlltoallAlg::KLane), cores)?;
+    check(alltoall::build(cl, 8, alltoall::AlltoallAlg::FullLane), 1)?;
+    {
+        use mlane::algorithms::{allgather, gather};
+        check(allgather::build(cl, 8, allgather::AllgatherAlg::Ring), 1)?;
+        check(allgather::build(cl, 8, allgather::AllgatherAlg::FullLane), 1)?;
+        for k in 1..=lanes.min(cores) {
+            check(allgather::build(cl, 8, allgather::AllgatherAlg::Bruck { k }), k)?;
+            check(gather::build(cl, 0, 8, gather::GatherAlg::KPorted { k }), k)?;
+            check(gather::build(cl, 0, 8, gather::GatherAlg::KLane { k }), 1)?;
+        }
+        check(gather::build(cl, 0, 8, gather::GatherAlg::FullLane), 1)?;
+    }
+    println!("validated {count} schedules on {nodes}x{cores} (lanes={lanes}): all invariants hold");
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let cl = args.cluster()?;
+    let op = args.op()?;
+    let alg = args.algorithm()?;
+    let coll = Collectives::new(cl, args.persona()?);
+    let (schedule, _, _) = coll.schedule(op, alg);
+    let out = args.flags.get("out").cloned().unwrap_or_else(|| "trace.json".into());
+    let trace = mlane::sim::trace::trace_run(&schedule, &coll.persona.model, 1);
+    std::fs::write(&out, trace.to_chrome_json())?;
+    println!(
+        "wrote {} ({} spans, makespan {:.2}us) — open in chrome://tracing or Perfetto",
+        out,
+        trace.spans.len(),
+        trace.makespan
+    );
+    Ok(())
+}

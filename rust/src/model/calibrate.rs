@@ -1,0 +1,131 @@
+//! Cost-model calibration: least-squares fitting of the linear (α-β)
+//! channel parameters from (message size, time) observations.
+//!
+//! Used two ways:
+//! * deriving the persona parameter sets from the paper's own table
+//!   cells (the anchors in `harness::anchors`) — how the shipped
+//!   personas were produced;
+//! * re-calibrating against a user's own measurements (CSV of
+//!   `bytes,us` pairs) to model a different machine.
+
+/// Ordinary least squares for `t = alpha + beta · bytes`.
+/// Returns (alpha µs, beta µs/B). Needs ≥ 2 distinct sizes.
+pub fn fit_linear(points: &[(f64, f64)]) -> Option<(f64, f64)> {
+    if points.len() < 2 {
+        return None;
+    }
+    let n = points.len() as f64;
+    let sx: f64 = points.iter().map(|p| p.0).sum();
+    let sy: f64 = points.iter().map(|p| p.1).sum();
+    let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return None;
+    }
+    let beta = (n * sxy - sx * sy) / denom;
+    let alpha = (sy - beta * sx) / n;
+    Some((alpha, beta))
+}
+
+/// Coefficient of determination for a fitted line.
+pub fn r_squared(points: &[(f64, f64)], alpha: f64, beta: f64) -> f64 {
+    let n = points.len() as f64;
+    if n < 2.0 {
+        return 1.0;
+    }
+    let mean = points.iter().map(|p| p.1).sum::<f64>() / n;
+    let ss_tot: f64 = points.iter().map(|p| (p.1 - mean).powi(2)).sum();
+    let ss_res: f64 =
+        points.iter().map(|p| (p.1 - alpha - beta * p.0).powi(2)).sum();
+    if ss_tot < 1e-12 {
+        1.0
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+/// Fit a per-flow network channel from paper-style alltoall rows at
+/// p ranks: each rank moves (p-1)·c elements serially over its lane, so
+/// t ≈ α' + (p-1)·c·4·β with α' absorbing posting overheads.
+pub fn fit_alltoall_channel(p: u32, rows: &[(u64, f64)]) -> Option<(f64, f64)> {
+    let pts: Vec<(f64, f64)> = rows
+        .iter()
+        .map(|&(c, us)| (((p as u64 - 1) * c * 4) as f64, us))
+        .collect();
+    fit_linear(&pts)
+}
+
+/// Parse `bytes,us` CSV text (one pair per line, `#` comments allowed).
+pub fn parse_csv(text: &str) -> Vec<(f64, f64)> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('#'))
+        .filter_map(|l| {
+            let mut it = l.split(',');
+            let b: f64 = it.next()?.trim().parse().ok()?;
+            let t: f64 = it.next()?.trim().parse().ok()?;
+            Some((b, t))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_recovered() {
+        let pts: Vec<(f64, f64)> =
+            (1..10).map(|i| (i as f64 * 1000.0, 2.5 + 1e-4 * i as f64 * 1000.0)).collect();
+        let (a, b) = fit_linear(&pts).unwrap();
+        assert!((a - 2.5).abs() < 1e-9, "alpha {a}");
+        assert!((b - 1e-4).abs() < 1e-12, "beta {b}");
+        assert!(r_squared(&pts, a, b) > 0.999999);
+    }
+
+    #[test]
+    fn degenerate_inputs_rejected() {
+        assert!(fit_linear(&[]).is_none());
+        assert!(fit_linear(&[(1.0, 2.0)]).is_none());
+        assert!(fit_linear(&[(5.0, 1.0), (5.0, 2.0)]).is_none(), "no size variation");
+    }
+
+    #[test]
+    fn paper_table2_offnode_beta_recovered() {
+        // Table 2, N=32 rows (c, avg µs): the fitted per-flow β should be
+        // in the few-GB/s range the persona encodes.
+        let rows: &[(u64, f64)] = &[
+            (1875, 72.78),
+            (3125, 108.60),
+            (18750, 307.48),
+            (31250, 448.03),
+        ];
+        let (_a, b) = fit_alltoall_channel(32, rows).unwrap();
+        let gbps = 1.0 / b / 1000.0; // (B/µs) → GB/s
+        assert!(
+            (1.0..20.0).contains(&gbps),
+            "fitted per-flow bandwidth {gbps} GB/s out of range"
+        );
+    }
+
+    #[test]
+    fn paper_table2_onnode_slower_than_offnode() {
+        let off = fit_alltoall_channel(
+            32,
+            &[(1875, 72.78), (3125, 108.60), (18750, 307.48), (31250, 448.03)],
+        )
+        .unwrap();
+        let on = fit_alltoall_channel(
+            32,
+            &[(1875, 995.89), (3125, 1389.12), (18750, 4744.03), (31250, 4618.21)],
+        )
+        .unwrap();
+        assert!(on.1 > 3.0 * off.1, "on-node β {} vs off-node β {}", on.1, off.1);
+    }
+
+    #[test]
+    fn csv_parsing() {
+        let pts = parse_csv("# comment\n1000, 2.5\n\n2000,3.0\nbad line\n");
+        assert_eq!(pts, vec![(1000.0, 2.5), (2000.0, 3.0)]);
+    }
+}

@@ -1,0 +1,114 @@
+//! Hierarchical communication cost model (paper §2.4).
+//!
+//! Two linear (α-β) channels — shared memory on the node, network lanes
+//! off the node — plus the contention resources that make the k-lane
+//! question interesting: each node has `k` physical lane servers (more
+//! than k concurrent off-node messages per node queue), and a node memory
+//! bus with limited multiplicity (the §2.4 question "can all processors
+//! communicate at the same time achieving the same memory bandwidth?").
+//!
+//! Per-message CPU overheads (`o_post`, `o_match`) model nonblocking
+//! send/recv posting and completion; an eager/rendezvous threshold
+//! switches between buffered and synchronising transfer semantics, as in
+//! real MPI libraries.
+
+pub mod calibrate;
+pub mod persona;
+
+pub use persona::{Persona, PersonaName};
+
+/// All times in microseconds, sizes in bytes — matching the paper's
+/// tables (µs, MPI_INT elements of 4 bytes).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostModel {
+    // --- off-node (network lanes) ---
+    /// Per-message network latency (µs).
+    pub alpha_net: f64,
+    /// Transmission cost per byte per lane (µs/B). 100 Gbit/s OmniPath
+    /// ≈ 12.5 GB/s ≈ 8.0e-5 µs/B.
+    pub beta_net: f64,
+    /// Physical lanes per node (Hydra: dual OmniPath = 2). Each lane is a
+    /// full-duplex server: egress and ingress pools of this size.
+    pub phys_lanes: u32,
+    /// Eager threshold for off-node messages (bytes).
+    pub eager_net: u64,
+
+    // --- on-node (shared memory) ---
+    /// Per-message shared-memory latency (µs).
+    pub alpha_shm: f64,
+    /// Copy cost per byte through shared memory (µs/B), single copy.
+    pub beta_shm: f64,
+    /// How many on-node copies can run at full `beta_shm` rate before
+    /// queueing (memory-bus multiplicity, §2.4's k').
+    pub bus_servers: u32,
+    /// Eager threshold for on-node messages (bytes).
+    pub eager_shm: u64,
+
+    // --- CPU / library ---
+    /// Overhead of posting one nonblocking send or recv (µs, serial per
+    /// core).
+    pub o_post: f64,
+    /// Overhead of matching/completing one message (µs).
+    pub o_match: f64,
+    /// Extra per-call setup charged when a round is a hinted node-local
+    /// collective (the cost of an `MPI_Bcast`/`MPI_Scatter` call on the
+    /// node communicator, §3).
+    pub node_collective_call: f64,
+
+    // --- noise ---
+    /// Mean of exponential per-op jitter (µs); produces the avg-vs-min
+    /// spread the paper reports over 100 repetitions.
+    pub jitter_mean: f64,
+}
+
+impl CostModel {
+    /// A neutral baseline roughly shaped like the Hydra system: 2 lanes
+    /// of 100 Gbit/s, ~1 µs network latency, shared-memory copies at
+    /// ~10 GB/s with 8-way bus concurrency.
+    pub fn hydra_baseline() -> Self {
+        Self {
+            alpha_net: 1.4,
+            beta_net: 8.0e-5,
+            phys_lanes: 2,
+            eager_net: 8192,
+            alpha_shm: 0.25,
+            beta_shm: 1.0e-4,
+            bus_servers: 8,
+            eager_shm: 4096,
+            o_post: 0.25,
+            o_match: 0.15,
+            node_collective_call: 0.4,
+            jitter_mean: 0.4,
+        }
+    }
+
+    /// Uncontended transfer time for a message of `bytes` (no queueing).
+    pub fn uncontended(&self, bytes: u64, offnode: bool) -> f64 {
+        if offnode {
+            self.alpha_net + bytes as f64 * self.beta_net
+        } else {
+            self.alpha_shm + bytes as f64 * self.beta_shm
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_sane() {
+        let m = CostModel::hydra_baseline();
+        assert!(m.alpha_net > m.alpha_shm, "network latency exceeds shm");
+        // 4 MB bcast payload ≈ 4e6 B × 8e-5 µs/B ≈ 320 µs per hop
+        let t = m.uncontended(4_000_000, true);
+        assert!((300.0..400.0).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn uncontended_monotone_in_size() {
+        let m = CostModel::hydra_baseline();
+        assert!(m.uncontended(100, true) < m.uncontended(1000, true));
+        assert!(m.uncontended(100, false) < m.uncontended(1000, false));
+    }
+}

@@ -1,0 +1,276 @@
+//! MPI-library personas.
+//!
+//! The paper evaluates against three real libraries (Table 1): Open MPI
+//! 3.1.3, Intel MPI 2018, and mpich 3.3. We cannot run those libraries;
+//! instead each persona bundles (a) a [`CostModel`] parameter set, (b)
+//! the library's *native collective algorithm selection* policy, and (c)
+//! observed pathologies ("quirks") the paper's tables document — e.g.
+//! Intel MPI's ~1 ms small-count `MPI_Bcast` (Table 17) or Open MPI's
+//! mid-size `MPI_Alltoall` blow-up (Table 41). Quirks apply to *native*
+//! collectives only; the paper's own algorithms run on the plain model.
+
+use super::CostModel;
+use crate::algorithms::{alltoall, bcast, scatter};
+use crate::schedule::Schedule;
+use crate::topology::{Cluster, Rank};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PersonaName {
+    OpenMpi,
+    IntelMpi,
+    Mpich,
+}
+
+impl PersonaName {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PersonaName::OpenMpi => "Open MPI 3.1.3",
+            PersonaName::IntelMpi => "Intel MPI 2018",
+            PersonaName::Mpich => "mpich 3.3",
+        }
+    }
+
+    pub fn all() -> [PersonaName; 3] {
+        [PersonaName::OpenMpi, PersonaName::IntelMpi, PersonaName::Mpich]
+    }
+}
+
+/// A native collective choice: the schedule the library would run plus
+/// the persona's observed-pathology adjustment.
+pub struct NativeChoice {
+    pub schedule: Schedule,
+    /// Additive overhead in µs (per invocation).
+    pub quirk_add: f64,
+    /// Multiplicative slowdown.
+    pub quirk_mult: f64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Persona {
+    pub name: PersonaName,
+    pub model: CostModel,
+}
+
+impl Persona {
+    pub fn get(name: PersonaName) -> Persona {
+        match name {
+            PersonaName::OpenMpi => Self::openmpi(),
+            PersonaName::IntelMpi => Self::intelmpi(),
+            PersonaName::Mpich => Self::mpich(),
+        }
+    }
+
+    /// Open MPI 3.1.3: fast small-message path, moderate posting
+    /// overhead; weakest large-message on-node pipelining (Table 2:
+    /// on-node alltoall 10× slower than across nodes at large counts).
+    pub fn openmpi() -> Persona {
+        let mut m = CostModel::hydra_baseline();
+        m.alpha_net = 1.2;
+        m.beta_net = 1.9e-4; // ≈5.2 GB/s achieved per flow
+        m.o_post = 0.15;
+        m.o_match = 0.10;
+        m.alpha_shm = 0.22;
+        // single-copy shm at ~8 GB/s but only ~3 concurrent copies at
+        // full rate (Table 2: on-node alltoall ≈ 10× slower than
+        // across-nodes at 125 KB blocks)
+        m.beta_shm = 1.2e-4;
+        m.bus_servers = 3;
+        m.eager_net = 4096;
+        m.jitter_mean = 0.15;
+        Persona { name: PersonaName::OpenMpi, model: m }
+    }
+
+    /// Intel MPI 2018: lowest small-message latency on node (Table 5),
+    /// higher per-call collective setup.
+    pub fn intelmpi() -> Persona {
+        let mut m = CostModel::hydra_baseline();
+        m.alpha_net = 1.5;
+        m.beta_net = 1.9e-4;
+        m.o_post = 0.30;
+        m.alpha_shm = 0.17;
+        m.beta_shm = 1.7e-4;
+        m.bus_servers = 8;
+        m.eager_net = 16384;
+        m.node_collective_call = 0.9;
+        Persona { name: PersonaName::IntelMpi, model: m }
+    }
+
+    /// mpich 3.3: highest posting overhead (Table 6: 32 nonblocking ops
+    /// on node cost ~52 µs vs ~18 for Open MPI) but good on-node
+    /// pipelining for large messages.
+    pub fn mpich() -> Persona {
+        let mut m = CostModel::hydra_baseline();
+        m.alpha_net = 1.6;
+        m.beta_net = 2.0e-4;
+        m.o_post = 0.9;
+        m.o_match = 0.3;
+        m.alpha_shm = 0.3;
+        m.beta_shm = 1.3e-4;
+        m.bus_servers = 8;
+        m.eager_net = 8192;
+        Persona { name: PersonaName::Mpich, model: m }
+    }
+
+    // ---- native collective selection (what MPI_Bcast & co. run) ----
+
+    /// Native `MPI_Bcast`.
+    pub fn native_bcast(&self, cl: Cluster, root: Rank, c: u64) -> NativeChoice {
+        let bytes = c * 4;
+        let (alg, add, mult) = match self.name {
+            PersonaName::OpenMpi => {
+                if bytes <= 32_768 {
+                    (bcast::BcastAlg::Binomial, 0.0, 1.0)
+                } else if bytes <= 262_144 {
+                    (bcast::BcastAlg::ScatterAllgather, 0.0, 1.0)
+                } else {
+                    // Table 12: Open MPI falls off a cliff past 256 KiB
+                    // (c = 100000 → 8.7 ms while 60000 → 0.64 ms).
+                    (bcast::BcastAlg::ScatterAllgather, 0.0, 3.2)
+                }
+            }
+            PersonaName::IntelMpi => {
+                // Table 17: ~1 ms floor at every small count — the
+                // library's (mis)tuned selection.
+                if bytes <= 65_536 {
+                    (bcast::BcastAlg::Binomial, 950.0, 1.0)
+                } else {
+                    (bcast::BcastAlg::ScatterAllgather, 950.0, 1.6)
+                }
+            }
+            PersonaName::Mpich => {
+                if bytes <= 32_768 {
+                    (bcast::BcastAlg::Binomial, 0.0, 1.0)
+                } else {
+                    // Table 22: best-in-class large bcast (5.8 ms @ 4 MB)
+                    (bcast::BcastAlg::ScatterAllgather, 0.0, 1.0)
+                }
+            }
+        };
+        NativeChoice {
+            schedule: bcast::build(cl, root, c, alg),
+            quirk_add: add,
+            quirk_mult: mult,
+        }
+    }
+
+    /// Native `MPI_Scatter`.
+    pub fn native_scatter(&self, cl: Cluster, root: Rank, c: u64) -> NativeChoice {
+        let bytes = c * 4;
+        let (alg, add, mult) = match self.name {
+            PersonaName::OpenMpi => {
+                if bytes <= 1024 {
+                    (scatter::ScatterAlg::Binomial, 0.0, 1.0)
+                } else {
+                    // Table 27: mid-size penalty (c = 87 → 483 µs).
+                    (scatter::ScatterAlg::Binomial, 0.0, 2.6)
+                }
+            }
+            PersonaName::IntelMpi => {
+                if bytes <= 128 {
+                    (scatter::ScatterAlg::Binomial, 0.0, 1.0)
+                } else {
+                    // Table 32: flat ~540 µs plateau from c = 53.
+                    (scatter::ScatterAlg::Binomial, 430.0, 1.0)
+                }
+            }
+            PersonaName::Mpich => (scatter::ScatterAlg::Binomial, 0.0, 1.0),
+        };
+        NativeChoice {
+            schedule: scatter::build(cl, root, c, alg),
+            quirk_add: add,
+            quirk_mult: mult,
+        }
+    }
+
+    /// Native `MPI_Alltoall`.
+    pub fn native_alltoall(&self, cl: Cluster, c: u64) -> NativeChoice {
+        let bytes = c * 4;
+        let (alg, add, mult) = match self.name {
+            PersonaName::OpenMpi => {
+                if bytes <= 32 {
+                    (alltoall::AlltoallAlg::Bruck { k: 1 }, 0.0, 1.0)
+                } else if bytes <= 2100 && cl.p() > 256 {
+                    // Table 41: catastrophic mid-size instability
+                    // (c = 521 → 166 ms avg). A contended linear
+                    // algorithm; modelled as a large multiplier.
+                    (alltoall::AlltoallAlg::Pairwise, 0.0, 20.0)
+                } else {
+                    (alltoall::AlltoallAlg::Pairwise, 0.0, 1.0)
+                }
+            }
+            PersonaName::IntelMpi => {
+                if bytes <= 256 {
+                    (alltoall::AlltoallAlg::Bruck { k: 1 }, 0.0, 1.0)
+                } else {
+                    (alltoall::AlltoallAlg::Pairwise, 0.0, 1.15)
+                }
+            }
+            PersonaName::Mpich => {
+                if bytes <= 256 {
+                    (alltoall::AlltoallAlg::Bruck { k: 1 }, 150.0, 1.0)
+                } else {
+                    (alltoall::AlltoallAlg::Pairwise, 0.0, 1.0)
+                }
+            }
+        };
+        NativeChoice {
+            schedule: alltoall::build(cl, c, alg),
+            quirk_add: add,
+            quirk_mult: mult,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn personas_distinct() {
+        let o = Persona::openmpi();
+        let i = Persona::intelmpi();
+        let m = Persona::mpich();
+        assert!(m.model.o_post > o.model.o_post, "mpich posting slower");
+        assert!(i.model.alpha_shm < o.model.alpha_shm, "intel on-node latency lowest");
+    }
+
+    #[test]
+    fn native_bcast_switches_algorithm_with_size() {
+        let cl = Cluster::new(4, 4, 2);
+        let p = Persona::openmpi();
+        let small = p.native_bcast(cl, 0, 16);
+        let large = p.native_bcast(cl, 0, 1_000_000);
+        assert_eq!(small.schedule.algorithm, "bcast/binomial");
+        assert_eq!(large.schedule.algorithm, "bcast/scatter-allgather");
+        assert!(large.quirk_mult > 1.0);
+    }
+
+    #[test]
+    fn intel_bcast_has_small_count_floor() {
+        let cl = Cluster::new(4, 4, 2);
+        let choice = Persona::intelmpi().native_bcast(cl, 0, 1);
+        assert!(choice.quirk_add > 500.0, "Table 17 pathology encoded");
+    }
+
+    #[test]
+    fn openmpi_alltoall_midsize_pathology() {
+        let cl = Cluster::hydra(2);
+        let choice = Persona::openmpi().native_alltoall(cl, 521);
+        assert!(choice.quirk_mult > 5.0, "Table 41 pathology encoded");
+        // but not at small or large counts
+        assert!(Persona::openmpi().native_alltoall(cl, 1).quirk_mult <= 1.0);
+        assert!(Persona::openmpi().native_alltoall(cl, 869).quirk_mult <= 1.0);
+    }
+
+    #[test]
+    fn all_personas_produce_valid_native_schedules() {
+        use crate::schedule::validate::validate;
+        let cl = Cluster::new(3, 4, 2);
+        for name in PersonaName::all() {
+            let p = Persona::get(name);
+            validate(&p.native_bcast(cl, 0, 8).schedule).unwrap();
+            validate(&p.native_scatter(cl, 0, 8).schedule).unwrap();
+            validate(&p.native_alltoall(cl, 8).schedule).unwrap();
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! XLA runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `python/compile/aot.py`) and executes node-local phases on the
+//! PJRT CPU client. Python never runs on this path.
+//!
+//! The `xla` crate's types wrap raw pointers and are not `Send`, so all
+//! PJRT state lives on one dedicated service thread ([`XlaService`]);
+//! exec-runtime node leaders submit [`PhaseRequest`]s over a channel and
+//! block on the reply. One compiled executable per (phase, n, c) triple,
+//! compiled lazily and cached.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Node-phase artifact key: (phase name, node width n, per-block count c).
+pub type PhaseKey = (String, u32, u64);
+
+/// Parsed `artifacts/manifest.txt` (written by aot.py):
+/// `name \t n \t c \t dtype \t shapes \t file` per line.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: HashMap<PhaseKey, PathBuf>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let mut entries = HashMap::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 6 {
+                bail!("malformed manifest line: {line:?}");
+            }
+            let key = (f[0].to_string(), f[1].parse()?, f[2].parse()?);
+            entries.insert(key, dir.join(f[5]));
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn has(&self, name: &str, n: u32, c: u64) -> bool {
+        self.entries.contains_key(&(name.to_string(), n, c))
+    }
+}
+
+/// A request to run one node phase. Input/output are flat i32 buffers;
+/// shapes are implied by the phase:
+/// * `node_alltoall` / `shuffle_step`: in (n·n·c) → out (n·n·c)
+/// * `node_allgather`: in (n·c) → out (n·n·c)
+/// * `node_scatter`: in (n·c) → out (n·c) (reshape)
+/// * `node_bcast`: in (c) → out (n·c)
+/// * `checksum`: in (n·c) → out (1)
+pub struct PhaseRequest {
+    pub name: &'static str,
+    pub n: u32,
+    pub c: u64,
+    pub input: Vec<i32>,
+    pub reply: mpsc::Sender<Result<Vec<i32>>>,
+}
+
+/// Handle to the XLA service thread.
+#[derive(Clone)]
+pub struct XlaService {
+    tx: mpsc::Sender<PhaseRequest>,
+}
+
+impl XlaService {
+    /// Spawn the service thread over the given artifacts directory.
+    /// Fails fast if the manifest is unreadable.
+    pub fn start(artifacts_dir: &Path) -> Result<XlaService> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let (tx, rx) = mpsc::channel::<PhaseRequest>();
+        std::thread::Builder::new()
+            .name("xla-service".into())
+            .spawn(move || service_loop(manifest, rx))
+            .context("spawning xla service thread")?;
+        Ok(XlaService { tx })
+    }
+
+    /// Execute a phase synchronously (blocks until the service replies).
+    pub fn run(&self, name: &'static str, n: u32, c: u64, input: Vec<i32>) -> Result<Vec<i32>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(PhaseRequest { name, n, c, input, reply: rtx })
+            .map_err(|_| anyhow!("xla service thread is gone"))?;
+        rrx.recv().map_err(|_| anyhow!("xla service dropped the reply"))?
+    }
+}
+
+fn input_dims(name: &str, n: u32, c: u64) -> Vec<i64> {
+    let (n, c) = (n as i64, c as i64);
+    match name {
+        "node_alltoall" | "shuffle_step" => vec![n, n, c],
+        "node_allgather" => vec![n, c],
+        "node_scatter" | "checksum" => vec![n * c],
+        "node_bcast" => vec![c],
+        other => panic!("unknown phase {other}"),
+    }
+}
+
+fn service_loop(manifest: Manifest, rx: mpsc::Receiver<PhaseRequest>) {
+    // All !Send XLA state is constructed and lives here.
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request with the construction error.
+            while let Ok(req) = rx.recv() {
+                let _ = req.reply.send(Err(anyhow!("PJRT client init failed: {e}")));
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<PhaseKey, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(req) = rx.recv() {
+        let result = run_phase(&manifest, &client, &mut cache, &req);
+        let _ = req.reply.send(result);
+    }
+}
+
+fn run_phase(
+    manifest: &Manifest,
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<PhaseKey, xla::PjRtLoadedExecutable>,
+    req: &PhaseRequest,
+) -> Result<Vec<i32>> {
+    let key: PhaseKey = (req.name.to_string(), req.n, req.c);
+    if !cache.contains_key(&key) {
+        let path = manifest
+            .entries
+            .get(&key)
+            .ok_or_else(|| anyhow!("no artifact for {key:?} — regenerate with aot.py"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {key:?}: {e}"))?;
+        cache.insert(key.clone(), exe);
+    }
+    let exe = cache.get(&key).unwrap();
+
+    let dims = input_dims(req.name, req.n, req.c);
+    let want: i64 = dims.iter().product();
+    if req.input.len() as i64 != want {
+        bail!("{}: input len {} != {:?}", req.name, req.input.len(), dims);
+    }
+    let lit = xla::Literal::vec1(&req.input)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape: {e}"))?;
+    let mut out = exe
+        .execute::<xla::Literal>(&[lit])
+        .map_err(|e| anyhow!("execute {}: {e}", req.name))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetch: {e}"))?;
+    // aot.py lowers with return_tuple=True; `shuffle_step` returns a
+    // 2-tuple (packed, checksum) — concatenate outputs flat.
+    let tuple = out.decompose_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+    let mut flat = Vec::new();
+    for t in tuple {
+        flat.extend(t.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e}"))?);
+    }
+    Ok(flat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> PathBuf {
+        // tests run from the crate root
+        PathBuf::from("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let m = Manifest::load(&artifacts()).unwrap();
+        assert!(m.has("node_alltoall", 4, 256), "{:?}", m.entries.keys().take(4).collect::<Vec<_>>());
+        assert!(m.has("node_bcast", 8, 1024));
+    }
+
+    #[test]
+    fn alltoall_phase_is_block_transpose() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let svc = XlaService::start(&artifacts()).unwrap();
+        let (n, c) = (4u32, 16u64);
+        let len = (n as usize).pow(2) * c as usize;
+        let input: Vec<i32> = (0..len as i32).collect();
+        let out = svc.run("node_alltoall", n, c, input.clone()).unwrap();
+        assert_eq!(out.len(), len);
+        let cc = c as usize;
+        for i in 0..n as usize {
+            for j in 0..n as usize {
+                for e in 0..cc {
+                    assert_eq!(
+                        out[(i * n as usize + j) * cc + e],
+                        input[(j * n as usize + i) * cc + e],
+                        "y[{i}][{j}][{e}]"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bcast_phase_replicates() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let svc = XlaService::start(&artifacts()).unwrap();
+        let (n, c) = (8u32, 256u64);
+        let input: Vec<i32> = (0..c as i32).collect();
+        let out = svc.run("node_bcast", n, c, input.clone()).unwrap();
+        assert_eq!(out.len(), n as usize * c as usize);
+        for i in 0..n as usize {
+            assert_eq!(&out[i * c as usize..(i + 1) * c as usize], &input[..]);
+        }
+    }
+
+    #[test]
+    fn checksum_phase_sums() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let svc = XlaService::start(&artifacts()).unwrap();
+        let (n, c) = (4u32, 16u64);
+        let input: Vec<i32> = vec![3; (n as u64 * c) as usize];
+        let out = svc.run("checksum", n, c, input).unwrap();
+        assert_eq!(out, vec![3 * (n as i32) * c as i32]);
+    }
+
+    #[test]
+    fn unknown_phase_shape_errors() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let svc = XlaService::start(&artifacts()).unwrap();
+        let err = svc.run("node_alltoall", 3, 7, vec![0; 63]).unwrap_err();
+        assert!(err.to_string().contains("no artifact"), "{err}");
+    }
+}

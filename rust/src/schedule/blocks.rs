@@ -1,0 +1,196 @@
+//! Compact block-id sets and block sizing.
+//!
+//! Alltoall at p = 1152 has p² ≈ 1.3M blocks; schedules reference blocks
+//! as unions of arithmetic ranges rather than materialised id lists.
+
+/// A set of block ids, stored as a sorted union of strided runs
+/// `(start, stride, len)`. Contiguous ranges use stride 1.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BlockSet {
+    runs: Vec<(u64, u64, u64)>, // (start, stride, len), stride >= 1, len >= 1
+}
+
+impl BlockSet {
+    pub fn empty() -> Self {
+        Self { runs: Vec::new() }
+    }
+
+    pub fn single(id: u64) -> Self {
+        Self { runs: vec![(id, 1, 1)] }
+    }
+
+    /// Contiguous ids [start, end).
+    pub fn range(start: u64, end: u64) -> Self {
+        if start >= end {
+            Self::empty()
+        } else {
+            Self { runs: vec![(start, 1, end - start)] }
+        }
+    }
+
+    /// ids start, start+stride, ... (len terms).
+    pub fn strided(start: u64, stride: u64, len: u64) -> Self {
+        assert!(stride >= 1);
+        if len == 0 {
+            Self::empty()
+        } else {
+            Self { runs: vec![(start, stride, len)] }
+        }
+    }
+
+    /// Union (no normalisation; runs may overlap only if the caller makes
+    /// them overlap — builders never do, and `count` assumes disjoint).
+    pub fn union(mut self, other: BlockSet) -> BlockSet {
+        self.runs.extend(other.runs);
+        self
+    }
+
+    pub fn push_run(&mut self, start: u64, stride: u64, len: u64) {
+        assert!(stride >= 1);
+        if len > 0 {
+            self.runs.push((start, stride, len));
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+
+    /// Number of ids (runs assumed disjoint).
+    pub fn count(&self) -> u64 {
+        self.runs.iter().map(|&(_, _, l)| l).sum()
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.runs.iter().any(|&(s, st, l)| {
+            id >= s && (id - s) % st == 0 && (id - s) / st < l
+        })
+    }
+
+    /// Iterate all ids (ascending within each run).
+    pub fn iter(&self) -> impl Iterator<Item = u64> + '_ {
+        self.runs
+            .iter()
+            .flat_map(|&(s, st, l)| (0..l).map(move |i| s + i * st))
+    }
+
+    /// True if every id of `self` is in `other`.
+    pub fn subset_of(&self, other: &BlockSet) -> bool {
+        self.iter().all(|id| other.contains(id))
+    }
+}
+
+impl FromIterator<u64> for BlockSet {
+    fn from_iter<I: IntoIterator<Item = u64>>(iter: I) -> Self {
+        // Coalesce sorted consecutive ids into ranges where possible.
+        let mut ids: Vec<u64> = iter.into_iter().collect();
+        ids.sort_unstable();
+        ids.dedup();
+        let mut set = BlockSet::empty();
+        let mut i = 0;
+        while i < ids.len() {
+            let start = ids[i];
+            let mut len = 1;
+            while i + (len as usize) < ids.len() && ids[i + len as usize] == start + len {
+                len += 1;
+            }
+            set.push_run(start, 1, len);
+            i += len as usize;
+        }
+        set
+    }
+}
+
+/// Block sizing in elements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sizing {
+    /// Every block has exactly `elems` elements.
+    Uniform { elems: u64 },
+    /// `total` elements split into `parts` blocks differing by ≤ 1
+    /// element (paper §2.1: subranges "differing in size by at most one").
+    Split { total: u64, parts: u32 },
+}
+
+impl Sizing {
+    /// Elements of block `id` (for `Split`, id indexes the parts).
+    pub fn elems(&self, id: u64) -> u64 {
+        match *self {
+            Sizing::Uniform { elems } => elems,
+            Sizing::Split { total, parts } => {
+                let parts = parts as u64;
+                debug_assert!(id < parts);
+                let base = total / parts;
+                let extra = total % parts;
+                base + u64::from(id < extra)
+            }
+        }
+    }
+
+    /// Total elements of a block set.
+    pub fn elems_of(&self, blocks: &BlockSet) -> u64 {
+        match *self {
+            Sizing::Uniform { elems } => elems * blocks.count(),
+            Sizing::Split { .. } => blocks.iter().map(|id| self.elems(id)).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_contains() {
+        let s = BlockSet::range(5, 10);
+        assert!(s.contains(5) && s.contains(9));
+        assert!(!s.contains(4) && !s.contains(10));
+        assert_eq!(s.count(), 5);
+    }
+
+    #[test]
+    fn strided_contains() {
+        let s = BlockSet::strided(3, 4, 5); // 3, 7, 11, 15, 19
+        for id in [3, 7, 11, 15, 19] {
+            assert!(s.contains(id));
+        }
+        assert!(!s.contains(4) && !s.contains(23));
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![3, 7, 11, 15, 19]);
+    }
+
+    #[test]
+    fn union_and_subset() {
+        let s = BlockSet::range(0, 3).union(BlockSet::single(10));
+        assert_eq!(s.count(), 4);
+        assert!(BlockSet::single(10).subset_of(&s));
+        assert!(!BlockSet::single(5).subset_of(&s));
+    }
+
+    #[test]
+    fn from_iter_coalesces() {
+        let s: BlockSet = vec![3u64, 1, 2, 7, 8, 5].into_iter().collect();
+        assert_eq!(s.count(), 6);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![1, 2, 3, 5, 7, 8]);
+    }
+
+    #[test]
+    fn empty_set() {
+        let s = BlockSet::empty();
+        assert!(s.is_empty());
+        assert_eq!(s.count(), 0);
+        assert!(s.subset_of(&BlockSet::empty()));
+    }
+
+    #[test]
+    fn split_sizing_distributes_remainder() {
+        let sz = Sizing::Split { total: 11, parts: 4 };
+        let sizes: Vec<u64> = (0..4).map(|i| sz.elems(i)).collect();
+        assert_eq!(sizes, vec![3, 3, 3, 2]);
+        assert_eq!(sizes.iter().sum::<u64>(), 11);
+    }
+
+    #[test]
+    fn uniform_sizing() {
+        let sz = Sizing::Uniform { elems: 8 };
+        assert_eq!(sz.elems_of(&BlockSet::range(0, 5)), 40);
+    }
+}

@@ -1,0 +1,327 @@
+//! The communication-schedule IR.
+//!
+//! Every collective algorithm in this library *compiles* to a
+//! [`Schedule`]: a sequence of rounds, each holding point-to-point
+//! [`Transfer`]s (which may be on-node — shared memory — or off-node —
+//! network lanes) and optional [`LocalOp`]s (node-local phases executed as
+//! XLA executables by the exec backend, costed as memory traffic by the
+//! simulator).
+//!
+//! Two backends consume the IR unchanged:
+//! * `sim::Engine` — discrete-event timing under a persona cost model;
+//! * `exec::Runtime` — real threaded execution on real buffers.
+//!
+//! Data is tracked at *block* granularity. Each collective defines a block
+//! layout (see [`Collective::num_blocks`]) so schedules can be validated:
+//! causality (only held blocks are sent), port limits (the k-ported
+//! constraint), and delivery (the collective's postcondition).
+
+pub mod blocks;
+pub mod validate;
+
+pub use blocks::{BlockSet, Sizing};
+pub use validate::{validate, validate_ports, Violation};
+
+use crate::topology::{Cluster, Rank};
+
+/// Which collective a schedule implements, with its parameters.
+/// `c` is the element count per block in MPI convention (paper §4:
+/// bcast: c elements total; scatter: c elements received per rank;
+/// alltoall: c elements per (src, dst) pair).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Collective {
+    /// Root broadcasts `c` elements to all p ranks. The schedule's block
+    /// layout splits the payload into `segments` equal parts (1 for
+    /// non-splitting algorithms, n for full-lane).
+    Bcast { root: Rank, c: u64, segments: u32 },
+    /// Root sends a distinct block of `c` elements to every rank.
+    /// Block `j` is destined to rank `j`.
+    Scatter { root: Rank, c: u64 },
+    /// Every rank sends a distinct block of `c` elements to every rank.
+    /// Block `i·p + j` travels from rank `i` to rank `j`.
+    Alltoall { c: u64 },
+    /// Every rank contributes a block of `c` elements (block `j`
+    /// originates at rank `j`) and must end holding all p blocks.
+    Allgather { c: u64 },
+    /// Dual of scatter (paper §2: "the gather operation is the dual of
+    /// the scatter operation"): block `j` starts at rank `j`; the root
+    /// must end holding all p blocks.
+    Gather { root: Rank, c: u64 },
+}
+
+impl Collective {
+    /// Number of data blocks in this collective's layout (p = total ranks).
+    pub fn num_blocks(&self, p: u32) -> u64 {
+        match self {
+            Collective::Bcast { segments, .. } => *segments as u64,
+            Collective::Scatter { .. }
+            | Collective::Allgather { .. }
+            | Collective::Gather { .. } => p as u64,
+            Collective::Alltoall { .. } => p as u64 * p as u64,
+        }
+    }
+
+    /// Block sizing in elements.
+    pub fn sizing(&self) -> Sizing {
+        match self {
+            Collective::Bcast { c, segments, .. } => Sizing::Split { total: *c, parts: *segments },
+            Collective::Scatter { c, .. }
+            | Collective::Alltoall { c }
+            | Collective::Allgather { c }
+            | Collective::Gather { c, .. } => Sizing::Uniform { elems: *c },
+        }
+    }
+
+    /// Blocks initially held by `rank`.
+    pub fn initial_blocks(&self, rank: Rank, p: u32) -> BlockSet {
+        match self {
+            Collective::Bcast { root, segments, .. } => {
+                if rank == *root {
+                    BlockSet::range(0, *segments as u64)
+                } else {
+                    BlockSet::empty()
+                }
+            }
+            Collective::Scatter { root, .. } => {
+                if rank == *root {
+                    BlockSet::range(0, p as u64)
+                } else {
+                    BlockSet::empty()
+                }
+            }
+            Collective::Alltoall { .. } => {
+                BlockSet::range(rank as u64 * p as u64, (rank as u64 + 1) * p as u64)
+            }
+            Collective::Allgather { .. } | Collective::Gather { .. } => {
+                BlockSet::single(rank as u64)
+            }
+        }
+    }
+
+    /// Blocks `rank` must hold when the schedule completes.
+    pub fn required_blocks(&self, rank: Rank, p: u32) -> BlockSet {
+        match self {
+            Collective::Bcast { segments, .. } => BlockSet::range(0, *segments as u64),
+            Collective::Scatter { .. } => BlockSet::single(rank as u64),
+            Collective::Alltoall { .. } => {
+                // blocks i*p + rank for all i — a strided set.
+                BlockSet::strided(rank as u64, p as u64, p as u64)
+            }
+            Collective::Allgather { .. } => BlockSet::range(0, p as u64),
+            Collective::Gather { root, .. } => {
+                if rank == *root {
+                    BlockSet::range(0, p as u64)
+                } else {
+                    BlockSet::single(rank as u64)
+                }
+            }
+        }
+    }
+}
+
+/// One point-to-point message within a round.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Transfer {
+    pub src: Rank,
+    pub dst: Rank,
+    /// The data blocks carried by this message.
+    pub blocks: BlockSet,
+    /// Message size in bytes (cached; derived from blocks × sizing).
+    pub bytes: u64,
+}
+
+/// Recognisable node-local collective phases. Semantically a round is
+/// always its transfers; the hint tells backends the round *is* a node
+/// collective so they may implement it specially (exec: run the AOT XLA
+/// artifact for the phase; sim: charge the persona's node-collective
+/// call overhead on top of the modelled memory traffic).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LocalOpKind {
+    /// Node-local alltoall (block transpose) — `node_alltoall` artifact.
+    Alltoall,
+    /// Node-local allgather — `node_allgather` artifact.
+    Allgather,
+    /// Node-local scatter from an on-node root core — `node_scatter`.
+    Scatter,
+    /// Node-local broadcast from an on-node root core — `node_bcast`.
+    Bcast,
+}
+
+/// One communication round. All transfers in a round may proceed
+/// concurrently, subject to the port/lane limits the backends model.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Round {
+    pub transfers: Vec<Transfer>,
+    /// Set when every transfer in this round belongs to one node-local
+    /// collective phase per node (see [`LocalOpKind`]).
+    pub node_phase: Option<LocalOpKind>,
+}
+
+impl Round {
+    pub fn of(transfers: Vec<Transfer>) -> Self {
+        Self { transfers, node_phase: None }
+    }
+
+    pub fn node_collective(transfers: Vec<Transfer>, kind: LocalOpKind) -> Self {
+        Self { transfers, node_phase: Some(kind) }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.transfers.is_empty()
+    }
+}
+
+/// A compiled collective: the algorithm's full communication structure.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub cluster: Cluster,
+    pub op: Collective,
+    /// Bytes per element (the paper uses MPI_INT = 4).
+    pub elem_bytes: u64,
+    pub rounds: Vec<Round>,
+    /// Human-readable algorithm name (for tables and error messages).
+    pub algorithm: &'static str,
+}
+
+pub const ELEM_BYTES: u64 = 4; // MPI_INT
+
+impl Schedule {
+    pub fn new(cluster: Cluster, op: Collective, algorithm: &'static str) -> Self {
+        Self { cluster, op, elem_bytes: ELEM_BYTES, rounds: Vec::new(), algorithm }
+    }
+
+    pub fn p(&self) -> u32 {
+        self.cluster.p()
+    }
+
+    /// Bytes of a block set under this schedule's sizing.
+    pub fn bytes_of(&self, blocks: &BlockSet) -> u64 {
+        self.op.sizing().elems_of(blocks) * self.elem_bytes
+    }
+
+    /// Append a round (dropping it if empty).
+    pub fn push_round(&mut self, round: Round) {
+        if !round.is_empty() {
+            self.rounds.push(round);
+        }
+    }
+
+    /// Mutable access to round `idx`, extending with empty rounds as
+    /// needed (builders place transfers at computed round indices; call
+    /// [`Schedule::finalize`] afterwards to drop gaps).
+    pub fn round_mut(&mut self, idx: usize) -> &mut Round {
+        if idx >= self.rounds.len() {
+            self.rounds.resize(idx + 1, Round::default());
+        }
+        &mut self.rounds[idx]
+    }
+
+    /// Place a transfer at a specific round.
+    pub fn add_at(&mut self, round: usize, src: Rank, dst: Rank, blocks: BlockSet) {
+        let t = self.transfer(src, dst, blocks);
+        self.round_mut(round).transfers.push(t);
+    }
+
+    /// Drop empty rounds left by index-based construction.
+    pub fn finalize(&mut self) {
+        self.rounds.retain(|r| !r.is_empty());
+    }
+
+    /// Convenience: build a transfer with its byte size computed.
+    pub fn transfer(&self, src: Rank, dst: Rank, blocks: BlockSet) -> Transfer {
+        let bytes = self.bytes_of(&blocks);
+        Transfer { src, dst, blocks, bytes }
+    }
+
+    /// Total bytes crossing the network (off-node transfers only).
+    pub fn offnode_bytes(&self) -> u64 {
+        self.rounds
+            .iter()
+            .flat_map(|r| &r.transfers)
+            .filter(|t| !self.cluster.same_node(t.src, t.dst))
+            .map(|t| t.bytes)
+            .sum()
+    }
+
+    /// Total bytes moved over shared memory (on-node transfers).
+    pub fn onnode_bytes(&self) -> u64 {
+        self.rounds
+            .iter()
+            .flat_map(|r| &r.transfers)
+            .filter(|t| self.cluster.same_node(t.src, t.dst))
+            .map(|t| t.bytes)
+            .sum()
+    }
+
+    pub fn num_transfers(&self) -> usize {
+        self.rounds.iter().map(|r| r.transfers.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cl() -> Cluster {
+        Cluster::new(2, 4, 2)
+    }
+
+    #[test]
+    fn bcast_block_layout() {
+        let op = Collective::Bcast { root: 3, c: 100, segments: 4 };
+        assert_eq!(op.num_blocks(8), 4);
+        assert_eq!(op.initial_blocks(3, 8).count(), 4);
+        assert_eq!(op.initial_blocks(0, 8).count(), 0);
+        assert_eq!(op.required_blocks(7, 8).count(), 4);
+    }
+
+    #[test]
+    fn scatter_block_layout() {
+        let op = Collective::Scatter { root: 0, c: 10 };
+        assert_eq!(op.num_blocks(8), 8);
+        assert!(op.required_blocks(5, 8).contains(5));
+        assert_eq!(op.required_blocks(5, 8).count(), 1);
+    }
+
+    #[test]
+    fn alltoall_block_layout() {
+        let op = Collective::Alltoall { c: 7 };
+        let p = 4;
+        assert_eq!(op.num_blocks(p), 16);
+        // rank 2 starts with blocks 8..12 and must end with {2, 6, 10, 14}
+        assert_eq!(op.initial_blocks(2, p).count(), 4);
+        let req = op.required_blocks(2, p);
+        for i in 0..4u64 {
+            assert!(req.contains(i * 4 + 2), "missing block {}", i * 4 + 2);
+        }
+    }
+
+    #[test]
+    fn transfer_bytes_follow_sizing() {
+        let mut s =
+            Schedule::new(cl(), Collective::Scatter { root: 0, c: 10 }, "test");
+        let t = s.transfer(0, 1, BlockSet::single(1));
+        assert_eq!(t.bytes, 40);
+        s.push_round(Round::of(vec![t]));
+        assert_eq!(s.offnode_bytes(), 0); // ranks 0,1 are on node 0
+        assert_eq!(s.onnode_bytes(), 40);
+    }
+
+    #[test]
+    fn split_sizing_uneven() {
+        let op = Collective::Bcast { root: 0, c: 10, segments: 3 };
+        let sz = op.sizing();
+        // 10 split 3 ways: 4 + 3 + 3
+        assert_eq!(sz.elems(0), 4);
+        assert_eq!(sz.elems(1), 3);
+        assert_eq!(sz.elems(2), 3);
+        assert_eq!(sz.elems_of(&BlockSet::range(0, 3)), 10);
+    }
+
+    #[test]
+    fn empty_rounds_dropped() {
+        let mut s = Schedule::new(cl(), Collective::Alltoall { c: 1 }, "test");
+        s.push_round(Round::default());
+        assert!(s.rounds.is_empty());
+    }
+}

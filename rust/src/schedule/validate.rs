@@ -1,0 +1,220 @@
+//! Schedule invariant checking.
+//!
+//! Three invariants, used both as library assertions and as the targets
+//! of the property tests:
+//!
+//! 1. **Causality** — a rank only sends blocks it currently holds
+//!    (initial layout ∪ blocks received in *earlier* rounds; within a
+//!    round sends use the pre-round state, as in message passing).
+//! 2. **Port limits** — within a round, no rank is the source of more
+//!    than `limit` transfers or the destination of more than `limit`
+//!    (the k-ported constraint, §2.1).
+//! 3. **Delivery** — after the last round, every rank holds the blocks
+//!    the collective's postcondition requires.
+//!
+//! Causality/delivery track holdings with per-rank hash sets: O(total
+//! block movements). Fine for test-scale p; port checking is cheap and
+//! scales to the full p = 1152 schedules.
+
+use std::collections::HashSet;
+
+use super::{Schedule, Violation::*};
+use crate::topology::Rank;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Violation {
+    /// Rank sent a block it did not hold. (round, src, block)
+    CausalityViolated { round: usize, src: Rank, block: u64 },
+    /// Rank exceeded the per-round send or receive limit.
+    PortLimitExceeded { round: usize, rank: Rank, sends: u32, recvs: u32, limit: u32 },
+    /// Rank is missing a required block at completion.
+    NotDelivered { rank: Rank, block: u64 },
+    /// Transfer references a block id outside the collective's layout.
+    UnknownBlock { round: usize, block: u64 },
+    /// Transfer src/dst out of range or self-message.
+    BadEndpoints { round: usize, src: Rank, dst: Rank },
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CausalityViolated { round, src, block } => {
+                write!(f, "round {round}: rank {src} sent block {block} it does not hold")
+            }
+            PortLimitExceeded { round, rank, sends, recvs, limit } => write!(
+                f,
+                "round {round}: rank {rank} uses {sends} send / {recvs} recv ports (limit {limit})"
+            ),
+            NotDelivered { rank, block } => {
+                write!(f, "completion: rank {rank} missing required block {block}")
+            }
+            UnknownBlock { round, block } => {
+                write!(f, "round {round}: unknown block id {block}")
+            }
+            BadEndpoints { round, src, dst } => {
+                write!(f, "round {round}: bad endpoints {src} -> {dst}")
+            }
+        }
+    }
+}
+
+/// Check port limits only (cheap; scales to p = 1152 alltoall schedules).
+/// `limit` is the k of the k-ported model; k-lane schedules are built so
+/// each *rank* still sends/receives ≤ 1 message per round (lane sharing
+/// is a backend cost concern, not a schedule-shape one), so they pass
+/// with limit = 1.
+pub fn validate_ports(s: &Schedule, limit: u32) -> Result<(), Violation> {
+    let p = s.p() as usize;
+    let mut sends = vec![0u32; p];
+    let mut recvs = vec![0u32; p];
+    for (ri, round) in s.rounds.iter().enumerate() {
+        for t in &round.transfers {
+            if t.src >= s.p() || t.dst >= s.p() || t.src == t.dst {
+                return Err(BadEndpoints { round: ri, src: t.src, dst: t.dst });
+            }
+            sends[t.src as usize] += 1;
+            recvs[t.dst as usize] += 1;
+        }
+        for t in &round.transfers {
+            for r in [t.src, t.dst] {
+                let (sn, rc) = (sends[r as usize], recvs[r as usize]);
+                if sn > limit || rc > limit {
+                    return Err(PortLimitExceeded {
+                        round: ri,
+                        rank: r,
+                        sends: sn,
+                        recvs: rc,
+                        limit,
+                    });
+                }
+            }
+        }
+        for t in &round.transfers {
+            sends[t.src as usize] = 0;
+            recvs[t.dst as usize] = 0;
+        }
+    }
+    Ok(())
+}
+
+/// Full semantic validation: causality + delivery (+ endpoint sanity).
+pub fn validate(s: &Schedule) -> Result<(), Violation> {
+    let p = s.p();
+    let nb = s.op.num_blocks(p);
+    let mut held: Vec<HashSet<u64>> = (0..p)
+        .map(|r| s.op.initial_blocks(r, p).iter().collect())
+        .collect();
+
+    for (ri, round) in s.rounds.iter().enumerate() {
+        // Sends read the pre-round state.
+        for t in &round.transfers {
+            if t.src >= p || t.dst >= p || t.src == t.dst {
+                return Err(BadEndpoints { round: ri, src: t.src, dst: t.dst });
+            }
+            for b in t.blocks.iter() {
+                if b >= nb {
+                    return Err(UnknownBlock { round: ri, block: b });
+                }
+                if !held[t.src as usize].contains(&b) {
+                    return Err(CausalityViolated { round: ri, src: t.src, block: b });
+                }
+            }
+        }
+        for t in &round.transfers {
+            let dst = t.dst as usize;
+            for b in t.blocks.iter() {
+                held[dst].insert(b);
+            }
+        }
+    }
+
+    for r in 0..p {
+        for b in s.op.required_blocks(r, p).iter() {
+            if !held[r as usize].contains(&b) {
+                return Err(NotDelivered { rank: r, block: b });
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{BlockSet, Collective, Round, Schedule};
+    use crate::topology::Cluster;
+
+    fn sched() -> Schedule {
+        // 1 node × 4 cores; bcast root 0, single segment.
+        Schedule::new(
+            Cluster::new(1, 4, 1),
+            Collective::Bcast { root: 0, c: 8, segments: 1 },
+            "test",
+        )
+    }
+
+    #[test]
+    fn valid_binomial_bcast_passes() {
+        let mut s = sched();
+        let t1 = s.transfer(0, 2, BlockSet::single(0));
+        s.push_round(Round::of(vec![t1]));
+        let t2 = s.transfer(0, 1, BlockSet::single(0));
+        let t3 = s.transfer(2, 3, BlockSet::single(0));
+        s.push_round(Round::of(vec![t2, t3]));
+        assert_eq!(validate(&s), Ok(()));
+        assert_eq!(validate_ports(&s, 1), Ok(()));
+    }
+
+    #[test]
+    fn causality_violation_detected() {
+        let mut s = sched();
+        // rank 1 sends before receiving
+        let t = s.transfer(1, 2, BlockSet::single(0));
+        s.push_round(Round::of(vec![t]));
+        assert!(matches!(validate(&s), Err(CausalityViolated { src: 1, .. })));
+    }
+
+    #[test]
+    fn missing_delivery_detected() {
+        let mut s = sched();
+        let t = s.transfer(0, 1, BlockSet::single(0));
+        s.push_round(Round::of(vec![t]));
+        // ranks 2, 3 never receive
+        assert!(matches!(validate(&s), Err(NotDelivered { .. })));
+    }
+
+    #[test]
+    fn port_limit_detected() {
+        let mut s = sched();
+        let t1 = s.transfer(0, 1, BlockSet::single(0));
+        let t2 = s.transfer(0, 2, BlockSet::single(0));
+        s.push_round(Round::of(vec![t1, t2]));
+        assert!(matches!(
+            validate_ports(&s, 1),
+            Err(PortLimitExceeded { rank: 0, sends: 2, .. })
+        ));
+        assert_eq!(validate_ports(&s, 2), Ok(()));
+    }
+
+    #[test]
+    fn self_message_rejected() {
+        let mut s = sched();
+        let t = s.transfer(0, 0, BlockSet::single(0));
+        s.push_round(Round::of(vec![t]));
+        assert!(matches!(validate(&s), Err(BadEndpoints { .. })));
+    }
+
+    #[test]
+    fn unknown_block_rejected() {
+        let mut s = sched();
+        // hand-built transfer: only block 0 exists in this layout
+        let t = crate::schedule::Transfer {
+            src: 0,
+            dst: 1,
+            blocks: BlockSet::single(5),
+            bytes: 4,
+        };
+        s.push_round(Round::of(vec![t]));
+        assert!(matches!(validate(&s), Err(UnknownBlock { block: 5, .. })));
+    }
+}

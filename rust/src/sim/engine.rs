@@ -1,0 +1,575 @@
+//! The event-driven core of the simulator. See module docs in `mod.rs`.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::model::CostModel;
+use crate::schedule::Schedule;
+use crate::util::Prng;
+
+/// One rank's participation in one schedule round.
+#[derive(Clone, Debug, Default)]
+struct RoundOps {
+    round: u32,
+    sends: Vec<u32>, // transfer ids
+    recvs: Vec<u32>,
+    /// Per-call node-collective overhead applies to this round.
+    hinted: bool,
+}
+
+/// Flattened transfer (immutable part).
+#[derive(Clone, Copy, Debug)]
+struct Xfer {
+    src: u32,
+    dst: u32,
+    bytes: u64,
+    offnode: bool,
+    src_node: u32,
+    dst_node: u32,
+    /// Precomputed transmission duration (bytes × β for its path).
+    dur: f64,
+    eager: bool,
+}
+
+/// Immutable simulation input, reusable across repetitions.
+pub struct Simulator {
+    p: u32,
+    nodes: u32,
+    model: CostModel,
+    xfers: Vec<Xfer>,
+    /// Per rank: ordered list of rounds it participates in.
+    progs: Vec<Vec<RoundOps>>,
+}
+
+/// One transmission span captured by the tracer (see `sim::trace`).
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub src: u32,
+    pub dst: u32,
+    pub start: f64,
+    pub end: f64,
+    pub bytes: u64,
+    pub offnode: bool,
+}
+
+/// Result of one repetition.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimResult {
+    /// Time at which the slowest rank finished (µs).
+    pub makespan: f64,
+    pub events: u64,
+}
+
+/// min-heap entry, packed to 16 bytes: the heap dominates the event
+/// loop's cache traffic, so `kind` (1 bit) + payload id (31 bits) +
+/// insertion sequence (32 bits, tie-break for determinism) share a word.
+#[derive(PartialEq, Clone, Copy)]
+struct Ev {
+    t: f64,
+    /// bit 63 = kind (0 Post, 1 Arrive); bits 62..32 = payload id;
+    /// bits 31..0 = insertion sequence.
+    tag: u64,
+}
+
+const EV_ARRIVE: u64 = 1 << 63;
+
+impl Ev {
+    #[inline]
+    fn post(t: f64, rank: u32, seq: u32) -> Ev {
+        Ev { t, tag: ((rank as u64) << 32) | seq as u64 }
+    }
+
+    #[inline]
+    fn arrive(t: f64, xfer: u32, seq: u32) -> Ev {
+        Ev { t, tag: EV_ARRIVE | ((xfer as u64) << 32) | seq as u64 }
+    }
+
+    #[inline]
+    fn is_arrive(&self) -> bool {
+        self.tag & EV_ARRIVE != 0
+    }
+
+    #[inline]
+    fn id(&self) -> u32 {
+        ((self.tag >> 32) & 0x7FFF_FFFF) as u32
+    }
+}
+
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    #[inline]
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: reversed for earliest-first; the
+        // tag's low 32 bits (insertion sequence) keep it deterministic.
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| (other.tag as u32).cmp(&(self.tag as u32)))
+    }
+}
+
+/// A pool of identical FIFO servers; reservation picks the earliest-free.
+#[derive(Clone, Debug)]
+struct Pool {
+    free: Vec<f64>,
+}
+
+impl Pool {
+    fn new(servers: u32) -> Self {
+        Self { free: vec![0.0; servers.max(1) as usize] }
+    }
+
+
+    /// Earliest-free server time.
+    fn earliest(&self) -> f64 {
+        self.free.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Reserve the earliest-free server from `ready` for `dur`; returns
+    /// (start, end).
+    fn reserve(&mut self, ready: f64, dur: f64) -> (f64, f64) {
+        let mut best = 0usize;
+        for i in 1..self.free.len() {
+            if self.free[i] < self.free[best] {
+                best = i;
+            }
+        }
+        let start = ready.max(self.free[best]);
+        let end = start + dur;
+        self.free[best] = end;
+        (start, end)
+    }
+}
+
+/// Per-transfer mutable state, packed together for cache locality on
+/// the hot path (one line per transfer instead of four array walks).
+#[derive(Clone, Copy)]
+struct XferState {
+    send_posted: f64, // NaN = not yet
+    recv_posted: f64,
+    arrived: f64,
+    started: bool,
+}
+
+const XFER_INIT: XferState =
+    XferState { send_posted: f64::NAN, recv_posted: f64::NAN, arrived: f64::NAN, started: false };
+
+/// Mutable per-repetition state, reusable across repetitions via
+/// [`RepState::reset`] (allocation-free rep loop).
+pub struct RepState {
+    rank_pos: Vec<u32>, // index into progs[rank]
+    rank_outstanding: Vec<u32>,
+    rank_clock: Vec<f64>,
+    xs: Vec<XferState>,
+    egress: Vec<Pool>, // per node
+    ingress: Vec<Pool>,
+    bus: Vec<Pool>,
+    heap: BinaryHeap<Ev>,
+    seq: u32,
+    rng: Prng,
+    events: u64,
+    /// When set, every transmission records a span (tracing mode).
+    trace: Option<Vec<Span>>,
+}
+
+impl RepState {
+    fn reset(&mut self, seed: u64) {
+        self.rank_pos.iter_mut().for_each(|x| *x = 0);
+        self.rank_outstanding.iter_mut().for_each(|x| *x = 0);
+        self.rank_clock.iter_mut().for_each(|x| *x = 0.0);
+        self.xs.iter_mut().for_each(|x| *x = XFER_INIT);
+        for pools in [&mut self.egress, &mut self.ingress, &mut self.bus] {
+            for p in pools.iter_mut() {
+                p.free.iter_mut().for_each(|f| *f = 0.0);
+            }
+        }
+        self.heap.clear();
+        self.seq = 0;
+        self.rng = Prng::new(seed);
+        self.events = 0;
+        if let Some(t) = &mut self.trace {
+            t.clear();
+        }
+    }
+}
+
+impl Simulator {
+    pub fn new(schedule: &Schedule, model: &CostModel) -> Self {
+        let p = schedule.p();
+        let cl = schedule.cluster;
+        let mut xfers = Vec::with_capacity(schedule.num_transfers());
+        let mut progs: Vec<Vec<RoundOps>> = vec![Vec::new(); p as usize];
+
+        let mut push_op = |rank: u32, round: u32, id: u32, is_send: bool, hinted: bool| {
+            let prog = &mut progs[rank as usize];
+            if prog.last().map(|r| r.round) != Some(round) {
+                prog.push(RoundOps { round, hinted, ..Default::default() });
+            }
+            let ops = prog.last_mut().unwrap();
+            ops.hinted |= hinted;
+            if is_send {
+                ops.sends.push(id);
+            } else {
+                ops.recvs.push(id);
+            }
+        };
+
+        for (ri, round) in schedule.rounds.iter().enumerate() {
+            let hinted = round.node_phase.is_some();
+            for t in &round.transfers {
+                let id = xfers.len() as u32;
+                let offnode = !cl.same_node(t.src, t.dst);
+                let (beta, eager_limit) = if offnode {
+                    (model.beta_net, model.eager_net)
+                } else {
+                    (model.beta_shm, model.eager_shm)
+                };
+                xfers.push(Xfer {
+                    src: t.src,
+                    dst: t.dst,
+                    bytes: t.bytes,
+                    offnode,
+                    src_node: cl.node_of(t.src),
+                    dst_node: cl.node_of(t.dst),
+                    dur: t.bytes as f64 * beta,
+                    eager: t.bytes <= eager_limit,
+                });
+                push_op(t.src, ri as u32, id, true, hinted);
+                push_op(t.dst, ri as u32, id, false, hinted);
+            }
+        }
+
+        Self { p, nodes: cl.nodes, model: *model, xfers, progs }
+    }
+
+    /// Allocate a reusable per-repetition state.
+    pub fn new_state(&self) -> RepState {
+        let m = &self.model;
+        RepState {
+            rank_pos: vec![0; self.p as usize],
+            rank_outstanding: vec![0; self.p as usize],
+            rank_clock: vec![0.0; self.p as usize],
+            xs: vec![XFER_INIT; self.xfers.len()],
+            egress: vec![Pool::new(m.phys_lanes); self.nodes as usize],
+            ingress: vec![Pool::new(m.phys_lanes); self.nodes as usize],
+            bus: vec![Pool::new(m.bus_servers); self.nodes as usize],
+            heap: BinaryHeap::with_capacity(self.p as usize * 2),
+            seq: 0,
+            rng: Prng::new(0),
+            events: 0,
+            trace: None,
+        }
+    }
+
+    /// Run one repetition recording every transmission span.
+    pub fn run_traced(&self, seed: u64) -> (SimResult, Vec<Span>) {
+        let mut st = self.new_state();
+        st.trace = Some(Vec::new());
+        let r = self.run_into(&mut st, seed);
+        (r, st.trace.take().unwrap())
+    }
+
+    /// Run one repetition with the given jitter seed (allocates fresh
+    /// state; use [`Simulator::run_into`] in rep loops).
+    pub fn run(&self, seed: u64) -> SimResult {
+        let mut st = self.new_state();
+        self.run_into(&mut st, seed)
+    }
+
+    /// Run one repetition reusing `st` (no allocation).
+    pub fn run_into(&self, st: &mut RepState, seed: u64) -> SimResult {
+        st.reset(seed);
+
+        // Kick off: every rank with a program posts its first round at 0.
+        for r in 0..self.p {
+            if !self.progs[r as usize].is_empty() {
+                st.seq = st.seq.wrapping_add(1);
+                st.heap.push(Ev::post(0.0, r, st.seq));
+            }
+        }
+
+        while let Some(ev) = st.heap.pop() {
+            st.events += 1;
+            if ev.is_arrive() {
+                self.do_arrive(st, ev.id(), ev.t);
+            } else {
+                self.do_post(st, ev.id(), ev.t);
+            }
+        }
+
+        let makespan =
+            st.rank_clock.iter().copied().fold(0.0f64, f64::max);
+        SimResult { makespan, events: st.events }
+    }
+
+    /// Rank posts all ops of its current round, then waits for them.
+    fn do_post(&self, st: &mut RepState, rank: u32, now: f64) {
+        let m = &self.model;
+        let prog = &self.progs[rank as usize];
+        let ops = &prog[st.rank_pos[rank as usize] as usize];
+        let mut clock = now;
+        if ops.hinted {
+            clock += m.node_collective_call;
+        }
+        let jitter = |st: &mut RepState| {
+            if m.jitter_mean > 0.0 {
+                st.rng.exp(m.jitter_mean)
+            } else {
+                0.0
+            }
+        };
+        // +1 "posting token": ops may complete synchronously while we are
+        // still posting; the token guarantees advance() fires exactly once,
+        // after the whole round is posted.
+        st.rank_outstanding[rank as usize] =
+            (ops.sends.len() + ops.recvs.len()) as u32 + 1;
+
+        // Post receives first (as a real implementation would), then sends.
+        for &x in &ops.recvs {
+            clock += m.o_post + jitter(st);
+            st.xs[x as usize].recv_posted = clock;
+            self.try_start(st, x);
+            // If the message already arrived (eager), the recv completes
+            // immediately at max(arrival, post) — handled in try_complete.
+            self.try_complete_recv(st, x, clock);
+        }
+        for &x in &ops.sends {
+            clock += m.o_post + jitter(st);
+            st.xs[x as usize].send_posted = clock;
+            let xf = &self.xfers[x as usize];
+            let eager = self.is_eager(xf);
+            self.try_start(st, x);
+            if eager {
+                // Buffered: the send op completes locally at post time.
+                self.op_done(st, xf.src, clock);
+            }
+        }
+        if clock > st.rank_clock[rank as usize] {
+            st.rank_clock[rank as usize] = clock;
+        }
+        // Release the posting token (may trigger advance if all ops
+        // already completed synchronously).
+        self.op_done(st, rank, clock);
+    }
+
+    #[inline]
+    fn is_eager(&self, xf: &Xfer) -> bool {
+        xf.eager
+    }
+
+    /// Start the transmission if its preconditions are met.
+    fn try_start(&self, st: &mut RepState, x: u32) {
+        let xf = &self.xfers[x as usize];
+        let xst = st.xs[x as usize];
+        if xst.started {
+            return;
+        }
+        let sp = xst.send_posted;
+        if sp.is_nan() {
+            return;
+        }
+        let ready = if self.is_eager(xf) {
+            sp
+        } else {
+            let rp = xst.recv_posted;
+            if rp.is_nan() {
+                return;
+            }
+            sp.max(rp)
+        };
+        st.xs[x as usize].started = true;
+        let m = &self.model;
+        let arrival = if xf.offnode {
+            // Store-and-forward over the lanes: the message first holds an
+            // egress lane server of the source node, then queues on an
+            // ingress lane server of the destination node. The two stages
+            // are decoupled (no hold-and-wait), so a saturated receiver
+            // delays the arrival without blocking the sender's lane —
+            // matching how NICs drain send queues independently.
+            let dur = xf.dur;
+            let (start_e, end_e) = st.egress[xf.src_node as usize].reserve(ready, dur);
+            if let Some(t) = &mut st.trace {
+                t.push(Span { src: xf.src, dst: xf.dst, start: start_e, end: end_e, bytes: xf.bytes, offnode: true });
+            }
+            // Wire latency, then queue for the receive side. The ingress
+            // occupancy models the receiver lane being busy `dur` per
+            // message; overlapping with its own start is fine (cut-through).
+            let in_ready = end_e - dur + m.alpha_net;
+            let (_s2, end_i) = st.ingress[xf.dst_node as usize].reserve(in_ready, dur);
+            end_i
+        } else {
+            let dur = xf.dur;
+            let (start, end) = st.bus[xf.src_node as usize].reserve(ready, dur);
+            if let Some(t) = &mut st.trace {
+                t.push(Span { src: xf.src, dst: xf.dst, start, end, bytes: xf.bytes, offnode: false });
+            }
+            end + m.alpha_shm
+        };
+        st.seq = st.seq.wrapping_add(1);
+        st.heap.push(Ev::arrive(arrival, x, st.seq));
+    }
+
+    fn do_arrive(&self, st: &mut RepState, x: u32, now: f64) {
+        let xf = self.xfers[x as usize];
+        st.xs[x as usize].arrived = now;
+        if !self.is_eager(&xf) {
+            // Rendezvous: the sender's op completes at arrival too.
+            self.op_done(st, xf.src, now);
+        }
+        self.try_complete_recv(st, x, now);
+    }
+
+    fn try_complete_recv(&self, st: &mut RepState, x: u32, now: f64) {
+        let arr = st.xs[x as usize].arrived;
+        let rp = st.xs[x as usize].recv_posted;
+        if arr.is_nan() || rp.is_nan() {
+            return;
+        }
+        let t = arr.max(rp) + self.model.o_match;
+        let dst = self.xfers[x as usize].dst;
+        self.op_done(st, dst, t.max(now));
+    }
+
+    /// One of `rank`'s outstanding round ops completed at time `t`.
+    fn op_done(&self, st: &mut RepState, rank: u32, t: f64) {
+        let r = rank as usize;
+        debug_assert!(st.rank_outstanding[r] > 0);
+        st.rank_outstanding[r] -= 1;
+        if t > st.rank_clock[r] {
+            st.rank_clock[r] = t;
+        }
+        if st.rank_outstanding[r] == 0 {
+            let clock = st.rank_clock[r];
+            self.advance(st, rank, clock);
+        }
+    }
+
+    /// Waitall finished: move to the next participating round.
+    fn advance(&self, st: &mut RepState, rank: u32, now: f64) {
+        let r = rank as usize;
+        st.rank_pos[r] += 1;
+        if (st.rank_pos[r] as usize) < self.progs[r].len() {
+            st.seq = st.seq.wrapping_add(1);
+            st.heap.push(Ev::post(now, rank, st.seq));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{alltoall, bcast, scatter};
+    use crate::model::CostModel;
+    use crate::schedule::Schedule;
+    use crate::topology::Cluster;
+
+    fn quiet() -> CostModel {
+        let mut m = CostModel::hydra_baseline();
+        m.jitter_mean = 0.0;
+        m
+    }
+
+    fn makespan(s: &Schedule, m: &CostModel) -> f64 {
+        Simulator::new(s, m).run(1).makespan
+    }
+
+    #[test]
+    fn empty_like_schedule_single_rank() {
+        // Bcast on p=1: no transfers at all, makespan 0.
+        let cl = Cluster::new(1, 1, 1);
+        let s = bcast::build(cl, 0, 100, bcast::BcastAlg::Binomial);
+        assert_eq!(makespan(&s, &quiet()), 0.0);
+    }
+
+    #[test]
+    fn single_transfer_cost_matches_model() {
+        let cl = Cluster::new(2, 1, 1);
+        let m = quiet();
+        let c = 10_000u64; // 40 KB > eager: rendezvous
+        let s = bcast::build(cl, 0, c, bcast::BcastAlg::Binomial);
+        let bytes = (c * 4) as f64;
+        // recv posted at o_post (dst), send posted at o_post (src);
+        // tx = bytes·β + α; recv completes at arrival + o_match.
+        let want = m.o_post + bytes * m.beta_net + m.alpha_net + m.o_match;
+        let got = makespan(&s, &m);
+        assert!((got - want).abs() < 1e-6, "got {got} want {want}");
+    }
+
+    #[test]
+    fn eager_send_completes_early() {
+        let cl = Cluster::new(2, 1, 1);
+        let m = quiet();
+        let s = bcast::build(cl, 0, 4, bcast::BcastAlg::Binomial); // 16 B eager
+        let got = makespan(&s, &m);
+        let bytes = 16.0;
+        let want = m.o_post + bytes * m.beta_net + m.alpha_net + m.o_match;
+        assert!((got - want).abs() < 1e-6, "got {got} want {want}");
+    }
+
+    #[test]
+    fn lane_contention_queues() {
+        // 1 node of 4 cores sending 4 concurrent off-node messages over 1
+        // lane must serialise; with 4 lanes they run in parallel.
+        let mk = |lanes: u32| {
+            let mut m = quiet();
+            m.phys_lanes = lanes;
+            m
+        };
+        let cl = Cluster::new(2, 4, 4);
+        // alltoall k-lane: node rounds have 4 concurrent off-node sends
+        let s = alltoall::build(cl, 50_000, alltoall::AlltoallAlg::KLane);
+        let t1 = makespan(&s, &mk(1));
+        let t4 = makespan(&s, &mk(4));
+        assert!(t1 > 2.0 * t4, "1 lane {t1} vs 4 lanes {t4}");
+    }
+
+    #[test]
+    fn more_ports_help_kported_bcast() {
+        let cl = Cluster::hydra(2);
+        let m = quiet();
+        let t1 = makespan(&bcast::build(cl, 0, 100_000, bcast::BcastAlg::KPorted { k: 1 }), &m);
+        let t4 = makespan(&bcast::build(cl, 0, 100_000, bcast::BcastAlg::KPorted { k: 4 }), &m);
+        assert!(t4 < t1, "k=4 {t4} not faster than k=1 {t1}");
+    }
+
+    #[test]
+    fn fulllane_beats_binomial_for_large_bcast() {
+        // The headline Table 12 shape: full-lane ≫ single-tree for 4 MB.
+        let cl = Cluster::hydra(2);
+        let m = quiet();
+        let tb = makespan(&bcast::build(cl, 0, 1_000_000, bcast::BcastAlg::Binomial), &m);
+        let tf = makespan(&bcast::build(cl, 0, 1_000_000, bcast::BcastAlg::FullLane), &m);
+        assert!(tf < tb / 2.0, "full-lane {tf} vs binomial {tb}");
+    }
+
+    #[test]
+    fn scatter_sim_runs_all_algorithms() {
+        let cl = Cluster::new(4, 4, 2);
+        let m = quiet();
+        for alg in [
+            scatter::ScatterAlg::KPorted { k: 2 },
+            scatter::ScatterAlg::KLane { k: 2 },
+            scatter::ScatterAlg::FullLane,
+            scatter::ScatterAlg::Binomial,
+            scatter::ScatterAlg::Linear,
+        ] {
+            let s = scatter::build(cl, 0, 64, alg);
+            let t = makespan(&s, &m);
+            assert!(t > 0.0 && t.is_finite(), "{}: {t}", s.algorithm);
+        }
+    }
+
+    #[test]
+    fn events_counted() {
+        let cl = Cluster::new(2, 2, 1);
+        let s = bcast::build(cl, 0, 8, bcast::BcastAlg::Binomial);
+        let r = Simulator::new(&s, &quiet()).run(3);
+        assert!(r.events > 0);
+    }
+}

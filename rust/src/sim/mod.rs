@@ -1,0 +1,110 @@
+//! Discrete-event simulator: executes a [`Schedule`] under a
+//! [`CostModel`] and reports per-repetition slowest-rank times, exactly
+//! the quantity the paper measures (§4: `MPI_Barrier` + `MPI_Wtime`,
+//! average and minimum of the slowest process over 100 repetitions with
+//! 5 warm-up).
+//!
+//! ## Semantics
+//!
+//! Rounds are *per-rank* programs, not global barriers: each rank walks
+//! its own sequence of rounds it participates in, posting all of a
+//! round's nonblocking sends/recvs (serial `o_post` per op on the core)
+//! and then waiting for all of them (waitall) before advancing — the MPI
+//! pattern §3 describes. A rank that does not appear in a round skips it,
+//! so node-local phases of one node overlap with network traffic of
+//! others.
+//!
+//! ## Resources
+//!
+//! * per-node egress and ingress lane pools (`phys_lanes` servers each,
+//!   full duplex) — off-node messages queue here;
+//! * per-node memory-bus pool (`bus_servers`) — on-node copies queue
+//!   here;
+//! * per-rank serial posting (built into the rank clock).
+//!
+//! An off-node transmission holds one egress server of the source node
+//! and one ingress server of the destination node for `bytes · β_net`;
+//! acquisition is egress-then-ingress (deadlock-free: ingress holders
+//! never wait on egress). Eager messages (≤ threshold) start when the
+//! send is posted; rendezvous messages wait for both sides.
+
+mod engine;
+pub mod trace;
+
+pub use engine::{SimResult, Simulator};
+
+use crate::model::CostModel;
+use crate::schedule::Schedule;
+use crate::util::stats::{RepCollector, Summary};
+
+/// Simulate `reps` measured repetitions (after `warmup` unmeasured ones)
+/// and summarise like the paper's tables.
+pub fn measure(
+    schedule: &Schedule,
+    model: &CostModel,
+    reps: usize,
+    warmup: usize,
+    seed: u64,
+) -> Summary {
+    let sim = Simulator::new(schedule, model);
+    let mut state = sim.new_state();
+    let mut col = RepCollector::new(warmup, reps);
+    for rep in 0..reps + warmup {
+        let r = sim.run_into(&mut state, seed ^ (rep as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        col.push(r.makespan);
+    }
+    col.summary()
+}
+
+/// Paper measurement parameters (§4). The simulator defaults to fewer
+/// repetitions for the large sweeps; benches may override via
+/// `MLANE_REPS`.
+pub const PAPER_REPS: usize = 100;
+pub const PAPER_WARMUP: usize = 5;
+
+/// Default repetitions for the table harness (jitter converges well
+/// before 100 reps in simulation; override with MLANE_REPS).
+pub fn default_reps() -> usize {
+    std::env::var("MLANE_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(20)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::bcast::{self, BcastAlg};
+    use crate::model::CostModel;
+    use crate::topology::Cluster;
+
+    fn quiet(mut m: CostModel) -> CostModel {
+        m.jitter_mean = 0.0;
+        m
+    }
+
+    #[test]
+    fn measure_is_deterministic_per_seed() {
+        let cl = Cluster::new(4, 4, 2);
+        let s = bcast::build(cl, 0, 1000, BcastAlg::Binomial);
+        let m = CostModel::hydra_baseline();
+        let a = measure(&s, &m, 5, 1, 42);
+        let b = measure(&s, &m, 5, 1, 42);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn zero_jitter_gives_zero_spread() {
+        let cl = Cluster::new(4, 4, 2);
+        let s = bcast::build(cl, 0, 1000, BcastAlg::Binomial);
+        let m = quiet(CostModel::hydra_baseline());
+        let sum = measure(&s, &m, 5, 0, 7);
+        assert!((sum.avg - sum.min).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jitter_creates_avg_min_spread() {
+        let cl = Cluster::new(4, 4, 2);
+        let s = bcast::build(cl, 0, 1000, BcastAlg::Binomial);
+        let m = CostModel::hydra_baseline();
+        let sum = measure(&s, &m, 30, 2, 7);
+        assert!(sum.avg > sum.min, "avg {} min {}", sum.avg, sum.min);
+    }
+}

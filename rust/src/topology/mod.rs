@@ -1,0 +1,138 @@
+//! Cluster topology: `N` compute nodes × `n` processor-cores, `k` network
+//! lanes per node (paper §2: p = N·n, ranks consecutive per node).
+
+/// A process rank, 0 ≤ rank < p.
+pub type Rank = u32;
+
+/// Hierarchical cluster description.
+///
+/// Placement follows the paper's experiments (§4): ranks are consecutive
+/// on nodes (rank `i` lives on node `i / n`, core `i % n`), and cores are
+/// assumed to alternate over the sockets so that cores `0..k` can each
+/// drive one of the `k` lanes at full bandwidth.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cluster {
+    /// Number of compute nodes (paper: N).
+    pub nodes: u32,
+    /// Processor-cores per node (paper: n).
+    pub cores: u32,
+    /// Network lanes per node (paper: k); the Hydra system has k = 2
+    /// physical lanes (dual OmniPath), experiments use k = 1..6 virtual.
+    pub lanes: u32,
+}
+
+impl Cluster {
+    pub fn new(nodes: u32, cores: u32, lanes: u32) -> Self {
+        assert!(nodes >= 1 && cores >= 1 && lanes >= 1, "degenerate cluster");
+        // lanes may exceed cores: lanes are node hardware (e.g. a
+        // single-process-per-node placement on a dual-rail system still
+        // has 2 lanes, §4.1); algorithms that *drive* k lanes from k
+        // cores assert k <= n themselves.
+        Self { nodes, cores, lanes }
+    }
+
+    /// The paper's evaluation system: 36 nodes × 32 cores, dual OmniPath.
+    pub fn hydra(lanes: u32) -> Self {
+        Self::new(36, 32, lanes)
+    }
+
+    /// Total number of processes p = N·n.
+    #[inline]
+    pub fn p(&self) -> u32 {
+        self.nodes * self.cores
+    }
+
+    #[inline]
+    pub fn node_of(&self, rank: Rank) -> u32 {
+        debug_assert!(rank < self.p());
+        rank / self.cores
+    }
+
+    #[inline]
+    pub fn core_of(&self, rank: Rank) -> u32 {
+        debug_assert!(rank < self.p());
+        rank % self.cores
+    }
+
+    #[inline]
+    pub fn rank_of(&self, node: u32, core: u32) -> Rank {
+        debug_assert!(node < self.nodes && core < self.cores);
+        node * self.cores + core
+    }
+
+    /// All ranks on `node`, in core order.
+    pub fn ranks_on(&self, node: u32) -> impl Iterator<Item = Rank> + '_ {
+        let base = node * self.cores;
+        base..base + self.cores
+    }
+
+    #[inline]
+    pub fn same_node(&self, a: Rank, b: Rank) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Lane a given core drives for off-node traffic (core `c` maps to
+    /// lane `c mod k`; with socket-alternating placement consecutive
+    /// cores hit distinct lanes, matching the paper's placement note).
+    #[inline]
+    pub fn lane_of_core(&self, core: u32) -> u32 {
+        core % self.lanes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hydra_dimensions() {
+        let cl = Cluster::hydra(2);
+        assert_eq!(cl.p(), 1152);
+        assert_eq!(cl.nodes, 36);
+        assert_eq!(cl.cores, 32);
+    }
+
+    #[test]
+    fn rank_mapping_roundtrip() {
+        let cl = Cluster::new(4, 8, 2);
+        for r in 0..cl.p() {
+            let (nd, co) = (cl.node_of(r), cl.core_of(r));
+            assert_eq!(cl.rank_of(nd, co), r);
+        }
+    }
+
+    #[test]
+    fn ranks_on_node() {
+        let cl = Cluster::new(3, 4, 1);
+        let v: Vec<_> = cl.ranks_on(1).collect();
+        assert_eq!(v, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn same_node_detection() {
+        let cl = Cluster::new(2, 3, 1);
+        assert!(cl.same_node(0, 2));
+        assert!(!cl.same_node(2, 3));
+    }
+
+    #[test]
+    fn lane_assignment_cycles() {
+        let cl = Cluster::new(2, 8, 2);
+        assert_eq!(cl.lane_of_core(0), 0);
+        assert_eq!(cl.lane_of_core(1), 1);
+        assert_eq!(cl.lane_of_core(2), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "degenerate")]
+    fn rejects_zero_nodes() {
+        Cluster::new(0, 4, 1);
+    }
+
+    #[test]
+    fn lanes_may_exceed_cores() {
+        // single-process-per-node placement on dual-rail hardware (§4.1)
+        let cl = Cluster::new(32, 1, 2);
+        assert_eq!(cl.p(), 32);
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained utilities: deterministic PRNG, statistics,
+//! and a property-testing harness (no external crates are available
+//! offline, so these are in-repo).
+
+pub mod prng;
+pub mod stats;
+pub mod prop;
+
+pub use prng::Prng;
+pub use stats::Summary;

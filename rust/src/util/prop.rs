@@ -1,0 +1,87 @@
+//! Minimal property-testing harness (proptest is not available offline).
+//!
+//! `check(name, cases, |g| ...)` runs a closure against `cases`
+//! independently-seeded [`Gen`]s; on failure it reports the failing seed
+//! so the case can be replayed deterministically with [`replay`].
+
+use super::prng::Prng;
+
+/// Value generator wrapping a deterministic PRNG.
+pub struct Gen {
+    pub rng: Prng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Prng::new(seed), seed }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo as u64, hi as u64) as usize
+    }
+
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+}
+
+/// Run `f` on `cases` generated inputs. Panics (with the seed) on the
+/// first failure. `f` should panic/assert on property violation.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: u64, mut f: F) {
+    for i in 0..cases {
+        let seed = 0x5EED_0000_0000 + i;
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(e) = result {
+            eprintln!("property `{name}` failed at case {i} (replay seed: {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F: FnMut(&mut Gen)>(seed: u64, mut f: F) {
+    let mut g = Gen::new(seed);
+    f(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0;
+        check("counting", 10, |_g| count += 1);
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failure() {
+        check("fails", 5, |g| {
+            let v = g.usize_in(0, 100);
+            assert!(v < 1000); // passes
+            assert!(v == usize::MAX); // fails
+        });
+    }
+
+    #[test]
+    fn gen_in_bounds() {
+        let mut g = Gen::new(1);
+        for _ in 0..100 {
+            let v = g.usize_in(2, 7);
+            assert!((2..=7).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Run statistics matching the paper's measurement scheme: average and
+//! minimum of the slowest process over repetitions (§4: 100 reps, 5
+//! warm-up not measured).
+
+/// Summary of a series of per-repetition times (already the max over
+/// ranks — "time of the slowest process").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub avg: f64,
+    pub min: f64,
+    pub max: f64,
+    pub reps: usize,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "no samples");
+        let mut sum = 0.0;
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for &s in samples {
+            sum += s;
+            if s < min {
+                min = s;
+            }
+            if s > max {
+                max = s;
+            }
+        }
+        Self { avg: sum / samples.len() as f64, min, max, reps: samples.len() }
+    }
+}
+
+/// Collects per-rep slowest-rank times, discarding warm-up reps,
+/// mirroring the paper's MPI_Barrier + MPI_Wtime loop.
+#[derive(Clone, Debug, Default)]
+pub struct RepCollector {
+    warmup_left: usize,
+    samples: Vec<f64>,
+}
+
+impl RepCollector {
+    pub fn new(warmup: usize, reps: usize) -> Self {
+        Self { warmup_left: warmup, samples: Vec::with_capacity(reps) }
+    }
+
+    pub fn push(&mut self, slowest_rank_time: f64) {
+        if self.warmup_left > 0 {
+            self.warmup_left -= 1;
+        } else {
+            self.samples.push(slowest_rank_time);
+        }
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples)
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.avg, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.reps, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "no samples")]
+    fn summary_empty_panics() {
+        Summary::of(&[]);
+    }
+
+    #[test]
+    fn collector_discards_warmup() {
+        let mut c = RepCollector::new(2, 3);
+        for t in [100.0, 100.0, 1.0, 2.0, 3.0] {
+            c.push(t);
+        }
+        let s = c.summary();
+        assert_eq!(s.reps, 3);
+        assert_eq!(s.avg, 2.0);
+        assert_eq!(s.min, 1.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Property tests over the schedule invariants (DESIGN.md §Perf / §5):
+//! for randomly drawn cluster shapes, roots, counts, and k, every
+//! algorithm must produce schedules that are causal, port-legal, and
+//! complete. Uses the in-repo deterministic property harness
+//! (`mlane::util::prop`) — failures print a replayable seed.
+
+use mlane::algorithms::{alltoall, bcast, scatter};
+use mlane::schedule::validate::{validate, validate_ports};
+use mlane::schedule::Schedule;
+use mlane::topology::Cluster;
+use mlane::util::prop::{check, Gen};
+
+const CASES: u64 = 60;
+
+fn random_cluster(g: &mut Gen) -> Cluster {
+    let nodes = g.usize_in(1, 6) as u32;
+    let cores = g.usize_in(1, 8) as u32;
+    let lanes = g.usize_in(1, cores as usize) as u32;
+    Cluster::new(nodes, cores, lanes)
+}
+
+fn assert_valid(s: &Schedule, ports: u32, ctx: &str) {
+    if let Err(v) = validate(s) {
+        panic!("{ctx}: {} invalid: {v}", s.algorithm);
+    }
+    if let Err(v) = validate_ports(s, ports) {
+        panic!("{ctx}: {} port violation: {v}", s.algorithm);
+    }
+}
+
+#[test]
+fn prop_bcast_kported() {
+    check("bcast k-ported", CASES, |g| {
+        let cl = random_cluster(g);
+        let root = g.usize_in(0, cl.p() as usize - 1) as u32;
+        let k = g.usize_in(1, 6) as u32;
+        let c = g.u64_in(1, 5000);
+        let s = bcast::build(cl, root, c, bcast::BcastAlg::KPorted { k });
+        assert_valid(&s, k, &format!("cl={cl:?} root={root} k={k} c={c}"));
+    });
+}
+
+#[test]
+fn prop_bcast_klane_both_variants() {
+    check("bcast k-lane", CASES, |g| {
+        let cl = random_cluster(g);
+        let root = g.usize_in(0, cl.p() as usize - 1) as u32;
+        let k = g.usize_in(1, cl.cores as usize) as u32;
+        let c = g.u64_in(1, 5000);
+        let two_phase = g.bool();
+        let s = bcast::build(cl, root, c, bcast::BcastAlg::KLane { k, two_phase });
+        assert_valid(&s, 1, &format!("cl={cl:?} root={root} k={k} two_phase={two_phase}"));
+    });
+}
+
+#[test]
+fn prop_bcast_fulllane_and_natives() {
+    check("bcast full-lane/native", CASES, |g| {
+        let cl = random_cluster(g);
+        let root = g.usize_in(0, cl.p() as usize - 1) as u32;
+        let c = g.u64_in(1, 5000);
+        for alg in [
+            bcast::BcastAlg::FullLane,
+            bcast::BcastAlg::Binomial,
+            bcast::BcastAlg::ScatterAllgather,
+        ] {
+            let s = bcast::build(cl, root, c, alg);
+            assert_valid(&s, 1, &format!("cl={cl:?} root={root} c={c}"));
+        }
+    });
+}
+
+#[test]
+fn prop_scatter_all_algorithms() {
+    check("scatter", CASES, |g| {
+        let cl = random_cluster(g);
+        let root = g.usize_in(0, cl.p() as usize - 1) as u32;
+        let k = g.usize_in(1, cl.cores as usize) as u32;
+        let c = g.u64_in(1, 1000);
+        let ctx = format!("cl={cl:?} root={root} k={k} c={c}");
+        assert_valid(&scatter::build(cl, root, c, scatter::ScatterAlg::KPorted { k }), k, &ctx);
+        assert_valid(&scatter::build(cl, root, c, scatter::ScatterAlg::KLane { k }), 1, &ctx);
+        assert_valid(&scatter::build(cl, root, c, scatter::ScatterAlg::FullLane), 1, &ctx);
+        assert_valid(&scatter::build(cl, root, c, scatter::ScatterAlg::Binomial), 1, &ctx);
+        assert_valid(&scatter::build(cl, root, c, scatter::ScatterAlg::Linear), 1, &ctx);
+    });
+}
+
+#[test]
+fn prop_alltoall_all_algorithms() {
+    check("alltoall", CASES / 2, |g| {
+        let cl = random_cluster(g);
+        let k = g.usize_in(1, 6) as u32;
+        let c = g.u64_in(1, 100);
+        let ctx = format!("cl={cl:?} k={k} c={c}");
+        assert_valid(&alltoall::build(cl, c, alltoall::AlltoallAlg::KPorted { k }), k, &ctx);
+        assert_valid(&alltoall::build(cl, c, alltoall::AlltoallAlg::Bruck { k }), k, &ctx);
+        assert_valid(&alltoall::build(cl, c, alltoall::AlltoallAlg::KLane), cl.cores, &ctx);
+        assert_valid(&alltoall::build(cl, c, alltoall::AlltoallAlg::FullLane), 1, &ctx);
+        assert_valid(&alltoall::build(cl, c, alltoall::AlltoallAlg::Pairwise), 1, &ctx);
+    });
+}
+
+#[test]
+fn prop_offnode_bytes_never_below_collective_lower_bound() {
+    // Any correct bcast must move ≥ (N-1) payloads off the root node…
+    // actually ≥ c elements into each of the other N-1 nodes.
+    check("bcast off-node lower bound", CASES / 2, |g| {
+        let mut cl = random_cluster(g);
+        while cl.nodes < 2 {
+            cl = random_cluster(g);
+        }
+        let c = g.u64_in(1, 2000);
+        let root = 0;
+        for alg in [
+            bcast::BcastAlg::KPorted { k: 2 },
+            bcast::BcastAlg::KLane { k: cl.lanes, two_phase: false },
+            bcast::BcastAlg::FullLane,
+            bcast::BcastAlg::Binomial,
+        ] {
+            let s = bcast::build(cl, root, c, alg);
+            let lower = (cl.nodes as u64 - 1) * c * 4;
+            assert!(
+                s.offnode_bytes() >= lower,
+                "{}: off-node {} < lower bound {lower} (cl={cl:?} c={c})",
+                s.algorithm,
+                s.offnode_bytes()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_kported_scatter_root_egress_exact() {
+    // §2.1: the k-ported scatter is message-size optimal — the root sends
+    // each block exactly once, i.e. (p-1)·c elements leave the root.
+    check("scatter root egress", CASES, |g| {
+        let cl = random_cluster(g);
+        let root = g.usize_in(0, cl.p() as usize - 1) as u32;
+        let k = g.usize_in(1, 6) as u32;
+        let c = g.u64_in(1, 500);
+        let s = scatter::build(cl, root, c, scatter::ScatterAlg::KPorted { k });
+        let egress: u64 = s
+            .rounds
+            .iter()
+            .flat_map(|r| &r.transfers)
+            .filter(|t| t.src == root)
+            .map(|t| t.bytes)
+            .sum();
+        assert_eq!(egress, (cl.p() as u64 - 1) * c * 4, "cl={cl:?} root={root} k={k}");
+    });
+}
+
+#[test]
+fn prop_round_counts_match_paper_bounds() {
+    check("round bounds", CASES, |g| {
+        let cl = random_cluster(g);
+        let p = cl.p();
+        let k = g.usize_in(1, 6) as u32;
+        let c = 10;
+        // §2.1: ⌈log_{k+1} p⌉ rounds for k-ported bcast/scatter.
+        let want = mlane::algorithms::common::ceil_log(p, k + 1) as usize;
+        assert_eq!(bcast::build(cl, 0, c, bcast::BcastAlg::KPorted { k }).rounds.len(), want);
+        assert_eq!(
+            scatter::build(cl, 0, c, scatter::ScatterAlg::KPorted { k }).rounds.len(),
+            want
+        );
+        // §2.1: ⌈(p-1)/k⌉ rounds for the round-robin alltoall.
+        let a2a = alltoall::build(cl, c, alltoall::AlltoallAlg::KPorted { k });
+        assert_eq!(a2a.rounds.len() as u32, (p - 1).div_ceil(k), "cl={cl:?} k={k}");
+    });
+}

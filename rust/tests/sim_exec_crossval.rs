@@ -1,0 +1,142 @@
+//! Cross-validation between the two backends and failure injection.
+//!
+//! The simulator and the exec runtime consume the same IR; these tests
+//! pin down that (a) what the simulator times, the executor can really
+//! do, (b) the simulator's cost ordering is sane against analytic
+//! expectations, and (c) corrupted schedules are *caught*, not silently
+//! mis-executed.
+
+use mlane::algorithms::{alltoall, bcast, scatter};
+use mlane::exec::ExecRuntime;
+use mlane::model::CostModel;
+use mlane::schedule::{BlockSet, Round, Schedule};
+use mlane::sim;
+use mlane::topology::Cluster;
+
+fn quiet() -> CostModel {
+    let mut m = CostModel::hydra_baseline();
+    m.jitter_mean = 0.0;
+    m
+}
+
+#[test]
+fn every_simulated_schedule_is_executable() {
+    // The exact schedules the simulator times must execute and verify on
+    // the threaded backend — the strongest "sim isn't lying about the
+    // communication structure" check we can run in-process.
+    let cl = Cluster::new(3, 4, 2);
+    let rt = ExecRuntime::channels();
+    let mut schedules: Vec<Schedule> = Vec::new();
+    for k in 1..=3 {
+        schedules.push(bcast::build(cl, 5, 97, bcast::BcastAlg::KPorted { k }));
+        schedules.push(bcast::build(cl, 5, 97, bcast::BcastAlg::KLane { k, two_phase: false }));
+        schedules.push(scatter::build(cl, 5, 33, scatter::ScatterAlg::KPorted { k }));
+        schedules.push(scatter::build(cl, 5, 33, scatter::ScatterAlg::KLane { k }));
+        schedules.push(alltoall::build(cl, 9, alltoall::AlltoallAlg::Bruck { k }));
+    }
+    schedules.push(bcast::build(cl, 5, 97, bcast::BcastAlg::FullLane));
+    schedules.push(scatter::build(cl, 5, 33, scatter::ScatterAlg::FullLane));
+    schedules.push(alltoall::build(cl, 9, alltoall::AlltoallAlg::KLane));
+    schedules.push(alltoall::build(cl, 9, alltoall::AlltoallAlg::FullLane));
+
+    let m = quiet();
+    for s in schedules {
+        let t = sim::measure(&s, &m, 2, 0, 1);
+        assert!(t.avg > 0.0, "{}", s.algorithm);
+        let rep = rt.run(&s, 1, 0).unwrap_or_else(|e| panic!("{}: {e}", s.algorithm));
+        assert!(rep.blocks_verified > 0, "{}", s.algorithm);
+    }
+}
+
+#[test]
+fn sim_ordering_matches_analytic_expectations() {
+    let cl = Cluster::hydra(2);
+    let m = quiet();
+    let t = |s: &Schedule| sim::measure(s, &m, 2, 0, 1).avg;
+
+    // Large bcast: scatter-allgather < binomial (2c vs log(p)·c).
+    let sag = t(&bcast::build(cl, 0, 1_000_000, bcast::BcastAlg::ScatterAllgather));
+    let bin = t(&bcast::build(cl, 0, 1_000_000, bcast::BcastAlg::Binomial));
+    assert!(sag < bin, "sag {sag} >= binomial {bin}");
+
+    // Small alltoall: Bruck (log rounds) < round-robin (p-1 rounds).
+    let br = t(&alltoall::build(cl, 1, alltoall::AlltoallAlg::Bruck { k: 1 }));
+    let rr = t(&alltoall::build(cl, 1, alltoall::AlltoallAlg::Pairwise));
+    assert!(br < rr, "bruck {br} >= pairwise {rr}");
+
+    // Large alltoall: the order flips (Bruck sends log-times the data).
+    let br = t(&alltoall::build(cl, 869, alltoall::AlltoallAlg::Bruck { k: 1 }));
+    let rr = t(&alltoall::build(cl, 869, alltoall::AlltoallAlg::Pairwise));
+    assert!(rr < br, "pairwise {rr} >= bruck {br} at large c");
+
+    // Scatter: k-ported k=6 ≤ k=1 (more ports can't hurt under the model).
+    let k6 = t(&scatter::build(cl, 0, 869, scatter::ScatterAlg::KPorted { k: 6 }));
+    let k1 = t(&scatter::build(cl, 0, 869, scatter::ScatterAlg::KPorted { k: 1 }));
+    assert!(k6 <= k1 * 1.05, "k=6 {k6} much worse than k=1 {k1}");
+}
+
+#[test]
+fn node_vs_net_shape_holds() {
+    // §4.1: on-node alltoall is much slower than across-nodes at large
+    // counts (Table 2: ~10× for Open MPI) — the shared-memory bus cannot
+    // match 32 nodes' aggregate lanes.
+    let m = mlane::model::Persona::openmpi().model;
+    let onnode = alltoall::build(Cluster::new(1, 32, 2), 31250, alltoall::AlltoallAlg::KPorted { k: 31 });
+    let offnode = alltoall::build(Cluster::new(32, 1, 1), 31250, alltoall::AlltoallAlg::KPorted { k: 31 });
+    let t_on = sim::measure(&onnode, &m, 3, 1, 1).avg;
+    let t_off = sim::measure(&offnode, &m, 3, 1, 1).avg;
+    assert!(
+        t_on > 3.0 * t_off,
+        "on-node {t_on} not ≫ off-node {t_off} (paper shape: ~10x)"
+    );
+}
+
+// ---- failure injection ----
+
+#[test]
+fn exec_catches_missing_delivery() {
+    // Drop the last round of a binomial bcast: some rank never receives.
+    let cl = Cluster::new(2, 2, 1);
+    let mut s = bcast::build(cl, 0, 16, bcast::BcastAlg::Binomial);
+    s.rounds.pop();
+    let err = ExecRuntime::channels().run(&s, 1, 0).unwrap_err();
+    assert!(err.to_string().contains("missing block"), "{err}");
+}
+
+#[test]
+fn exec_catches_corrupted_block_ids() {
+    // Rewrite a transfer to carry the wrong block: the receiver ends up
+    // with a block whose content does not match its id's generator.
+    let cl = Cluster::new(2, 2, 1);
+    let mut s = scatter::build(cl, 0, 16, scatter::ScatterAlg::Linear);
+    // Find a transfer and swap its block for another rank's block.
+    let t = &mut s.rounds[0].transfers[0];
+    let wrong = if t.blocks.contains(1) { 2 } else { 1 };
+    t.blocks = BlockSet::single(wrong);
+    let err = ExecRuntime::channels().run(&s, 1, 0).unwrap_err();
+    assert!(err.to_string().contains("missing block"), "{err}");
+}
+
+#[test]
+fn validate_catches_what_exec_would_deadlock_on() {
+    // A transfer whose source never holds the data: validation must
+    // reject it so the exec backend is never handed the schedule.
+    let cl = Cluster::new(2, 2, 1);
+    let mut s = bcast::build(cl, 0, 16, bcast::BcastAlg::Binomial);
+    let bogus = s.transfer(2, 3, BlockSet::single(0));
+    let mut round = Round::default();
+    round.transfers.push(bogus);
+    s.rounds.insert(0, round);
+    assert!(mlane::schedule::validate::validate(&s).is_err());
+}
+
+#[test]
+fn empty_count_still_works() {
+    // c = 1 (single element) everywhere; boundary for Split sizing.
+    let cl = Cluster::new(2, 4, 2);
+    let rt = ExecRuntime::channels();
+    for alg in [bcast::BcastAlg::FullLane, bcast::BcastAlg::KPorted { k: 2 }] {
+        let s = bcast::build(cl, 0, 1, alg);
+        rt.run(&s, 1, 0).unwrap_or_else(|e| panic!("{}: {e}", s.algorithm));
+    }
+}
