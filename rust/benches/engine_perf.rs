@@ -1,15 +1,19 @@
 //! Engine micro-benchmarks (the §Perf targets in DESIGN.md):
 //! * simulator event throughput at Hydra scale;
 //! * schedule-build throughput;
+//! * sweep engine: warm-cache count sweep vs. per-cell rebuild
+//!   (cold/warm cells/s, prep speedup) — emitted to `BENCH_engine.json`
+//!   so future PRs can track the perf trajectory;
 //! * exec-backend wallclock on a small cluster (channels vs XLA phases).
 
 use std::time::Instant;
 
 use mlane::algorithms::{alltoall, bcast};
 use mlane::exec::ExecRuntime;
+use mlane::harness::BCAST_COUNTS;
 use mlane::model::CostModel;
 use mlane::runtime::XlaService;
-use mlane::sim::Simulator;
+use mlane::sim::{self, AlgId, OpShape, Simulator, SweepEngine, SweepKey};
 use mlane::topology::Cluster;
 
 fn main() {
@@ -29,14 +33,16 @@ fn main() {
     let reps = 5;
     let t0 = Instant::now();
     let mut events = 0u64;
+    let mut st = sim.new_state();
     for rep in 0..reps {
-        events += sim.run(rep as u64).events;
+        events += sim.run_into(&mut st, rep as u64).events;
     }
     let dt = t0.elapsed();
+    let events_per_s = events as f64 / dt.as_secs_f64();
     println!(
         "sim run: {:.2?} for {reps} reps, {:.2}M events/s",
         dt,
-        events as f64 / dt.as_secs_f64() / 1e6
+        events_per_s / 1e6
     );
 
     println!("\n=== simulator throughput (kported bcast, many small rounds) ===");
@@ -45,8 +51,9 @@ fn main() {
     let t0 = Instant::now();
     let n = 2000;
     let mut events = 0u64;
+    let mut st = sim.new_state();
     for rep in 0..n {
-        events += sim.run(rep as u64).events;
+        events += sim.run_into(&mut st, rep as u64).events;
     }
     let dt = t0.elapsed();
     println!(
@@ -56,6 +63,9 @@ fn main() {
         events as f64 / dt.as_secs_f64() / 1e6,
         dt.as_secs_f64() * 1e6 / n as f64
     );
+
+    let sweep = bench_sweep(cl);
+    write_bench_json(events_per_s, &sweep);
 
     println!("\n=== exec backend (4x4, klane alltoall c=1024) ===");
     let cl = Cluster::new(4, 4, 2);
@@ -79,5 +89,144 @@ fn main() {
         );
     } else {
         println!("xla phases: skipped (no artifacts)");
+    }
+}
+
+struct SweepBench {
+    cells: usize,
+    cold_s: f64,
+    warm_s: f64,
+    e2e_speedup: f64,
+    prep_cold_s: f64,
+    prep_warm_s: f64,
+    prep_speedup: f64,
+    schedules_built: u64,
+}
+
+/// The acceptance workload: Hydra k-lane bcast swept over the paper's
+/// BCAST_COUNTS grid. "Cold" is the historical per-cell path (rebuild
+/// Schedule + Simulator + RepState every cell); "warm" is the sweep
+/// engine serving the same cells from one cached shape via
+/// resize + recost + state reuse.
+fn bench_sweep(cl: Cluster) -> SweepBench {
+    println!("\n=== sweep engine: warm cache vs per-cell rebuild (hydra klane bcast) ===");
+    let m = CostModel::hydra_baseline();
+    let alg = bcast::BcastAlg::KLane { k: 2, two_phase: false };
+    let (reps, warmup, seed) = (1usize, 0usize, 7u64);
+    let counts = BCAST_COUNTS;
+    let key = SweepKey {
+        cluster: cl,
+        op: OpShape::Bcast { root: 0 },
+        alg: AlgId { family: "klane", k: 2 },
+    };
+
+    // Cold: rebuild everything per cell (what run_table did before the
+    // sweep engine).
+    let t0 = Instant::now();
+    let mut cold_sum = 0.0;
+    for &c in counts {
+        let s = bcast::build(cl, 0, c, alg);
+        cold_sum += sim::measure(&s, &m, reps, warmup, seed).avg;
+    }
+    let cold_s = t0.elapsed().as_secs_f64();
+
+    // Warm: prime the engine with the first cell, then time the sweep.
+    let mut eng = SweepEngine::new();
+    eng.measure(key, counts[0], &m, reps, warmup, seed, |c| bcast::build(cl, 0, c, alg));
+    let t0 = Instant::now();
+    let mut warm_sum = 0.0;
+    for &c in counts {
+        let cell =
+            eng.measure(key, c, &m, reps, warmup, seed, |c| bcast::build(cl, 0, c, alg));
+        warm_sum += cell.summary.avg;
+    }
+    let warm_s = t0.elapsed().as_secs_f64();
+    assert!(
+        (cold_sum - warm_sum).abs() <= 1e-9 * cold_sum.abs(),
+        "sweep engine diverged from per-cell rebuild: {cold_sum} vs {warm_sum}"
+    );
+
+    // Prep-only comparison: the per-cell overhead the engine removes
+    // (schedule build + simulator preprocess vs resize + recost),
+    // excluding the count-independent event simulation itself.
+    let iters = 20usize;
+    let t0 = Instant::now();
+    for i in 0..iters {
+        let c = counts[i % counts.len()];
+        let s = bcast::build(cl, 0, c, alg);
+        let fresh = Simulator::new(&s, &m);
+        std::hint::black_box(fresh.num_xfers());
+    }
+    let prep_cold_s = t0.elapsed().as_secs_f64() / iters as f64;
+
+    let mut s = bcast::build(cl, 0, counts[0], alg);
+    let mut cached = Simulator::new(&s, &m);
+    let t0 = Instant::now();
+    for i in 0..iters {
+        let c = counts[(i + 1) % counts.len()]; // always a different count
+        s.resize_count(c);
+        cached.recost(&s);
+        std::hint::black_box(cached.num_xfers());
+    }
+    let prep_warm_s = t0.elapsed().as_secs_f64() / iters as f64;
+
+    let bench = SweepBench {
+        cells: counts.len(),
+        cold_s,
+        warm_s,
+        e2e_speedup: cold_s / warm_s,
+        prep_cold_s,
+        prep_warm_s,
+        prep_speedup: prep_cold_s / prep_warm_s,
+        schedules_built: eng.stats().schedules_built,
+    };
+    println!(
+        "cold (rebuild/cell): {:>8.2?} for {} cells  ({:.1} cells/s)",
+        std::time::Duration::from_secs_f64(bench.cold_s),
+        bench.cells,
+        bench.cells as f64 / bench.cold_s
+    );
+    println!(
+        "warm (cached):       {:>8.2?} for {} cells  ({:.1} cells/s, {} schedule build{})",
+        std::time::Duration::from_secs_f64(bench.warm_s),
+        bench.cells,
+        bench.cells as f64 / bench.warm_s,
+        bench.schedules_built,
+        if bench.schedules_built == 1 { "" } else { "s" }
+    );
+    println!(
+        "per-cell prep: {:.1}us rebuild vs {:.1}us recost  => {:.1}x (target >= 10x)",
+        bench.prep_cold_s * 1e6,
+        bench.prep_warm_s * 1e6,
+        bench.prep_speedup
+    );
+    println!("end-to-end sweep speedup (incl. simulation): {:.2}x", bench.e2e_speedup);
+    bench
+}
+
+/// Machine-readable perf record for trajectory tracking across PRs.
+fn write_bench_json(events_per_s: f64, sweep: &SweepBench) {
+    let json = format!(
+        "{{\n  \"bench\": \"engine_perf\",\n  \"events_per_s\": {:.0},\n  \
+         \"sweep_cells\": {},\n  \"sweep_cold_s\": {:.6},\n  \"sweep_warm_s\": {:.6},\n  \
+         \"sweep_cold_cells_per_s\": {:.2},\n  \"sweep_warm_cells_per_s\": {:.2},\n  \
+         \"sweep_e2e_speedup\": {:.3},\n  \"prep_cold_us\": {:.3},\n  \
+         \"prep_warm_us\": {:.3},\n  \"prep_speedup\": {:.2},\n  \
+         \"schedules_built\": {}\n}}\n",
+        events_per_s,
+        sweep.cells,
+        sweep.cold_s,
+        sweep.warm_s,
+        sweep.cells as f64 / sweep.cold_s,
+        sweep.cells as f64 / sweep.warm_s,
+        sweep.e2e_speedup,
+        sweep.prep_cold_s * 1e6,
+        sweep.prep_warm_s * 1e6,
+        sweep.prep_speedup,
+        sweep.schedules_built,
+    );
+    match std::fs::write("BENCH_engine.json", &json) {
+        Ok(()) => println!("wrote BENCH_engine.json"),
+        Err(e) => eprintln!("BENCH_engine.json not written: {e}"),
     }
 }

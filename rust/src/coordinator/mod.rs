@@ -10,13 +10,15 @@
 //!   operation and size — the algorithm-selection layer real libraries
 //!   get wrong in the paper's tables.
 
+use std::cell::RefCell;
+
 use anyhow::Result;
 
 use crate::algorithms::{allgather, alltoall, bcast, gather, scatter};
 use crate::exec::{ExecReport, ExecRuntime};
 use crate::model::{Persona, PersonaName};
 use crate::schedule::Schedule;
-use crate::sim;
+use crate::sim::{self, AlgId, OpShape, SweepEngine, SweepKey, SweepStats};
 use crate::topology::{Cluster, Rank};
 use crate::util::Summary;
 
@@ -94,6 +96,37 @@ pub struct Collectives {
     pub reps: usize,
     pub warmup: usize,
     pub seed: u64,
+    /// Schedule cache + shared rep state: count sweeps (tables,
+    /// autotune candidate grids) build each communication structure once
+    /// and re-cost it per count (see `sim::sweep`). Keyed by (cluster,
+    /// op shape, algorithm) — do not mutate `persona.model` between
+    /// runs (cached simulators bake the model in); build a fresh
+    /// `Collectives` instead.
+    engine: RefCell<SweepEngine>,
+}
+
+/// The sweep-invariant part of an operation (cache-key component).
+fn op_shape(op: Op) -> OpShape {
+    match op {
+        Op::Bcast { root, .. } => OpShape::Bcast { root },
+        Op::Scatter { root, .. } => OpShape::Scatter { root },
+        Op::Gather { root, .. } => OpShape::Gather { root },
+        Op::Allgather { .. } => OpShape::Allgather,
+        Op::Alltoall { .. } => OpShape::Alltoall,
+    }
+}
+
+/// Cache identity of an algorithm, or `None` if its schedule (or quirk
+/// adjustment) depends on the element count and must be rebuilt per
+/// cell — the native personas switch algorithms and pathologies by size.
+fn alg_id(alg: Algorithm) -> Option<AlgId> {
+    match alg {
+        Algorithm::KPorted { k } => Some(AlgId { family: "kported", k }),
+        Algorithm::KLane { k } => Some(AlgId { family: "klane", k }),
+        Algorithm::FullLane => Some(AlgId { family: "fulllane", k: 0 }),
+        Algorithm::Bruck { k } => Some(AlgId { family: "bruck", k }),
+        Algorithm::Native => None,
+    }
 }
 
 impl Collectives {
@@ -104,7 +137,13 @@ impl Collectives {
             reps: sim::default_reps(),
             warmup: 2,
             seed: 0xC0FFEE,
+            engine: RefCell::new(SweepEngine::new()),
         }
+    }
+
+    /// Sweep-engine counters (cells measured, schedules built, recosts).
+    pub fn sweep_stats(&self) -> SweepStats {
+        self.engine.borrow().stats()
     }
 
     /// Compile (op, algorithm) to a schedule plus the persona's native
@@ -201,22 +240,63 @@ impl Collectives {
 
     /// Simulate (op, algorithm) under the persona's cost model and
     /// return paper-style (avg, min) of the slowest rank.
+    ///
+    /// Count-invariant algorithms are served through the sweep engine:
+    /// the first count for a given (cluster, op shape, algorithm) builds
+    /// the schedule, later counts only re-cost it, so count sweeps and
+    /// repeated autotune calls share one cached structure per candidate.
     pub fn run(&self, op: Op, alg: Algorithm) -> Measurement {
-        let (schedule, add, mult) = self.schedule(op, alg);
-        let raw = sim::measure(&schedule, &self.persona.model, self.reps, self.warmup, self.seed);
+        let model = self.persona.model;
+        let (cell, add, mult) = match alg_id(alg) {
+            Some(alg_key) => {
+                let key =
+                    SweepKey { cluster: self.cluster, op: op_shape(op), alg: alg_key };
+                let cell = self.engine.borrow_mut().measure(
+                    key,
+                    op.count(),
+                    &model,
+                    self.reps,
+                    self.warmup,
+                    self.seed,
+                    |_| {
+                        let (schedule, add, mult) = self.schedule(op, alg);
+                        // Cacheable algorithms must have neutral quirks
+                        // (quirks vary with count; the cache would pin
+                        // the first cell's values).
+                        debug_assert!(
+                            add == 0.0 && mult == 1.0,
+                            "non-neutral quirk on cacheable algorithm {alg:?}"
+                        );
+                        schedule
+                    },
+                );
+                (cell, 0.0, 1.0)
+            }
+            None => {
+                let (schedule, add, mult) = self.schedule(op, alg);
+                let cell = self.engine.borrow_mut().measure_uncached(
+                    &schedule,
+                    &model,
+                    self.reps,
+                    self.warmup,
+                    self.seed,
+                );
+                (cell, add, mult)
+            }
+        };
         let adj = |t: f64| t * mult + add;
         Measurement {
-            algorithm: schedule.algorithm.to_string(),
+            algorithm: cell.algorithm.to_string(),
             k: match alg {
                 Algorithm::KPorted { k } | Algorithm::KLane { k } | Algorithm::Bruck { k } => k,
                 _ => self.cluster.lanes,
             },
             c: op.count(),
             summary: Summary {
-                avg: adj(raw.avg),
-                min: adj(raw.min),
-                max: adj(raw.max),
-                reps: raw.reps,
+                avg: adj(cell.summary.avg),
+                min: adj(cell.summary.min),
+                max: adj(cell.summary.max),
+                reps: cell.summary.reps,
             },
         }
     }
@@ -329,5 +409,44 @@ mod tests {
     #[should_panic(expected = "bruck is an alltoall algorithm")]
     fn bruck_rejected_for_bcast() {
         coll().schedule(Op::Bcast { root: 0, c: 4 }, Algorithm::Bruck { k: 2 });
+    }
+
+    #[test]
+    fn count_sweep_shares_one_cached_schedule() {
+        let c = coll();
+        for count in [64u64, 6000, 64, 100_000] {
+            c.run(Op::Bcast { root: 0, c: count }, Algorithm::FullLane);
+        }
+        let st = c.sweep_stats();
+        assert_eq!(st.schedules_built, 1, "{st:?}");
+        assert_eq!(st.cells, 4, "{st:?}");
+        assert!(st.recosts >= 2, "{st:?}");
+    }
+
+    #[test]
+    fn cached_run_equals_per_cell_rebuild() {
+        let c = coll();
+        let op = Op::Scatter { root: 0, c: 16 };
+        let alg = Algorithm::KLane { k: 2 };
+        c.run(Op::Scatter { root: 0, c: 869 }, alg); // prime the cache
+        let cached = c.run(op, alg); // served by recost
+        let fresh = sim::measure(
+            &c.schedule(op, alg).0,
+            &c.persona.model,
+            c.reps,
+            c.warmup,
+            c.seed,
+        );
+        assert_eq!(cached.summary, fresh);
+    }
+
+    #[test]
+    fn native_runs_bypass_the_shape_cache() {
+        let c = coll();
+        c.run(Op::Bcast { root: 0, c: 16 }, Algorithm::Native);
+        c.run(Op::Bcast { root: 0, c: 1_000_000 }, Algorithm::Native);
+        let st = c.sweep_stats();
+        assert_eq!(st.schedules_built, 2, "{st:?}");
+        assert_eq!(st.recosts + st.cache_hits, 0, "{st:?}");
     }
 }

@@ -132,7 +132,8 @@ commands:
   trace       emit a Chrome-trace of one simulated run  [--op --alg ... --out FILE]
   validate    check schedule invariants          [--nodes --cores --lanes]
 
-environment: MLANE_REPS (simulated repetitions, default 20)";
+environment: MLANE_REPS    (simulated repetitions, default 20)
+             MLANE_THREADS (table-generation workers, default: available parallelism)";
 
 fn cmd_table(args: &Args) -> Result<()> {
     let n: u32 = args

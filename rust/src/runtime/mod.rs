@@ -14,6 +14,11 @@ use std::sync::mpsc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+mod xla_stub;
+// The build image has no PJRT native libraries; the stub mirrors the
+// `xla` crate's API and fails each request at runtime (see its docs).
+use xla_stub as xla;
+
 /// Node-phase artifact key: (phase name, node width n, per-block count c).
 pub type PhaseKey = (String, u32, u64);
 

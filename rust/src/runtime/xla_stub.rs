@@ -1,0 +1,106 @@
+//! API-compatible stand-in for the `xla` (PJRT) bindings.
+//!
+//! The build image ships no XLA/PJRT native libraries and no crates.io
+//! access, so the real `xla` crate cannot be linked. This stub mirrors
+//! the exact API surface `runtime::service_loop` uses; every entry point
+//! returns an error, so the service thread fails each [`super::PhaseRequest`]
+//! with a clear message and the exec backend falls back to channel
+//! execution (callers already gate on `artifacts/manifest.txt`).
+//!
+//! Swapping the real bindings back in is a one-line change in
+//! `runtime/mod.rs` (`use xla_stub as xla` → `use ::xla`).
+
+use std::fmt;
+
+const UNAVAILABLE: &str =
+    "XLA/PJRT backend unavailable: mlane was built against the offline stub \
+     (no PJRT native libraries in this environment)";
+
+/// Error type matching the real crate's `xla::Error` display usage.
+pub struct XlaError(String);
+
+impl XlaError {
+    fn unavailable() -> XlaError {
+        XlaError(UNAVAILABLE.to_string())
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The real crate constructs a CPU PJRT client; the stub always fails,
+    /// which makes `service_loop` answer every request with the error.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::unavailable())
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(XlaError::unavailable())
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::unavailable())
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::unavailable())
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[i32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(XlaError::unavailable())
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(XlaError::unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(XlaError::unavailable())
+    }
+}

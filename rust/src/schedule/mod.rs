@@ -72,6 +72,18 @@ impl Collective {
         }
     }
 
+    /// The same collective re-targeted to a new element count `c`
+    /// (block structure — segments, roots — is preserved).
+    pub fn with_count(&self, c: u64) -> Collective {
+        match *self {
+            Collective::Bcast { root, segments, .. } => Collective::Bcast { root, c, segments },
+            Collective::Scatter { root, .. } => Collective::Scatter { root, c },
+            Collective::Alltoall { .. } => Collective::Alltoall { c },
+            Collective::Allgather { .. } => Collective::Allgather { c },
+            Collective::Gather { root, .. } => Collective::Gather { root, c },
+        }
+    }
+
     /// Blocks initially held by `rank`.
     pub fn initial_blocks(&self, rank: Rank, p: u32) -> BlockSet {
         match self {
@@ -233,6 +245,25 @@ impl Schedule {
         Transfer { src, dst, blocks, bytes }
     }
 
+    /// Re-target this schedule to a new element count, recomputing every
+    /// transfer's byte size from its blocks under the new sizing. The
+    /// round structure is reused as-is, which is exactly right for the
+    /// paper's algorithms: their communication structure depends only on
+    /// (cluster, algorithm, k) — count enters through block sizes alone
+    /// (the lane-decomposition property of arXiv:1910.13373). Callers
+    /// sweeping count-*dependent* selections (native personas switch
+    /// algorithm by size) must rebuild instead — see `sim::sweep`.
+    pub fn resize_count(&mut self, c: u64) {
+        self.op = self.op.with_count(c);
+        let sizing = self.op.sizing();
+        let elem_bytes = self.elem_bytes;
+        for round in &mut self.rounds {
+            for t in &mut round.transfers {
+                t.bytes = sizing.elems_of(&t.blocks) * elem_bytes;
+            }
+        }
+    }
+
     /// Total bytes crossing the network (off-node transfers only).
     pub fn offnode_bytes(&self) -> u64 {
         self.rounds
@@ -316,6 +347,24 @@ mod tests {
         assert_eq!(sz.elems(1), 3);
         assert_eq!(sz.elems(2), 3);
         assert_eq!(sz.elems_of(&BlockSet::range(0, 3)), 10);
+    }
+
+    #[test]
+    fn resize_count_recomputes_bytes_in_place() {
+        let mut s =
+            Schedule::new(cl(), Collective::Scatter { root: 0, c: 10 }, "test");
+        let t = s.transfer(0, 1, BlockSet::single(1));
+        s.push_round(Round::of(vec![t]));
+        s.resize_count(25);
+        assert_eq!(s.op, Collective::Scatter { root: 0, c: 25 });
+        assert_eq!(s.rounds[0].transfers[0].bytes, 100);
+    }
+
+    #[test]
+    fn with_count_preserves_structure() {
+        let op = Collective::Bcast { root: 3, c: 100, segments: 4 };
+        assert_eq!(op.with_count(7), Collective::Bcast { root: 3, c: 7, segments: 4 });
+        assert_eq!(Collective::Alltoall { c: 1 }.with_count(9), Collective::Alltoall { c: 9 });
     }
 
     #[test]

@@ -1,4 +1,16 @@
 //! The event-driven core of the simulator. See module docs in `mod.rs`.
+//!
+//! ## Data layout
+//!
+//! Per-rank round programs are stored CSR-style (flat id arrays with
+//! offset tables) rather than as nested `Vec<Vec<...>>`: the event loop
+//! walks `send_ids`/`recv_ids` slices via two offset lookups, so a whole
+//! round's ops sit contiguously in cache and `Simulator` construction is
+//! the only place that allocates. Combined with [`Simulator::recost`]
+//! (rewrite per-transfer sizing in place for a new element count) and
+//! [`Simulator::ensure_state`] (reshape a [`RepState`] for reuse), a
+//! count sweep touches the allocator only on its first cell — see
+//! `sim::sweep`.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -7,7 +19,8 @@ use crate::model::CostModel;
 use crate::schedule::Schedule;
 use crate::util::Prng;
 
-/// One rank's participation in one schedule round.
+/// One rank's participation in one schedule round (construction-time
+/// temporary; flattened into the CSR arrays before simulation).
 #[derive(Clone, Debug, Default)]
 struct RoundOps {
     round: u32,
@@ -17,7 +30,8 @@ struct RoundOps {
     hinted: bool,
 }
 
-/// Flattened transfer (immutable part).
+/// Flattened transfer. `bytes`, `dur` and `eager` are the count-dependent
+/// sizing fields rewritten by [`Simulator::recost`]; the rest is shape.
 #[derive(Clone, Copy, Debug)]
 struct Xfer {
     src: u32,
@@ -37,8 +51,17 @@ pub struct Simulator {
     nodes: u32,
     model: CostModel,
     xfers: Vec<Xfer>,
-    /// Per rank: ordered list of rounds it participates in.
-    progs: Vec<Vec<RoundOps>>,
+    /// CSR offsets: rank `r` owns slots `rank_off[r]..rank_off[r+1]`
+    /// (one slot per round the rank participates in). Length p + 1.
+    rank_off: Vec<u32>,
+    /// Per-slot node-collective hint. Length = total slots.
+    slot_hinted: Vec<bool>,
+    /// Slot `s` sends `send_ids[send_off[s]..send_off[s+1]]`.
+    send_off: Vec<u32>,
+    send_ids: Vec<u32>,
+    /// Slot `s` receives `recv_ids[recv_off[s]..recv_off[s+1]]`.
+    recv_off: Vec<u32>,
+    recv_ids: Vec<u32>,
 }
 
 /// One transmission span captured by the tracer (see `sim::trace`).
@@ -125,12 +148,6 @@ impl Pool {
         Self { free: vec![0.0; servers.max(1) as usize] }
     }
 
-
-    /// Earliest-free server time.
-    fn earliest(&self) -> f64 {
-        self.free.iter().copied().fold(f64::INFINITY, f64::min)
-    }
-
     /// Reserve the earliest-free server from `ready` for `dur`; returns
     /// (start, end).
     fn reserve(&mut self, ready: f64, dur: f64) -> (f64, f64) {
@@ -161,9 +178,11 @@ const XFER_INIT: XferState =
     XferState { send_posted: f64::NAN, recv_posted: f64::NAN, arrived: f64::NAN, started: false };
 
 /// Mutable per-repetition state, reusable across repetitions via
-/// [`RepState::reset`] (allocation-free rep loop).
+/// [`RepState::reset`] (allocation-free rep loop) and across sweep cells
+/// via [`Simulator::ensure_state`] (reshape without reallocation when
+/// dimensions already match).
 pub struct RepState {
-    rank_pos: Vec<u32>, // index into progs[rank]
+    rank_pos: Vec<u32>, // round index within the rank's CSR slot range
     rank_outstanding: Vec<u32>,
     rank_clock: Vec<f64>,
     xs: Vec<XferState>,
@@ -196,6 +215,16 @@ impl RepState {
         if let Some(t) = &mut self.trace {
             t.clear();
         }
+    }
+}
+
+/// Reshape a pool vector to `count` pools of `servers` servers each,
+/// reallocating only on dimension change (values are reset by `reset`).
+fn ensure_pools(pools: &mut Vec<Pool>, count: usize, servers: u32) {
+    let want = servers.max(1) as usize;
+    let ok = pools.len() == count && pools.iter().all(|p| p.free.len() == want);
+    if !ok {
+        *pools = vec![Pool::new(servers); count];
     }
 }
 
@@ -245,7 +274,90 @@ impl Simulator {
             }
         }
 
-        Self { p, nodes: cl.nodes, model: *model, xfers, progs }
+        // CSR-flatten the per-rank programs: contiguous slot/op arrays
+        // keep the post loop on a handful of cache lines.
+        let slots: usize = progs.iter().map(|pr| pr.len()).sum();
+        let mut rank_off = Vec::with_capacity(p as usize + 1);
+        let mut slot_hinted = Vec::with_capacity(slots);
+        let mut send_off = Vec::with_capacity(slots + 1);
+        let mut recv_off = Vec::with_capacity(slots + 1);
+        let mut send_ids = Vec::new();
+        let mut recv_ids = Vec::new();
+        rank_off.push(0u32);
+        send_off.push(0u32);
+        recv_off.push(0u32);
+        for prog in &progs {
+            for ops in prog {
+                slot_hinted.push(ops.hinted);
+                send_ids.extend_from_slice(&ops.sends);
+                recv_ids.extend_from_slice(&ops.recvs);
+                send_off.push(send_ids.len() as u32);
+                recv_off.push(recv_ids.len() as u32);
+            }
+            rank_off.push(slot_hinted.len() as u32);
+        }
+
+        Self {
+            p,
+            nodes: cl.nodes,
+            model: *model,
+            xfers,
+            rank_off,
+            slot_hinted,
+            send_off,
+            send_ids,
+            recv_off,
+            recv_ids,
+        }
+    }
+
+    /// Number of flattened transfers (sweep-engine bookkeeping).
+    pub fn num_xfers(&self) -> usize {
+        self.xfers.len()
+    }
+
+    /// The cost model this simulator was built with (baked into every
+    /// precomputed duration; sweep-engine cache-consistency checks).
+    pub fn model(&self) -> &CostModel {
+        &self.model
+    }
+
+    /// Rewrite the count-dependent sizing fields (`bytes`, `dur`,
+    /// `eager`) of every transfer from `schedule`, which must be the
+    /// *same communication structure* this simulator was built from —
+    /// typically the cached schedule after [`Schedule::resize_count`].
+    /// Everything shape-derived (round programs, node ids, on/off-node
+    /// classification) is reused unchanged, so a sweep cell costs one
+    /// linear pass instead of a full rebuild. The computation matches
+    /// [`Simulator::new`] expression-for-expression, so a recost-ed
+    /// simulator is bitwise-identical to a freshly built one.
+    ///
+    /// Panics if the transfer count differs; debug-asserts that each
+    /// transfer's endpoints match.
+    pub fn recost(&mut self, schedule: &Schedule) {
+        let m = self.model;
+        let mut i = 0usize;
+        for round in &schedule.rounds {
+            for t in &round.transfers {
+                assert!(i < self.xfers.len(), "recost: schedule has more transfers than simulator");
+                let xf = &mut self.xfers[i];
+                debug_assert_eq!(
+                    (xf.src, xf.dst),
+                    (t.src, t.dst),
+                    "recost on a structurally different schedule"
+                );
+                let (beta, eager_limit) = if xf.offnode {
+                    (m.beta_net, m.eager_net)
+                } else {
+                    (m.beta_shm, m.eager_shm)
+                };
+                xf.bytes = t.bytes;
+                xf.dur = t.bytes as f64 * beta;
+                xf.eager = t.bytes <= eager_limit;
+                i += 1;
+            }
+        }
+        assert_eq!(i, self.xfers.len(), "recost: schedule has fewer transfers than simulator");
     }
 
     /// Allocate a reusable per-repetition state.
@@ -265,6 +377,21 @@ impl Simulator {
             events: 0,
             trace: None,
         }
+    }
+
+    /// Reshape `st` (possibly built for a different simulator) to this
+    /// simulator's dimensions, reusing every allocation whose size
+    /// already matches — the sweep-cell fast path is a no-op.
+    pub fn ensure_state(&self, st: &mut RepState) {
+        let p = self.p as usize;
+        st.rank_pos.resize(p, 0);
+        st.rank_outstanding.resize(p, 0);
+        st.rank_clock.resize(p, 0.0);
+        st.xs.resize(self.xfers.len(), XFER_INIT);
+        let m = &self.model;
+        ensure_pools(&mut st.egress, self.nodes as usize, m.phys_lanes);
+        ensure_pools(&mut st.ingress, self.nodes as usize, m.phys_lanes);
+        ensure_pools(&mut st.bus, self.nodes as usize, m.bus_servers);
     }
 
     /// Run one repetition recording every transmission span.
@@ -287,10 +414,10 @@ impl Simulator {
         st.reset(seed);
 
         // Kick off: every rank with a program posts its first round at 0.
-        for r in 0..self.p {
-            if !self.progs[r as usize].is_empty() {
+        for r in 0..self.p as usize {
+            if self.rank_off[r + 1] > self.rank_off[r] {
                 st.seq = st.seq.wrapping_add(1);
-                st.heap.push(Ev::post(0.0, r, st.seq));
+                st.heap.push(Ev::post(0.0, r as u32, st.seq));
             }
         }
 
@@ -311,10 +438,14 @@ impl Simulator {
     /// Rank posts all ops of its current round, then waits for them.
     fn do_post(&self, st: &mut RepState, rank: u32, now: f64) {
         let m = &self.model;
-        let prog = &self.progs[rank as usize];
-        let ops = &prog[st.rank_pos[rank as usize] as usize];
+        let slot =
+            (self.rank_off[rank as usize] + st.rank_pos[rank as usize]) as usize;
+        let sends = &self.send_ids
+            [self.send_off[slot] as usize..self.send_off[slot + 1] as usize];
+        let recvs = &self.recv_ids
+            [self.recv_off[slot] as usize..self.recv_off[slot + 1] as usize];
         let mut clock = now;
-        if ops.hinted {
+        if self.slot_hinted[slot] {
             clock += m.node_collective_call;
         }
         let jitter = |st: &mut RepState| {
@@ -328,10 +459,10 @@ impl Simulator {
         // still posting; the token guarantees advance() fires exactly once,
         // after the whole round is posted.
         st.rank_outstanding[rank as usize] =
-            (ops.sends.len() + ops.recvs.len()) as u32 + 1;
+            (sends.len() + recvs.len()) as u32 + 1;
 
         // Post receives first (as a real implementation would), then sends.
-        for &x in &ops.recvs {
+        for &x in recvs {
             clock += m.o_post + jitter(st);
             st.xs[x as usize].recv_posted = clock;
             self.try_start(st, x);
@@ -339,7 +470,7 @@ impl Simulator {
             // immediately at max(arrival, post) — handled in try_complete.
             self.try_complete_recv(st, x, clock);
         }
-        for &x in &ops.sends {
+        for &x in sends {
             clock += m.o_post + jitter(st);
             st.xs[x as usize].send_posted = clock;
             let xf = &self.xfers[x as usize];
@@ -454,7 +585,7 @@ impl Simulator {
     fn advance(&self, st: &mut RepState, rank: u32, now: f64) {
         let r = rank as usize;
         st.rank_pos[r] += 1;
-        if (st.rank_pos[r] as usize) < self.progs[r].len() {
+        if self.rank_off[r] + st.rank_pos[r] < self.rank_off[r + 1] {
             st.seq = st.seq.wrapping_add(1);
             st.heap.push(Ev::post(now, rank, st.seq));
         }
@@ -571,5 +702,69 @@ mod tests {
         let s = bcast::build(cl, 0, 8, bcast::BcastAlg::Binomial);
         let r = Simulator::new(&s, &quiet()).run(3);
         assert!(r.events > 0);
+    }
+
+    #[test]
+    fn recost_matches_fresh_build_bitwise() {
+        // The sweep-engine correctness contract on a couple of shapes;
+        // rust/tests/recost_equivalence.rs covers every algorithm.
+        let cl = Cluster::new(3, 4, 2);
+        let m = CostModel::hydra_baseline(); // jitter on: exercises rng
+        for (from, to) in [(1u64, 60_000u64), (60_000, 1), (7, 869)] {
+            let mut s = bcast::build(cl, 0, from, bcast::BcastAlg::FullLane);
+            let mut sim = Simulator::new(&s, &m);
+            s.resize_count(to);
+            sim.recost(&s);
+            let fresh = Simulator::new(&bcast::build(cl, 0, to, bcast::BcastAlg::FullLane), &m);
+            for seed in [0u64, 42] {
+                assert_eq!(sim.run(seed), fresh.run(seed), "{from}->{to} seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn ensure_state_reuse_is_deterministic() {
+        // A state reshaped across differently-sized simulators gives the
+        // same results as a fresh state.
+        let m = CostModel::hydra_baseline();
+        let a = Simulator::new(
+            &alltoall::build(Cluster::new(4, 4, 2), 64, alltoall::AlltoallAlg::KLane),
+            &m,
+        );
+        let b = Simulator::new(
+            &bcast::build(Cluster::new(2, 8, 2), 0, 1000, bcast::BcastAlg::Binomial),
+            &m,
+        );
+        let mut st = a.new_state();
+        assert_eq!(a.run_into(&mut st, 5), a.run(5));
+        b.ensure_state(&mut st);
+        assert_eq!(b.run_into(&mut st, 9), b.run(9));
+        a.ensure_state(&mut st);
+        assert_eq!(a.run_into(&mut st, 5), a.run(5));
+    }
+
+    #[test]
+    fn csr_layout_covers_all_ops() {
+        // Every transfer id appears exactly once in send_ids and once in
+        // recv_ids, and slot offsets are monotone.
+        let cl = Cluster::new(3, 5, 2);
+        let s = alltoall::build(cl, 16, alltoall::AlltoallAlg::Bruck { k: 2 });
+        let sim = Simulator::new(&s, &quiet());
+        assert_eq!(sim.send_ids.len(), sim.num_xfers());
+        assert_eq!(sim.recv_ids.len(), sim.num_xfers());
+        let mut seen_s = vec![false; sim.num_xfers()];
+        let mut seen_r = vec![false; sim.num_xfers()];
+        for &x in &sim.send_ids {
+            assert!(!seen_s[x as usize], "transfer {x} sent twice");
+            seen_s[x as usize] = true;
+        }
+        for &x in &sim.recv_ids {
+            assert!(!seen_r[x as usize], "transfer {x} received twice");
+            seen_r[x as usize] = true;
+        }
+        assert!(sim.rank_off.windows(2).all(|w| w[0] <= w[1]));
+        assert!(sim.send_off.windows(2).all(|w| w[0] <= w[1]));
+        assert!(sim.recv_off.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*sim.rank_off.last().unwrap() as usize, sim.slot_hinted.len());
     }
 }

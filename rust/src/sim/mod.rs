@@ -29,9 +29,11 @@
 //! send is posted; rendezvous messages wait for both sides.
 
 mod engine;
+pub mod sweep;
 pub mod trace;
 
-pub use engine::{SimResult, Simulator};
+pub use engine::{RepState, SimResult, Simulator};
+pub use sweep::{AlgId, CellResult, OpShape, SweepEngine, SweepKey, SweepStats};
 
 use crate::model::CostModel;
 use crate::schedule::Schedule;
@@ -48,9 +50,22 @@ pub fn measure(
 ) -> Summary {
     let sim = Simulator::new(schedule, model);
     let mut state = sim.new_state();
+    measure_sim(&sim, &mut state, reps, warmup, seed)
+}
+
+/// Rep loop over an already-built simulator and state — the sweep-engine
+/// hot path ([`sweep::SweepEngine`] reuses both across cells). `st` must
+/// match the simulator's dimensions (see [`Simulator::ensure_state`]).
+pub fn measure_sim(
+    sim: &Simulator,
+    st: &mut RepState,
+    reps: usize,
+    warmup: usize,
+    seed: u64,
+) -> Summary {
     let mut col = RepCollector::new(warmup, reps);
     for rep in 0..reps + warmup {
-        let r = sim.run_into(&mut state, seed ^ (rep as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let r = sim.run_into(st, seed ^ (rep as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
         col.push(r.makespan);
     }
     col.summary()

@@ -1,0 +1,282 @@
+//! The sweep engine: schedule caching + re-costing for count sweeps.
+//!
+//! The paper's evaluation is a grid of 48 tables sweeping element counts
+//! over every (operation, algorithm, k, persona) combination. Naively
+//! each cell rebuilds the `Schedule` and re-runs `Simulator::new`; but
+//! for the paper's own algorithms the communication structure depends
+//! only on (cluster, operation shape, algorithm) — count enters through
+//! block sizes alone, the lane-decomposition property observed in
+//! *Decomposing Collectives for Exploiting Multi-lane Communication*
+//! (arXiv:1910.13373). [`SweepEngine`] therefore builds each distinct
+//! shape once, and per cell only:
+//!
+//! 1. [`Schedule::resize_count`] — rewrite transfer byte sizes in place;
+//! 2. [`Simulator::recost`] — rewrite per-transfer `bytes`/`dur`/`eager`;
+//! 3. [`Simulator::ensure_state`] — reuse the [`RepState`] allocations.
+//!
+//! Count-*dependent* selections (the native personas switch algorithms
+//! and quirks by size) go through [`SweepEngine::measure_uncached`],
+//! which still reuses the rep state but rebuilds the schedule.
+//!
+//! The recost path is bitwise-identical to a fresh build — the property
+//! test `rust/tests/recost_equivalence.rs` is the correctness gate.
+
+use std::collections::hash_map::Entry as MapEntry;
+use std::collections::HashMap;
+
+use crate::model::CostModel;
+use crate::schedule::Schedule;
+use crate::topology::{Cluster, Rank};
+use crate::util::stats::Summary;
+
+use super::engine::{RepState, Simulator};
+use super::measure_sim;
+
+/// An operation minus its element count: the sweep-invariant part.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpShape {
+    Bcast { root: Rank },
+    Scatter { root: Rank },
+    Gather { root: Rank },
+    Allgather,
+    Alltoall,
+}
+
+/// Algorithm identity for cache keying: family label plus its k
+/// parameter (0 for parameterless algorithms).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct AlgId {
+    pub family: &'static str,
+    pub k: u32,
+}
+
+/// Cache key: one entry per distinct communication structure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SweepKey {
+    pub cluster: Cluster,
+    pub op: OpShape,
+    pub alg: AlgId,
+}
+
+/// Counters for benchmarking and regression tracking (BENCH_engine.json).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SweepStats {
+    /// Cells measured (cached + uncached).
+    pub cells: u64,
+    /// Full `Schedule` + `Simulator` constructions.
+    pub schedules_built: u64,
+    /// Cells served by resize + recost of a cached shape.
+    pub recosts: u64,
+    /// Cells whose cached shape was already at the right count.
+    pub cache_hits: u64,
+}
+
+struct CachedShape {
+    schedule: Schedule,
+    sim: Simulator,
+    /// Element count the cached shape is currently sized for.
+    count: u64,
+}
+
+/// One result cell, paper-style.
+#[derive(Clone, Copy, Debug)]
+pub struct CellResult {
+    pub summary: Summary,
+    /// The schedule's human-readable algorithm name.
+    pub algorithm: &'static str,
+}
+
+/// Schedule cache + shared rep state for fast count sweeps. Cheap to
+/// construct; intended to live as long as a sweep (one per
+/// `coordinator::Collectives`, one per table section worker).
+#[derive(Default)]
+pub struct SweepEngine {
+    shapes: HashMap<SweepKey, CachedShape>,
+    /// Shared across cells; reshaped by `Simulator::ensure_state`.
+    state: Option<RepState>,
+    stats: SweepStats,
+}
+
+impl SweepEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn stats(&self) -> SweepStats {
+        self.stats
+    }
+
+    /// Number of distinct cached communication structures.
+    pub fn cached_shapes(&self) -> usize {
+        self.shapes.len()
+    }
+
+    /// Measure one cell of a count sweep for a count-invariant
+    /// algorithm. `build` constructs the schedule for a given count and
+    /// is only called when `key` misses the cache; subsequent counts are
+    /// served by resize + recost.
+    #[allow(clippy::too_many_arguments)]
+    pub fn measure(
+        &mut self,
+        key: SweepKey,
+        count: u64,
+        model: &CostModel,
+        reps: usize,
+        warmup: usize,
+        seed: u64,
+        build: impl FnOnce(u64) -> Schedule,
+    ) -> CellResult {
+        let mut built = false;
+        let mut recosted = false;
+        let entry = match self.shapes.entry(key) {
+            MapEntry::Occupied(e) => e.into_mut(),
+            MapEntry::Vacant(v) => {
+                built = true;
+                let schedule = build(count);
+                let sim = Simulator::new(&schedule, model);
+                v.insert(CachedShape { schedule, sim, count })
+            }
+        };
+        // Hard assert (cheap vs. a rep loop): a stale model would
+        // silently produce timings under the old parameters otherwise —
+        // e.g. mutating a pub `persona.model` between runs.
+        assert_eq!(
+            entry.sim.model(),
+            model,
+            "sweep key reused with a different cost model — \
+             build a fresh engine/Collectives per model"
+        );
+        if entry.count != count {
+            recosted = true;
+            entry.schedule.resize_count(count);
+            entry.sim.recost(&entry.schedule);
+            entry.count = count;
+        }
+        let st = self.state.get_or_insert_with(|| entry.sim.new_state());
+        entry.sim.ensure_state(st);
+        let summary = measure_sim(&entry.sim, st, reps, warmup, seed);
+        let algorithm = entry.schedule.algorithm;
+        self.stats.cells += 1;
+        if built {
+            self.stats.schedules_built += 1;
+        } else if recosted {
+            self.stats.recosts += 1;
+        } else {
+            self.stats.cache_hits += 1;
+        }
+        CellResult { summary, algorithm }
+    }
+
+    /// Measure a prebuilt schedule without caching it (count-dependent
+    /// algorithm selection — native personas). Still reuses the shared
+    /// rep state, so the rep loop stays allocation-free.
+    pub fn measure_uncached(
+        &mut self,
+        schedule: &Schedule,
+        model: &CostModel,
+        reps: usize,
+        warmup: usize,
+        seed: u64,
+    ) -> CellResult {
+        let sim = Simulator::new(schedule, model);
+        let st = self.state.get_or_insert_with(|| sim.new_state());
+        sim.ensure_state(st);
+        let summary = measure_sim(&sim, st, reps, warmup, seed);
+        self.stats.cells += 1;
+        self.stats.schedules_built += 1;
+        CellResult { summary, algorithm: schedule.algorithm }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::bcast::{self, BcastAlg};
+    use crate::model::CostModel;
+    use crate::sim;
+    use crate::topology::Cluster;
+
+    fn key(cl: Cluster) -> SweepKey {
+        SweepKey {
+            cluster: cl,
+            op: OpShape::Bcast { root: 0 },
+            alg: AlgId { family: "klane", k: 2 },
+        }
+    }
+
+    fn build(cl: Cluster) -> impl Fn(u64) -> Schedule {
+        move |c| bcast::build(cl, 0, c, BcastAlg::KLane { k: 2, two_phase: false })
+    }
+
+    #[test]
+    fn sweep_matches_per_cell_rebuild() {
+        let cl = Cluster::new(4, 4, 2);
+        let m = CostModel::hydra_baseline();
+        let mut eng = SweepEngine::new();
+        for &c in &[1u64, 100, 6000, 100_000, 100] {
+            let cell = eng.measure(key(cl), c, &m, 4, 1, 7, build(cl));
+            let fresh = sim::measure(
+                &bcast::build(cl, 0, c, BcastAlg::KLane { k: 2, two_phase: false }),
+                &m,
+                4,
+                1,
+                7,
+            );
+            assert_eq!(cell.summary, fresh, "c = {c}");
+            assert_eq!(cell.algorithm, "bcast/k-lane");
+        }
+    }
+
+    #[test]
+    fn cache_counters_track_the_paths() {
+        let cl = Cluster::new(2, 4, 2);
+        let m = CostModel::hydra_baseline();
+        let mut eng = SweepEngine::new();
+        eng.measure(key(cl), 1, &m, 2, 0, 1, build(cl)); // build
+        eng.measure(key(cl), 50, &m, 2, 0, 1, build(cl)); // recost
+        eng.measure(key(cl), 50, &m, 2, 0, 1, build(cl)); // hit
+        eng.measure(key(cl), 1, &m, 2, 0, 1, build(cl)); // recost back
+        let st = eng.stats();
+        assert_eq!(
+            (st.cells, st.schedules_built, st.recosts, st.cache_hits),
+            (4, 1, 2, 1)
+        );
+        assert_eq!(eng.cached_shapes(), 1);
+    }
+
+    #[test]
+    fn uncached_path_reuses_state_but_rebuilds() {
+        let cl = Cluster::new(2, 4, 2);
+        let m = CostModel::hydra_baseline();
+        let mut eng = SweepEngine::new();
+        for &c in &[1u64, 16_384] {
+            let cell = eng.measure_uncached(
+                &bcast::build(cl, 0, c, BcastAlg::Binomial),
+                &m,
+                3,
+                1,
+                9,
+            );
+            let fresh =
+                sim::measure(&bcast::build(cl, 0, c, BcastAlg::Binomial), &m, 3, 1, 9);
+            assert_eq!(cell.summary, fresh, "c = {c}");
+        }
+        assert_eq!(eng.stats().schedules_built, 2);
+        assert_eq!(eng.cached_shapes(), 0);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let cl = Cluster::new(2, 4, 2);
+        let m = CostModel::hydra_baseline();
+        let mut eng = SweepEngine::new();
+        let a = eng.measure(key(cl), 64, &m, 2, 0, 3, build(cl));
+        let mut k2 = key(cl);
+        k2.alg = AlgId { family: "kported", k: 2 };
+        let b = eng.measure(k2, 64, &m, 2, 0, 3, |c| {
+            bcast::build(cl, 0, c, BcastAlg::KPorted { k: 2 })
+        });
+        assert_eq!(eng.cached_shapes(), 2);
+        assert_ne!(a.algorithm, b.algorithm);
+    }
+}

@@ -10,7 +10,7 @@ pub type Rank = u32;
 /// on nodes (rank `i` lives on node `i / n`, core `i % n`), and cores are
 /// assumed to alternate over the sockets so that cores `0..k` can each
 /// drive one of the `k` lanes at full bandwidth.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Cluster {
     /// Number of compute nodes (paper: N).
     pub nodes: u32,

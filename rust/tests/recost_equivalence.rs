@@ -1,0 +1,165 @@
+//! Correctness gate for the sweep engine's caching layer: for every
+//! algorithm and a grid of element counts, a recost-ed simulator
+//! (schedule built at one count, then `Schedule::resize_count` +
+//! `Simulator::recost`) must produce bitwise-identical `SimResult`s
+//! (makespan and event count) to a fresh `Simulator::new` on a freshly
+//! built schedule — and the resized schedule itself must equal the
+//! fresh build structurally.
+//!
+//! This is exactly the lane-decomposition property the cache relies on
+//! (arXiv:1910.13373: structure fixed, block sizes vary); any algorithm
+//! whose round structure starts depending on count will fail here and
+//! must be routed through `SweepEngine::measure_uncached` instead.
+
+use mlane::algorithms::{allgather, alltoall, bcast, gather, scatter};
+use mlane::model::CostModel;
+use mlane::schedule::Schedule;
+use mlane::sim::Simulator;
+use mlane::topology::Cluster;
+
+/// Count grid: spans eager/rendezvous boundaries on both channels and
+/// uneven block splits (869 over 4-core nodes).
+const COUNTS: &[u64] = &[1, 7, 64, 869, 60_000];
+
+/// Jitter left on so the rng stream is exercised: identical structure
+/// must consume identical jitter draws in identical order.
+fn model() -> CostModel {
+    CostModel::hydra_baseline()
+}
+
+fn check(name: &str, build: impl Fn(u64) -> Schedule) {
+    let m = model();
+    let mut s = build(COUNTS[0]);
+    let mut sim = Simulator::new(&s, &m);
+    let mut st = sim.new_state();
+    for &c in &COUNTS[1..] {
+        s.resize_count(c);
+        sim.recost(&s);
+        let fresh_sched = build(c);
+        assert_eq!(
+            s.rounds, fresh_sched.rounds,
+            "{name} c={c}: resized schedule structurally diverged from fresh build"
+        );
+        let fresh = Simulator::new(&fresh_sched, &m);
+        let mut fresh_st = fresh.new_state();
+        for seed in [0u64, 1, 0xC0FFEE] {
+            let a = sim.run_into(&mut st, seed);
+            let b = fresh.run_into(&mut fresh_st, seed);
+            assert_eq!(a, b, "{name} c={c} seed={seed}: recost != fresh");
+        }
+    }
+}
+
+fn clusters() -> [Cluster; 2] {
+    // Power-of-two cores and an uneven 5-core layout (ring allgather,
+    // remainder block splits).
+    [Cluster::new(3, 4, 2), Cluster::new(2, 5, 2)]
+}
+
+#[test]
+fn bcast_all_algorithms() {
+    for cl in clusters() {
+        for root in [0, cl.p() - 1] {
+            for (label, alg) in [
+                ("kported1", bcast::BcastAlg::KPorted { k: 1 }),
+                ("kported2", bcast::BcastAlg::KPorted { k: 2 }),
+                ("kported3", bcast::BcastAlg::KPorted { k: 3 }),
+                ("klane1", bcast::BcastAlg::KLane { k: 1, two_phase: false }),
+                ("klane2", bcast::BcastAlg::KLane { k: 2, two_phase: false }),
+                ("klane2p", bcast::BcastAlg::KLane { k: 2, two_phase: true }),
+                ("fulllane", bcast::BcastAlg::FullLane),
+                ("binomial", bcast::BcastAlg::Binomial),
+                ("scatter-allgather", bcast::BcastAlg::ScatterAllgather),
+            ] {
+                check(
+                    &format!("bcast/{label} root={root} {cl:?}"),
+                    |c| bcast::build(cl, root, c, alg),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn scatter_all_algorithms() {
+    for cl in clusters() {
+        for (label, alg) in [
+            ("kported2", scatter::ScatterAlg::KPorted { k: 2 }),
+            ("klane2", scatter::ScatterAlg::KLane { k: 2 }),
+            ("fulllane", scatter::ScatterAlg::FullLane),
+            ("binomial", scatter::ScatterAlg::Binomial),
+            ("linear", scatter::ScatterAlg::Linear),
+        ] {
+            check(&format!("scatter/{label} {cl:?}"), |c| scatter::build(cl, 0, c, alg));
+        }
+    }
+}
+
+#[test]
+fn gather_all_algorithms() {
+    for cl in clusters() {
+        for (label, alg) in [
+            ("kported2", gather::GatherAlg::KPorted { k: 2 }),
+            ("klane2", gather::GatherAlg::KLane { k: 2 }),
+            ("fulllane", gather::GatherAlg::FullLane),
+            ("binomial", gather::GatherAlg::Binomial),
+            ("linear", gather::GatherAlg::Linear),
+        ] {
+            check(&format!("gather/{label} {cl:?}"), |c| gather::build(cl, 0, c, alg));
+        }
+    }
+}
+
+#[test]
+fn allgather_all_algorithms() {
+    for cl in clusters() {
+        for (label, alg) in [
+            ("ring", allgather::AllgatherAlg::Ring),
+            ("bruck1", allgather::AllgatherAlg::Bruck { k: 1 }),
+            ("bruck2", allgather::AllgatherAlg::Bruck { k: 2 }),
+            ("fulllane", allgather::AllgatherAlg::FullLane),
+        ] {
+            check(&format!("allgather/{label} {cl:?}"), |c| allgather::build(cl, c, alg));
+        }
+    }
+    // Recursive doubling requires p = 2^m.
+    for cl in [Cluster::new(4, 4, 2), Cluster::new(2, 8, 2)] {
+        check(&format!("allgather/rd {cl:?}"), |c| {
+            allgather::build(cl, c, allgather::AllgatherAlg::RecursiveDoubling)
+        });
+    }
+}
+
+#[test]
+fn alltoall_all_algorithms() {
+    for cl in clusters() {
+        for (label, alg) in [
+            ("kported1", alltoall::AlltoallAlg::KPorted { k: 1 }),
+            ("kported3", alltoall::AlltoallAlg::KPorted { k: 3 }),
+            ("bruck1", alltoall::AlltoallAlg::Bruck { k: 1 }),
+            ("bruck2", alltoall::AlltoallAlg::Bruck { k: 2 }),
+            ("klane", alltoall::AlltoallAlg::KLane),
+            ("fulllane", alltoall::AlltoallAlg::FullLane),
+            ("pairwise", alltoall::AlltoallAlg::Pairwise),
+        ] {
+            check(&format!("alltoall/{label} {cl:?}"), |c| alltoall::build(cl, c, alg));
+        }
+    }
+}
+
+#[test]
+fn hydra_scale_spot_check() {
+    // One full-size shape: the acceptance workload (Hydra k-lane bcast).
+    let cl = Cluster::hydra(2);
+    let m = model();
+    let alg = bcast::BcastAlg::KLane { k: 2, two_phase: false };
+    let mut s = bcast::build(cl, 0, 1, alg);
+    let mut sim = Simulator::new(&s, &m);
+    let mut st = sim.new_state();
+    for c in [1_000u64, 1_000_000] {
+        s.resize_count(c);
+        sim.recost(&s);
+        let fresh = Simulator::new(&bcast::build(cl, 0, c, alg), &m);
+        assert_eq!(sim.run_into(&mut st, 3), fresh.run(3), "hydra klane bcast c={c}");
+    }
+}

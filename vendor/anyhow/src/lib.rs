@@ -1,0 +1,149 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored
+//! path dependency provides exactly the API subset `mlane` uses:
+//! [`Error`], [`Result`], the [`anyhow!`]/[`bail!`]/[`ensure!`] macros,
+//! and the [`Context`] extension trait for `Result` and `Option`.
+//!
+//! Error values are flattened to strings at construction time — no
+//! backtraces, no downcasting. Like the real crate, [`Error`] does not
+//! implement `std::error::Error` so that the blanket `From` impl for
+//! every standard error type can exist.
+
+use std::fmt;
+
+/// A string-backed error with an optional chain of context frames.
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Construct an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), context: Vec::new() }
+    }
+
+    fn push_context(mut self, c: String) -> Error {
+        self.context.push(c);
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Most-recent context first, like anyhow's `{:#}` rendering.
+        for c in self.context.iter().rev() {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error as it propagates.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).push_context(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).push_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let n: u32 = s.parse().context("not a number")?;
+        ensure!(n > 0, "want positive, got {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        let e = parse("abc").unwrap_err();
+        assert!(e.to_string().starts_with("not a number: "), "{e}");
+        assert_eq!(parse("7").unwrap(), 7);
+    }
+
+    #[test]
+    fn ensure_formats() {
+        let e = parse("0").unwrap_err();
+        assert_eq!(e.to_string(), "want positive, got 0");
+    }
+
+    #[test]
+    fn bail_and_bare_ensure() {
+        fn f(flag: bool) -> Result<()> {
+            ensure!(flag);
+            bail!("reached the end");
+        }
+        assert!(f(false).unwrap_err().to_string().contains("condition failed"));
+        assert_eq!(f(true).unwrap_err().to_string(), "reached the end");
+    }
+}
