@@ -9,7 +9,8 @@
 //!
 //! Run: `MLANE_REPS=5 cargo run --release --example autotune`
 
-use mlane::coordinator::{Algorithm, Collectives, Op};
+use mlane::algorithms::registry;
+use mlane::coordinator::{Collectives, Op};
 use mlane::harness::{ALLTOALL_COUNTS, BCAST_COUNTS, SCATTER_COUNTS};
 use mlane::model::PersonaName;
 use mlane::topology::Cluster;
@@ -22,8 +23,9 @@ fn sweep(coll: &Collectives, name: &str, counts: &[u64], mk: impl Fn(u64) -> Op)
     );
     for &c in counts {
         let op = mk(c);
-        let native = coll.run(op, Algorithm::Native);
-        let (best, m) = coll.autotune(op, &coll.default_candidates(op));
+        let native = coll.run(op, &registry::native()).expect("native supports every op");
+        let (best, m) =
+            coll.autotune(op, &coll.default_candidates(op)).expect("default candidates");
         println!(
             "{:>9} {:<24} {:>12.2} {:>12.2} {:>8.2}",
             c,

@@ -7,7 +7,8 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use mlane::coordinator::{Algorithm, Collectives, Op};
+use mlane::algorithms::registry;
+use mlane::coordinator::{Collectives, Op};
 use mlane::exec::ExecRuntime;
 use mlane::model::PersonaName;
 use mlane::topology::Cluster;
@@ -23,25 +24,25 @@ fn main() -> anyhow::Result<()> {
     // 1. Simulated timing under the Open MPI persona cost model.
     println!("simulated (persona {:?}):", coll.persona.name);
     for alg in [
-        Algorithm::KPorted { k: 2 },
-        Algorithm::KLane { k: 2 },
-        Algorithm::FullLane,
-        Algorithm::Native,
+        registry::kported(2),
+        registry::klane(2),
+        registry::fulllane(),
+        registry::native(),
     ] {
-        let m = coll.run(op, alg);
+        let m = coll.run(op, &alg)?;
         println!("  {:24} avg={:8.2}us  min={:8.2}us", m.algorithm, m.summary.avg, m.summary.min);
     }
 
     // 2. Real execution: 16 threads move real bytes; payloads verified.
     let rt = ExecRuntime::channels();
-    let rep = coll.execute(op, Algorithm::FullLane, &rt)?;
+    let rep = coll.execute(op, &registry::fulllane(), &rt)?;
     println!(
         "\nexecuted full-lane for real: avg={:.1}us min={:.1}us ({} blocks verified)",
         rep.summary.avg, rep.summary.min, rep.blocks_verified
     );
 
     // 3. The coordinator's algorithm selection.
-    let (best, m) = coll.autotune(op, &coll.default_candidates(op));
+    let (best, m) = coll.autotune(op, &coll.default_candidates(op))?;
     println!("\nautotuner picks: {} ({:.2}us simulated)", best.label(), m.summary.avg);
     Ok(())
 }

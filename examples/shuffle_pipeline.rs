@@ -24,7 +24,8 @@
 
 use std::time::Instant;
 
-use mlane::coordinator::{Algorithm, Collectives, Op};
+use mlane::algorithms::registry;
+use mlane::coordinator::{Collectives, Op};
 use mlane::exec::{block_elem, ExecRuntime, PhaseMode};
 use mlane::model::PersonaName;
 use mlane::runtime::XlaService;
@@ -64,7 +65,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- stage 1: broadcast the "configuration" (full-lane bcast) ---
     let t0 = Instant::now();
-    let bcast = coll.execute(Op::Bcast { root: 0, c: 1024 }, Algorithm::FullLane, &rt)?;
+    let bcast = coll.execute(Op::Bcast { root: 0, c: 1024 }, &registry::fulllane(), &rt)?;
     println!(
         "stage 1  bcast config      avg={:>8.1}us min={:>8.1}us  ({} blocks, xla_phases={})",
         bcast.summary.avg, bcast.summary.min, bcast.blocks_verified, bcast.xla_phases
@@ -72,14 +73,14 @@ fn main() -> anyhow::Result<()> {
 
     // --- stage 2: scatter partitions (k-lane scatter) ---
     let scatter =
-        coll.execute(Op::Scatter { root: 0, c: 1024 }, Algorithm::KLane { k: LANES }, &rt)?;
+        coll.execute(Op::Scatter { root: 0, c: 1024 }, &registry::klane(LANES), &rt)?;
     println!(
         "stage 2  scatter inputs    avg={:>8.1}us min={:>8.1}us  ({} blocks)",
         scatter.summary.avg, scatter.summary.min, scatter.blocks_verified
     );
 
     // --- stage 3: the shuffle (full-lane alltoall, XLA node phases) ---
-    let shuffle = coll.execute(Op::Alltoall { c: C }, Algorithm::FullLane, &rt)?;
+    let shuffle = coll.execute(Op::Alltoall { c: C }, &registry::fulllane(), &rt)?;
     let shuffled_bytes = (p as u64) * (p as u64) * C * 4;
     println!(
         "stage 3  alltoall shuffle  avg={:>8.1}us min={:>8.1}us  ({} blocks, xla_phases={})",

@@ -131,13 +131,23 @@ fn bench_sweep(cl: Cluster) -> SweepBench {
     let cold_s = t0.elapsed().as_secs_f64();
 
     // Warm: prime the engine with the first cell, then time the sweep.
-    let mut eng = SweepEngine::new();
-    eng.measure(key, counts[0], &m, reps, warmup, seed, |c| bcast::build(cl, 0, c, alg));
+    // (The engine is shared/thread-safe now; the bench drives it from
+    // one thread with one reusable rep state, the section-worker shape.)
+    let ok = |s: mlane::schedule::Schedule| Ok::<_, std::convert::Infallible>(s);
+    let eng = SweepEngine::new();
+    let mut st = None;
+    eng.measure(key, counts[0], &m, reps, warmup, seed, &mut st, |c| {
+        ok(bcast::build(cl, 0, c, alg))
+    })
+    .unwrap();
     let t0 = Instant::now();
     let mut warm_sum = 0.0;
     for &c in counts {
-        let cell =
-            eng.measure(key, c, &m, reps, warmup, seed, |c| bcast::build(cl, 0, c, alg));
+        let cell = eng
+            .measure(key, c, &m, reps, warmup, seed, &mut st, |c| {
+                ok(bcast::build(cl, 0, c, alg))
+            })
+            .unwrap();
         warm_sum += cell.summary.avg;
     }
     let warm_s = t0.elapsed().as_secs_f64();

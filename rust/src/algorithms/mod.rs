@@ -1,4 +1,7 @@
 //! Collective algorithm builders: each compiles to a `schedule::Schedule`.
+//! The [`registry`] module is the catalog the rest of the system talks
+//! to; the per-operation modules stay the low-level builders.
+pub mod registry;
 pub mod bcast;
 pub mod scatter;
 pub mod gather;

@@ -1,0 +1,915 @@
+//! The algorithm catalog: one trait-based registry replacing the old
+//! hand-maintained `Op × Algorithm` match in the coordinator.
+//!
+//! Every algorithm of the paper — k-ported (§2.1), the adapted k-lane
+//! (§2.3, both the implemented and the theoretical two-phase variant),
+//! the problem-splitting full-lane (§2.2), Bruck message combining, the
+//! binomial/ring/recursive-doubling baselines, and the native-persona
+//! wrappers — is registered exactly once in [`Registry::standard`].
+//! Everything else derives from that single site:
+//!
+//! * `mlane run --alg <name>` resolves through [`Registry::resolve`];
+//! * autotune candidate sets come from [`Registry::candidates`];
+//! * `mlane validate` and the exhaustive validation test enumerate
+//!   [`Registry::validation_instances`];
+//! * the sweep engine's cache identity is
+//!   [`CollectiveAlgorithm::cache_id`].
+//!
+//! Invalid (op, algorithm) combinations are typed
+//! [`AlgError::UnsupportedCombination`] values, never panics.
+
+use std::fmt;
+use std::sync::{Arc, OnceLock};
+
+use crate::algorithms::{allgather, alltoall, bcast, gather, scatter};
+use crate::coordinator::Op;
+use crate::model::Persona;
+use crate::schedule::Schedule;
+use crate::sim::AlgId;
+use crate::topology::Cluster;
+
+/// The five collective operations, stripped of count and root.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Bcast,
+    Scatter,
+    Gather,
+    Allgather,
+    Alltoall,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 5] = [
+        OpKind::Bcast,
+        OpKind::Scatter,
+        OpKind::Gather,
+        OpKind::Allgather,
+        OpKind::Alltoall,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Bcast => "bcast",
+            OpKind::Scatter => "scatter",
+            OpKind::Gather => "gather",
+            OpKind::Allgather => "allgather",
+            OpKind::Alltoall => "alltoall",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<OpKind> {
+        OpKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+
+    /// A root-0 instance of this operation with `c` elements (the
+    /// harness and validation convention; rooted ops use root 0).
+    pub fn op(self, c: u64) -> Op {
+        match self {
+            OpKind::Bcast => Op::Bcast { root: 0, c },
+            OpKind::Scatter => Op::Scatter { root: 0, c },
+            OpKind::Gather => Op::Gather { root: 0, c },
+            OpKind::Allgather => Op::Allgather { c },
+            OpKind::Alltoall => Op::Alltoall { c },
+        }
+    }
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Typed errors for registry lookups and schedule construction.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AlgError {
+    /// `--alg` name not in the catalog.
+    UnknownAlgorithm { name: String, known: Vec<&'static str> },
+    /// The algorithm does not implement this operation; `supported`
+    /// lists the registry families that do.
+    UnsupportedCombination { alg: String, op: OpKind, supported: Vec<&'static str> },
+    /// The `k` parameter is outside the algorithm's valid range on this
+    /// cluster (e.g. k-lane needs k ≤ cores-per-node).
+    InvalidK { alg: String, k: u32, reason: String },
+}
+
+impl fmt::Display for AlgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AlgError::UnknownAlgorithm { name, known } => {
+                write!(f, "unknown algorithm {name}; known: {}", known.join(", "))
+            }
+            AlgError::UnsupportedCombination { alg, op, supported } => {
+                write!(f, "{alg} does not support {op}; supported: {}", supported.join(", "))
+            }
+            AlgError::InvalidK { alg, k, reason } => {
+                write!(f, "{alg}: k = {k} is invalid ({reason})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AlgError {}
+
+/// A compiled schedule plus the persona's quirk adjustment (0.0 / 1.0
+/// for the paper's own algorithms; only native wrappers set them).
+pub struct Built {
+    pub schedule: Schedule,
+    pub quirk_add: f64,
+    pub quirk_mult: f64,
+}
+
+impl Built {
+    fn plain(schedule: Schedule) -> Built {
+        Built { schedule, quirk_add: 0.0, quirk_mult: 1.0 }
+    }
+}
+
+impl From<crate::model::persona::NativeChoice> for Built {
+    fn from(n: crate::model::persona::NativeChoice) -> Built {
+        Built { schedule: n.schedule, quirk_add: n.quirk_add, quirk_mult: n.quirk_mult }
+    }
+}
+
+/// One concrete collective algorithm (a family instance with its `k`
+/// bound, if parameterized). The coordinator, harness, CLI and tests
+/// all speak this trait; the per-operation builder modules stay private
+/// behind it.
+pub trait CollectiveAlgorithm: Send + Sync {
+    /// Family name as accepted by `--alg` (e.g. "kported").
+    fn name(&self) -> &'static str;
+
+    /// Human-readable instance label (e.g. "2-ported"), as printed in
+    /// autotune summaries.
+    fn label(&self) -> String;
+
+    /// The bound `k` parameter, `None` for unparameterized families.
+    fn k(&self) -> Option<u32>;
+
+    /// Does this algorithm implement `op`? Independent of `k`.
+    fn supports(&self, op: OpKind) -> bool;
+
+    /// Maximum concurrent sends per rank in any round — the limit
+    /// `schedule::validate::validate_ports` must hold under.
+    fn ports_required(&self, cl: Cluster, op: OpKind) -> u32;
+
+    /// Sweep-engine cache identity. `Some` promises the communication
+    /// structure depends only on (cluster, op shape) — count enters
+    /// through block sizes alone — and that quirks are neutral. `None`
+    /// (native wrappers) forces a rebuild per cell.
+    fn cache_id(&self) -> Option<AlgId>;
+
+    /// Compile (cluster, op) to a schedule plus quirk adjustment.
+    fn build(&self, cl: Cluster, persona: &Persona, op: Op) -> Result<Built, AlgError>;
+}
+
+/// Shared handle to a registered algorithm instance. Cheap to clone;
+/// derefs to [`CollectiveAlgorithm`].
+#[derive(Clone)]
+pub struct Alg(Arc<dyn CollectiveAlgorithm>);
+
+impl Alg {
+    pub fn new<A: CollectiveAlgorithm + 'static>(a: A) -> Alg {
+        Alg(Arc::new(a))
+    }
+}
+
+impl std::ops::Deref for Alg {
+    type Target = dyn CollectiveAlgorithm;
+    fn deref(&self) -> &Self::Target {
+        self.0.as_ref()
+    }
+}
+
+impl fmt::Debug for Alg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Alg({})", self.label())
+    }
+}
+
+fn unsupported(alg: &dyn CollectiveAlgorithm, op: OpKind) -> AlgError {
+    AlgError::UnsupportedCombination {
+        alg: alg.name().to_string(),
+        op,
+        supported: registry().supporting(op),
+    }
+}
+
+/// k-lane variants need k cores per node to drive the lanes.
+fn need_k_cores(alg: &dyn CollectiveAlgorithm, cl: Cluster, k: u32) -> Result<(), AlgError> {
+    if k > cl.cores {
+        return Err(AlgError::InvalidK {
+            alg: alg.name().to_string(),
+            k,
+            reason: format!("needs k <= cores per node ({})", cl.cores),
+        });
+    }
+    Ok(())
+}
+
+// ---- family implementations -------------------------------------------
+
+/// §2.1 k-ported divide-and-conquer (rooted ops) / round-robin
+/// (alltoall).
+struct KPorted {
+    k: u32,
+}
+
+impl CollectiveAlgorithm for KPorted {
+    fn name(&self) -> &'static str {
+        "kported"
+    }
+    fn label(&self) -> String {
+        format!("{}-ported", self.k)
+    }
+    fn k(&self) -> Option<u32> {
+        Some(self.k)
+    }
+    fn supports(&self, op: OpKind) -> bool {
+        matches!(op, OpKind::Bcast | OpKind::Scatter | OpKind::Gather | OpKind::Alltoall)
+    }
+    fn ports_required(&self, _cl: Cluster, _op: OpKind) -> u32 {
+        self.k
+    }
+    fn cache_id(&self) -> Option<AlgId> {
+        Some(AlgId { family: "kported", k: self.k })
+    }
+    fn build(&self, cl: Cluster, _persona: &Persona, op: Op) -> Result<Built, AlgError> {
+        let k = self.k;
+        Ok(Built::plain(match op {
+            Op::Bcast { root, c } => bcast::build(cl, root, c, bcast::BcastAlg::KPorted { k }),
+            Op::Scatter { root, c } => {
+                scatter::build(cl, root, c, scatter::ScatterAlg::KPorted { k })
+            }
+            Op::Gather { root, c } => {
+                gather::build(cl, root, c, gather::GatherAlg::KPorted { k })
+            }
+            Op::Alltoall { c } => alltoall::build(cl, c, alltoall::AlltoallAlg::KPorted { k }),
+            Op::Allgather { .. } => return Err(unsupported(self, op.kind())),
+        }))
+    }
+}
+
+/// §2.3 adapted k-lane (the paper's implementation: full node broadcast
+/// on receive). For alltoall the decomposition fixes k = n (§4.4); the
+/// bound k is kept only as the reporting parameter.
+struct KLane {
+    k: u32,
+}
+
+impl CollectiveAlgorithm for KLane {
+    fn name(&self) -> &'static str {
+        "klane"
+    }
+    fn label(&self) -> String {
+        format!("{}-lane", self.k)
+    }
+    fn k(&self) -> Option<u32> {
+        Some(self.k)
+    }
+    fn supports(&self, op: OpKind) -> bool {
+        matches!(op, OpKind::Bcast | OpKind::Scatter | OpKind::Gather | OpKind::Alltoall)
+    }
+    fn ports_required(&self, cl: Cluster, op: OpKind) -> u32 {
+        // Alltoall sub-steps drive all n cores of a node concurrently;
+        // the rooted ops send from one lane core at a time.
+        if op == OpKind::Alltoall {
+            cl.cores
+        } else {
+            1
+        }
+    }
+    fn cache_id(&self) -> Option<AlgId> {
+        Some(AlgId { family: "klane", k: self.k })
+    }
+    fn build(&self, cl: Cluster, _persona: &Persona, op: Op) -> Result<Built, AlgError> {
+        let k = self.k;
+        Ok(Built::plain(match op {
+            Op::Bcast { root, c } => {
+                need_k_cores(self, cl, k)?;
+                bcast::build(cl, root, c, bcast::BcastAlg::KLane { k, two_phase: false })
+            }
+            Op::Scatter { root, c } => {
+                need_k_cores(self, cl, k)?;
+                scatter::build(cl, root, c, scatter::ScatterAlg::KLane { k })
+            }
+            Op::Gather { root, c } => {
+                need_k_cores(self, cl, k)?;
+                gather::build(cl, root, c, gather::GatherAlg::KLane { k })
+            }
+            Op::Alltoall { c } => alltoall::build(cl, c, alltoall::AlltoallAlg::KLane),
+            Op::Allgather { .. } => return Err(unsupported(self, op.kind())),
+        }))
+    }
+}
+
+/// §2.3 theoretical two-phase k-lane broadcast variant: k-way broadcast
+/// on receive plus a final k × n/k-way fan-out.
+struct KLaneTwoPhase {
+    k: u32,
+}
+
+impl CollectiveAlgorithm for KLaneTwoPhase {
+    fn name(&self) -> &'static str {
+        "klane2p"
+    }
+    fn label(&self) -> String {
+        format!("{}-lane-2phase", self.k)
+    }
+    fn k(&self) -> Option<u32> {
+        Some(self.k)
+    }
+    fn supports(&self, op: OpKind) -> bool {
+        op == OpKind::Bcast
+    }
+    fn ports_required(&self, _cl: Cluster, _op: OpKind) -> u32 {
+        1
+    }
+    fn cache_id(&self) -> Option<AlgId> {
+        Some(AlgId { family: "klane2p", k: self.k })
+    }
+    fn build(&self, cl: Cluster, _persona: &Persona, op: Op) -> Result<Built, AlgError> {
+        match op {
+            Op::Bcast { root, c } => {
+                need_k_cores(self, cl, self.k)?;
+                Ok(Built::plain(bcast::build(
+                    cl,
+                    root,
+                    c,
+                    bcast::BcastAlg::KLane { k: self.k, two_phase: true },
+                )))
+            }
+            _ => Err(unsupported(self, op.kind())),
+        }
+    }
+}
+
+/// §2.2 problem-splitting full-lane algorithm.
+struct FullLane;
+
+impl CollectiveAlgorithm for FullLane {
+    fn name(&self) -> &'static str {
+        "fulllane"
+    }
+    fn label(&self) -> String {
+        "full-lane".into()
+    }
+    fn k(&self) -> Option<u32> {
+        None
+    }
+    fn supports(&self, _op: OpKind) -> bool {
+        true
+    }
+    fn ports_required(&self, _cl: Cluster, _op: OpKind) -> u32 {
+        1
+    }
+    fn cache_id(&self) -> Option<AlgId> {
+        Some(AlgId { family: "fulllane", k: 0 })
+    }
+    fn build(&self, cl: Cluster, _persona: &Persona, op: Op) -> Result<Built, AlgError> {
+        Ok(Built::plain(match op {
+            Op::Bcast { root, c } => bcast::build(cl, root, c, bcast::BcastAlg::FullLane),
+            Op::Scatter { root, c } => {
+                scatter::build(cl, root, c, scatter::ScatterAlg::FullLane)
+            }
+            Op::Gather { root, c } => gather::build(cl, root, c, gather::GatherAlg::FullLane),
+            Op::Allgather { c } => allgather::build(cl, c, allgather::AllgatherAlg::FullLane),
+            Op::Alltoall { c } => alltoall::build(cl, c, alltoall::AlltoallAlg::FullLane),
+        }))
+    }
+}
+
+/// Radix-(k+1) Bruck message combining (alltoall) / dissemination
+/// (allgather).
+struct Bruck {
+    k: u32,
+}
+
+impl CollectiveAlgorithm for Bruck {
+    fn name(&self) -> &'static str {
+        "bruck"
+    }
+    fn label(&self) -> String {
+        format!("bruck({})", self.k)
+    }
+    fn k(&self) -> Option<u32> {
+        Some(self.k)
+    }
+    fn supports(&self, op: OpKind) -> bool {
+        matches!(op, OpKind::Alltoall | OpKind::Allgather)
+    }
+    fn ports_required(&self, _cl: Cluster, _op: OpKind) -> u32 {
+        self.k
+    }
+    fn cache_id(&self) -> Option<AlgId> {
+        Some(AlgId { family: "bruck", k: self.k })
+    }
+    fn build(&self, cl: Cluster, _persona: &Persona, op: Op) -> Result<Built, AlgError> {
+        let k = self.k;
+        Ok(Built::plain(match op {
+            Op::Alltoall { c } => alltoall::build(cl, c, alltoall::AlltoallAlg::Bruck { k }),
+            Op::Allgather { c } => allgather::build(cl, c, allgather::AllgatherAlg::Bruck { k }),
+            _ => return Err(unsupported(self, op.kind())),
+        }))
+    }
+}
+
+/// Binomial-tree baseline (the native libraries' small-count shape).
+struct Binomial;
+
+impl CollectiveAlgorithm for Binomial {
+    fn name(&self) -> &'static str {
+        "binomial"
+    }
+    fn label(&self) -> String {
+        "binomial".into()
+    }
+    fn k(&self) -> Option<u32> {
+        None
+    }
+    fn supports(&self, op: OpKind) -> bool {
+        matches!(op, OpKind::Bcast | OpKind::Scatter | OpKind::Gather)
+    }
+    fn ports_required(&self, _cl: Cluster, _op: OpKind) -> u32 {
+        1
+    }
+    fn cache_id(&self) -> Option<AlgId> {
+        Some(AlgId { family: "binomial", k: 0 })
+    }
+    fn build(&self, cl: Cluster, _persona: &Persona, op: Op) -> Result<Built, AlgError> {
+        Ok(Built::plain(match op {
+            Op::Bcast { root, c } => bcast::build(cl, root, c, bcast::BcastAlg::Binomial),
+            Op::Scatter { root, c } => {
+                scatter::build(cl, root, c, scatter::ScatterAlg::Binomial)
+            }
+            Op::Gather { root, c } => gather::build(cl, root, c, gather::GatherAlg::Binomial),
+            _ => return Err(unsupported(self, op.kind())),
+        }))
+    }
+}
+
+/// Ring allgather baseline (bandwidth-optimal, p-1 rounds).
+struct Ring;
+
+impl CollectiveAlgorithm for Ring {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+    fn label(&self) -> String {
+        "ring".into()
+    }
+    fn k(&self) -> Option<u32> {
+        None
+    }
+    fn supports(&self, op: OpKind) -> bool {
+        op == OpKind::Allgather
+    }
+    fn ports_required(&self, _cl: Cluster, _op: OpKind) -> u32 {
+        1
+    }
+    fn cache_id(&self) -> Option<AlgId> {
+        Some(AlgId { family: "ring", k: 0 })
+    }
+    fn build(&self, cl: Cluster, _persona: &Persona, op: Op) -> Result<Built, AlgError> {
+        match op {
+            Op::Allgather { c } => {
+                Ok(Built::plain(allgather::build(cl, c, allgather::AllgatherAlg::Ring)))
+            }
+            _ => Err(unsupported(self, op.kind())),
+        }
+    }
+}
+
+/// Recursive-doubling allgather baseline (log2 p rounds when p is a
+/// power of two; the builder falls back to ring otherwise).
+struct RecursiveDoubling;
+
+impl CollectiveAlgorithm for RecursiveDoubling {
+    fn name(&self) -> &'static str {
+        "rdouble"
+    }
+    fn label(&self) -> String {
+        "recursive-doubling".into()
+    }
+    fn k(&self) -> Option<u32> {
+        None
+    }
+    fn supports(&self, op: OpKind) -> bool {
+        op == OpKind::Allgather
+    }
+    fn ports_required(&self, _cl: Cluster, _op: OpKind) -> u32 {
+        1
+    }
+    fn cache_id(&self) -> Option<AlgId> {
+        Some(AlgId { family: "rdouble", k: 0 })
+    }
+    fn build(&self, cl: Cluster, _persona: &Persona, op: Op) -> Result<Built, AlgError> {
+        match op {
+            Op::Allgather { c } => Ok(Built::plain(allgather::build(
+                cl,
+                c,
+                allgather::AllgatherAlg::RecursiveDoubling,
+            ))),
+            _ => Err(unsupported(self, op.kind())),
+        }
+    }
+}
+
+/// The persona's native MPI_<op>: count-dependent algorithm selection
+/// plus the observed pathology quirks — never cacheable.
+struct Native;
+
+impl CollectiveAlgorithm for Native {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+    fn label(&self) -> String {
+        "native".into()
+    }
+    fn k(&self) -> Option<u32> {
+        None
+    }
+    fn supports(&self, _op: OpKind) -> bool {
+        true
+    }
+    fn ports_required(&self, _cl: Cluster, _op: OpKind) -> u32 {
+        // Every native selection is a 1-ported shape (binomial,
+        // pairwise, ring, recursive doubling, bruck(1)).
+        1
+    }
+    fn cache_id(&self) -> Option<AlgId> {
+        None
+    }
+    fn build(&self, cl: Cluster, persona: &Persona, op: Op) -> Result<Built, AlgError> {
+        Ok(match op {
+            Op::Bcast { root, c } => persona.native_bcast(cl, root, c).into(),
+            Op::Scatter { root, c } => persona.native_scatter(cl, root, c).into(),
+            Op::Gather { root, c } => persona.native_gather(cl, root, c).into(),
+            Op::Allgather { c } => persona.native_allgather(cl, c).into(),
+            Op::Alltoall { c } => persona.native_alltoall(cl, c).into(),
+        })
+    }
+}
+
+// ---- the registry ------------------------------------------------------
+
+type MakeFn = fn(u32) -> Alg;
+type DefaultKsFn = fn(Cluster, OpKind) -> Vec<u32>;
+type ValidationKsFn = fn(Cluster) -> Vec<u32>;
+
+/// One catalog entry: a family plus how to enumerate its instances.
+pub struct Registration {
+    name: &'static str,
+    about: &'static str,
+    /// Whether `--k` parameterizes this family.
+    parameterized: bool,
+    make: MakeFn,
+    /// `k` values entered into the default autotune candidate set for
+    /// an operation (empty = not a default candidate there).
+    default_ks: DefaultKsFn,
+    /// `k` values exercised by exhaustive validation.
+    validation_ks: ValidationKsFn,
+}
+
+impl Registration {
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn about(&self) -> &'static str {
+        self.about
+    }
+
+    pub fn parameterized(&self) -> bool {
+        self.parameterized
+    }
+
+    /// Instantiate with the given `k` (ignored by unparameterized
+    /// families).
+    pub fn instantiate(&self, k: u32) -> Alg {
+        (self.make)(if self.parameterized { k } else { 0 })
+    }
+
+    /// Op support is a family property (independent of `k`).
+    pub fn supports(&self, op: OpKind) -> bool {
+        self.instantiate(1).supports(op)
+    }
+}
+
+/// The algorithm catalog. Iterate [`Registry::entries`] for listings;
+/// everything that used to be a hand-maintained enumeration (CLI flag
+/// parsing, candidate sets, validation checklists, table specs) is a
+/// query against this.
+pub struct Registry {
+    entries: Vec<Registration>,
+}
+
+fn k_one_and_lanes(cl: Cluster, _op: OpKind) -> Vec<u32> {
+    let mut ks = vec![1, cl.lanes];
+    ks.dedup();
+    ks
+}
+
+fn lanes_within_cores(cl: Cluster) -> Vec<u32> {
+    vec![cl.lanes.min(cl.cores)]
+}
+
+fn k_range(cl: Cluster) -> Vec<u32> {
+    (1..=cl.lanes.min(cl.cores)).collect()
+}
+
+fn unparameterized(_cl: Cluster) -> Vec<u32> {
+    vec![0]
+}
+
+impl Registry {
+    /// The standard catalog: one registration per paper algorithm.
+    /// **This is the single site where algorithms are added.**
+    pub fn standard() -> Registry {
+        Registry {
+            entries: vec![
+                Registration {
+                    name: "kported",
+                    about: "§2.1 k-ported divide-and-conquer (rooted) / round-robin (alltoall)",
+                    parameterized: true,
+                    make: |k| Alg::new(KPorted { k }),
+                    default_ks: |cl, op| match op {
+                        OpKind::Bcast | OpKind::Scatter | OpKind::Gather | OpKind::Alltoall => {
+                            k_one_and_lanes(cl, op)
+                        }
+                        OpKind::Allgather => vec![],
+                    },
+                    validation_ks: k_range,
+                },
+                Registration {
+                    name: "klane",
+                    about: "§2.3 adapted k-lane (full node broadcast on receive)",
+                    parameterized: true,
+                    make: |k| Alg::new(KLane { k }),
+                    default_ks: |cl, op| match op {
+                        OpKind::Bcast | OpKind::Scatter | OpKind::Gather => {
+                            lanes_within_cores(cl)
+                        }
+                        OpKind::Alltoall => vec![cl.lanes],
+                        OpKind::Allgather => vec![],
+                    },
+                    validation_ks: k_range,
+                },
+                Registration {
+                    name: "klane2p",
+                    about: "§2.3 theoretical two-phase k-lane broadcast variant",
+                    parameterized: true,
+                    make: |k| Alg::new(KLaneTwoPhase { k }),
+                    default_ks: |cl, op| match op {
+                        OpKind::Bcast => lanes_within_cores(cl),
+                        _ => vec![],
+                    },
+                    validation_ks: k_range,
+                },
+                Registration {
+                    name: "fulllane",
+                    about: "§2.2 problem-splitting full-lane algorithm",
+                    parameterized: false,
+                    make: |_| Alg::new(FullLane),
+                    default_ks: |_, _| vec![0],
+                    validation_ks: unparameterized,
+                },
+                Registration {
+                    name: "bruck",
+                    about: "radix-(k+1) Bruck combining (alltoall) / dissemination (allgather)",
+                    parameterized: true,
+                    make: |k| Alg::new(Bruck { k }),
+                    default_ks: |cl, op| match op {
+                        OpKind::Alltoall => vec![cl.lanes],
+                        OpKind::Allgather => k_one_and_lanes(cl, op),
+                        _ => vec![],
+                    },
+                    validation_ks: k_range,
+                },
+                Registration {
+                    name: "binomial",
+                    about: "binomial-tree baseline (native small-count shape)",
+                    parameterized: false,
+                    make: |_| Alg::new(Binomial),
+                    default_ks: |_, _| vec![],
+                    validation_ks: unparameterized,
+                },
+                Registration {
+                    name: "ring",
+                    about: "ring allgather baseline (bandwidth-optimal)",
+                    parameterized: false,
+                    make: |_| Alg::new(Ring),
+                    default_ks: |_, _| vec![],
+                    validation_ks: unparameterized,
+                },
+                Registration {
+                    name: "rdouble",
+                    about: "recursive-doubling allgather baseline",
+                    parameterized: false,
+                    make: |_| Alg::new(RecursiveDoubling),
+                    default_ks: |_, _| vec![],
+                    validation_ks: unparameterized,
+                },
+                Registration {
+                    name: "native",
+                    about: "the persona's native MPI_<op>, with its observed quirks",
+                    parameterized: false,
+                    make: |_| Alg::new(Native),
+                    default_ks: |_, _| vec![0],
+                    validation_ks: unparameterized,
+                },
+            ],
+        }
+    }
+
+    pub fn entries(&self) -> &[Registration] {
+        &self.entries
+    }
+
+    /// All family names, registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Registration> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Resolve a (name, k) pair — the `--alg`/`--k` flags — to an
+    /// instance.
+    pub fn resolve(&self, name: &str, k: u32) -> Result<Alg, AlgError> {
+        let entry = self.get(name).ok_or_else(|| AlgError::UnknownAlgorithm {
+            name: name.to_string(),
+            known: self.names(),
+        })?;
+        if entry.parameterized && k == 0 {
+            return Err(AlgError::InvalidK {
+                alg: entry.name.to_string(),
+                k,
+                reason: "k must be >= 1".into(),
+            });
+        }
+        Ok(entry.instantiate(k))
+    }
+
+    /// Family names implementing `op` (registration order) — the
+    /// "supported: …" list in error messages and help output.
+    pub fn supporting(&self, op: OpKind) -> Vec<&'static str> {
+        self.entries.iter().filter(|e| e.supports(op)).map(|e| e.name).collect()
+    }
+
+    /// The default autotune candidate set for `op` on `cl`.
+    pub fn candidates(&self, cl: Cluster, op: OpKind) -> Vec<Alg> {
+        let mut out = Vec::new();
+        for entry in &self.entries {
+            if !entry.supports(op) {
+                continue;
+            }
+            for k in (entry.default_ks)(cl, op) {
+                out.push(entry.instantiate(k));
+            }
+        }
+        out
+    }
+
+    /// Every instance exhaustive validation should exercise on `cl`
+    /// (all families, parameterized ones over their valid k range).
+    pub fn validation_instances(&self, cl: Cluster) -> Vec<Alg> {
+        let mut out = Vec::new();
+        for entry in &self.entries {
+            for k in (entry.validation_ks)(cl) {
+                out.push(entry.instantiate(k));
+            }
+        }
+        out
+    }
+}
+
+/// The process-wide catalog.
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::standard)
+}
+
+// ---- convenience constructors (sugar over `registry().resolve`) --------
+
+pub fn kported(k: u32) -> Alg {
+    registry().resolve("kported", k).expect("kported")
+}
+
+pub fn klane(k: u32) -> Alg {
+    registry().resolve("klane", k).expect("klane")
+}
+
+pub fn fulllane() -> Alg {
+    registry().resolve("fulllane", 0).expect("fulllane")
+}
+
+pub fn bruck(k: u32) -> Alg {
+    registry().resolve("bruck", k).expect("bruck")
+}
+
+pub fn native() -> Alg {
+    registry().resolve("native", 0).expect("native")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::PersonaName;
+
+    fn persona() -> Persona {
+        Persona::get(PersonaName::OpenMpi)
+    }
+
+    #[test]
+    fn resolve_known_and_unknown() {
+        assert_eq!(registry().resolve("kported", 2).unwrap().label(), "2-ported");
+        let err = registry().resolve("nosuch", 2).unwrap_err();
+        assert!(matches!(err, AlgError::UnknownAlgorithm { .. }), "{err}");
+        assert!(err.to_string().contains("kported"), "{err}");
+    }
+
+    #[test]
+    fn zero_k_rejected_for_parameterized_families() {
+        for name in ["kported", "klane", "klane2p", "bruck"] {
+            let err = registry().resolve(name, 0).unwrap_err();
+            assert!(matches!(err, AlgError::InvalidK { .. }), "{name}: {err}");
+        }
+        // Unparameterized families ignore k entirely.
+        assert!(registry().resolve("fulllane", 0).is_ok());
+        assert!(registry().resolve("native", 7).is_ok());
+    }
+
+    #[test]
+    fn unsupported_combination_is_a_typed_error() {
+        let cl = Cluster::new(2, 2, 1);
+        let err =
+            bruck(2).build(cl, &persona(), Op::Bcast { root: 0, c: 4 }).unwrap_err();
+        match &err {
+            AlgError::UnsupportedCombination { alg, op, supported } => {
+                assert_eq!(alg, "bruck");
+                assert_eq!(*op, OpKind::Bcast);
+                assert!(supported.contains(&"kported"), "{supported:?}");
+                assert!(!supported.contains(&"bruck"), "{supported:?}");
+            }
+            other => panic!("wrong error: {other:?}"),
+        }
+        assert!(
+            err.to_string().starts_with("bruck does not support bcast; supported:"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn klane_rejects_k_beyond_cores() {
+        let cl = Cluster::new(4, 2, 2); // 2 cores per node
+        let err = klane(3).build(cl, &persona(), Op::Bcast { root: 0, c: 4 }).unwrap_err();
+        assert!(matches!(err, AlgError::InvalidK { k: 3, .. }), "{err}");
+        // But alltoall ignores k (decomposition fixes k = n).
+        assert!(klane(3).build(cl, &persona(), Op::Alltoall { c: 4 }).is_ok());
+    }
+
+    #[test]
+    fn default_candidates_match_the_paper_families() {
+        let cl = Cluster::new(4, 4, 2);
+        let names = |op: OpKind| -> Vec<String> {
+            registry().candidates(cl, op).iter().map(|a| a.label()).collect()
+        };
+        assert_eq!(
+            names(OpKind::Bcast),
+            ["1-ported", "2-ported", "2-lane", "2-lane-2phase", "full-lane", "native"]
+        );
+        assert_eq!(names(OpKind::Allgather), ["full-lane", "bruck(1)", "bruck(2)", "native"]);
+        assert_eq!(
+            names(OpKind::Alltoall),
+            ["1-ported", "2-ported", "2-lane", "full-lane", "bruck(2)", "native"]
+        );
+    }
+
+    #[test]
+    fn cache_ids_are_distinct_across_instances() {
+        let cl = Cluster::new(4, 4, 2);
+        let mut seen = std::collections::HashSet::new();
+        for alg in registry().validation_instances(cl) {
+            if let Some(id) = alg.cache_id() {
+                assert!(seen.insert(id), "duplicate cache id {id:?} ({})", alg.label());
+            } else {
+                assert_eq!(alg.name(), "native", "only native may be uncacheable");
+            }
+        }
+    }
+
+    #[test]
+    fn two_phase_variant_registered_and_buildable() {
+        let cl = Cluster::new(4, 4, 2);
+        let alg = registry().resolve("klane2p", 2).unwrap();
+        assert!(alg.supports(OpKind::Bcast) && !alg.supports(OpKind::Alltoall));
+        let built = alg.build(cl, &persona(), Op::Bcast { root: 0, c: 64 }).unwrap();
+        assert_eq!(built.schedule.algorithm, "bcast/k-lane-2phase");
+        // And it rides into the default bcast candidate set.
+        let labels: Vec<String> =
+            registry().candidates(cl, OpKind::Bcast).iter().map(|a| a.label()).collect();
+        assert!(labels.contains(&"2-lane-2phase".to_string()), "{labels:?}");
+    }
+}

@@ -1,7 +1,8 @@
-//! The coordinator: a single façade over topology, algorithms, personas
-//! and the two backends — the "improved MPI library" the paper's
-//! conclusion calls for ("the native MPI library implementations … can
-//! easily be improved, and sometimes quite considerably").
+//! The coordinator: a single façade over topology, the algorithm
+//! registry, personas and the two backends — the "improved MPI library"
+//! the paper's conclusion calls for ("the native MPI library
+//! implementations … can easily be improved, and sometimes quite
+//! considerably").
 //!
 //! * [`Collectives::run`] builds + times any (operation, algorithm)
 //!   combination on the simulator;
@@ -9,16 +10,22 @@
 //! * [`Collectives::autotune`] picks the fastest algorithm for an
 //!   operation and size — the algorithm-selection layer real libraries
 //!   get wrong in the paper's tables.
+//!
+//! Algorithms are [`registry::Alg`] handles from the catalog in
+//! `algorithms::registry` — this module contains no per-algorithm
+//! knowledge; adding an algorithm is one registration there. Invalid
+//! (operation, algorithm) pairs surface as typed
+//! [`AlgError::UnsupportedCombination`] results, never panics.
 
 use std::cell::RefCell;
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::algorithms::{allgather, alltoall, bcast, gather, scatter};
+use crate::algorithms::registry::{self, Alg, AlgError, Built, OpKind};
 use crate::exec::{ExecReport, ExecRuntime};
 use crate::model::{Persona, PersonaName};
-use crate::schedule::Schedule;
-use crate::sim::{self, AlgId, OpShape, SweepEngine, SweepKey, SweepStats};
+use crate::sim::{self, OpShape, RepState, SweepEngine, SweepKey, SweepStats};
 use crate::topology::{Cluster, Rank};
 use crate::util::Summary;
 
@@ -33,13 +40,13 @@ pub enum Op {
 }
 
 impl Op {
-    pub fn kind(&self) -> &'static str {
+    pub fn kind(&self) -> OpKind {
         match self {
-            Op::Bcast { .. } => "bcast",
-            Op::Scatter { .. } => "scatter",
-            Op::Gather { .. } => "gather",
-            Op::Allgather { .. } => "allgather",
-            Op::Alltoall { .. } => "alltoall",
+            Op::Bcast { .. } => OpKind::Bcast,
+            Op::Scatter { .. } => OpKind::Scatter,
+            Op::Gather { .. } => OpKind::Gather,
+            Op::Allgather { .. } => OpKind::Allgather,
+            Op::Alltoall { .. } => OpKind::Alltoall,
         }
     }
 
@@ -50,33 +57,6 @@ impl Op {
             | Op::Gather { c, .. }
             | Op::Allgather { c }
             | Op::Alltoall { c } => *c,
-        }
-    }
-}
-
-/// Unified algorithm selector across the three operations.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Algorithm {
-    /// §2.1 k-ported algorithm with the given k.
-    KPorted { k: u32 },
-    /// §2.3 adapted k-lane algorithm (k ignored for alltoall, §4.4).
-    KLane { k: u32 },
-    /// §2.2 problem-splitting full-lane algorithm.
-    FullLane,
-    /// Radix-(k+1) message-combining (alltoall only).
-    Bruck { k: u32 },
-    /// The persona's native MPI_<op> (with its observed quirks).
-    Native,
-}
-
-impl Algorithm {
-    pub fn label(&self) -> String {
-        match self {
-            Algorithm::KPorted { k } => format!("{k}-ported"),
-            Algorithm::KLane { k } => format!("{k}-lane"),
-            Algorithm::FullLane => "full-lane".into(),
-            Algorithm::Bruck { k } => format!("bruck({k})"),
-            Algorithm::Native => "native".into(),
         }
     }
 }
@@ -96,13 +76,16 @@ pub struct Collectives {
     pub reps: usize,
     pub warmup: usize,
     pub seed: u64,
-    /// Schedule cache + shared rep state: count sweeps (tables,
-    /// autotune candidate grids) build each communication structure once
-    /// and re-cost it per count (see `sim::sweep`). Keyed by (cluster,
-    /// op shape, algorithm) — do not mutate `persona.model` between
-    /// runs (cached simulators bake the model in); build a fresh
-    /// `Collectives` instead.
-    engine: RefCell<SweepEngine>,
+    /// Shared schedule cache: count sweeps (tables, autotune candidate
+    /// grids) build each communication structure once and re-cost it per
+    /// count (see `sim::sweep`). Keyed by (cluster, op shape, algorithm,
+    /// model fingerprint), so one engine may be shared across
+    /// `Collectives` instances — even across personas and threads
+    /// (`Collectives::with_engine`).
+    engine: Arc<SweepEngine>,
+    /// Per-instance rep state (thread-local by construction): reused
+    /// across cells so the rep loop stays allocation-free.
+    state: RefCell<Option<RepState>>,
 }
 
 /// The sweep-invariant part of an operation (cache-key component).
@@ -116,181 +99,97 @@ fn op_shape(op: Op) -> OpShape {
     }
 }
 
-/// Cache identity of an algorithm, or `None` if its schedule (or quirk
-/// adjustment) depends on the element count and must be rebuilt per
-/// cell — the native personas switch algorithms and pathologies by size.
-fn alg_id(alg: Algorithm) -> Option<AlgId> {
-    match alg {
-        Algorithm::KPorted { k } => Some(AlgId { family: "kported", k }),
-        Algorithm::KLane { k } => Some(AlgId { family: "klane", k }),
-        Algorithm::FullLane => Some(AlgId { family: "fulllane", k: 0 }),
-        Algorithm::Bruck { k } => Some(AlgId { family: "bruck", k }),
-        Algorithm::Native => None,
-    }
-}
-
 impl Collectives {
     pub fn new(cluster: Cluster, persona: PersonaName) -> Self {
+        Self::with_engine(cluster, persona, Arc::new(SweepEngine::new()))
+    }
+
+    /// Share an existing sweep engine (the cross-table schedule cache):
+    /// the model-fingerprinted cache key keeps personas isolated, so any
+    /// mix of `Collectives` may share one engine.
+    pub fn with_engine(cluster: Cluster, persona: PersonaName, engine: Arc<SweepEngine>) -> Self {
         Self {
             cluster,
             persona: Persona::get(persona),
             reps: sim::default_reps(),
             warmup: 2,
             seed: 0xC0FFEE,
-            engine: RefCell::new(SweepEngine::new()),
+            engine,
+            state: RefCell::new(None),
         }
+    }
+
+    /// The shared sweep engine handle.
+    pub fn engine(&self) -> &Arc<SweepEngine> {
+        &self.engine
     }
 
     /// Sweep-engine counters (cells measured, schedules built, recosts).
     pub fn sweep_stats(&self) -> SweepStats {
-        self.engine.borrow().stats()
+        self.engine.stats()
     }
 
     /// Compile (op, algorithm) to a schedule plus the persona's native
     /// quirk adjustment (1.0/0.0 for non-native algorithms).
-    pub fn schedule(&self, op: Op, alg: Algorithm) -> (Schedule, f64, f64) {
-        let cl = self.cluster;
-        match (op, alg) {
-            (Op::Bcast { root, c }, Algorithm::KPorted { k }) => {
-                (bcast::build(cl, root, c, bcast::BcastAlg::KPorted { k }), 0.0, 1.0)
-            }
-            (Op::Bcast { root, c }, Algorithm::KLane { k }) => (
-                bcast::build(cl, root, c, bcast::BcastAlg::KLane { k, two_phase: false }),
-                0.0,
-                1.0,
-            ),
-            (Op::Bcast { root, c }, Algorithm::FullLane) => {
-                (bcast::build(cl, root, c, bcast::BcastAlg::FullLane), 0.0, 1.0)
-            }
-            (Op::Bcast { root, c }, Algorithm::Native) => {
-                let n = self.persona.native_bcast(cl, root, c);
-                (n.schedule, n.quirk_add, n.quirk_mult)
-            }
-            (Op::Bcast { .. }, Algorithm::Bruck { .. }) => {
-                panic!("bruck is an alltoall algorithm")
-            }
-            (Op::Scatter { root, c }, Algorithm::KPorted { k }) => {
-                (scatter::build(cl, root, c, scatter::ScatterAlg::KPorted { k }), 0.0, 1.0)
-            }
-            (Op::Scatter { root, c }, Algorithm::KLane { k }) => {
-                (scatter::build(cl, root, c, scatter::ScatterAlg::KLane { k }), 0.0, 1.0)
-            }
-            (Op::Scatter { root, c }, Algorithm::FullLane) => {
-                (scatter::build(cl, root, c, scatter::ScatterAlg::FullLane), 0.0, 1.0)
-            }
-            (Op::Scatter { root, c }, Algorithm::Native) => {
-                let n = self.persona.native_scatter(cl, root, c);
-                (n.schedule, n.quirk_add, n.quirk_mult)
-            }
-            (Op::Scatter { .. }, Algorithm::Bruck { .. }) => {
-                panic!("bruck is an alltoall algorithm")
-            }
-            (Op::Alltoall { c }, Algorithm::KPorted { k }) => {
-                (alltoall::build(cl, c, alltoall::AlltoallAlg::KPorted { k }), 0.0, 1.0)
-            }
-            (Op::Alltoall { c }, Algorithm::KLane { .. }) => {
-                (alltoall::build(cl, c, alltoall::AlltoallAlg::KLane), 0.0, 1.0)
-            }
-            (Op::Alltoall { c }, Algorithm::FullLane) => {
-                (alltoall::build(cl, c, alltoall::AlltoallAlg::FullLane), 0.0, 1.0)
-            }
-            (Op::Alltoall { c }, Algorithm::Bruck { k }) => {
-                (alltoall::build(cl, c, alltoall::AlltoallAlg::Bruck { k }), 0.0, 1.0)
-            }
-            (Op::Alltoall { c }, Algorithm::Native) => {
-                let n = self.persona.native_alltoall(cl, c);
-                (n.schedule, n.quirk_add, n.quirk_mult)
-            }
-            // Gather: every scatter algorithm's dual (paper §2: "the
-            // gather operation is the dual of the scatter operation").
-            (Op::Gather { root, c }, Algorithm::KPorted { k }) => {
-                (gather::build(cl, root, c, gather::GatherAlg::KPorted { k }), 0.0, 1.0)
-            }
-            (Op::Gather { root, c }, Algorithm::KLane { k }) => {
-                (gather::build(cl, root, c, gather::GatherAlg::KLane { k }), 0.0, 1.0)
-            }
-            (Op::Gather { root, c }, Algorithm::FullLane) => {
-                (gather::build(cl, root, c, gather::GatherAlg::FullLane), 0.0, 1.0)
-            }
-            (Op::Gather { root, c }, Algorithm::Native) => {
-                // libraries use binomial gather across sizes
-                (gather::build(cl, root, c, gather::GatherAlg::Binomial), 0.0, 1.0)
-            }
-            (Op::Gather { .. }, Algorithm::Bruck { .. }) => {
-                panic!("bruck is not a gather algorithm")
-            }
-            // Allgather.
-            (Op::Allgather { c }, Algorithm::KPorted { k } | Algorithm::Bruck { k }) => {
-                (allgather::build(cl, c, allgather::AllgatherAlg::Bruck { k }), 0.0, 1.0)
-            }
-            (Op::Allgather { c }, Algorithm::KLane { .. } | Algorithm::FullLane) => {
-                (allgather::build(cl, c, allgather::AllgatherAlg::FullLane), 0.0, 1.0)
-            }
-            (Op::Allgather { c }, Algorithm::Native) => {
-                // ring for large, recursive doubling for small (MPI-like)
-                let alg = if c * 4 <= 8192 {
-                    allgather::AllgatherAlg::RecursiveDoubling
-                } else {
-                    allgather::AllgatherAlg::Ring
-                };
-                (allgather::build(cl, c, alg), 0.0, 1.0)
-            }
-        }
+    pub fn schedule(&self, op: Op, alg: &Alg) -> Result<Built, AlgError> {
+        alg.build(self.cluster, &self.persona, op)
     }
 
     /// Simulate (op, algorithm) under the persona's cost model and
     /// return paper-style (avg, min) of the slowest rank.
     ///
-    /// Count-invariant algorithms are served through the sweep engine:
-    /// the first count for a given (cluster, op shape, algorithm) builds
-    /// the schedule, later counts only re-cost it, so count sweeps and
-    /// repeated autotune calls share one cached structure per candidate.
-    pub fn run(&self, op: Op, alg: Algorithm) -> Measurement {
+    /// Count-invariant algorithms (`cache_id() == Some`) are served
+    /// through the sweep engine: the first count for a given (cluster,
+    /// op shape, algorithm) builds the schedule, later counts only
+    /// re-cost it, so count sweeps and repeated autotune calls share one
+    /// cached structure per candidate.
+    pub fn run(&self, op: Op, alg: &Alg) -> Result<Measurement, AlgError> {
         let model = self.persona.model;
-        let (cell, add, mult) = match alg_id(alg) {
+        let mut state = self.state.borrow_mut();
+        let (cell, add, mult) = match alg.cache_id() {
             Some(alg_key) => {
                 let key =
                     SweepKey { cluster: self.cluster, op: op_shape(op), alg: alg_key };
-                let cell = self.engine.borrow_mut().measure(
+                let cell = self.engine.measure(
                     key,
                     op.count(),
                     &model,
                     self.reps,
                     self.warmup,
                     self.seed,
+                    &mut *state,
                     |_| {
-                        let (schedule, add, mult) = self.schedule(op, alg);
+                        let built = self.schedule(op, alg)?;
                         // Cacheable algorithms must have neutral quirks
                         // (quirks vary with count; the cache would pin
                         // the first cell's values).
                         debug_assert!(
-                            add == 0.0 && mult == 1.0,
-                            "non-neutral quirk on cacheable algorithm {alg:?}"
+                            built.quirk_add == 0.0 && built.quirk_mult == 1.0,
+                            "non-neutral quirk on cacheable algorithm {}",
+                            alg.label()
                         );
-                        schedule
+                        Ok(built.schedule)
                     },
-                );
+                )?;
                 (cell, 0.0, 1.0)
             }
             None => {
-                let (schedule, add, mult) = self.schedule(op, alg);
-                let cell = self.engine.borrow_mut().measure_uncached(
-                    &schedule,
+                let built = self.schedule(op, alg)?;
+                let cell = self.engine.measure_uncached(
+                    &built.schedule,
                     &model,
                     self.reps,
                     self.warmup,
                     self.seed,
+                    &mut *state,
                 );
-                (cell, add, mult)
+                (cell, built.quirk_add, built.quirk_mult)
             }
         };
         let adj = |t: f64| t * mult + add;
-        Measurement {
+        Ok(Measurement {
             algorithm: cell.algorithm.to_string(),
-            k: match alg {
-                Algorithm::KPorted { k } | Algorithm::KLane { k } | Algorithm::Bruck { k } => k,
-                _ => self.cluster.lanes,
-            },
+            k: alg.k().unwrap_or(self.cluster.lanes),
             c: op.count(),
             summary: Summary {
                 avg: adj(cell.summary.avg),
@@ -298,56 +197,33 @@ impl Collectives {
                 max: adj(cell.summary.max),
                 reps: cell.summary.reps,
             },
-        }
+        })
     }
 
     /// Execute (op, algorithm) for real on the threaded backend.
-    pub fn execute(&self, op: Op, alg: Algorithm, rt: &ExecRuntime) -> Result<ExecReport> {
-        let (schedule, _, _) = self.schedule(op, alg);
-        rt.run(&schedule, self.reps, self.warmup)
+    pub fn execute(&self, op: Op, alg: &Alg, rt: &ExecRuntime) -> Result<ExecReport> {
+        let built = self.schedule(op, alg)?;
+        rt.run(&built.schedule, self.reps, self.warmup)
     }
 
     /// Pick the fastest algorithm (by simulated average) among the
     /// candidates. This is the coordinator's answer to the paper's
     /// conclusion that native selection "can easily be improved".
-    pub fn autotune(&self, op: Op, candidates: &[Algorithm]) -> (Algorithm, Measurement) {
+    pub fn autotune(&self, op: Op, candidates: &[Alg]) -> Result<(Alg, Measurement), AlgError> {
         assert!(!candidates.is_empty());
-        let mut best: Option<(Algorithm, Measurement)> = None;
-        for &alg in candidates {
-            let m = self.run(op, alg);
+        let mut best: Option<(Alg, Measurement)> = None;
+        for alg in candidates {
+            let m = self.run(op, alg)?;
             if best.as_ref().is_none_or(|(_, b)| m.summary.avg < b.summary.avg) {
-                best = Some((alg, m));
+                best = Some((alg.clone(), m));
             }
         }
-        best.unwrap()
+        Ok(best.expect("non-empty candidates"))
     }
 
-    /// Sensible candidate set per operation.
-    pub fn default_candidates(&self, op: Op) -> Vec<Algorithm> {
-        let lanes = self.cluster.lanes;
-        match op {
-            Op::Bcast { .. } | Op::Scatter { .. } | Op::Gather { .. } => vec![
-                Algorithm::KPorted { k: 1 },
-                Algorithm::KPorted { k: lanes },
-                Algorithm::KLane { k: lanes },
-                Algorithm::FullLane,
-                Algorithm::Native,
-            ],
-            Op::Allgather { .. } => vec![
-                Algorithm::Bruck { k: 1 },
-                Algorithm::Bruck { k: lanes },
-                Algorithm::FullLane,
-                Algorithm::Native,
-            ],
-            Op::Alltoall { .. } => vec![
-                Algorithm::KPorted { k: 1 },
-                Algorithm::KPorted { k: lanes },
-                Algorithm::Bruck { k: lanes },
-                Algorithm::KLane { k: lanes },
-                Algorithm::FullLane,
-                Algorithm::Native,
-            ],
-        }
+    /// The registry's default candidate set for this operation.
+    pub fn default_candidates(&self, op: Op) -> Vec<Alg> {
+        registry::registry().candidates(self.cluster, op.kind())
     }
 }
 
@@ -373,9 +249,31 @@ mod tests {
             Op::Alltoall { c: 8 },
         ] {
             for alg in c.default_candidates(op) {
-                let m = c.run(op, alg);
+                let m = c.run(op, &alg).unwrap_or_else(|e| panic!("{op:?} {alg:?}: {e}"));
                 assert!(m.summary.avg > 0.0, "{op:?} {alg:?}");
                 assert!(m.summary.min <= m.summary.avg);
+            }
+        }
+    }
+
+    #[test]
+    fn every_unsupported_pair_is_a_typed_error() {
+        // Exhaustive: no user-reachable (op, algorithm) combination may
+        // panic — unsupported ones must report UnsupportedCombination.
+        let c = coll();
+        for entry in registry::registry().entries() {
+            let alg = entry.instantiate(2);
+            for kind in OpKind::ALL {
+                let op = kind.op(8);
+                if entry.supports(kind) {
+                    c.run(op, &alg).unwrap_or_else(|e| panic!("{kind} {alg:?}: {e}"));
+                } else {
+                    let err = c.run(op, &alg).unwrap_err();
+                    assert!(
+                        matches!(err, AlgError::UnsupportedCombination { .. }),
+                        "{kind} {alg:?}: {err}"
+                    );
+                }
             }
         }
     }
@@ -385,7 +283,7 @@ mod tests {
         let mut c = Collectives::new(Cluster::hydra(2), PersonaName::IntelMpi);
         c.reps = 2;
         c.warmup = 0;
-        let m = c.run(Op::Bcast { root: 0, c: 1 }, Algorithm::Native);
+        let m = c.run(Op::Bcast { root: 0, c: 1 }, &registry::native()).unwrap();
         assert!(m.summary.avg > 900.0, "Intel small-bcast floor: {}", m.summary.avg);
     }
 
@@ -396,26 +294,29 @@ mod tests {
         c.reps = 2;
         c.warmup = 0;
         let op = Op::Bcast { root: 0, c: 1_000_000 };
-        let native = c.run(op, Algorithm::Native);
-        let (best_alg, best) = c.autotune(op, &c.default_candidates(op));
+        let native = c.run(op, &registry::native()).unwrap();
+        let (best_alg, best) = c.autotune(op, &c.default_candidates(op)).unwrap();
         assert!(best.summary.avg < native.summary.avg, "autotune should beat native");
         assert!(
-            matches!(best_alg, Algorithm::FullLane | Algorithm::KPorted { .. }),
+            matches!(best_alg.name(), "fulllane" | "kported"),
             "{best_alg:?}"
         );
     }
 
     #[test]
-    #[should_panic(expected = "bruck is an alltoall algorithm")]
-    fn bruck_rejected_for_bcast() {
-        coll().schedule(Op::Bcast { root: 0, c: 4 }, Algorithm::Bruck { k: 2 });
+    fn bruck_rejected_for_bcast_without_panic() {
+        let err = coll().run(Op::Bcast { root: 0, c: 4 }, &registry::bruck(2)).unwrap_err();
+        assert!(matches!(err, AlgError::UnsupportedCombination { .. }), "{err}");
+        let msg = err.to_string();
+        assert!(msg.starts_with("bruck does not support bcast; supported:"), "{msg}");
+        assert!(msg.contains("klane2p"), "registry-driven candidate list: {msg}");
     }
 
     #[test]
     fn count_sweep_shares_one_cached_schedule() {
         let c = coll();
         for count in [64u64, 6000, 64, 100_000] {
-            c.run(Op::Bcast { root: 0, c: count }, Algorithm::FullLane);
+            c.run(Op::Bcast { root: 0, c: count }, &registry::fulllane()).unwrap();
         }
         let st = c.sweep_stats();
         assert_eq!(st.schedules_built, 1, "{st:?}");
@@ -427,11 +328,11 @@ mod tests {
     fn cached_run_equals_per_cell_rebuild() {
         let c = coll();
         let op = Op::Scatter { root: 0, c: 16 };
-        let alg = Algorithm::KLane { k: 2 };
-        c.run(Op::Scatter { root: 0, c: 869 }, alg); // prime the cache
-        let cached = c.run(op, alg); // served by recost
+        let alg = registry::klane(2);
+        c.run(Op::Scatter { root: 0, c: 869 }, &alg).unwrap(); // prime the cache
+        let cached = c.run(op, &alg).unwrap(); // served by recost
         let fresh = sim::measure(
-            &c.schedule(op, alg).0,
+            &c.schedule(op, &alg).unwrap().schedule,
             &c.persona.model,
             c.reps,
             c.warmup,
@@ -443,10 +344,34 @@ mod tests {
     #[test]
     fn native_runs_bypass_the_shape_cache() {
         let c = coll();
-        c.run(Op::Bcast { root: 0, c: 16 }, Algorithm::Native);
-        c.run(Op::Bcast { root: 0, c: 1_000_000 }, Algorithm::Native);
+        c.run(Op::Bcast { root: 0, c: 16 }, &registry::native()).unwrap();
+        c.run(Op::Bcast { root: 0, c: 1_000_000 }, &registry::native()).unwrap();
         let st = c.sweep_stats();
         assert_eq!(st.schedules_built, 2, "{st:?}");
         assert_eq!(st.recosts + st.cache_hits, 0, "{st:?}");
+    }
+
+    #[test]
+    fn shared_engine_reused_across_collectives() {
+        // Two Collectives over one engine: the second run of the same
+        // sweep is served entirely from the first one's cached shape.
+        let engine = Arc::new(SweepEngine::new());
+        let mk = || {
+            let mut c = Collectives::with_engine(
+                Cluster::new(3, 4, 2),
+                PersonaName::OpenMpi,
+                engine.clone(),
+            );
+            c.reps = 2;
+            c.warmup = 0;
+            c
+        };
+        let op = Op::Bcast { root: 0, c: 64 };
+        let a = mk().run(op, &registry::fulllane()).unwrap();
+        let b = mk().run(op, &registry::fulllane()).unwrap();
+        assert_eq!(a.summary, b.summary, "deterministic across sharers");
+        let st = engine.stats();
+        assert_eq!(st.schedules_built, 1, "{st:?}");
+        assert_eq!(st.cache_hits, 1, "{st:?}");
     }
 }

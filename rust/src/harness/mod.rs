@@ -12,24 +12,37 @@
 //! * 38–49 — §4.4 alltoall (k-lane, k-ported k=1..6, full-lane + native;
 //!   × three libraries).
 //!
+//! Sections name their algorithm as a registry handle
+//! (`algorithms::registry::Alg`), so the specs track the catalog — a
+//! newly registered algorithm needs no harness changes to be swept.
+//!
 //! ## Environment
 //!
 //! * `MLANE_REPS` — simulated repetitions per cell (default 20; the
 //!   paper uses 100, see `sim::PAPER_REPS`).
 //! * `MLANE_THREADS` — worker threads for table generation (default:
-//!   available parallelism). Each worker owns a `Collectives` (and
-//!   therefore a `sim::SweepEngine` schedule cache) and processes whole
-//!   sections, so every count sweep stays on one warm cache; output row
-//!   order is deterministic regardless of the thread count.
+//!   available parallelism). Workers process whole sections, so every
+//!   count sweep stays on one warm shape; output row order is
+//!   deterministic regardless of the thread count.
+//! * `MLANE_CACHE_SHAPES` — bound on the shared schedule cache (see
+//!   `sim::sweep`).
+//!
+//! All tables run against one process-wide [`SweepEngine`]
+//! ([`shared_engine`]): sections of one table and repeated/overlapping
+//! tables (`mlane tables`, any persona mix) share cached schedules.
+//! Pass an explicit engine with [`run_table_with`] for isolated runs.
 
 pub mod anchors;
 
 use std::fmt::Write as _;
 use std::io::Write as _;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
 
-use crate::coordinator::{Algorithm, Collectives, Op};
+use crate::algorithms::registry::{self, Alg, OpKind};
+use crate::coordinator::Collectives;
 use crate::model::PersonaName;
+use crate::sim::SweepEngine;
 use crate::topology::Cluster;
 
 /// Count sweeps used by the paper (§4.2–4.4; MPI_INT elements).
@@ -41,30 +54,13 @@ pub const ALLTOALL_COUNTS: &[u64] = &[1, 6, 9, 53, 87, 521, 869];
 pub const NODE_VS_NET_COUNTS: &[u64] =
     &[1, 2, 4, 19, 32, 188, 313, 1875, 3125, 18750, 31250];
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum OpKind {
-    Bcast,
-    Scatter,
-    Alltoall,
-}
-
-impl OpKind {
-    fn op(&self, c: u64) -> Op {
-        match self {
-            OpKind::Bcast => Op::Bcast { root: 0, c },
-            OpKind::Scatter => Op::Scatter { root: 0, c },
-            OpKind::Alltoall => Op::Alltoall { c },
-        }
-    }
-}
-
 /// One series within a table (the paper's tables stack 1–3 of these).
 #[derive(Clone, Debug)]
 pub struct Section {
     pub heading: String,
     pub cluster: Cluster,
     pub op: OpKind,
-    pub alg: Algorithm,
+    pub alg: Alg,
     pub counts: &'static [u64],
 }
 
@@ -95,6 +91,14 @@ pub struct TableOut {
     pub rows: Vec<Row>,
 }
 
+/// The process-wide sweep engine behind `run_table`: the cross-table
+/// schedule cache. Personas are isolated by the engine's
+/// model-fingerprinted keys; size is bounded by `MLANE_CACHE_SHAPES`.
+pub fn shared_engine() -> Arc<SweepEngine> {
+    static ENGINE: OnceLock<Arc<SweepEngine>> = OnceLock::new();
+    ENGINE.get_or_init(|| Arc::new(SweepEngine::new())).clone()
+}
+
 /// Worker threads for table generation: `MLANE_THREADS` if set (> 0),
 /// else the machine's available parallelism.
 pub fn sweep_threads() -> usize {
@@ -107,16 +111,20 @@ pub fn sweep_threads() -> usize {
         })
 }
 
-/// One section's count sweep. A fresh `Collectives` per section keeps
-/// the sweep engine's schedule cache warm across the whole sweep (counts
-/// within a section share one communication structure) without any
-/// cross-thread synchronisation.
-fn run_section(persona: PersonaName, sec: &Section) -> Vec<Row> {
-    let coll = Collectives::new(sec.cluster, persona);
+/// One section's count sweep. The `Collectives` shares the engine (so
+/// shapes persist across sections and tables) but owns its rep state —
+/// no allocation inside the sweep, no cross-thread contention except on
+/// a shared shape.
+fn run_section(engine: &Arc<SweepEngine>, persona: PersonaName, sec: &Section) -> Vec<Row> {
+    let coll = Collectives::with_engine(sec.cluster, persona, engine.clone());
     sec.counts
         .iter()
         .map(|&c| {
-            let m = coll.run(sec.op.op(c), sec.alg);
+            // Spec sections come from the registry, so a build failure
+            // here is a broken spec, not user input — fail loudly.
+            let m = coll
+                .run(sec.op.op(c), &sec.alg)
+                .unwrap_or_else(|e| panic!("section {}: {e}", sec.heading));
             Row {
                 section: sec.heading.clone(),
                 k: m.k,
@@ -131,15 +139,22 @@ fn run_section(persona: PersonaName, sec: &Section) -> Vec<Row> {
         .collect()
 }
 
-/// Run every section of a table on the simulator. Sections run across
-/// scoped worker threads (see [`sweep_threads`]); rows come back in
-/// section order, identical to a serial run.
+/// Run every section of a table on the simulator, against the shared
+/// cross-table engine. Sections run across scoped worker threads (see
+/// [`sweep_threads`]); rows come back in section order, identical to a
+/// serial run.
 pub fn run_table(spec: &TableSpec) -> TableOut {
+    run_table_with(&shared_engine(), spec)
+}
+
+/// [`run_table`] against a caller-provided engine (isolated caches for
+/// tests and benchmarks).
+pub fn run_table_with(engine: &Arc<SweepEngine>, spec: &TableSpec) -> TableOut {
     let sections = &spec.sections;
     let workers = sweep_threads().min(sections.len()).max(1);
 
     let rows: Vec<Vec<Row>> = if workers <= 1 {
-        sections.iter().map(|sec| run_section(spec.persona, sec)).collect()
+        sections.iter().map(|sec| run_section(engine, spec.persona, sec)).collect()
     } else {
         // Work-stealing over section indices; each worker returns
         // (index, rows) pairs so ordering is reassembled exactly.
@@ -154,7 +169,7 @@ pub fn run_table(spec: &TableSpec) -> TableOut {
                             if i >= sections.len() {
                                 break;
                             }
-                            done.push((i, run_section(spec.persona, &sections[i])));
+                            done.push((i, run_section(engine, spec.persona, &sections[i])));
                         }
                         done
                     })
@@ -239,21 +254,22 @@ fn persona_ord(i: usize) -> PersonaName {
     [PersonaName::OpenMpi, PersonaName::IntelMpi, PersonaName::Mpich][i]
 }
 
-/// The full registry: every table of the paper.
+/// The full registry: every table of the paper. Algorithms are looked
+/// up in `algorithms::registry` by name — the specs carry no algorithm
+/// enumeration of their own.
 pub fn registry() -> Vec<TableSpec> {
     let mut tables = Vec::new();
 
     // ---- §4.1: Tables 2–7 (node vs network, p = 32) ----
     let net32 = Cluster::new(32, 1, 2); // N=32, n=1 (both rails usable, §4.1)
     let node32 = Cluster::new(1, 32, 2); // N=1, n=32
-    for (i, &(kported, base)) in [(true, 2u32), (false, 3u32)].iter().enumerate() {
-        let _ = i;
+    for &(kported, base) in &[(true, 2u32), (false, 3u32)] {
         for pi in 0..3 {
             let number = base + (pi as u32) * 2;
             let (label, alg) = if kported {
-                ("k-ported alltoall", Algorithm::KPorted { k: 31 })
+                ("k-ported alltoall", registry::kported(31))
             } else {
-                ("MPI_Alltoall", Algorithm::Native)
+                ("MPI_Alltoall", registry::native())
             };
             tables.push(TableSpec {
                 number,
@@ -264,7 +280,7 @@ pub fn registry() -> Vec<TableSpec> {
                         heading: format!("{label} N=32"),
                         cluster: net32,
                         op: OpKind::Alltoall,
-                        alg,
+                        alg: alg.clone(),
                         counts: NODE_VS_NET_COUNTS,
                     },
                     Section {
@@ -288,7 +304,7 @@ pub fn registry() -> Vec<TableSpec> {
                 heading: format!("Bcast, k = {k} lanes"),
                 cluster: hydra(),
                 op: OpKind::Bcast,
-                alg: Algorithm::KLane { k },
+                alg: registry::klane(k),
                 counts: BCAST_COUNTS,
             })
             .collect()
@@ -298,7 +314,7 @@ pub fn registry() -> Vec<TableSpec> {
                 heading: format!("Bcast, {k}-ported"),
                 cluster: hydra(),
                 op: OpKind::Bcast,
-                alg: Algorithm::KPorted { k },
+                alg: registry::kported(k),
                 counts: BCAST_COUNTS,
             })
             .collect()
@@ -336,14 +352,14 @@ pub fn registry() -> Vec<TableSpec> {
                     heading: "Full-lane Bcast".into(),
                     cluster: hydra(),
                     op: OpKind::Bcast,
-                    alg: Algorithm::FullLane,
+                    alg: registry::fulllane(),
                     counts: BCAST_COUNTS,
                 },
                 Section {
                     heading: "MPI_Bcast".into(),
                     cluster: hydra(),
                     op: OpKind::Bcast,
-                    alg: Algorithm::Native,
+                    alg: registry::native(),
                     counts: BCAST_COUNTS,
                 },
             ],
@@ -359,7 +375,7 @@ pub fn registry() -> Vec<TableSpec> {
                 heading: format!("Scatter, {k} lane{}", if k == 1 { "" } else { "s" }),
                 cluster: hydra(),
                 op: OpKind::Scatter,
-                alg: Algorithm::KLane { k },
+                alg: registry::klane(k),
                 counts: SCATTER_COUNTS,
             })
             .collect()
@@ -369,7 +385,7 @@ pub fn registry() -> Vec<TableSpec> {
                 heading: format!("Scatter, {k}-ported"),
                 cluster: hydra(),
                 op: OpKind::Scatter,
-                alg: Algorithm::KPorted { k },
+                alg: registry::kported(k),
                 counts: SCATTER_COUNTS,
             })
             .collect()
@@ -407,14 +423,14 @@ pub fn registry() -> Vec<TableSpec> {
                     heading: "Full-lane Scatter".into(),
                     cluster: hydra(),
                     op: OpKind::Scatter,
-                    alg: Algorithm::FullLane,
+                    alg: registry::fulllane(),
                     counts: SCATTER_COUNTS,
                 },
                 Section {
                     heading: "MPI_Scatter".into(),
                     cluster: hydra(),
                     op: OpKind::Scatter,
-                    alg: Algorithm::Native,
+                    alg: registry::native(),
                     counts: SCATTER_COUNTS,
                 },
             ],
@@ -430,7 +446,7 @@ pub fn registry() -> Vec<TableSpec> {
                 heading: format!("Alltoall, {k}-ported"),
                 cluster: hydra(),
                 op: OpKind::Alltoall,
-                alg: Algorithm::KPorted { k },
+                alg: registry::kported(k),
                 counts: ALLTOALL_COUNTS,
             })
             .collect()
@@ -443,7 +459,7 @@ pub fn registry() -> Vec<TableSpec> {
                 heading: "Alltoall, 32 virtual lanes".into(),
                 cluster: hydra(),
                 op: OpKind::Alltoall,
-                alg: Algorithm::KLane { k: 1 },
+                alg: registry::klane(1),
                 counts: ALLTOALL_COUNTS,
             }],
         });
@@ -468,14 +484,14 @@ pub fn registry() -> Vec<TableSpec> {
                     heading: "Full-lane Alltoall".into(),
                     cluster: hydra(),
                     op: OpKind::Alltoall,
-                    alg: Algorithm::FullLane,
+                    alg: registry::fulllane(),
                     counts: ALLTOALL_COUNTS,
                 },
                 Section {
                     heading: "MPI_Alltoall".into(),
                     cluster: hydra(),
                     op: OpKind::Alltoall,
-                    alg: Algorithm::Native,
+                    alg: registry::native(),
                     counts: ALLTOALL_COUNTS,
                 },
             ],
@@ -540,11 +556,11 @@ mod tests {
 
     #[test]
     fn parallel_rows_keep_serial_order() {
-        // Per-cell values are deterministic by design (each worker owns
-        // its Collectives; seeds don't depend on thread count) — the
-        // bitwise cached-vs-fresh guarantees are covered by the sweep
-        // engine and coordinator tests. Here: the parallel fan-out must
-        // reassemble rows in exact section/count order.
+        // Per-cell values are deterministic by design (workers share
+        // shapes behind per-shape locks; seeds don't depend on thread
+        // count) — the bitwise cached-vs-fresh guarantees are covered by
+        // the sweep engine and coordinator tests. Here: the parallel
+        // fan-out must reassemble rows in exact section/count order.
         let mut t = table(12).unwrap();
         for s in &mut t.sections {
             s.cluster = Cluster::new(3, 4, 2);

@@ -3,23 +3,31 @@
 //!
 //! ```text
 //! mlane table <N> [--persona openmpi|intelmpi|mpich] [--csv DIR]
-//! mlane tables [--csv DIR]                    # regenerate all 48 tables
-//! mlane run --op bcast|scatter|alltoall --alg kported|klane|fulllane|bruck|native
+//! mlane tables [--csv DIR]            # regenerate all 48 tables (2..49)
+//! mlane run --op bcast|scatter|gather|allgather|alltoall
+//!           --alg <registry name: kported|klane|klane2p|fulllane|bruck|...>
 //!           [--k K] [--c C] [--nodes N] [--cores n] [--lanes L]
 //!           [--backend sim|exec|xla] [--persona P]
 //! mlane autotune --op <op> [--c C] [--nodes N] [--cores n] [--lanes L]
-//! mlane compare                               # simulated vs paper anchors
-//! mlane validate [--nodes N] [--cores n]      # check schedule invariants
+//! mlane compare                       # simulated vs paper anchors
+//! mlane trace --op <op> --alg <alg> [--out FILE]  # Chrome trace of one run
+//! mlane validate [--nodes N] [--cores n]  # registry-exhaustive invariants
+//! mlane algs                          # list the algorithm catalog
 //! ```
+//!
+//! Algorithm names are resolved against `algorithms::registry` — the
+//! catalog, candidate sets, validation coverage and this help text all
+//! follow a new registration automatically.
 
 use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use mlane::coordinator::{Algorithm, Collectives, Op};
+use mlane::algorithms::registry::{registry, Alg, OpKind};
+use mlane::coordinator::{Collectives, Op};
 use mlane::exec::ExecRuntime;
 use mlane::harness::{self, anchors};
-use mlane::model::PersonaName;
+use mlane::model::{Persona, PersonaName};
 use mlane::runtime::XlaService;
 use mlane::schedule::validate::{validate, validate_ports};
 use mlane::topology::Cluster;
@@ -80,27 +88,26 @@ impl Args {
 
     fn op(&self) -> Result<Op> {
         let c = self.flag("c", 1000u64)?;
-        Ok(match self.flags.get("op").map(String::as_str) {
-            Some("bcast") | None => Op::Bcast { root: 0, c },
-            Some("scatter") => Op::Scatter { root: 0, c },
-            Some("gather") => Op::Gather { root: 0, c },
-            Some("allgather") => Op::Allgather { c },
-            Some("alltoall") => Op::Alltoall { c },
-            Some(other) => bail!("unknown op {other}"),
-        })
+        match self.flags.get("op").map(String::as_str) {
+            None => Ok(OpKind::Bcast.op(c)),
+            Some(name) => match OpKind::parse(name) {
+                Some(kind) => Ok(kind.op(c)),
+                None => bail!("unknown op {name} (ops: {})", op_names().join("|")),
+            },
+        }
     }
 
-    fn algorithm(&self) -> Result<Algorithm> {
+    /// `--alg`/`--k` resolved against the registry; unknown names and
+    /// invalid k come back as typed errors, never panics.
+    fn algorithm(&self) -> Result<Alg> {
         let k = self.flag("k", 2u32)?;
-        Ok(match self.flags.get("alg").map(String::as_str) {
-            Some("kported") | None => Algorithm::KPorted { k },
-            Some("klane") => Algorithm::KLane { k },
-            Some("fulllane") => Algorithm::FullLane,
-            Some("bruck") => Algorithm::Bruck { k },
-            Some("native") => Algorithm::Native,
-            Some(other) => bail!("unknown algorithm {other}"),
-        })
+        let name = self.flags.get("alg").map(String::as_str).unwrap_or("kported");
+        Ok(registry().resolve(name, k)?)
     }
+}
+
+fn op_names() -> Vec<&'static str> {
+    OpKind::ALL.iter().map(|k| k.name()).collect()
 }
 
 fn run() -> Result<()> {
@@ -113,27 +120,60 @@ fn run() -> Result<()> {
         "compare" => cmd_compare(),
         "trace" => cmd_trace(&args),
         "validate" => cmd_validate(&args),
+        "algs" => cmd_algs(),
         "help" | "--help" | "-h" => {
-            println!("{}", HELP);
+            println!("{}", help());
             Ok(())
         }
         other => bail!("unknown command {other} (try `mlane help`)"),
     }
 }
 
-const HELP: &str = "mlane — k-ported vs. k-lane collective algorithms (Träff 2020 reproduction)
+/// Help text; the op and algorithm lists are registry-driven so a new
+/// registration shows up here without edits.
+fn help() -> String {
+    format!(
+        "mlane — k-ported vs. k-lane collective algorithms (Träff 2020 reproduction)
 
 commands:
   table <N>   regenerate paper table N (2..49)   [--csv DIR]
-  tables      regenerate all tables              [--csv DIR]
+  tables      regenerate all 48 tables (2..49)   [--csv DIR]
   run         run one collective                 [--op --alg --k --c --nodes --cores --lanes --backend --persona]
   autotune    pick the fastest algorithm         [--op --c --nodes --cores --lanes --persona]
   compare     simulated vs paper anchor cells
   trace       emit a Chrome-trace of one simulated run  [--op --alg ... --out FILE]
-  validate    check schedule invariants          [--nodes --cores --lanes]
+  validate    check schedule invariants for the whole catalog  [--nodes --cores --lanes --persona]
+  algs        list the algorithm catalog
 
-environment: MLANE_REPS    (simulated repetitions, default 20)
-             MLANE_THREADS (table-generation workers, default: available parallelism)";
+flags:      --op  {}
+            --alg {}
+
+environment: MLANE_REPS         (simulated repetitions, default 20)
+             MLANE_THREADS      (table-generation workers, default: available parallelism)
+             MLANE_CACHE_SHAPES (shared schedule-cache bound, default 8)",
+        op_names().join("|"),
+        registry().names().join("|")
+    )
+}
+
+fn cmd_algs() -> Result<()> {
+    println!("algorithm catalog ({} families):", registry().entries().len());
+    for e in registry().entries() {
+        let ops: Vec<&str> = OpKind::ALL
+            .iter()
+            .filter(|&&k| e.supports(k))
+            .map(|k| k.name())
+            .collect();
+        println!(
+            "  {:<9} {} [{}]{}",
+            e.name(),
+            e.about(),
+            ops.join(", "),
+            if e.parameterized() { "  (--k)" } else { "" }
+        );
+    }
+    Ok(())
+}
 
 fn cmd_table(args: &Args) -> Result<()> {
     let n: u32 = args
@@ -154,6 +194,8 @@ fn cmd_table(args: &Args) -> Result<()> {
 
 fn cmd_tables(args: &Args) -> Result<()> {
     let dir = args.flags.get("csv").cloned().unwrap_or_else(|| "bench_out".into());
+    // All tables share the harness engine: overlapping sections across
+    // tables are served from one cross-table schedule cache.
     for spec in harness::registry() {
         let out = harness::run_table(&spec);
         print!("{}", out.render());
@@ -170,7 +212,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let coll = Collectives::new(cl, args.persona()?);
     match args.flags.get("backend").map(String::as_str) {
         Some("sim") | None => {
-            let m = coll.run(op, alg);
+            let m = coll.run(op, &alg)?;
             println!(
                 "{} {} p={} c={}  avg={:.2}us min={:.2}us  ({} reps)",
                 op.kind(),
@@ -188,7 +230,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             } else {
                 ExecRuntime::channels()
             };
-            let rep = coll.execute(op, alg, &rt)?;
+            let rep = coll.execute(op, &alg, &rt)?;
             println!(
                 "{} p={} c={}  wallclock avg={:.2}us min={:.2}us  blocks={} xla_phases={}",
                 op.kind(),
@@ -210,12 +252,19 @@ fn cmd_autotune(args: &Args) -> Result<()> {
     let op = args.op()?;
     let coll = Collectives::new(cl, args.persona()?);
     let candidates = coll.default_candidates(op);
-    println!("autotune {} c={} on {}x{} (k={} lanes):", op.kind(), op.count(), cl.nodes, cl.cores, cl.lanes);
-    for &alg in &candidates {
-        let m = coll.run(op, alg);
+    println!(
+        "autotune {} c={} on {}x{} (k={} lanes):",
+        op.kind(),
+        op.count(),
+        cl.nodes,
+        cl.cores,
+        cl.lanes
+    );
+    for alg in &candidates {
+        let m = coll.run(op, alg)?;
         println!("  {:24} avg={:.2}us min={:.2}us", m.algorithm, m.summary.avg, m.summary.min);
     }
-    let (best, m) = coll.autotune(op, &candidates);
+    let (best, m) = coll.autotune(op, &candidates)?;
     println!("winner: {} ({:.2}us)", best.label(), m.summary.avg);
     Ok(())
 }
@@ -240,44 +289,43 @@ fn cmd_compare() -> Result<()> {
     Ok(())
 }
 
+/// Validation element count per operation (kept small: structure, not
+/// timing, is under test).
+fn validation_count(op: OpKind) -> u64 {
+    match op {
+        OpKind::Bcast => 64,
+        OpKind::Scatter | OpKind::Gather => 16,
+        OpKind::Allgather | OpKind::Alltoall => 8,
+    }
+}
+
 fn cmd_validate(args: &Args) -> Result<()> {
-    use mlane::algorithms::{alltoall, bcast, scatter};
     let nodes = args.flag("nodes", 4u32)?;
     let cores = args.flag("cores", 4u32)?;
     let lanes = args.flag("lanes", 2u32)?;
     let cl = Cluster::new(nodes, cores, lanes);
+    let persona = Persona::get(args.persona()?);
     let mut count = 0;
-    let mut check = |s: mlane::schedule::Schedule, ports: u32| -> Result<()> {
-        validate(&s).map_err(|v| anyhow!("{}: {v}", s.algorithm))?;
-        validate_ports(&s, ports).map_err(|v| anyhow!("{} ports: {v}", s.algorithm))?;
-        count += 1;
-        Ok(())
-    };
-    for k in 1..=lanes.min(cores) {
-        check(bcast::build(cl, 0, 64, bcast::BcastAlg::KPorted { k }), k)?;
-        check(bcast::build(cl, 0, 64, bcast::BcastAlg::KLane { k, two_phase: false }), 1)?;
-        check(scatter::build(cl, 0, 16, scatter::ScatterAlg::KPorted { k }), k)?;
-        check(scatter::build(cl, 0, 16, scatter::ScatterAlg::KLane { k }), 1)?;
-        check(alltoall::build(cl, 8, alltoall::AlltoallAlg::KPorted { k }), k)?;
-        check(alltoall::build(cl, 8, alltoall::AlltoallAlg::Bruck { k }), k)?;
-    }
-    check(bcast::build(cl, 0, 64, bcast::BcastAlg::FullLane), 1)?;
-    check(bcast::build(cl, 0, 64, bcast::BcastAlg::Binomial), 1)?;
-    check(scatter::build(cl, 0, 16, scatter::ScatterAlg::FullLane), 1)?;
-    check(alltoall::build(cl, 8, alltoall::AlltoallAlg::KLane), cores)?;
-    check(alltoall::build(cl, 8, alltoall::AlltoallAlg::FullLane), 1)?;
-    {
-        use mlane::algorithms::{allgather, gather};
-        check(allgather::build(cl, 8, allgather::AllgatherAlg::Ring), 1)?;
-        check(allgather::build(cl, 8, allgather::AllgatherAlg::FullLane), 1)?;
-        for k in 1..=lanes.min(cores) {
-            check(allgather::build(cl, 8, allgather::AllgatherAlg::Bruck { k }), k)?;
-            check(gather::build(cl, 0, 8, gather::GatherAlg::KPorted { k }), k)?;
-            check(gather::build(cl, 0, 8, gather::GatherAlg::KLane { k }), 1)?;
+    // Registry-exhaustive: every registered instance × every operation
+    // it supports — a new registration is covered with no edits here.
+    for alg in registry().validation_instances(cl) {
+        for kind in OpKind::ALL {
+            if !alg.supports(kind) {
+                continue;
+            }
+            let built = alg
+                .build(cl, &persona, kind.op(validation_count(kind)))
+                .map_err(|e| anyhow!("{} {kind}: {e}", alg.label()))?;
+            let s = &built.schedule;
+            validate(s).map_err(|v| anyhow!("{}: {v}", s.algorithm))?;
+            validate_ports(s, alg.ports_required(cl, kind))
+                .map_err(|v| anyhow!("{} ports: {v}", s.algorithm))?;
+            count += 1;
         }
-        check(gather::build(cl, 0, 8, gather::GatherAlg::FullLane), 1)?;
     }
-    println!("validated {count} schedules on {nodes}x{cores} (lanes={lanes}): all invariants hold");
+    println!(
+        "validated {count} schedules on {nodes}x{cores} (lanes={lanes}): all invariants hold"
+    );
     Ok(())
 }
 
@@ -286,9 +334,9 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let op = args.op()?;
     let alg = args.algorithm()?;
     let coll = Collectives::new(cl, args.persona()?);
-    let (schedule, _, _) = coll.schedule(op, alg);
+    let built = coll.schedule(op, &alg)?;
     let out = args.flags.get("out").cloned().unwrap_or_else(|| "trace.json".into());
-    let trace = mlane::sim::trace::trace_run(&schedule, &coll.persona.model, 1);
+    let trace = mlane::sim::trace::trace_run(&built.schedule, &coll.persona.model, 1);
     std::fs::write(&out, trace.to_chrome_json())?;
     println!(
         "wrote {} ({} spans, makespan {:.2}us) — open in chrome://tracing or Perfetto",

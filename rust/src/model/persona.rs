@@ -10,7 +10,7 @@
 //! collectives only; the paper's own algorithms run on the plain model.
 
 use super::CostModel;
-use crate::algorithms::{alltoall, bcast, scatter};
+use crate::algorithms::{allgather, alltoall, bcast, gather, scatter};
 use crate::schedule::Schedule;
 use crate::topology::{Cluster, Rank};
 
@@ -179,6 +179,31 @@ impl Persona {
             schedule: scatter::build(cl, root, c, alg),
             quirk_add: add,
             quirk_mult: mult,
+        }
+    }
+
+    /// Native `MPI_Gather`: all three libraries run a binomial gather
+    /// across sizes (gather is scatter's dual, paper §2).
+    pub fn native_gather(&self, cl: Cluster, root: Rank, c: u64) -> NativeChoice {
+        NativeChoice {
+            schedule: gather::build(cl, root, c, gather::GatherAlg::Binomial),
+            quirk_add: 0.0,
+            quirk_mult: 1.0,
+        }
+    }
+
+    /// Native `MPI_Allgather`: recursive doubling for small counts,
+    /// ring for large (the MPI-like size switch).
+    pub fn native_allgather(&self, cl: Cluster, c: u64) -> NativeChoice {
+        let alg = if c * 4 <= 8192 {
+            allgather::AllgatherAlg::RecursiveDoubling
+        } else {
+            allgather::AllgatherAlg::Ring
+        };
+        NativeChoice {
+            schedule: allgather::build(cl, c, alg),
+            quirk_add: 0.0,
+            quirk_mult: 1.0,
         }
     }
 

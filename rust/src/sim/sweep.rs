@@ -12,17 +12,39 @@
 //!
 //! 1. [`Schedule::resize_count`] — rewrite transfer byte sizes in place;
 //! 2. [`Simulator::recost`] — rewrite per-transfer `bytes`/`dur`/`eager`;
-//! 3. [`Simulator::ensure_state`] — reuse the [`RepState`] allocations.
+//! 3. [`Simulator::ensure_state`] — reuse the caller's [`RepState`].
 //!
 //! Count-*dependent* selections (the native personas switch algorithms
 //! and quirks by size) go through [`SweepEngine::measure_uncached`],
 //! which still reuses the rep state but rebuilds the schedule.
 //!
+//! ## Sharing
+//!
+//! The engine is thread-safe and intended to be shared behind an `Arc`:
+//! one engine serves every `harness::run_table` section worker and every
+//! table of a `mlane tables` run (the cross-table schedule cache). The
+//! shape map is keyed by (cluster, op shape, algorithm, **cost-model
+//! fingerprint**), so personas with different models coexist in one
+//! engine without cross-talk; each shape sits behind its own lock, so
+//! workers sweeping different shapes never contend. [`RepState`] is
+//! per-caller (pass `&mut Option<RepState>`), keeping the rep loop
+//! allocation-free and thread-local.
+//!
+//! The cache holds at most [`SweepEngine::max_shapes`] shapes
+//! (`MLANE_CACHE_SHAPES`, default 8), evicting the oldest insertion —
+//! this bounds memory of long `mlane tables` runs at roughly
+//! `max_shapes × largest-shape` (a Hydra-scale alltoall shape is
+//! ~10^2 MB; paper tables have ≤ 3 sections, so 8 keeps whole tables
+//! plus cross-table reuse without unbounded growth).
+//!
 //! The recost path is bitwise-identical to a fresh build — the property
 //! test `rust/tests/recost_equivalence.rs` is the correctness gate.
 
-use std::collections::hash_map::Entry as MapEntry;
-use std::collections::HashMap;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashMap, VecDeque};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::model::CostModel;
 use crate::schedule::Schedule;
@@ -43,7 +65,8 @@ pub enum OpShape {
 }
 
 /// Algorithm identity for cache keying: family label plus its k
-/// parameter (0 for parameterless algorithms).
+/// parameter (0 for parameterless algorithms). Derived from
+/// `algorithms::registry::CollectiveAlgorithm::cache_id`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct AlgId {
     pub family: &'static str,
@@ -56,6 +79,51 @@ pub struct SweepKey {
     pub cluster: Cluster,
     pub op: OpShape,
     pub alg: AlgId,
+}
+
+/// Internal key: the public key plus the cost model's fingerprint, so
+/// one shared engine serves several personas without collisions.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct ShapeKey {
+    key: SweepKey,
+    model_fp: u64,
+}
+
+/// Fingerprint of a cost model for cache keying. Runs on the per-cell
+/// hot path, so no allocation: hash the raw field bits. The exhaustive
+/// destructuring (no `..`) makes adding a `CostModel` field a compile
+/// error here, so a new parameter can never silently alias two models.
+fn model_fingerprint(model: &CostModel) -> u64 {
+    let CostModel {
+        alpha_net,
+        beta_net,
+        phys_lanes,
+        eager_net,
+        alpha_shm,
+        beta_shm,
+        bus_servers,
+        eager_shm,
+        o_post,
+        o_match,
+        node_collective_call,
+        jitter_mean,
+    } = *model;
+    let mut h = DefaultHasher::new();
+    let floats = [
+        alpha_net,
+        beta_net,
+        alpha_shm,
+        beta_shm,
+        o_post,
+        o_match,
+        node_collective_call,
+        jitter_mean,
+    ];
+    for f in floats {
+        f.to_bits().hash(&mut h);
+    }
+    (phys_lanes, eager_net, bus_servers, eager_shm).hash(&mut h);
+    h.finish()
 }
 
 /// Counters for benchmarking and regression tracking (BENCH_engine.json).
@@ -71,12 +139,23 @@ pub struct SweepStats {
     pub cache_hits: u64,
 }
 
+#[derive(Default)]
+struct Counters {
+    cells: AtomicU64,
+    schedules_built: AtomicU64,
+    recosts: AtomicU64,
+    cache_hits: AtomicU64,
+}
+
 struct CachedShape {
     schedule: Schedule,
     sim: Simulator,
     /// Element count the cached shape is currently sized for.
     count: u64,
 }
+
+/// Lazily-filled per-shape slot; empty until the first successful build.
+type Slot = Arc<Mutex<Option<CachedShape>>>;
 
 /// One result cell, paper-style.
 #[derive(Clone, Copy, Debug)]
@@ -86,104 +165,190 @@ pub struct CellResult {
     pub algorithm: &'static str,
 }
 
-/// Schedule cache + shared rep state for fast count sweeps. Cheap to
-/// construct; intended to live as long as a sweep (one per
-/// `coordinator::Collectives`, one per table section worker).
-#[derive(Default)]
+/// Shared, thread-safe schedule cache for fast count sweeps. Cheap to
+/// construct; clone the `Arc` to share one cache across section workers,
+/// tables, and personas.
 pub struct SweepEngine {
-    shapes: HashMap<SweepKey, CachedShape>,
-    /// Shared across cells; reshaped by `Simulator::ensure_state`.
-    state: Option<RepState>,
-    stats: SweepStats,
+    shapes: Mutex<ShapeMap>,
+    stats: Counters,
+    max_shapes: usize,
+}
+
+#[derive(Default)]
+struct ShapeMap {
+    slots: HashMap<ShapeKey, Slot>,
+    /// Insertion order, for bounded-size eviction.
+    order: VecDeque<ShapeKey>,
+}
+
+impl Default for SweepEngine {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl SweepEngine {
     pub fn new() -> Self {
-        Self::default()
+        let max_shapes = std::env::var("MLANE_CACHE_SHAPES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(8);
+        Self::with_capacity(max_shapes)
+    }
+
+    /// An engine holding at most `max_shapes` cached shapes.
+    pub fn with_capacity(max_shapes: usize) -> Self {
+        SweepEngine {
+            shapes: Mutex::new(ShapeMap::default()),
+            stats: Counters::default(),
+            max_shapes: max_shapes.max(1),
+        }
     }
 
     pub fn stats(&self) -> SweepStats {
-        self.stats
+        SweepStats {
+            cells: self.stats.cells.load(Ordering::Relaxed),
+            schedules_built: self.stats.schedules_built.load(Ordering::Relaxed),
+            recosts: self.stats.recosts.load(Ordering::Relaxed),
+            cache_hits: self.stats.cache_hits.load(Ordering::Relaxed),
+        }
     }
 
-    /// Number of distinct cached communication structures.
+    /// Number of distinct cached communication structures. Snapshots
+    /// the slot list first — probing a slot can block behind an
+    /// in-flight measure, and the map lock must not be held then (it
+    /// would stall every other worker's cache lookup).
     pub fn cached_shapes(&self) -> usize {
-        self.shapes.len()
+        let slots: Vec<Slot> = self.shapes.lock().unwrap().slots.values().cloned().collect();
+        slots.iter().filter(|s| s.lock().unwrap().is_some()).count()
+    }
+
+    /// Cache-size bound (shapes), from `MLANE_CACHE_SHAPES`.
+    pub fn max_shapes(&self) -> usize {
+        self.max_shapes
+    }
+
+    /// Fetch (or create, evicting the oldest entry when full) the slot
+    /// for a key. The map lock is held only for this lookup; building
+    /// and measuring happen under the slot's own lock.
+    fn slot(&self, skey: ShapeKey) -> Slot {
+        let mut map = self.shapes.lock().unwrap();
+        if let Some(slot) = map.slots.get(&skey) {
+            return slot.clone();
+        }
+        if map.slots.len() >= self.max_shapes {
+            if let Some(old) = map.order.pop_front() {
+                // In-flight users keep the shape alive via their Arc;
+                // it drops when the last of them finishes its cell.
+                map.slots.remove(&old);
+            }
+        }
+        let slot: Slot = Arc::new(Mutex::new(None));
+        map.slots.insert(skey, slot.clone());
+        map.order.push_back(skey);
+        slot
+    }
+
+    /// Drop `skey` from the map if it still refers to `slot` — used to
+    /// un-register a slot whose build failed, so it cannot pin cache
+    /// capacity (and evict live shapes) forever.
+    fn forget(&self, skey: ShapeKey, slot: &Slot) {
+        let mut map = self.shapes.lock().unwrap();
+        if map.slots.get(&skey).is_some_and(|s| Arc::ptr_eq(s, slot)) {
+            map.slots.remove(&skey);
+            map.order.retain(|k| *k != skey);
+        }
     }
 
     /// Measure one cell of a count sweep for a count-invariant
     /// algorithm. `build` constructs the schedule for a given count and
-    /// is only called when `key` misses the cache; subsequent counts are
-    /// served by resize + recost.
+    /// is only called when `key` misses the cache (a build error leaves
+    /// the cache unchanged); subsequent counts are served by resize +
+    /// recost. `state` is the caller's reusable rep state — pass the
+    /// same `Option` across cells to keep the rep loop allocation-free.
     #[allow(clippy::too_many_arguments)]
-    pub fn measure(
-        &mut self,
+    pub fn measure<E>(
+        &self,
         key: SweepKey,
         count: u64,
         model: &CostModel,
         reps: usize,
         warmup: usize,
         seed: u64,
-        build: impl FnOnce(u64) -> Schedule,
-    ) -> CellResult {
+        state: &mut Option<RepState>,
+        build: impl FnOnce(u64) -> Result<Schedule, E>,
+    ) -> Result<CellResult, E> {
+        let skey = ShapeKey { key, model_fp: model_fingerprint(model) };
+        let slot = self.slot(skey);
+        let mut guard = slot.lock().unwrap();
         let mut built = false;
         let mut recosted = false;
-        let entry = match self.shapes.entry(key) {
-            MapEntry::Occupied(e) => e.into_mut(),
-            MapEntry::Vacant(v) => {
-                built = true;
-                let schedule = build(count);
-                let sim = Simulator::new(&schedule, model);
-                v.insert(CachedShape { schedule, sim, count })
-            }
-        };
-        // Hard assert (cheap vs. a rep loop): a stale model would
-        // silently produce timings under the old parameters otherwise —
-        // e.g. mutating a pub `persona.model` between runs.
-        assert_eq!(
-            entry.sim.model(),
-            model,
-            "sweep key reused with a different cost model — \
-             build a fresh engine/Collectives per model"
-        );
-        if entry.count != count {
-            recosted = true;
-            entry.schedule.resize_count(count);
-            entry.sim.recost(&entry.schedule);
-            entry.count = count;
-        }
-        let st = self.state.get_or_insert_with(|| entry.sim.new_state());
-        entry.sim.ensure_state(st);
-        let summary = measure_sim(&entry.sim, st, reps, warmup, seed);
-        let algorithm = entry.schedule.algorithm;
-        self.stats.cells += 1;
-        if built {
-            self.stats.schedules_built += 1;
-        } else if recosted {
-            self.stats.recosts += 1;
+        if guard.is_none() {
+            built = true;
+            let schedule = match build(count) {
+                Ok(s) => s,
+                Err(e) => {
+                    // Waiters on this slot keep their Arc and retry
+                    // the build themselves; the map entry must go.
+                    drop(guard);
+                    self.forget(skey, &slot);
+                    return Err(e);
+                }
+            };
+            let sim = Simulator::new(&schedule, model);
+            *guard = Some(CachedShape { schedule, sim, count });
         } else {
-            self.stats.cache_hits += 1;
+            let shape = guard.as_mut().expect("checked above");
+            // Hard assert (cheap vs. a rep loop): a fingerprint
+            // collision would silently produce timings under the
+            // wrong model parameters otherwise.
+            assert_eq!(
+                shape.sim.model(),
+                model,
+                "sweep key reused with a different cost model"
+            );
+            if shape.count != count {
+                recosted = true;
+                shape.schedule.resize_count(count);
+                shape.sim.recost(&shape.schedule);
+                shape.count = count;
+            }
         }
-        CellResult { summary, algorithm }
+        let shape = guard.as_ref().expect("slot filled above");
+        let st = state.get_or_insert_with(|| shape.sim.new_state());
+        shape.sim.ensure_state(st);
+        let summary = measure_sim(&shape.sim, st, reps, warmup, seed);
+        let algorithm = shape.schedule.algorithm;
+        self.stats.cells.fetch_add(1, Ordering::Relaxed);
+        if built {
+            self.stats.schedules_built.fetch_add(1, Ordering::Relaxed);
+        } else if recosted {
+            self.stats.recosts.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(CellResult { summary, algorithm })
     }
 
     /// Measure a prebuilt schedule without caching it (count-dependent
-    /// algorithm selection — native personas). Still reuses the shared
+    /// algorithm selection — native personas). Still reuses the caller's
     /// rep state, so the rep loop stays allocation-free.
     pub fn measure_uncached(
-        &mut self,
+        &self,
         schedule: &Schedule,
         model: &CostModel,
         reps: usize,
         warmup: usize,
         seed: u64,
+        state: &mut Option<RepState>,
     ) -> CellResult {
         let sim = Simulator::new(schedule, model);
-        let st = self.state.get_or_insert_with(|| sim.new_state());
+        let st = state.get_or_insert_with(|| sim.new_state());
         sim.ensure_state(st);
         let summary = measure_sim(&sim, st, reps, warmup, seed);
-        self.stats.cells += 1;
-        self.stats.schedules_built += 1;
+        self.stats.cells.fetch_add(1, Ordering::Relaxed);
+        self.stats.schedules_built.fetch_add(1, Ordering::Relaxed);
         CellResult { summary, algorithm: schedule.algorithm }
     }
 }
@@ -196,6 +361,11 @@ mod tests {
     use crate::sim;
     use crate::topology::Cluster;
 
+    /// Infallible build helper for the tests.
+    fn ok(s: Schedule) -> Result<Schedule, std::convert::Infallible> {
+        Ok(s)
+    }
+
     fn key(cl: Cluster) -> SweepKey {
         SweepKey {
             cluster: cl,
@@ -204,17 +374,18 @@ mod tests {
         }
     }
 
-    fn build(cl: Cluster) -> impl Fn(u64) -> Schedule {
-        move |c| bcast::build(cl, 0, c, BcastAlg::KLane { k: 2, two_phase: false })
+    fn build(cl: Cluster) -> impl Fn(u64) -> Result<Schedule, std::convert::Infallible> {
+        move |c| ok(bcast::build(cl, 0, c, BcastAlg::KLane { k: 2, two_phase: false }))
     }
 
     #[test]
     fn sweep_matches_per_cell_rebuild() {
         let cl = Cluster::new(4, 4, 2);
         let m = CostModel::hydra_baseline();
-        let mut eng = SweepEngine::new();
+        let eng = SweepEngine::new();
+        let mut st = None;
         for &c in &[1u64, 100, 6000, 100_000, 100] {
-            let cell = eng.measure(key(cl), c, &m, 4, 1, 7, build(cl));
+            let cell = eng.measure(key(cl), c, &m, 4, 1, 7, &mut st, build(cl)).unwrap();
             let fresh = sim::measure(
                 &bcast::build(cl, 0, c, BcastAlg::KLane { k: 2, two_phase: false }),
                 &m,
@@ -231,11 +402,12 @@ mod tests {
     fn cache_counters_track_the_paths() {
         let cl = Cluster::new(2, 4, 2);
         let m = CostModel::hydra_baseline();
-        let mut eng = SweepEngine::new();
-        eng.measure(key(cl), 1, &m, 2, 0, 1, build(cl)); // build
-        eng.measure(key(cl), 50, &m, 2, 0, 1, build(cl)); // recost
-        eng.measure(key(cl), 50, &m, 2, 0, 1, build(cl)); // hit
-        eng.measure(key(cl), 1, &m, 2, 0, 1, build(cl)); // recost back
+        let eng = SweepEngine::new();
+        let mut st = None;
+        eng.measure(key(cl), 1, &m, 2, 0, 1, &mut st, build(cl)).unwrap(); // build
+        eng.measure(key(cl), 50, &m, 2, 0, 1, &mut st, build(cl)).unwrap(); // recost
+        eng.measure(key(cl), 50, &m, 2, 0, 1, &mut st, build(cl)).unwrap(); // hit
+        eng.measure(key(cl), 1, &m, 2, 0, 1, &mut st, build(cl)).unwrap(); // recost back
         let st = eng.stats();
         assert_eq!(
             (st.cells, st.schedules_built, st.recosts, st.cache_hits),
@@ -248,7 +420,8 @@ mod tests {
     fn uncached_path_reuses_state_but_rebuilds() {
         let cl = Cluster::new(2, 4, 2);
         let m = CostModel::hydra_baseline();
-        let mut eng = SweepEngine::new();
+        let eng = SweepEngine::new();
+        let mut st = None;
         for &c in &[1u64, 16_384] {
             let cell = eng.measure_uncached(
                 &bcast::build(cl, 0, c, BcastAlg::Binomial),
@@ -256,6 +429,7 @@ mod tests {
                 3,
                 1,
                 9,
+                &mut st,
             );
             let fresh =
                 sim::measure(&bcast::build(cl, 0, c, BcastAlg::Binomial), &m, 3, 1, 9);
@@ -269,14 +443,129 @@ mod tests {
     fn distinct_keys_do_not_collide() {
         let cl = Cluster::new(2, 4, 2);
         let m = CostModel::hydra_baseline();
-        let mut eng = SweepEngine::new();
-        let a = eng.measure(key(cl), 64, &m, 2, 0, 3, build(cl));
+        let eng = SweepEngine::new();
+        let mut st = None;
+        let a = eng.measure(key(cl), 64, &m, 2, 0, 3, &mut st, build(cl)).unwrap();
         let mut k2 = key(cl);
         k2.alg = AlgId { family: "kported", k: 2 };
-        let b = eng.measure(k2, 64, &m, 2, 0, 3, |c| {
-            bcast::build(cl, 0, c, BcastAlg::KPorted { k: 2 })
-        });
+        let b = eng
+            .measure(k2, 64, &m, 2, 0, 3, &mut st, |c| {
+                ok(bcast::build(cl, 0, c, BcastAlg::KPorted { k: 2 }))
+            })
+            .unwrap();
         assert_eq!(eng.cached_shapes(), 2);
         assert_ne!(a.algorithm, b.algorithm);
+    }
+
+    #[test]
+    fn distinct_models_shard_the_same_key() {
+        // Two personas sweeping the same (cluster, op, alg) through one
+        // shared engine must each get their own cached shape.
+        let cl = Cluster::new(2, 4, 2);
+        let m1 = CostModel::hydra_baseline();
+        let mut m2 = CostModel::hydra_baseline();
+        m2.alpha_net *= 2.0;
+        let eng = SweepEngine::new();
+        let mut st = None;
+        let a = eng.measure(key(cl), 64, &m1, 2, 0, 3, &mut st, build(cl)).unwrap();
+        let b = eng.measure(key(cl), 64, &m2, 2, 0, 3, &mut st, build(cl)).unwrap();
+        assert_eq!(eng.cached_shapes(), 2);
+        assert_eq!(eng.stats().schedules_built, 2);
+        assert!(b.summary.avg > a.summary.avg, "slower model must cost more");
+        // Re-measuring under each model hits its own shape.
+        eng.measure(key(cl), 64, &m1, 2, 0, 3, &mut st, build(cl)).unwrap();
+        assert_eq!(eng.stats().cache_hits, 1);
+    }
+
+    #[test]
+    fn build_errors_propagate_and_leave_cache_empty() {
+        let cl = Cluster::new(2, 4, 2);
+        let m = CostModel::hydra_baseline();
+        let eng = SweepEngine::new();
+        let mut st = None;
+        let err = eng
+            .measure(key(cl), 8, &m, 2, 0, 1, &mut st, |_| Err::<Schedule, _>("nope"))
+            .unwrap_err();
+        assert_eq!(err, "nope");
+        assert_eq!(eng.cached_shapes(), 0);
+        assert_eq!(eng.stats().cells, 0);
+        // The key is retried on the next attempt.
+        eng.measure(key(cl), 8, &m, 2, 0, 1, &mut st, build(cl)).unwrap();
+        assert_eq!(eng.cached_shapes(), 1);
+    }
+
+    #[test]
+    fn failed_builds_do_not_pin_cache_capacity() {
+        // A failing key must be fully un-registered: distinct failing
+        // keys must never evict a live shape from a bounded cache.
+        let cl = Cluster::new(2, 4, 2);
+        let m = CostModel::hydra_baseline();
+        let eng = SweepEngine::with_capacity(2);
+        let mut st = None;
+        eng.measure(key(cl), 8, &m, 2, 0, 1, &mut st, build(cl)).unwrap();
+        for k in 10..=11u32 {
+            let mut bad = key(cl);
+            bad.alg = AlgId { family: "broken", k };
+            eng.measure(bad, 8, &m, 2, 0, 1, &mut st, |_| Err::<Schedule, _>("nope"))
+                .unwrap_err();
+        }
+        // Same key, same count: must be a cache hit, not a rebuild.
+        eng.measure(key(cl), 8, &m, 2, 0, 1, &mut st, build(cl)).unwrap();
+        let stats = eng.stats();
+        assert_eq!(stats.schedules_built, 1, "{stats:?}");
+        assert_eq!(stats.cache_hits, 1, "{stats:?}");
+    }
+
+    #[test]
+    fn eviction_bounds_the_shape_count() {
+        let cl = Cluster::new(2, 4, 2);
+        let m = CostModel::hydra_baseline();
+        let eng = SweepEngine::with_capacity(2);
+        let mut st = None;
+        for k in 1..=3u32 {
+            let mut key = key(cl);
+            key.alg = AlgId { family: "kported", k };
+            eng.measure(key, 8, &m, 1, 0, 1, &mut st, |c| {
+                ok(bcast::build(cl, 0, c, BcastAlg::KPorted { k }))
+            })
+            .unwrap();
+        }
+        assert_eq!(eng.stats().schedules_built, 3);
+        assert!(eng.cached_shapes() <= 2, "{}", eng.cached_shapes());
+    }
+
+    #[test]
+    fn shared_engine_is_safe_across_threads() {
+        let cl = Cluster::new(2, 4, 2);
+        let m = CostModel::hydra_baseline();
+        let eng = std::sync::Arc::new(SweepEngine::new());
+        std::thread::scope(|scope| {
+            for t in 0..4u32 {
+                let eng = eng.clone();
+                scope.spawn(move || {
+                    let k = t % 2 + 1;
+                    let mut st = None;
+                    let mut key = key(cl);
+                    key.alg = AlgId { family: "kported", k };
+                    for &c in &[1u64, 64, 1000] {
+                        let cell = eng
+                            .measure(key, c, &m, 2, 0, 5, &mut st, |c| {
+                                ok(bcast::build(cl, 0, c, BcastAlg::KPorted { k }))
+                            })
+                            .unwrap();
+                        let fresh = sim::measure(
+                            &bcast::build(cl, 0, c, BcastAlg::KPorted { k }),
+                            &m,
+                            2,
+                            0,
+                            5,
+                        );
+                        assert_eq!(cell.summary, fresh, "k={k} c={c}");
+                    }
+                });
+            }
+        });
+        assert_eq!(eng.cached_shapes(), 2);
+        assert_eq!(eng.stats().cells, 12);
     }
 }

@@ -1,0 +1,106 @@
+//! CLI error-path contract: invalid (op, algorithm) combinations must
+//! exit 1 with a clean registry-driven message — no panics — and newly
+//! registered algorithms must be reachable through `--alg` with no CLI
+//! edits (the two-phase k-lane variant is the canary).
+
+use std::process::{Command, Output};
+
+fn mlane(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_mlane"))
+        .args(args)
+        .env("MLANE_REPS", "2")
+        .output()
+        .expect("spawn mlane")
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn unsupported_op_alg_pair_exits_cleanly() {
+    let out = mlane(&[
+        "run", "--op", "bcast", "--alg", "bruck", "--nodes", "2", "--cores", "2",
+    ]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    let err = stderr(&out);
+    assert!(
+        err.contains("error: bruck does not support bcast; supported:"),
+        "stderr: {err}"
+    );
+    // The supported list is registry-driven and includes the
+    // registered-only two-phase variant.
+    assert!(err.contains("klane2p"), "stderr: {err}");
+    assert!(!err.contains("panicked"), "panic leaked to the user: {err}");
+}
+
+#[test]
+fn more_unsupported_pairs_never_panic() {
+    for (op, alg) in
+        [("scatter", "bruck"), ("gather", "bruck"), ("bcast", "ring"), ("allgather", "kported")]
+    {
+        let out =
+            mlane(&["run", "--op", op, "--alg", alg, "--nodes", "2", "--cores", "2"]);
+        assert_eq!(out.status.code(), Some(1), "{op}/{alg}: {}", stderr(&out));
+        let err = stderr(&out);
+        assert!(err.contains("does not support"), "{op}/{alg}: {err}");
+        assert!(!err.contains("panicked"), "{op}/{alg} panicked: {err}");
+    }
+}
+
+#[test]
+fn unknown_algorithm_lists_the_catalog() {
+    let out = mlane(&["run", "--op", "bcast", "--alg", "nosuch"]);
+    assert_eq!(out.status.code(), Some(1));
+    let err = stderr(&out);
+    assert!(err.contains("unknown algorithm nosuch; known:"), "{err}");
+    assert!(err.contains("kported") && err.contains("klane2p"), "{err}");
+}
+
+#[test]
+fn invalid_k_is_a_clean_error() {
+    // k = 0 is rejected at resolve time; k > cores at build time.
+    let out = mlane(&["run", "--op", "bcast", "--alg", "kported", "--k", "0"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("k = 0 is invalid"), "{}", stderr(&out));
+
+    let out = mlane(&[
+        "run", "--op", "bcast", "--alg", "klane", "--k", "9", "--nodes", "2", "--cores",
+        "4",
+    ]);
+    assert_eq!(out.status.code(), Some(1));
+    let err = stderr(&out);
+    assert!(err.contains("k = 9 is invalid"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+#[test]
+fn two_phase_klane_reachable_from_cli() {
+    // Registered purely through the catalog, runnable with no main.rs
+    // edits.
+    let out = mlane(&[
+        "run", "--op", "bcast", "--alg", "klane2p", "--k", "2", "--nodes", "2",
+        "--cores", "4", "--c", "64",
+    ]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    assert!(stdout(&out).contains("bcast/k-lane-2phase"), "stdout: {}", stdout(&out));
+}
+
+#[test]
+fn help_and_algs_are_registry_driven() {
+    let help = mlane(&["help"]);
+    assert_eq!(help.status.code(), Some(0));
+    let text = stdout(&help);
+    // Doc-drift guards: all five ops, the trace command, the catalog.
+    for needle in ["gather", "allgather", "trace", "klane2p", "all 48 tables (2..49)"] {
+        assert!(text.contains(needle), "help missing {needle:?}: {text}");
+    }
+
+    let algs = mlane(&["algs"]);
+    assert_eq!(algs.status.code(), Some(0));
+    assert!(stdout(&algs).contains("klane2p"), "{}", stdout(&algs));
+}

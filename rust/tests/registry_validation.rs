@@ -1,0 +1,96 @@
+//! Registry-exhaustive validation: every registered algorithm × every
+//! operation it supports × a grid of cluster shapes must produce a
+//! schedule that passes `validate` (full data-movement invariants) and
+//! `validate_ports` under the algorithm's own `ports_required`.
+//!
+//! This replaces the old hand-maintained checklist in `cmd_validate`:
+//! a newly registered algorithm (e.g. the two-phase k-lane broadcast
+//! variant, `klane2p`) is covered here with **no edits to this test**.
+
+use mlane::algorithms::registry::{registry, OpKind};
+use mlane::model::{Persona, PersonaName};
+use mlane::schedule::validate::{validate, validate_ports};
+use mlane::topology::Cluster;
+
+/// Small, structure-exercising counts (uneven splits included via the
+/// 3×5 cluster below).
+fn count_for(op: OpKind) -> u64 {
+    match op {
+        OpKind::Bcast => 64,
+        OpKind::Scatter | OpKind::Gather => 16,
+        OpKind::Allgather | OpKind::Alltoall => 8,
+    }
+}
+
+/// Power-of-two, even, and uneven layouts.
+fn clusters() -> [Cluster; 3] {
+    [Cluster::new(2, 2, 1), Cluster::new(4, 4, 2), Cluster::new(3, 5, 2)]
+}
+
+#[test]
+fn every_registered_algorithm_validates_on_every_supported_op() {
+    let persona = Persona::get(PersonaName::OpenMpi);
+    let mut checked = 0usize;
+    for cl in clusters() {
+        for alg in registry().validation_instances(cl) {
+            for op in OpKind::ALL {
+                if !alg.supports(op) {
+                    // Unsupported pairs must be typed errors, not panics.
+                    assert!(
+                        alg.build(cl, &persona, op.op(count_for(op))).is_err(),
+                        "{} should reject {op}",
+                        alg.label()
+                    );
+                    continue;
+                }
+                let built = alg
+                    .build(cl, &persona, op.op(count_for(op)))
+                    .unwrap_or_else(|e| panic!("{} {op} on {cl:?}: {e}", alg.label()));
+                let s = &built.schedule;
+                validate(s).unwrap_or_else(|v| {
+                    panic!("{} {op} on {cl:?}: invalid: {v}", s.algorithm)
+                });
+                validate_ports(s, alg.ports_required(cl, op)).unwrap_or_else(|v| {
+                    panic!("{} {op} on {cl:?}: ports: {v}", s.algorithm)
+                });
+                checked += 1;
+            }
+        }
+    }
+    // Sanity: the sweep actually covered a substantial grid (9 families,
+    // parameterized ones over k ranges, up to 5 ops each).
+    assert!(checked >= 60, "only {checked} combinations checked");
+}
+
+#[test]
+fn native_schedules_validate_for_every_persona() {
+    // Native selection depends on the persona; exercise all three.
+    let cl = Cluster::new(3, 4, 2);
+    let native = registry().resolve("native", 0).unwrap();
+    for name in PersonaName::all() {
+        let persona = Persona::get(name);
+        for op in OpKind::ALL {
+            for c in [1u64, 64, 100_000] {
+                let built = native
+                    .build(cl, &persona, op.op(c))
+                    .unwrap_or_else(|e| panic!("native {op} c={c}: {e}"));
+                validate(&built.schedule).unwrap_or_else(|v| {
+                    panic!("{:?} native {op} c={c}: {v}", name)
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn ports_required_is_tight_enough_to_matter() {
+    // The declared port budgets must really be the limit: k-ported with
+    // k=2 must *violate* a 1-port validation (otherwise ports_required
+    // would be vacuous and the exhaustive test above toothless).
+    let cl = Cluster::new(4, 4, 2);
+    let persona = Persona::get(PersonaName::OpenMpi);
+    let alg = registry().resolve("kported", 2).unwrap();
+    let built = alg.build(cl, &persona, OpKind::Bcast.op(64)).unwrap();
+    assert!(validate_ports(&built.schedule, 1).is_err(), "2-ported fits 1 port?");
+    assert!(validate_ports(&built.schedule, 2).is_ok());
+}

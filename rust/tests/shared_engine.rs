@@ -1,0 +1,64 @@
+//! Cross-table schedule-cache contract: `harness::run_table` calls that
+//! share a `SweepEngine` must reuse cached shapes — the second run of a
+//! table builds **zero** new schedules — while personas with different
+//! cost models stay isolated within the same engine.
+//!
+//! One test function: it mutates `MLANE_REPS`, and parallel test
+//! threads in this binary would race on the environment otherwise.
+
+use std::sync::Arc;
+
+use mlane::harness::{self, run_table_with};
+use mlane::sim::SweepEngine;
+use mlane::topology::Cluster;
+
+/// A paper table shrunk to a fast grid. Tables 8/13 (k-lane bcast
+/// k=1,2,3; Open MPI / Intel MPI) are all-cacheable: no count-dependent
+/// native selection.
+fn small_table(number: u32) -> harness::TableSpec {
+    let mut t = harness::table(number).unwrap();
+    for s in &mut t.sections {
+        s.cluster = Cluster::new(3, 4, 2);
+        s.counts = &[1, 600];
+    }
+    t
+}
+
+#[test]
+fn shared_engine_reuses_shapes_across_tables_and_isolates_personas() {
+    std::env::set_var("MLANE_REPS", "2");
+    let engine = Arc::new(SweepEngine::new());
+    let t = small_table(8);
+
+    // First run: one schedule per k-lane section.
+    let first = run_table_with(&engine, &t);
+    let built_after_first = engine.stats().schedules_built;
+    assert_eq!(built_after_first, 3, "one shape per section: {:?}", engine.stats());
+
+    // Second run of the same table/persona: served entirely from cache.
+    let second = run_table_with(&engine, &t);
+    let st = engine.stats();
+    assert_eq!(
+        st.schedules_built, built_after_first,
+        "second table run must build no schedules: {st:?}"
+    );
+    assert_eq!(st.cells, 12, "{st:?}");
+    assert!(st.recosts + st.cache_hits >= 6, "{st:?}");
+    // Shared-cache runs are bitwise identical to the first pass.
+    assert_eq!(first.render(), second.render());
+
+    // Same sections under a different persona (= different cost model):
+    // shapes must NOT be shared — timings under the wrong model would be
+    // silent corruption — so the build counter grows by one per section.
+    let intel = small_table(13);
+    let third = run_table_with(&engine, &intel);
+    std::env::remove_var("MLANE_REPS");
+    assert_eq!(
+        engine.stats().schedules_built,
+        built_after_first + 3,
+        "per-persona shapes: {:?}",
+        engine.stats()
+    );
+    // And the models genuinely differ in outcome.
+    assert_ne!(first.rows[0].avg, third.rows[0].avg, "personas identical?");
+}
