@@ -11,7 +11,7 @@
 
 use mlane::algorithms::registry;
 use mlane::coordinator::{Collectives, Op};
-use mlane::harness::{ALLTOALL_COUNTS, BCAST_COUNTS, SCATTER_COUNTS};
+use mlane::harness::{RunConfig, ALLTOALL_COUNTS, BCAST_COUNTS, SCATTER_COUNTS};
 use mlane::model::PersonaName;
 use mlane::topology::Cluster;
 
@@ -40,8 +40,11 @@ fn sweep(coll: &Collectives, name: &str, counts: &[u64], mk: impl Fn(u64) -> Op)
 
 fn main() {
     let cluster = Cluster::hydra(2);
+    // CLI edge: MLANE_REPS etc. are parsed here, not inside the library.
+    let cfg = RunConfig::from_env();
     for persona in [PersonaName::OpenMpi, PersonaName::IntelMpi, PersonaName::Mpich] {
-        let coll = Collectives::new(cluster, persona);
+        let mut coll = Collectives::new(cluster, persona);
+        coll.reps = cfg.reps;
         println!("=== persona: {} ===\n", persona.label());
         sweep(&coll, "bcast", BCAST_COUNTS, |c| Op::Bcast { root: 0, c });
         sweep(&coll, "scatter", SCATTER_COUNTS, |c| Op::Scatter { root: 0, c });

@@ -7,28 +7,35 @@
 //! full-lane broadcast win; the native alltoall mid-size collapse) —
 //! then prints simulated-vs-paper ratios for every anchor cell.
 //!
+//! Both tables run as ONE experiment plan over the shared engine, and
+//! the output flows through the Text sink.
+//!
 //! Run: `MLANE_REPS=10 cargo run --release --example hydra_tables`
 
-use mlane::harness::{anchors, run_table, table};
+use mlane::harness::{anchors, run_plan, Plan, RunConfig, TextSink};
 
-fn main() {
-    for num in [12u32, 41] {
-        let spec = table(num).expect("registry table");
-        let out = run_table(&spec);
-        print!("{}", out.render());
-        println!();
-    }
+fn main() -> anyhow::Result<()> {
+    // CLI edge: env (MLANE_REPS/MLANE_THREADS/...) parsed here, once.
+    let cfg = RunConfig::from_env();
+
+    let mut plan = Plan::paper();
+    plan.tables.retain(|t| [12u32, 41].contains(&t.number));
+    let report = run_plan(&plan, &cfg)?;
+    let stdout = std::io::stdout();
+    report.emit(&mut TextSink::new(stdout.lock()))?;
+    println!();
 
     println!("--- anchor comparison (shape check; see EXPERIMENTS.md) ---");
     println!(
         "{:>6} {:<28} {:>9} {:>12} {:>12} {:>7}",
         "table", "section", "c", "paper(us)", "sim(us)", "ratio"
     );
-    for c in anchors::compare_all() {
+    for c in anchors::compare_all(&cfg)? {
         println!(
             "{:>6} {:<28} {:>9} {:>12.2} {:>12.2} {:>7.2}",
             c.anchor.table, c.anchor.section, c.anchor.c, c.anchor.paper_avg_us,
             c.simulated_avg_us, c.ratio
         );
     }
+    Ok(())
 }

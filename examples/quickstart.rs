@@ -7,9 +7,10 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use mlane::algorithms::registry;
+use mlane::algorithms::registry::{self, OpKind};
 use mlane::coordinator::{Collectives, Op};
 use mlane::exec::ExecRuntime;
+use mlane::harness::{run_plan, Grid, Plan, RunConfig};
 use mlane::model::PersonaName;
 use mlane::topology::Cluster;
 
@@ -44,5 +45,17 @@ fn main() -> anyhow::Result<()> {
     // 3. The coordinator's algorithm selection.
     let (best, m) = coll.autotune(op, &coll.default_candidates(op))?;
     println!("\nautotuner picks: {} ({:.2}us simulated)", best.label(), m.summary.avg);
+
+    // 4. The experiment-plan API: declare a scenario grid, run it as a
+    //    plan (all sections scheduled over one worker pool + the shared
+    //    schedule cache), and render through the Text sink.
+    let grid = Grid::new()
+        .cluster(cluster)
+        .op(OpKind::Bcast)
+        .algs([registry::kported(2), registry::fulllane()])
+        .counts(&[1, 1000]);
+    let plan = Plan::new().table(1, "quickstart bcast grid", coll.persona.name, &grid);
+    let report = run_plan(&plan, &RunConfig::default().reps(5))?;
+    print!("\n{}", report.text());
     Ok(())
 }

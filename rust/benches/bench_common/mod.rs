@@ -1,37 +1,57 @@
 //! Shared driver for the table-regeneration benches (criterion is not
 //! available offline; these are `harness = false` benches that both
 //! *time* the regeneration and *emit* the paper-format tables + CSVs).
+//!
+//! Each bench is a thin plan invocation: select the paper tables in
+//! range, run them as ONE plan (every section of every table drains
+//! through the shared worker pool — the plan-level parallelism the
+//! harness ships), then emit through the Text and Csv sinks.
 
 use std::time::Instant;
 
-use mlane::harness::{run_table, table};
+use mlane::harness::{run_plan, CsvSink, Plan, RunConfig, TextSink};
 
-/// Repetition count for bench runs (kept modest: the simulator's jitter
-/// converges quickly; override with MLANE_REPS).
-pub fn bench_reps() -> String {
-    std::env::var("MLANE_REPS").unwrap_or_else(|_| "5".into())
+/// Bench run configuration: environment overrides (the bench binary is
+/// a CLI edge), with a modest 5-rep default — the simulator's jitter
+/// converges quickly.
+pub fn bench_config() -> RunConfig {
+    let mut cfg = RunConfig::from_env();
+    // Apply the bench default unless the env var actually overrode the
+    // config (an unset, unparsable or zero MLANE_REPS does not count).
+    let overridden = std::env::var("MLANE_REPS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .is_some_and(|n| n > 0);
+    if !overridden {
+        cfg.reps = 5;
+    }
+    cfg
 }
 
-/// Regenerate a contiguous range of paper tables, print them, write CSVs
-/// under bench_out/, and report wall time per table.
+/// Regenerate a contiguous range of paper tables as one plan, print
+/// them, write CSVs under bench_out/, and report wall time.
 pub fn run_tables(title: &str, numbers: impl IntoIterator<Item = u32>) {
-    std::env::set_var("MLANE_REPS", bench_reps());
-    let dir = std::path::Path::new("bench_out");
+    let cfg = bench_config();
+    let wanted: Vec<u32> = numbers.into_iter().collect();
+    let mut plan = Plan::paper();
+    plan.tables.retain(|t| wanted.contains(&t.number));
     println!("=== {title} ===");
-    let t_all = Instant::now();
-    for n in numbers {
-        let spec = table(n).unwrap_or_else(|| panic!("no table {n}"));
-        let t0 = Instant::now();
-        let out = run_table(&spec);
-        let dt = t0.elapsed();
-        print!("{}", out.render());
-        let csv = out.write_csv(dir).expect("csv write");
-        println!(
-            "[bench] table {:>2} regenerated in {:>8.2?}  -> {}",
-            n,
-            dt,
-            csv.display()
-        );
+    let t0 = Instant::now();
+    let report = run_plan(&plan, &cfg).expect("paper plan must run");
+    let dt = t0.elapsed();
+    let stdout = std::io::stdout();
+    report.emit(&mut TextSink::new(stdout.lock())).expect("stdout");
+    let mut csv = CsvSink::new("bench_out");
+    report.emit(&mut csv).expect("csv write");
+    for p in csv.written() {
+        println!("[bench] csv: {}", p.display());
     }
-    println!("[bench] {title}: total {:.2?}", t_all.elapsed());
+    println!(
+        "[bench] {title}: {} tables ({} sections, {} cells) in {:.2?} on {} threads",
+        plan.tables.len(),
+        plan.num_sections(),
+        plan.num_cells(),
+        dt,
+        cfg.threads
+    );
 }

@@ -61,6 +61,18 @@ impl OpKind {
         OpKind::ALL.into_iter().find(|k| k.name() == s)
     }
 
+    /// Paper-style capitalised name ("Bcast"), as used in table
+    /// captions and `MPI_<op>` headings.
+    pub fn title(self) -> &'static str {
+        match self {
+            OpKind::Bcast => "Bcast",
+            OpKind::Scatter => "Scatter",
+            OpKind::Gather => "Gather",
+            OpKind::Allgather => "Allgather",
+            OpKind::Alltoall => "Alltoall",
+        }
+    }
+
     /// A root-0 instance of this operation with `c` elements (the
     /// harness and validation convention; rooted ops use root 0).
     pub fn op(self, c: u64) -> Op {
@@ -799,6 +811,10 @@ pub fn kported(k: u32) -> Alg {
 
 pub fn klane(k: u32) -> Alg {
     registry().resolve("klane", k).expect("klane")
+}
+
+pub fn klane2p(k: u32) -> Alg {
+    registry().resolve("klane2p", k).expect("klane2p")
 }
 
 pub fn fulllane() -> Alg {

@@ -111,9 +111,9 @@ impl Collectives {
         Self {
             cluster,
             persona: Persona::get(persona),
-            reps: sim::default_reps(),
-            warmup: 2,
-            seed: 0xC0FFEE,
+            reps: sim::DEFAULT_REPS,
+            warmup: sim::DEFAULT_WARMUP,
+            seed: sim::DEFAULT_SEED,
             engine,
             state: RefCell::new(None),
         }

@@ -4,7 +4,7 @@
 //! factor, where the crossovers sit — without pretending to match a real
 //! OmniPath testbed absolutely.
 
-use super::{run_table, table};
+use super::{run_table, table, PlanError, RunConfig};
 
 /// One transcribed cell of a paper table.
 #[derive(Clone, Copy, Debug)]
@@ -72,7 +72,7 @@ pub struct Comparison {
 /// Run all anchored tables and report simulated-vs-paper ratios.
 /// Expensive (full Hydra-scale sims); used by `mlane compare` and the
 /// EXPERIMENTS.md generation, not by unit tests.
-pub fn compare_all() -> Vec<Comparison> {
+pub fn compare_all(cfg: &RunConfig) -> Result<Vec<Comparison>, PlanError> {
     let mut out = Vec::new();
     let mut by_table: std::collections::BTreeMap<u32, Vec<Anchor>> = Default::default();
     for a in anchors() {
@@ -80,7 +80,7 @@ pub fn compare_all() -> Vec<Comparison> {
     }
     for (num, anchs) in by_table {
         let Some(spec) = table(num) else { continue };
-        let result = run_table(&spec);
+        let result = run_table(&spec, cfg)?;
         for a in anchs {
             let cell = result
                 .rows
@@ -95,7 +95,7 @@ pub fn compare_all() -> Vec<Comparison> {
             }
         }
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]

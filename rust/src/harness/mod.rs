@@ -1,48 +1,54 @@
-//! Table-regeneration harness: every table in the paper's evaluation
-//! (Tables 2–49) has a [`TableSpec`] here; running it prints the same
-//! rows (k, n, N, p, c, avg µs, min µs) the paper reports and writes a
-//! CSV under `bench_out/`.
+//! Experiment harness: the **plan API** over the sweep engine.
 //!
-//! Table numbering follows the paper exactly:
-//! * 2–7 — §4.1 node-vs-network alltoall at p = 32 (k-ported / native,
-//!   per library);
-//! * 8–22 — §4.2 broadcast (k-lane k=1..6, k-ported k=1..6, full-lane +
-//!   native; × three libraries);
-//! * 23–37 — §4.3 scatter (same grid);
-//! * 38–49 — §4.4 alltoall (k-lane, k-ported k=1..6, full-lane + native;
-//!   × three libraries).
+//! The paper's evaluation (Tables 2–49) is one instance of a general
+//! shape: a *scenario grid* — (cluster × operation × algorithm) swept
+//! over an element-count series, per library persona. The harness
+//! exposes that shape directly:
 //!
+//! * [`Grid`] — composable scenario-grid builder; expands to typed
+//!   [`Section`]s (`Grid::new().cluster(…).op(…).algs(…).counts(…)`);
+//! * [`Plan`] — a set of [`TableSpec`]s built from grids.
+//!   [`Plan::paper`] declares all 48 paper tables as grid data;
+//!   [`Plan::appendix`] is a non-paper preset (two-phase vs. adapted
+//!   k-lane broadcast);
+//! * [`RunConfig`] — explicit run parameters (reps, warmup, worker
+//!   threads, schedule-cache bound, output directory, seed). The
+//!   library reads **no environment variables**; the CLI maps
+//!   `MLANE_REPS`/`MLANE_THREADS`/`MLANE_CACHE_SHAPES` to a config via
+//!   [`RunConfig::from_env`] at its edge;
+//! * [`run_plan`] — the plan-level executor: every section of every
+//!   table is scheduled over **one** work-stealing worker pool backed
+//!   by the shared [`SweepEngine`], and rows are reassembled in spec
+//!   order, so output is byte-identical to a serial run regardless of
+//!   thread count;
+//! * [`Report`] + [`Sink`] — emission layer ([`TextSink`] paper-style
+//!   text, [`CsvSink`] per-table CSV files, [`JsonSink`] full
+//!   spec-plus-rows JSON for trajectory tooling).
+//!
+//! Table numbering follows the paper exactly: 2–7 — §4.1 node-vs-network
+//! alltoall at p = 32; 8–22 — §4.2 broadcast; 23–37 — §4.3 scatter;
+//! 38–49 — §4.4 alltoall (each family × three library personas).
 //! Sections name their algorithm as a registry handle
-//! (`algorithms::registry::Alg`), so the specs track the catalog — a
-//! newly registered algorithm needs no harness changes to be swept.
+//! (`algorithms::registry::Alg`), so grids track the catalog — a newly
+//! registered algorithm needs no harness changes to be swept.
 //!
-//! ## Environment
-//!
-//! * `MLANE_REPS` — simulated repetitions per cell (default 20; the
-//!   paper uses 100, see `sim::PAPER_REPS`).
-//! * `MLANE_THREADS` — worker threads for table generation (default:
-//!   available parallelism). Workers process whole sections, so every
-//!   count sweep stays on one warm shape; output row order is
-//!   deterministic regardless of the thread count.
-//! * `MLANE_CACHE_SHAPES` — bound on the shared schedule cache (see
-//!   `sim::sweep`).
-//!
-//! All tables run against one process-wide [`SweepEngine`]
-//! ([`shared_engine`]): sections of one table and repeated/overlapping
-//! tables (`mlane tables`, any persona mix) share cached schedules.
-//! Pass an explicit engine with [`run_table_with`] for isolated runs.
+//! Broken specs are typed [`PlanError`]s carrying the offending table,
+//! section and the underlying `AlgError` — never panics.
 
 pub mod anchors;
+pub mod plan;
+pub mod report;
 
-use std::fmt::Write as _;
-use std::io::Write as _;
-use std::sync::atomic::{AtomicUsize, Ordering};
+pub use plan::{
+    run_plan, run_plan_with, run_table, run_table_with, Grid, Plan, PlanError, RunConfig,
+};
+pub use report::{CsvSink, JsonSink, Report, Sink, TextSink};
+
 use std::sync::{Arc, OnceLock};
 
-use crate::algorithms::registry::{self, Alg, OpKind};
-use crate::coordinator::Collectives;
+use crate::algorithms::registry::{Alg, OpKind};
 use crate::model::PersonaName;
-use crate::sim::SweepEngine;
+use crate::sim::{sweep::DEFAULT_CACHE_SHAPES, SweepEngine};
 use crate::topology::Cluster;
 
 /// Count sweeps used by the paper (§4.2–4.4; MPI_INT elements).
@@ -55,22 +61,39 @@ pub const NODE_VS_NET_COUNTS: &[u64] =
     &[1, 2, 4, 19, 32, 188, 313, 1875, 3125, 18750, 31250];
 
 /// One series within a table (the paper's tables stack 1–3 of these).
+/// Usually produced by [`Grid::sections`] rather than written by hand.
 #[derive(Clone, Debug)]
 pub struct Section {
     pub heading: String,
     pub cluster: Cluster,
     pub op: OpKind,
     pub alg: Alg,
-    pub counts: &'static [u64],
+    /// The element-count series this section sweeps. Shared (`Arc`) so
+    /// grids and their expanded sections stay cheap to clone.
+    pub counts: Arc<[u64]>,
 }
 
 #[derive(Clone, Debug)]
 pub struct TableSpec {
-    /// Paper table number (2–49).
+    /// Table number (paper tables use 2–49; presets and ad-hoc sweeps
+    /// may use anything else).
     pub number: u32,
     pub caption: String,
     pub persona: PersonaName,
     pub sections: Vec<Section>,
+}
+
+impl TableSpec {
+    /// Test/bench helper: re-target every section at a different
+    /// cluster and count series, keeping headings and algorithms.
+    pub fn with_grid(mut self, cluster: Cluster, counts: &[u64]) -> TableSpec {
+        let counts: Arc<[u64]> = Arc::from(counts);
+        for s in &mut self.sections {
+            s.cluster = cluster;
+            s.counts = counts.clone();
+        }
+        self
+    }
 }
 
 /// One output row, matching the paper's columns.
@@ -86,430 +109,54 @@ pub struct Row {
     pub min: f64,
 }
 
+/// One completed table: its spec plus the measured rows, in section
+/// order. Emitted through the [`Sink`] layer (see [`Report`]).
+#[derive(Clone, Debug)]
 pub struct TableOut {
     pub spec: TableSpec,
     pub rows: Vec<Row>,
 }
 
-/// The process-wide sweep engine behind `run_table`: the cross-table
-/// schedule cache. Personas are isolated by the engine's
-/// model-fingerprinted keys; size is bounded by `MLANE_CACHE_SHAPES`.
-pub fn shared_engine() -> Arc<SweepEngine> {
-    static ENGINE: OnceLock<Arc<SweepEngine>> = OnceLock::new();
-    ENGINE.get_or_init(|| Arc::new(SweepEngine::new())).clone()
-}
-
-/// Worker threads for table generation: `MLANE_THREADS` if set (> 0),
-/// else the machine's available parallelism.
-pub fn sweep_threads() -> usize {
-    std::env::var("MLANE_THREADS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .filter(|&n| n > 0)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        })
-}
-
-/// One section's count sweep. The `Collectives` shares the engine (so
-/// shapes persist across sections and tables) but owns its rep state —
-/// no allocation inside the sweep, no cross-thread contention except on
-/// a shared shape.
-fn run_section(engine: &Arc<SweepEngine>, persona: PersonaName, sec: &Section) -> Vec<Row> {
-    let coll = Collectives::with_engine(sec.cluster, persona, engine.clone());
-    sec.counts
-        .iter()
-        .map(|&c| {
-            // Spec sections come from the registry, so a build failure
-            // here is a broken spec, not user input — fail loudly.
-            let m = coll
-                .run(sec.op.op(c), &sec.alg)
-                .unwrap_or_else(|e| panic!("section {}: {e}", sec.heading));
-            Row {
-                section: sec.heading.clone(),
-                k: m.k,
-                n: sec.cluster.cores,
-                nodes: sec.cluster.nodes,
-                p: sec.cluster.p(),
-                c,
-                avg: m.summary.avg,
-                min: m.summary.min,
-            }
-        })
-        .collect()
-}
-
-/// Run every section of a table on the simulator, against the shared
-/// cross-table engine. Sections run across scoped worker threads (see
-/// [`sweep_threads`]); rows come back in section order, identical to a
-/// serial run.
-pub fn run_table(spec: &TableSpec) -> TableOut {
-    run_table_with(&shared_engine(), spec)
-}
-
-/// [`run_table`] against a caller-provided engine (isolated caches for
-/// tests and benchmarks).
-pub fn run_table_with(engine: &Arc<SweepEngine>, spec: &TableSpec) -> TableOut {
-    let sections = &spec.sections;
-    let workers = sweep_threads().min(sections.len()).max(1);
-
-    let rows: Vec<Vec<Row>> = if workers <= 1 {
-        sections.iter().map(|sec| run_section(engine, spec.persona, sec)).collect()
-    } else {
-        // Work-stealing over section indices; each worker returns
-        // (index, rows) pairs so ordering is reassembled exactly.
-        let next = AtomicUsize::new(0);
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..workers)
-                .map(|_| {
-                    scope.spawn(|| {
-                        let mut done = Vec::new();
-                        loop {
-                            let i = next.fetch_add(1, Ordering::Relaxed);
-                            if i >= sections.len() {
-                                break;
-                            }
-                            done.push((i, run_section(engine, spec.persona, &sections[i])));
-                        }
-                        done
-                    })
-                })
-                .collect();
-            let mut slots: Vec<Option<Vec<Row>>> =
-                (0..sections.len()).map(|_| None).collect();
-            for h in handles {
-                for (i, rows) in h.join().expect("table worker panicked") {
-                    slots[i] = Some(rows);
-                }
-            }
-            slots.into_iter().map(|s| s.expect("section not processed")).collect()
-        })
-    };
-
-    TableOut { spec: spec.clone(), rows: rows.into_iter().flatten().collect() }
-}
-
 impl TableOut {
-    /// Paper-style text rendering.
-    pub fn render(&self) -> String {
-        let mut out = String::new();
-        let _ = writeln!(
-            out,
-            "Table {}: {} [{}]",
-            self.spec.number,
-            self.spec.caption,
-            self.spec.persona.label()
-        );
-        let mut current = String::new();
-        for r in &self.rows {
-            if r.section != current {
-                current = r.section.clone();
-                let _ = writeln!(out, "  -- {current} --");
-                let _ = writeln!(
-                    out,
-                    "  {:>2} {:>4} {:>4} {:>5} {:>9} {:>12} {:>12}",
-                    "k", "n", "N", "p", "c", "avg(us)", "min(us)"
-                );
-            }
-            let _ = writeln!(
-                out,
-                "  {:>2} {:>4} {:>4} {:>5} {:>9} {:>12.2} {:>12.2}",
-                r.k, r.n, r.nodes, r.p, r.c, r.avg, r.min
-            );
-        }
-        out
-    }
-
-    /// Write CSV to `bench_out/table_<nn>.csv`.
-    pub fn write_csv(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
-        std::fs::create_dir_all(dir)?;
-        let path = dir.join(format!("table_{:02}.csv", self.spec.number));
-        let mut f = std::fs::File::create(&path)?;
-        writeln!(f, "table,persona,section,k,n,N,p,c,avg_us,min_us")?;
-        for r in &self.rows {
-            writeln!(
-                f,
-                "{},{},{},{},{},{},{},{},{:.2},{:.2}",
-                self.spec.number,
-                self.spec.persona.label(),
-                r.section,
-                r.k,
-                r.n,
-                r.nodes,
-                r.p,
-                r.c,
-                r.avg,
-                r.min
-            )?;
-        }
-        Ok(path)
+    /// Paper-style text rendering (the [`TextSink`] format).
+    pub fn text(&self) -> String {
+        report::table_text(self)
     }
 }
 
-fn hydra() -> Cluster {
-    Cluster::hydra(2)
+static ENGINE: OnceLock<Arc<SweepEngine>> = OnceLock::new();
+
+/// The process-wide sweep engine behind [`run_plan`]: the cross-table
+/// schedule cache. Personas are isolated by the engine's
+/// model-fingerprinted keys.
+pub fn shared_engine() -> Arc<SweepEngine> {
+    shared_engine_sized(DEFAULT_CACHE_SHAPES)
 }
 
-fn persona_ord(i: usize) -> PersonaName {
-    [PersonaName::OpenMpi, PersonaName::IntelMpi, PersonaName::Mpich][i]
+/// [`shared_engine`] with a requested cache bound. The engine is a
+/// process singleton, so the first caller's bound wins; pass an
+/// explicit engine to [`run_plan_with`] for a guaranteed capacity.
+pub(crate) fn shared_engine_sized(cache_shapes: usize) -> Arc<SweepEngine> {
+    ENGINE.get_or_init(|| Arc::new(SweepEngine::with_capacity(cache_shapes))).clone()
 }
 
-/// The full registry: every table of the paper. Algorithms are looked
-/// up in `algorithms::registry` by name — the specs carry no algorithm
-/// enumeration of their own.
+/// All 48 paper tables (compatibility wrapper over [`Plan::paper`]).
 pub fn registry() -> Vec<TableSpec> {
-    let mut tables = Vec::new();
-
-    // ---- §4.1: Tables 2–7 (node vs network, p = 32) ----
-    let net32 = Cluster::new(32, 1, 2); // N=32, n=1 (both rails usable, §4.1)
-    let node32 = Cluster::new(1, 32, 2); // N=1, n=32
-    for &(kported, base) in &[(true, 2u32), (false, 3u32)] {
-        for pi in 0..3 {
-            let number = base + (pi as u32) * 2;
-            let (label, alg) = if kported {
-                ("k-ported alltoall", registry::kported(31))
-            } else {
-                ("MPI_Alltoall", registry::native())
-            };
-            tables.push(TableSpec {
-                number,
-                caption: format!("{label}, N=32/n=1 vs N=1/n=32, p=32"),
-                persona: persona_ord(pi),
-                sections: vec![
-                    Section {
-                        heading: format!("{label} N=32"),
-                        cluster: net32,
-                        op: OpKind::Alltoall,
-                        alg: alg.clone(),
-                        counts: NODE_VS_NET_COUNTS,
-                    },
-                    Section {
-                        heading: format!("{label} N=1"),
-                        cluster: node32,
-                        op: OpKind::Alltoall,
-                        alg,
-                        counts: NODE_VS_NET_COUNTS,
-                    },
-                ],
-            });
-        }
-    }
-
-    // ---- §4.2: Tables 8–22 (bcast) ----
-    for pi in 0..3u32 {
-        let base = 8 + pi * 5;
-        let persona = persona_ord(pi as usize);
-        let klane_sec = |ks: std::ops::RangeInclusive<u32>| -> Vec<Section> {
-            ks.map(|k| Section {
-                heading: format!("Bcast, k = {k} lanes"),
-                cluster: hydra(),
-                op: OpKind::Bcast,
-                alg: registry::klane(k),
-                counts: BCAST_COUNTS,
-            })
-            .collect()
-        };
-        let kported_sec = |ks: std::ops::RangeInclusive<u32>| -> Vec<Section> {
-            ks.map(|k| Section {
-                heading: format!("Bcast, {k}-ported"),
-                cluster: hydra(),
-                op: OpKind::Bcast,
-                alg: registry::kported(k),
-                counts: BCAST_COUNTS,
-            })
-            .collect()
-        };
-        tables.push(TableSpec {
-            number: base,
-            caption: "k-lane Bcast for k=1,2,3 on Hydra".into(),
-            persona,
-            sections: klane_sec(1..=3),
-        });
-        tables.push(TableSpec {
-            number: base + 1,
-            caption: "k-lane Bcast for k=4,5,6 on Hydra".into(),
-            persona,
-            sections: klane_sec(4..=6),
-        });
-        tables.push(TableSpec {
-            number: base + 2,
-            caption: "k-ported Bcast for k=1,2,3 on Hydra".into(),
-            persona,
-            sections: kported_sec(1..=3),
-        });
-        tables.push(TableSpec {
-            number: base + 3,
-            caption: "k-ported Bcast for k=4,5,6 on Hydra".into(),
-            persona,
-            sections: kported_sec(4..=6),
-        });
-        tables.push(TableSpec {
-            number: base + 4,
-            caption: "full-lane Bcast and native MPI_Bcast on Hydra".into(),
-            persona,
-            sections: vec![
-                Section {
-                    heading: "Full-lane Bcast".into(),
-                    cluster: hydra(),
-                    op: OpKind::Bcast,
-                    alg: registry::fulllane(),
-                    counts: BCAST_COUNTS,
-                },
-                Section {
-                    heading: "MPI_Bcast".into(),
-                    cluster: hydra(),
-                    op: OpKind::Bcast,
-                    alg: registry::native(),
-                    counts: BCAST_COUNTS,
-                },
-            ],
-        });
-    }
-
-    // ---- §4.3: Tables 23–37 (scatter) ----
-    for pi in 0..3u32 {
-        let base = 23 + pi * 5;
-        let persona = persona_ord(pi as usize);
-        let klane_sec = |ks: std::ops::RangeInclusive<u32>| -> Vec<Section> {
-            ks.map(|k| Section {
-                heading: format!("Scatter, {k} lane{}", if k == 1 { "" } else { "s" }),
-                cluster: hydra(),
-                op: OpKind::Scatter,
-                alg: registry::klane(k),
-                counts: SCATTER_COUNTS,
-            })
-            .collect()
-        };
-        let kported_sec = |ks: std::ops::RangeInclusive<u32>| -> Vec<Section> {
-            ks.map(|k| Section {
-                heading: format!("Scatter, {k}-ported"),
-                cluster: hydra(),
-                op: OpKind::Scatter,
-                alg: registry::kported(k),
-                counts: SCATTER_COUNTS,
-            })
-            .collect()
-        };
-        tables.push(TableSpec {
-            number: base,
-            caption: "k-lane Scatter for k=1,2,3 on Hydra".into(),
-            persona,
-            sections: klane_sec(1..=3),
-        });
-        tables.push(TableSpec {
-            number: base + 1,
-            caption: "k-lane Scatter for k=4,5,6 on Hydra".into(),
-            persona,
-            sections: klane_sec(4..=6),
-        });
-        tables.push(TableSpec {
-            number: base + 2,
-            caption: "k-ported Scatter for k=1,2,3 on Hydra".into(),
-            persona,
-            sections: kported_sec(1..=3),
-        });
-        tables.push(TableSpec {
-            number: base + 3,
-            caption: "k-ported Scatter for k=4,5,6 on Hydra".into(),
-            persona,
-            sections: kported_sec(4..=6),
-        });
-        tables.push(TableSpec {
-            number: base + 4,
-            caption: "full-lane Scatter and native MPI_Scatter on Hydra".into(),
-            persona,
-            sections: vec![
-                Section {
-                    heading: "Full-lane Scatter".into(),
-                    cluster: hydra(),
-                    op: OpKind::Scatter,
-                    alg: registry::fulllane(),
-                    counts: SCATTER_COUNTS,
-                },
-                Section {
-                    heading: "MPI_Scatter".into(),
-                    cluster: hydra(),
-                    op: OpKind::Scatter,
-                    alg: registry::native(),
-                    counts: SCATTER_COUNTS,
-                },
-            ],
-        });
-    }
-
-    // ---- §4.4: Tables 38–49 (alltoall) ----
-    for pi in 0..3u32 {
-        let base = 38 + pi * 4;
-        let persona = persona_ord(pi as usize);
-        let kported_sec = |ks: std::ops::RangeInclusive<u32>| -> Vec<Section> {
-            ks.map(|k| Section {
-                heading: format!("Alltoall, {k}-ported"),
-                cluster: hydra(),
-                op: OpKind::Alltoall,
-                alg: registry::kported(k),
-                counts: ALLTOALL_COUNTS,
-            })
-            .collect()
-        };
-        tables.push(TableSpec {
-            number: base,
-            caption: "k-lane Alltoall (32 virtual lanes) on Hydra".into(),
-            persona,
-            sections: vec![Section {
-                heading: "Alltoall, 32 virtual lanes".into(),
-                cluster: hydra(),
-                op: OpKind::Alltoall,
-                alg: registry::klane(1),
-                counts: ALLTOALL_COUNTS,
-            }],
-        });
-        tables.push(TableSpec {
-            number: base + 1,
-            caption: "k-ported Alltoall for k=1,2,3 on Hydra".into(),
-            persona,
-            sections: kported_sec(1..=3),
-        });
-        tables.push(TableSpec {
-            number: base + 2,
-            caption: "k-ported Alltoall for k=4,5,6 on Hydra".into(),
-            persona,
-            sections: kported_sec(4..=6),
-        });
-        tables.push(TableSpec {
-            number: base + 3,
-            caption: "full-lane Alltoall and native MPI_Alltoall on Hydra".into(),
-            persona,
-            sections: vec![
-                Section {
-                    heading: "Full-lane Alltoall".into(),
-                    cluster: hydra(),
-                    op: OpKind::Alltoall,
-                    alg: registry::fulllane(),
-                    counts: ALLTOALL_COUNTS,
-                },
-                Section {
-                    heading: "MPI_Alltoall".into(),
-                    cluster: hydra(),
-                    op: OpKind::Alltoall,
-                    alg: registry::native(),
-                    counts: ALLTOALL_COUNTS,
-                },
-            ],
-        });
-    }
-
-    tables.sort_by_key(|t| t.number);
-    tables
+    Plan::paper().tables
 }
 
-/// Look up one table by paper number.
+/// Look up one paper table by number.
 pub fn table(number: u32) -> Option<TableSpec> {
-    registry().into_iter().find(|t| t.number == number)
+    Plan::paper().tables.into_iter().find(|t| t.number == number)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn cfg() -> RunConfig {
+        RunConfig::default().reps(2).warmup(0)
+    }
 
     #[test]
     fn registry_covers_tables_2_through_49() {
@@ -540,16 +187,13 @@ mod tests {
 
     #[test]
     fn small_table_runs_and_renders() {
-        // Shrink to one tiny section for test speed.
-        let mut t = table(12).unwrap();
+        // Shrink to one tiny section for test speed; the explicit
+        // RunConfig replaces the old MLANE_REPS env mutation.
+        let mut t = table(12).unwrap().with_grid(Cluster::new(3, 4, 2), &[1, 600]);
         t.sections.truncate(1);
-        t.sections[0].cluster = Cluster::new(3, 4, 2);
-        t.sections[0].counts = &[1, 600];
-        std::env::set_var("MLANE_REPS", "2");
-        let out = run_table(&t);
-        std::env::remove_var("MLANE_REPS");
+        let out = run_table(&t, &cfg()).unwrap();
         assert_eq!(out.rows.len(), 2);
-        let text = out.render();
+        let text = out.text();
         assert!(text.contains("Table 12"), "{text}");
         assert!(text.contains("avg(us)"));
     }
@@ -561,46 +205,28 @@ mod tests {
         // count) — the bitwise cached-vs-fresh guarantees are covered by
         // the sweep engine and coordinator tests. Here: the parallel
         // fan-out must reassemble rows in exact section/count order.
-        let mut t = table(12).unwrap();
-        for s in &mut t.sections {
-            s.cluster = Cluster::new(3, 4, 2);
-            s.counts = &[1, 600, 6000];
-        }
-        std::env::set_var("MLANE_THREADS", "4");
-        let out = run_table(&t);
-        std::env::remove_var("MLANE_THREADS");
+        let t = table(12).unwrap().with_grid(Cluster::new(3, 4, 2), &[1, 600, 6000]);
+        let out = run_table(&t, &cfg().threads(4)).unwrap();
         let got: Vec<(&str, u64)> =
             out.rows.iter().map(|r| (r.section.as_str(), r.c)).collect();
         let want: Vec<(&str, u64)> = t
             .sections
             .iter()
-            .flat_map(|s| s.counts.iter().map(move |&c| (s.heading.as_str(), c)))
+            .flat_map(|s| {
+                let h = s.heading.as_str();
+                s.counts.iter().map(move |&c| (h, c))
+            })
             .collect();
         assert_eq!(got, want);
         assert!(out.rows.iter().all(|r| r.avg.is_finite() && r.avg >= r.min));
-        // Env-override behavior, checked here to keep all MLANE_THREADS
-        // mutation in one test (avoids races under parallel test runs).
-        std::env::set_var("MLANE_THREADS", "3");
-        assert_eq!(sweep_threads(), 3);
-        std::env::set_var("MLANE_THREADS", "0"); // invalid: fall back
-        assert!(sweep_threads() >= 1);
-        std::env::remove_var("MLANE_THREADS");
-        assert!(sweep_threads() >= 1);
     }
 
     #[test]
-    fn csv_written() {
-        let mut t = table(27).unwrap();
-        t.sections.truncate(1);
-        t.sections[0].cluster = Cluster::new(2, 4, 2);
-        t.sections[0].counts = &[1];
-        std::env::set_var("MLANE_REPS", "2");
-        let out = run_table(&t);
-        std::env::remove_var("MLANE_REPS");
-        let dir = std::env::temp_dir().join("mlane_csv_test");
-        let path = out.write_csv(&dir).unwrap();
-        let text = std::fs::read_to_string(path).unwrap();
-        assert!(text.lines().count() >= 2);
-        assert!(text.starts_with("table,persona"));
+    fn with_grid_retargets_every_section() {
+        let t = table(27).unwrap().with_grid(Cluster::new(2, 4, 2), &[1]);
+        for s in &t.sections {
+            assert_eq!(s.cluster, Cluster::new(2, 4, 2));
+            assert_eq!(&s.counts[..], &[1]);
+        }
     }
 }

@@ -1,0 +1,925 @@
+//! Experiment plans: scenario grids, run configuration, and the
+//! plan-level parallel executor.
+//!
+//! A [`Grid`] is the composable builder for one table's sections — the
+//! cartesian product (algorithms × clusters × operations), each swept
+//! over a shared count series. A [`Plan`] is a list of [`TableSpec`]s
+//! built from grids; [`Plan::paper`] declares the paper's 48 tables as
+//! grid data, [`Plan::appendix`] is a non-paper preset grown through
+//! the same API.
+//!
+//! [`run_plan`] executes a whole plan: *all* sections of *all* tables
+//! become one work queue served by a work-stealing pool of
+//! `RunConfig::threads` workers over one shared [`SweepEngine`], so
+//! overlapping shapes across tables are built once (the cross-table
+//! schedule cache) and the outer table loop parallelises, not just the
+//! sections of one table. Rows are reassembled in (table, section,
+//! count) order, so the emitted report is byte-identical to a serial
+//! run for any thread count.
+//!
+//! Configuration is explicit: [`RunConfig`] carries reps/warmup/threads/
+//! cache bound/output dir/seed. The library never reads environment
+//! variables; [`RunConfig::from_env`] exists for the CLI edge only.
+
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::algorithms::registry::{self, Alg, AlgError, OpKind};
+use crate::coordinator::Collectives;
+use crate::model::PersonaName;
+use crate::sim::{self, sweep::DEFAULT_CACHE_SHAPES, SweepEngine};
+use crate::topology::Cluster;
+
+use super::report::Report;
+use super::{
+    shared_engine_sized, Row, Section, TableOut, TableSpec, ALLTOALL_COUNTS, BCAST_COUNTS,
+    NODE_VS_NET_COUNTS, SCATTER_COUNTS,
+};
+
+/// Explicit run parameters for plan execution. Replaces the implicit
+/// `MLANE_REPS`/`MLANE_THREADS`/`MLANE_CACHE_SHAPES` environment reads
+/// that used to live inside the library — construct one (or use
+/// [`RunConfig::from_env`] at a CLI edge) and pass it down.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Measured repetitions per cell (paper: 100, see `sim::PAPER_REPS`).
+    pub reps: usize,
+    /// Unmeasured warm-up repetitions per cell.
+    pub warmup: usize,
+    /// Worker threads for plan execution (sections are the work unit).
+    pub threads: usize,
+    /// Bound on the shared schedule cache, in shapes (see `sim::sweep`).
+    /// Note: the default engine behind [`run_plan`] is a process-wide
+    /// singleton sized by the **first** run's config; to guarantee a
+    /// bound, pass your own engine to [`run_plan_with`].
+    pub cache_shapes: usize,
+    /// Directory file-writing sinks (CSV) default to.
+    pub out_dir: PathBuf,
+    /// Measurement seed (per-rep streams derive from it).
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            reps: sim::DEFAULT_REPS,
+            warmup: sim::DEFAULT_WARMUP,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            cache_shapes: DEFAULT_CACHE_SHAPES,
+            out_dir: PathBuf::from("bench_out"),
+            seed: sim::DEFAULT_SEED,
+        }
+    }
+}
+
+impl RunConfig {
+    /// CLI-edge constructor: the defaults overridden by `MLANE_REPS`,
+    /// `MLANE_THREADS` and `MLANE_CACHE_SHAPES` where set (> 0). This
+    /// is the **only** place the harness touches the environment — the
+    /// library itself runs purely off the config values.
+    pub fn from_env() -> RunConfig {
+        fn env_usize(key: &str) -> Option<usize> {
+            std::env::var(key).ok().and_then(|v| v.parse().ok()).filter(|&n| n > 0)
+        }
+        let mut cfg = RunConfig::default();
+        if let Some(r) = env_usize("MLANE_REPS") {
+            cfg.reps = r;
+        }
+        if let Some(t) = env_usize("MLANE_THREADS") {
+            cfg.threads = t;
+        }
+        if let Some(s) = env_usize("MLANE_CACHE_SHAPES") {
+            cfg.cache_shapes = s;
+        }
+        cfg
+    }
+
+    pub fn reps(mut self, reps: usize) -> Self {
+        self.reps = reps;
+        self
+    }
+
+    pub fn warmup(mut self, warmup: usize) -> Self {
+        self.warmup = warmup;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn cache_shapes(mut self, cache_shapes: usize) -> Self {
+        self.cache_shapes = cache_shapes;
+        self
+    }
+
+    pub fn out_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.out_dir = dir.into();
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+type HeadingFn = Arc<dyn Fn(Cluster, OpKind, &Alg) -> String + Send + Sync>;
+
+/// Composable scenario-grid builder. Expands to the cartesian product
+/// (algorithms × clusters × operations) — algorithms outermost, so a
+/// multi-algorithm grid reads like the paper's stacked table sections —
+/// each section sweeping the grid's count series.
+///
+/// ```ignore
+/// let grid = Grid::new()
+///     .cluster(Cluster::hydra(2))
+///     .op(OpKind::Bcast)
+///     .algs((1..=3).map(registry::klane))
+///     .counts(BCAST_COUNTS);
+/// let plan = Plan::new().table(8, "k-lane Bcast", PersonaName::OpenMpi, &grid);
+/// ```
+#[derive(Clone, Default)]
+pub struct Grid {
+    clusters: Vec<Cluster>,
+    ops: Vec<OpKind>,
+    algs: Vec<Alg>,
+    counts: Vec<u64>,
+    heading: Option<HeadingFn>,
+}
+
+impl fmt::Debug for Grid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Grid")
+            .field("clusters", &self.clusters)
+            .field("ops", &self.ops)
+            .field("algs", &self.algs)
+            .field("counts", &self.counts)
+            .field("heading", &self.heading.as_ref().map(|_| "<fn>"))
+            .finish()
+    }
+}
+
+impl Grid {
+    pub fn new() -> Grid {
+        Grid::default()
+    }
+
+    pub fn cluster(mut self, cluster: Cluster) -> Self {
+        self.clusters.push(cluster);
+        self
+    }
+
+    pub fn clusters(mut self, clusters: impl IntoIterator<Item = Cluster>) -> Self {
+        self.clusters.extend(clusters);
+        self
+    }
+
+    pub fn op(mut self, op: OpKind) -> Self {
+        self.ops.push(op);
+        self
+    }
+
+    pub fn ops(mut self, ops: impl IntoIterator<Item = OpKind>) -> Self {
+        self.ops.extend(ops);
+        self
+    }
+
+    pub fn alg(mut self, alg: Alg) -> Self {
+        self.algs.push(alg);
+        self
+    }
+
+    pub fn algs(mut self, algs: impl IntoIterator<Item = Alg>) -> Self {
+        self.algs.extend(algs);
+        self
+    }
+
+    pub fn counts(mut self, counts: &[u64]) -> Self {
+        self.counts = counts.to_vec();
+        self
+    }
+
+    /// Override the section-heading function (defaults to
+    /// `"<op> <algorithm label>"`).
+    pub fn heading<F>(mut self, f: F) -> Self
+    where
+        F: Fn(Cluster, OpKind, &Alg) -> String + Send + Sync + 'static,
+    {
+        self.heading = Some(Arc::new(f));
+        self
+    }
+
+    /// Expand to typed sections: for each algorithm, for each cluster,
+    /// for each operation.
+    pub fn sections(&self) -> Vec<Section> {
+        let counts: Arc<[u64]> = Arc::from(&self.counts[..]);
+        let mut out = Vec::with_capacity(self.algs.len() * self.clusters.len() * self.ops.len());
+        for alg in &self.algs {
+            for &cluster in &self.clusters {
+                for &op in &self.ops {
+                    let heading = match &self.heading {
+                        Some(f) => f(cluster, op, alg),
+                        None => format!("{op} {}", alg.label()),
+                    };
+                    out.push(Section {
+                        heading,
+                        cluster,
+                        op,
+                        alg: alg.clone(),
+                        counts: counts.clone(),
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// An experiment plan: tables built from scenario grids, executed as
+/// one unit by [`run_plan`].
+#[derive(Clone, Debug, Default)]
+pub struct Plan {
+    pub tables: Vec<TableSpec>,
+}
+
+impl Plan {
+    pub fn new() -> Plan {
+        Plan::default()
+    }
+
+    /// Append one table expanded from a grid (builder style).
+    pub fn table(
+        mut self,
+        number: u32,
+        caption: impl Into<String>,
+        persona: PersonaName,
+        grid: &Grid,
+    ) -> Plan {
+        self.tables.push(TableSpec {
+            number,
+            caption: caption.into(),
+            persona,
+            sections: grid.sections(),
+        });
+        self
+    }
+
+    pub fn get(&self, number: u32) -> Option<&TableSpec> {
+        self.tables.iter().find(|t| t.number == number)
+    }
+
+    /// Total sections across the plan.
+    pub fn num_sections(&self) -> usize {
+        self.tables.iter().map(|t| t.sections.len()).sum()
+    }
+
+    /// Total measurement cells (section × count) across the plan.
+    pub fn num_cells(&self) -> usize {
+        self.tables
+            .iter()
+            .flat_map(|t| &t.sections)
+            .map(|s| s.counts.len())
+            .sum()
+    }
+
+    fn sorted(mut self) -> Plan {
+        self.tables.sort_by_key(|t| t.number);
+        self
+    }
+
+    /// Resolve a named preset (`mlane sweep --preset <name>`).
+    pub fn preset(name: &str) -> Option<Plan> {
+        match name {
+            "paper" => Some(Plan::paper()),
+            "appendix" => Some(Plan::appendix()),
+            _ => None,
+        }
+    }
+
+    /// Preset names accepted by [`Plan::preset`].
+    pub const PRESETS: &[&str] = &["paper", "appendix"];
+
+    /// The paper's full evaluation: every table of Tables 2–49, as grid
+    /// declarations. Algorithms are registry handles — the specs carry
+    /// no algorithm enumeration of their own.
+    pub fn paper() -> Plan {
+        let mut plan = Plan::new();
+
+        // ---- §4.1: Tables 2–7 (node vs network, p = 32) ----
+        let net32 = Cluster::new(32, 1, 2); // N=32, n=1 (both rails usable, §4.1)
+        let node32 = Cluster::new(1, 32, 2); // N=1, n=32
+        for (base, label, alg) in [
+            (2u32, "k-ported alltoall", registry::kported(31)),
+            (3, "MPI_Alltoall", registry::native()),
+        ] {
+            for (pi, persona) in PersonaName::all().into_iter().enumerate() {
+                let grid = Grid::new()
+                    .clusters([net32, node32])
+                    .op(OpKind::Alltoall)
+                    .alg(alg.clone())
+                    .counts(NODE_VS_NET_COUNTS)
+                    .heading(move |cl: Cluster, _: OpKind, _: &Alg| {
+                        format!("{label} N={}", cl.nodes)
+                    });
+                plan = plan.table(
+                    base + pi as u32 * 2,
+                    format!("{label}, N=32/n=1 vs N=1/n=32, p=32"),
+                    persona,
+                    &grid,
+                );
+            }
+        }
+
+        // ---- §4.2: Tables 8–22 (bcast) / §4.3: Tables 23–37 (scatter) ----
+        for (pi, persona) in PersonaName::all().into_iter().enumerate() {
+            plan = rooted_family(
+                plan,
+                8 + pi as u32 * 5,
+                persona,
+                OpKind::Bcast,
+                BCAST_COUNTS,
+                bcast_klane_heading,
+            );
+        }
+        for (pi, persona) in PersonaName::all().into_iter().enumerate() {
+            plan = rooted_family(
+                plan,
+                23 + pi as u32 * 5,
+                persona,
+                OpKind::Scatter,
+                SCATTER_COUNTS,
+                scatter_klane_heading,
+            );
+        }
+
+        // ---- §4.4: Tables 38–49 (alltoall) ----
+        for (pi, persona) in PersonaName::all().into_iter().enumerate() {
+            let base = 38 + pi as u32 * 4;
+            let hydra_grid =
+                Grid::new().cluster(hydra()).op(OpKind::Alltoall).counts(ALLTOALL_COUNTS);
+            let kported = |lo: u32, hi: u32| {
+                hydra_grid
+                    .clone()
+                    .algs((lo..=hi).map(registry::kported))
+                    .heading(|_: Cluster, _: OpKind, a: &Alg| {
+                        format!("Alltoall, {}-ported", a.k().unwrap_or(0))
+                    })
+            };
+            plan = plan.table(
+                base,
+                "k-lane Alltoall (32 virtual lanes) on Hydra",
+                persona,
+                &hydra_grid.clone().alg(registry::klane(1)).heading(
+                    |_: Cluster, _: OpKind, _: &Alg| "Alltoall, 32 virtual lanes".to_string(),
+                ),
+            );
+            plan = plan.table(
+                base + 1,
+                "k-ported Alltoall for k=1,2,3 on Hydra",
+                persona,
+                &kported(1, 3),
+            );
+            plan = plan.table(
+                base + 2,
+                "k-ported Alltoall for k=4,5,6 on Hydra",
+                persona,
+                &kported(4, 6),
+            );
+            plan = plan.table(
+                base + 3,
+                "full-lane Alltoall and native MPI_Alltoall on Hydra",
+                persona,
+                &hydra_grid
+                    .clone()
+                    .algs([registry::fulllane(), registry::native()])
+                    .heading(fulllane_native_heading),
+            );
+        }
+
+        plan.sorted()
+    }
+
+    /// Appendix preset (not in the paper): the §2.3 theoretical
+    /// two-phase k-lane broadcast (`klane2p`) against the adapted
+    /// k-lane implementation, side by side for k = 2, 4, 6 on Hydra —
+    /// scenario growth through the grid API, one declaration per
+    /// persona (tables 50–52).
+    pub fn appendix() -> Plan {
+        let grid = Grid::new()
+            .cluster(hydra())
+            .op(OpKind::Bcast)
+            .algs(
+                [2u32, 4, 6]
+                    .into_iter()
+                    .flat_map(|k| [registry::klane(k), registry::klane2p(k)]),
+            )
+            .counts(BCAST_COUNTS)
+            .heading(|_: Cluster, _: OpKind, a: &Alg| {
+                let k = a.k().unwrap_or(0);
+                if a.name() == "klane2p" {
+                    format!("Bcast, k = {k} lanes (two-phase)")
+                } else {
+                    format!("Bcast, k = {k} lanes")
+                }
+            });
+        let mut plan = Plan::new();
+        for (pi, persona) in PersonaName::all().into_iter().enumerate() {
+            plan = plan.table(
+                50 + pi as u32,
+                "two-phase vs adapted k-lane Bcast on Hydra (appendix)",
+                persona,
+                &grid,
+            );
+        }
+        plan
+    }
+}
+
+fn hydra() -> Cluster {
+    Cluster::hydra(2)
+}
+
+fn bcast_klane_heading(k: u32) -> String {
+    format!("Bcast, k = {k} lanes")
+}
+
+fn scatter_klane_heading(k: u32) -> String {
+    format!("Scatter, {k} lane{}", if k == 1 { "" } else { "s" })
+}
+
+fn fulllane_native_heading(_cl: Cluster, op: OpKind, alg: &Alg) -> String {
+    if alg.name() == "native" {
+        format!("MPI_{}", op.title())
+    } else {
+        format!("Full-lane {}", op.title())
+    }
+}
+
+/// The five-table family shared by §4.2 (bcast) and §4.3 (scatter):
+/// k-lane k=1..3 / k=4..6, k-ported k=1..3 / k=4..6, full-lane+native.
+fn rooted_family(
+    mut plan: Plan,
+    base: u32,
+    persona: PersonaName,
+    op: OpKind,
+    counts: &[u64],
+    klane_heading: fn(u32) -> String,
+) -> Plan {
+    let title = op.title();
+    let hydra_grid = Grid::new().cluster(hydra()).op(op).counts(counts);
+    let klane = |lo: u32, hi: u32| {
+        hydra_grid
+            .clone()
+            .algs((lo..=hi).map(registry::klane))
+            .heading(move |_: Cluster, _: OpKind, a: &Alg| klane_heading(a.k().unwrap_or(0)))
+    };
+    let kported = |lo: u32, hi: u32| {
+        hydra_grid
+            .clone()
+            .algs((lo..=hi).map(registry::kported))
+            .heading(move |_: Cluster, _: OpKind, a: &Alg| {
+                format!("{title}, {}-ported", a.k().unwrap_or(0))
+            })
+    };
+    plan = plan.table(base, format!("k-lane {title} for k=1,2,3 on Hydra"), persona, &klane(1, 3));
+    plan = plan.table(
+        base + 1,
+        format!("k-lane {title} for k=4,5,6 on Hydra"),
+        persona,
+        &klane(4, 6),
+    );
+    plan = plan.table(
+        base + 2,
+        format!("k-ported {title} for k=1,2,3 on Hydra"),
+        persona,
+        &kported(1, 3),
+    );
+    plan = plan.table(
+        base + 3,
+        format!("k-ported {title} for k=4,5,6 on Hydra"),
+        persona,
+        &kported(4, 6),
+    );
+    plan.table(
+        base + 4,
+        format!("full-lane {title} and native MPI_{title} on Hydra"),
+        persona,
+        &hydra_grid
+            .clone()
+            .algs([registry::fulllane(), registry::native()])
+            .heading(fulllane_native_heading),
+    )
+}
+
+/// Typed plan-execution errors: a broken spec surfaces as a `Result`,
+/// never a panic, carrying where it broke and the underlying registry
+/// error.
+#[derive(Clone, Debug)]
+pub enum PlanError {
+    /// A section's (cluster, op, algorithm) failed to build or run.
+    Section { table: u32, section: String, source: AlgError },
+    /// A table with no sections, or a section with an empty count
+    /// series — a grid-construction mistake (a forgotten `.counts(…)`
+    /// or `.algs(…)`) that would otherwise emit a silently useless
+    /// empty report.
+    EmptySpec { table: u32, section: Option<String> },
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::Section { table, section, source } => {
+                write!(f, "table {table}, section {section}: {source}")
+            }
+            PlanError::EmptySpec { table, section: Some(section) } => {
+                write!(f, "table {table}, section {section}: empty count series")
+            }
+            PlanError::EmptySpec { table, section: None } => {
+                write!(f, "table {table}: no sections in spec")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PlanError::Section { source, .. } => Some(source),
+            PlanError::EmptySpec { .. } => None,
+        }
+    }
+}
+
+/// One section's count sweep. The `Collectives` shares the engine (so
+/// shapes persist across sections and tables) but owns its rep state —
+/// no allocation inside the sweep, no cross-thread contention except on
+/// a shared shape.
+fn run_section(
+    engine: &Arc<SweepEngine>,
+    cfg: &RunConfig,
+    spec: &TableSpec,
+    sec: &Section,
+) -> Result<Vec<Row>, PlanError> {
+    let mut coll = Collectives::with_engine(sec.cluster, spec.persona, engine.clone());
+    coll.reps = cfg.reps;
+    coll.warmup = cfg.warmup;
+    coll.seed = cfg.seed;
+    let mut rows = Vec::with_capacity(sec.counts.len());
+    for &c in sec.counts.iter() {
+        let m = coll.run(sec.op.op(c), &sec.alg).map_err(|source| PlanError::Section {
+            table: spec.number,
+            section: sec.heading.clone(),
+            source,
+        })?;
+        rows.push(Row {
+            section: sec.heading.clone(),
+            k: m.k,
+            n: sec.cluster.cores,
+            nodes: sec.cluster.nodes,
+            p: sec.cluster.p(),
+            c,
+            avg: m.summary.avg,
+            min: m.summary.min,
+        });
+    }
+    Ok(rows)
+}
+
+type SectionResult = Result<Vec<Row>, PlanError>;
+
+/// Execute a whole plan against the process-wide shared engine: every
+/// section of every table goes into one work queue drained by
+/// `cfg.threads` workers, so the *outer* table loop parallelises too
+/// (persona-level sharding across tables). Output is deterministic and
+/// identical to a serial run: rows are reassembled in (table, section,
+/// count) order, and cell values depend only on (spec, model, config).
+///
+/// The shared engine is a process singleton sized by the first caller's
+/// `cache_shapes` (later values are ignored); use [`run_plan_with`]
+/// with your own engine for a guaranteed bound.
+pub fn run_plan(plan: &Plan, cfg: &RunConfig) -> Result<Report, PlanError> {
+    run_plan_with(&shared_engine_sized(cfg.cache_shapes), plan, cfg)
+}
+
+/// Reject statically-detectable spec errors before any simulation:
+/// an (algorithm, op) mismatch is knowable from the registry alone, so
+/// a broken grid fails in microseconds, not after a Hydra-scale sweep;
+/// empty grids (no sections / no counts) would "succeed" with a
+/// useless empty report at every entry point, so they fail here too.
+fn check_plan(plan: &Plan) -> Result<(), PlanError> {
+    for spec in &plan.tables {
+        if spec.sections.is_empty() {
+            return Err(PlanError::EmptySpec { table: spec.number, section: None });
+        }
+        for sec in &spec.sections {
+            if sec.counts.is_empty() {
+                return Err(PlanError::EmptySpec {
+                    table: spec.number,
+                    section: Some(sec.heading.clone()),
+                });
+            }
+            if !sec.alg.supports(sec.op) {
+                return Err(PlanError::Section {
+                    table: spec.number,
+                    section: sec.heading.clone(),
+                    source: AlgError::UnsupportedCombination {
+                        alg: sec.alg.name().to_string(),
+                        op: sec.op,
+                        supported: registry::registry().supporting(sec.op),
+                    },
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// [`run_plan`] against a caller-provided engine (isolated caches for
+/// tests and benchmarks — and the way to get a *guaranteed*
+/// cache bound, since the default shared engine is a process singleton
+/// sized by its first user).
+pub fn run_plan_with(
+    engine: &Arc<SweepEngine>,
+    plan: &Plan,
+    cfg: &RunConfig,
+) -> Result<Report, PlanError> {
+    check_plan(plan)?;
+
+    // Flatten to (table, section) work items; their index is the only
+    // coordination between workers.
+    let items: Vec<(usize, usize)> = plan
+        .tables
+        .iter()
+        .enumerate()
+        .flat_map(|(t, spec)| (0..spec.sections.len()).map(move |s| (t, s)))
+        .collect();
+    let workers = cfg.threads.min(items.len()).max(1);
+
+    let mut slots: Vec<Vec<Option<SectionResult>>> =
+        plan.tables.iter().map(|t| t.sections.iter().map(|_| None).collect()).collect();
+
+    // Build-time failures that survive `check_plan` (e.g. invalid k for
+    // the cluster) stop the run early rather than sweeping the rest of
+    // the plan to completion first.
+    let failed = AtomicBool::new(false);
+
+    if workers <= 1 {
+        for &(t, s) in &items {
+            let spec = &plan.tables[t];
+            let r = run_section(engine, cfg, spec, &spec.sections[s]);
+            let is_err = r.is_err();
+            slots[t][s] = Some(r);
+            if is_err {
+                break;
+            }
+        }
+    } else {
+        // Work-stealing over item indices; workers return ((t, s), rows)
+        // pairs so ordering is reassembled exactly.
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut done = Vec::new();
+                        loop {
+                            if failed.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= items.len() {
+                                break;
+                            }
+                            let (t, s) = items[i];
+                            let spec = &plan.tables[t];
+                            let r = run_section(engine, cfg, spec, &spec.sections[s]);
+                            if r.is_err() {
+                                failed.store(true, Ordering::Relaxed);
+                            }
+                            done.push(((t, s), r));
+                        }
+                        done
+                    })
+                })
+                .collect();
+            for h in handles {
+                for ((t, s), r) in h.join().expect("plan worker panicked") {
+                    slots[t][s] = Some(r);
+                }
+            }
+        });
+    }
+
+    // On failure, surface the first recorded error in (table, section)
+    // order. (With the early exit, *which* failing section is reported
+    // may vary when several are broken — but whether the plan fails
+    // never does, and successful output stays byte-deterministic.)
+    for table_slots in &mut slots {
+        for slot in table_slots.iter_mut() {
+            if matches!(slot, Some(Err(_))) {
+                if let Some(Err(e)) = slot.take() {
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    // Success: every slot is filled; reassemble rows in spec order.
+    let mut tables = Vec::with_capacity(plan.tables.len());
+    for (spec, table_slots) in plan.tables.iter().zip(&mut slots) {
+        let mut rows = Vec::new();
+        for slot in table_slots.iter_mut() {
+            rows.extend(slot.take().expect("section not processed")?);
+        }
+        tables.push(TableOut { spec: spec.clone(), rows });
+    }
+    Ok(Report { tables })
+}
+
+/// Run a single table (a one-table plan) on the shared engine.
+pub fn run_table(spec: &TableSpec, cfg: &RunConfig) -> Result<TableOut, PlanError> {
+    run_table_with(&shared_engine_sized(cfg.cache_shapes), spec, cfg)
+}
+
+/// [`run_table`] against a caller-provided engine.
+pub fn run_table_with(
+    engine: &Arc<SweepEngine>,
+    spec: &TableSpec,
+    cfg: &RunConfig,
+) -> Result<TableOut, PlanError> {
+    let plan = Plan { tables: vec![spec.clone()] };
+    let mut report = run_plan_with(engine, &plan, cfg)?;
+    Ok(report.tables.pop().expect("one-table plan yields one table"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Cluster {
+        Cluster::new(2, 4, 2)
+    }
+
+    fn cfg() -> RunConfig {
+        RunConfig::default().reps(2).warmup(0)
+    }
+
+    #[test]
+    fn grid_expands_alg_major_then_cluster_then_op() {
+        let grid = Grid::new()
+            .clusters([tiny(), Cluster::new(3, 4, 2)])
+            .ops([OpKind::Bcast, OpKind::Scatter])
+            .algs([registry::klane(1), registry::klane(2)])
+            .counts(&[1, 64]);
+        let secs = grid.sections();
+        assert_eq!(secs.len(), 8);
+        // Algorithms outermost.
+        assert!(secs[0].heading.starts_with("bcast 1-lane"), "{}", secs[0].heading);
+        assert_eq!(secs[0].cluster, tiny());
+        assert_eq!(secs[1].op, OpKind::Scatter);
+        assert_eq!(secs[2].cluster, Cluster::new(3, 4, 2));
+        assert!(secs[4].heading.contains("2-lane"), "{}", secs[4].heading);
+        assert!(secs.iter().all(|s| s.counts[..] == [1, 64]));
+    }
+
+    #[test]
+    fn default_heading_names_op_and_label() {
+        let secs = Grid::new()
+            .cluster(tiny())
+            .op(OpKind::Alltoall)
+            .alg(registry::fulllane())
+            .counts(&[1])
+            .sections();
+        assert_eq!(secs[0].heading, "alltoall full-lane");
+    }
+
+    #[test]
+    fn paper_plan_matches_legacy_registry_shape() {
+        let plan = Plan::paper();
+        assert_eq!(plan.tables.len(), 48);
+        assert_eq!(plan.get(12).unwrap().sections.len(), 2);
+        assert_eq!(plan.get(12).unwrap().sections[0].heading, "Full-lane Bcast");
+        assert_eq!(plan.get(12).unwrap().sections[1].heading, "MPI_Bcast");
+        assert_eq!(plan.get(23).unwrap().sections[0].heading, "Scatter, 1 lane");
+        assert_eq!(plan.get(24).unwrap().sections[2].heading, "Scatter, 6 lanes");
+        assert_eq!(plan.get(10).unwrap().sections[1].heading, "Bcast, 2-ported");
+        assert_eq!(plan.get(38).unwrap().sections[0].heading, "Alltoall, 32 virtual lanes");
+        assert_eq!(plan.get(2).unwrap().sections[0].heading, "k-ported alltoall N=32");
+        assert_eq!(plan.get(2).unwrap().sections[1].heading, "k-ported alltoall N=1");
+        assert_eq!(plan.get(7).unwrap().sections[0].heading, "MPI_Alltoall N=32");
+    }
+
+    #[test]
+    fn appendix_preset_pairs_adapted_and_two_phase() {
+        let plan = Plan::preset("appendix").unwrap();
+        assert_eq!(plan.tables.len(), 3);
+        let t = &plan.tables[0];
+        assert_eq!(t.number, 50);
+        assert_eq!(t.sections.len(), 6);
+        assert_eq!(t.sections[0].heading, "Bcast, k = 2 lanes");
+        assert_eq!(t.sections[1].heading, "Bcast, k = 2 lanes (two-phase)");
+        assert_eq!(t.sections[5].heading, "Bcast, k = 6 lanes (two-phase)");
+        assert!(Plan::preset("nosuch").is_none());
+        assert!(Plan::PRESETS.contains(&"appendix"));
+    }
+
+    #[test]
+    fn run_plan_propagates_broken_specs_as_typed_errors() {
+        // bruck does not support bcast: the plan must fail with a typed
+        // PlanError naming the table and section, not panic.
+        let grid = Grid::new()
+            .cluster(tiny())
+            .op(OpKind::Bcast)
+            .alg(registry::bruck(2))
+            .counts(&[1]);
+        let plan = Plan::new().table(99, "broken", PersonaName::OpenMpi, &grid);
+        let err = run_plan_with(&Arc::new(SweepEngine::new()), &plan, &cfg()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.starts_with("table 99, section "), "{msg}");
+        assert!(msg.contains("bruck does not support bcast"), "{msg}");
+        assert!(matches!(
+            err,
+            PlanError::Section { table: 99, source: AlgError::UnsupportedCombination { .. }, .. }
+        ));
+    }
+
+    #[test]
+    fn empty_grids_are_rejected_not_silently_empty() {
+        // Forgotten .counts(…): typed error, not an empty report.
+        let grid = Grid::new().cluster(tiny()).op(OpKind::Bcast).alg(registry::klane(1));
+        let plan = Plan::new().table(5, "no counts", PersonaName::OpenMpi, &grid);
+        let err = run_plan_with(&Arc::new(SweepEngine::new()), &plan, &cfg()).unwrap_err();
+        assert!(err.to_string().contains("empty count series"), "{err}");
+
+        // Forgotten .algs(…) (no sections at all).
+        let plan = Plan::new().table(6, "no sections", PersonaName::OpenMpi, &Grid::new());
+        let err = run_plan_with(&Arc::new(SweepEngine::new()), &plan, &cfg()).unwrap_err();
+        assert!(err.to_string().contains("no sections"), "{err}");
+    }
+
+    #[test]
+    fn build_time_failures_stop_the_plan_early() {
+        // klane supports bcast, so the static pre-pass passes; k > cores
+        // surfaces at schedule build and must come back as a typed
+        // error (after which remaining sections are skipped).
+        let grid = Grid::new()
+            .cluster(Cluster::new(2, 2, 2))
+            .op(OpKind::Bcast)
+            .alg(registry::klane(9))
+            .counts(&[1]);
+        let plan = Plan::new().table(7, "bad k", PersonaName::OpenMpi, &grid);
+        let err = run_plan_with(&Arc::new(SweepEngine::new()), &plan, &cfg()).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                PlanError::Section { source: AlgError::InvalidK { k: 9, .. }, .. }
+            ),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn appendix_runs_on_a_small_cluster() {
+        // The preset's grid is valid end to end (klane2p builds).
+        let t = Plan::appendix().tables.remove(0).with_grid(Cluster::new(2, 8, 2), &[1]);
+        let out =
+            run_table_with(&Arc::new(SweepEngine::new()), &t, &cfg()).unwrap();
+        assert_eq!(out.rows.len(), 6);
+    }
+
+    #[test]
+    fn one_worker_pool_spans_tables() {
+        // Two tables sweeping the same shape through one engine: the
+        // second table's sections must be served from the first's cached
+        // schedules even when the plan runs multi-threaded.
+        let engine = Arc::new(SweepEngine::new());
+        let grid = Grid::new()
+            .cluster(tiny())
+            .op(OpKind::Bcast)
+            .alg(registry::fulllane())
+            .counts(&[1, 64]);
+        let plan = Plan::new()
+            .table(1, "first", PersonaName::OpenMpi, &grid)
+            .table(2, "second", PersonaName::OpenMpi, &grid);
+        let report = run_plan_with(&engine, &plan, &cfg().threads(4)).unwrap();
+        assert_eq!(report.tables.len(), 2);
+        let st = engine.stats();
+        assert_eq!(st.schedules_built, 1, "{st:?}");
+        assert_eq!(st.cells, 4, "{st:?}");
+    }
+
+    #[test]
+    fn from_env_defaults_without_overrides() {
+        // No env mutation in tests: just check the default shape (the
+        // subprocess CLI tests pin the env-override path race-free).
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.reps, sim::DEFAULT_REPS);
+        assert_eq!(cfg.cache_shapes, DEFAULT_CACHE_SHAPES);
+        assert!(cfg.threads >= 1);
+        assert_eq!(cfg.out_dir, PathBuf::from("bench_out"));
+    }
+}

@@ -1,0 +1,377 @@
+//! Report emission: completed tables flow through [`Sink`]s.
+//!
+//! [`run_plan`](super::run_plan) returns a [`Report`] — the plan's
+//! [`TableOut`]s in spec order. Emission is a separate, pluggable
+//! layer:
+//!
+//! * [`TextSink`] — the paper-style text rendering (byte-identical to
+//!   the pre-plan-API `TableOut::render`; the golden test pins it);
+//! * [`CsvSink`] — one `table_<nn>.csv` per table in a directory, same
+//!   schema as the old `write_csv`;
+//! * [`JsonSink`] — a JSON array carrying the **full spec plus rows**
+//!   per table (cluster, op, algorithm, count series — everything
+//!   needed to re-run or diff a scenario), for the BENCH trajectory
+//!   tooling and external analysis.
+//!
+//! Sinks receive tables one at a time (`table`) and a final `finish`,
+//! so they can stream; [`Report::emit`] drives the sequence.
+
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+use super::TableOut;
+
+/// A destination for completed tables.
+pub trait Sink {
+    /// Emit one completed table.
+    fn table(&mut self, t: &TableOut) -> io::Result<()>;
+
+    /// Called once after the last table (flush trailers).
+    fn finish(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// The result of a plan run: completed tables in spec order.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub tables: Vec<TableOut>,
+}
+
+impl Report {
+    /// Drive every table through a sink, then finish it.
+    pub fn emit(&self, sink: &mut dyn Sink) -> io::Result<()> {
+        for t in &self.tables {
+            sink.table(t)?;
+        }
+        sink.finish()
+    }
+
+    /// The whole report as paper-style text (the [`TextSink`] format).
+    pub fn text(&self) -> String {
+        self.tables.iter().map(table_text).collect()
+    }
+
+    /// The whole report as a JSON array (the [`JsonSink`] format).
+    pub fn json(&self) -> String {
+        let mut buf = Vec::new();
+        let mut sink = JsonSink::new(&mut buf);
+        self.emit(&mut sink).expect("in-memory sink cannot fail");
+        String::from_utf8(buf).expect("json sink emits utf-8")
+    }
+}
+
+/// Paper-style text for one table — the exact format of the
+/// pre-redesign renderer (`rust/tests/plan_report.rs` pins this
+/// byte-for-byte against a verbatim copy of the old code).
+pub(crate) fn table_text(t: &TableOut) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "Table {}: {} [{}]",
+        t.spec.number,
+        t.spec.caption,
+        t.spec.persona.label()
+    );
+    let mut current: Option<&str> = None;
+    for r in &t.rows {
+        if current != Some(r.section.as_str()) {
+            current = Some(r.section.as_str());
+            let _ = writeln!(out, "  -- {} --", r.section);
+            let _ = writeln!(
+                out,
+                "  {:>2} {:>4} {:>4} {:>5} {:>9} {:>12} {:>12}",
+                "k", "n", "N", "p", "c", "avg(us)", "min(us)"
+            );
+        }
+        let _ = writeln!(
+            out,
+            "  {:>2} {:>4} {:>4} {:>5} {:>9} {:>12.2} {:>12.2}",
+            r.k, r.n, r.nodes, r.p, r.c, r.avg, r.min
+        );
+    }
+    out
+}
+
+/// CSV lines for one table — the old `write_csv` schema.
+pub(crate) fn table_csv(t: &TableOut) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::from("table,persona,section,k,n,N,p,c,avg_us,min_us\n");
+    for r in &t.rows {
+        let _ = writeln!(
+            out,
+            "{},{},{},{},{},{},{},{},{:.2},{:.2}",
+            t.spec.number,
+            t.spec.persona.label(),
+            r.section,
+            r.k,
+            r.n,
+            r.nodes,
+            r.p,
+            r.c,
+            r.avg,
+            r.min
+        );
+    }
+    out
+}
+
+/// Paper-style text to any writer.
+pub struct TextSink<W: Write> {
+    w: W,
+}
+
+impl<W: Write> TextSink<W> {
+    pub fn new(w: W) -> Self {
+        TextSink { w }
+    }
+}
+
+impl<W: Write> Sink for TextSink<W> {
+    fn table(&mut self, t: &TableOut) -> io::Result<()> {
+        self.w.write_all(table_text(t).as_bytes())
+    }
+
+    fn finish(&mut self) -> io::Result<()> {
+        self.w.flush()
+    }
+}
+
+/// One `table_<nn>.csv` per table under a directory.
+pub struct CsvSink {
+    dir: PathBuf,
+    written: Vec<PathBuf>,
+}
+
+impl CsvSink {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        CsvSink { dir: dir.into(), written: Vec::new() }
+    }
+
+    /// Paths written so far, in emission order.
+    pub fn written(&self) -> &[PathBuf] {
+        &self.written
+    }
+
+    /// The file a table lands in.
+    pub fn path_for(dir: &Path, table: u32) -> PathBuf {
+        dir.join(format!("table_{table:02}.csv"))
+    }
+}
+
+impl Sink for CsvSink {
+    fn table(&mut self, t: &TableOut) -> io::Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
+        let path = Self::path_for(&self.dir, t.spec.number);
+        std::fs::write(&path, table_csv(t))?;
+        self.written.push(path);
+        Ok(())
+    }
+}
+
+/// A JSON array of table objects, each carrying the full spec (per
+/// section: heading, cluster dims, op, algorithm family, k, count
+/// series) plus the measured rows.
+pub struct JsonSink<W: Write> {
+    w: W,
+    started: bool,
+}
+
+impl<W: Write> JsonSink<W> {
+    pub fn new(w: W) -> Self {
+        JsonSink { w, started: false }
+    }
+}
+
+impl<W: Write> Sink for JsonSink<W> {
+    fn table(&mut self, t: &TableOut) -> io::Result<()> {
+        let lead = if self.started { ",\n" } else { "[\n" };
+        self.started = true;
+        self.w.write_all(lead.as_bytes())?;
+        self.w.write_all(table_json(t).as_bytes())
+    }
+
+    fn finish(&mut self) -> io::Result<()> {
+        if !self.started {
+            self.w.write_all(b"[")?;
+        }
+        self.w.write_all(b"\n]\n")?;
+        self.w.flush()
+    }
+}
+
+/// Minimal JSON string escaping (the emitted strings are ASCII labels,
+/// but stay correct for anything).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn table_json(t: &TableOut) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "{{\"table\":{},\"caption\":\"{}\",\"persona\":\"{}\",\"persona_label\":\"{}\",\"sections\":[",
+        t.spec.number,
+        esc(&t.spec.caption),
+        t.spec.persona.key(),
+        esc(t.spec.persona.label()),
+    );
+    for (i, s) in t.spec.sections.iter().enumerate() {
+        let k = match s.alg.k() {
+            Some(k) => k.to_string(),
+            None => "null".into(),
+        };
+        let counts: Vec<String> = s.counts.iter().map(|c| c.to_string()).collect();
+        let _ = write!(
+            out,
+            "{}{{\"heading\":\"{}\",\"nodes\":{},\"cores\":{},\"lanes\":{},\"p\":{},\"op\":\"{}\",\"alg\":\"{}\",\"k\":{},\"counts\":[{}]}}",
+            if i == 0 { "" } else { "," },
+            esc(&s.heading),
+            s.cluster.nodes,
+            s.cluster.cores,
+            s.cluster.lanes,
+            s.cluster.p(),
+            s.op.name(),
+            s.alg.name(),
+            k,
+            counts.join(","),
+        );
+    }
+    out.push_str("],\"rows\":[");
+    for (i, r) in t.rows.iter().enumerate() {
+        let _ = write!(
+            out,
+            "{}{{\"section\":\"{}\",\"k\":{},\"n\":{},\"N\":{},\"p\":{},\"c\":{},\"avg_us\":{},\"min_us\":{}}}",
+            if i == 0 { "" } else { "," },
+            esc(&r.section),
+            r.k,
+            r.n,
+            r.nodes,
+            r.p,
+            r.c,
+            r.avg,
+            r.min,
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Row, Section, TableSpec};
+    use super::*;
+    use crate::algorithms::registry::{self, OpKind};
+    use crate::model::PersonaName;
+    use crate::topology::Cluster;
+    use std::sync::Arc;
+
+    fn sample() -> TableOut {
+        let spec = TableSpec {
+            number: 7,
+            caption: "sample \"quoted\" caption".into(),
+            persona: PersonaName::Mpich,
+            sections: vec![Section {
+                heading: "Bcast, k = 2 lanes".into(),
+                cluster: Cluster::new(2, 4, 2),
+                op: OpKind::Bcast,
+                alg: registry::klane(2),
+                counts: Arc::from(&[1u64, 64][..]),
+            }],
+        };
+        let rows = vec![
+            Row {
+                section: "Bcast, k = 2 lanes".into(),
+                k: 2,
+                n: 4,
+                nodes: 2,
+                p: 8,
+                c: 1,
+                avg: 12.5,
+                min: 10.25,
+            },
+            Row {
+                section: "Bcast, k = 2 lanes".into(),
+                k: 2,
+                n: 4,
+                nodes: 2,
+                p: 8,
+                c: 64,
+                avg: 14.0,
+                min: 13.0,
+            },
+        ];
+        TableOut { spec, rows }
+    }
+
+    #[test]
+    fn text_sink_renders_paper_style() {
+        let t = sample();
+        let mut buf = Vec::new();
+        let report = Report { tables: vec![t.clone()] };
+        report.emit(&mut TextSink::new(&mut buf)).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert_eq!(text, report.text());
+        assert!(text.starts_with("Table 7: sample \"quoted\" caption [mpich 3.3]\n"), "{text}");
+        assert!(text.contains("  -- Bcast, k = 2 lanes --\n"), "{text}");
+        assert!(text.contains("avg(us)"), "{text}");
+        // One header pair + two rows, section printed once.
+        assert_eq!(text.matches("-- Bcast").count(), 1);
+        assert_eq!(text.lines().count(), 5);
+    }
+
+    #[test]
+    fn csv_sink_writes_old_schema() {
+        let t = sample();
+        let dir = std::env::temp_dir().join("mlane_csv_sink_test");
+        let mut sink = CsvSink::new(&dir);
+        Report { tables: vec![t] }.emit(&mut sink).unwrap();
+        assert_eq!(sink.written().len(), 1);
+        let text = std::fs::read_to_string(&sink.written()[0]).unwrap();
+        assert!(text.starts_with("table,persona,section,k,n,N,p,c,avg_us,min_us\n"), "{text}");
+        assert!(text.contains("7,mpich 3.3,Bcast, k = 2 lanes,2,4,2,8,1,12.50,10.25"), "{text}");
+        assert_eq!(text.lines().count(), 3);
+    }
+
+    #[test]
+    fn json_sink_carries_spec_and_rows() {
+        let report = Report { tables: vec![sample()] };
+        let json = report.json();
+        assert!(json.starts_with("[\n{\"table\":7,"), "{json}");
+        assert!(json.trim_end().ends_with("]"), "{json}");
+        assert!(json.contains("\"caption\":\"sample \\\"quoted\\\" caption\""), "{json}");
+        assert!(json.contains("\"persona\":\"mpich\""), "{json}");
+        assert!(json.contains("\"alg\":\"klane\""), "{json}");
+        assert!(json.contains("\"k\":2"), "{json}");
+        assert!(json.contains("\"counts\":[1,64]"), "{json}");
+        assert!(json.contains("\"avg_us\":12.5"), "{json}");
+    }
+
+    #[test]
+    fn empty_report_is_still_valid_json() {
+        let json = Report::default().json();
+        assert_eq!(json, "[\n]\n");
+    }
+
+    #[test]
+    fn escaping_covers_controls() {
+        assert_eq!(esc("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(esc("\u{1}"), "\\u0001");
+    }
+}

@@ -3,7 +3,12 @@
 //!
 //! ```text
 //! mlane table <N> [--persona openmpi|intelmpi|mpich] [--csv DIR]
-//! mlane tables [--csv DIR]            # regenerate all 48 tables (2..49)
+//! mlane tables [--csv DIR] [--threads T]  # all 48 tables (2..49), plan-parallel
+//! mlane sweep  [--preset paper|appendix]
+//!              [--nodes N --cores n --lanes L] [--op OP[,OP...]]
+//!              [--alg NAME[:K][,NAME[:K]...]] [--k K] [--counts C[,C...]]
+//!              [--persona P[,P...]] [--format text|csv|json] [--out DIR]
+//!              [--reps R] [--threads T] [--list]
 //! mlane run --op bcast|scatter|gather|allgather|alltoall
 //!           --alg <registry name: kported|klane|klane2p|fulllane|bruck|...>
 //!           [--k K] [--c C] [--nodes N] [--cores n] [--lanes L]
@@ -18,18 +23,27 @@
 //! Algorithm names are resolved against `algorithms::registry` — the
 //! catalog, candidate sets, validation coverage and this help text all
 //! follow a new registration automatically.
+//!
+//! This binary is the **only** place environment variables are read:
+//! `MLANE_REPS`/`MLANE_THREADS`/`MLANE_CACHE_SHAPES` are parsed here
+//! into a `harness::RunConfig` (flags override env) and passed down —
+//! the library itself is environment-free.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use mlane::algorithms::registry::{registry, Alg, OpKind};
 use mlane::coordinator::{Collectives, Op};
 use mlane::exec::ExecRuntime;
-use mlane::harness::{self, anchors};
+use mlane::harness::{
+    self, anchors, CsvSink, Grid, JsonSink, Plan, Report, RunConfig, TextSink,
+};
 use mlane::model::{Persona, PersonaName};
 use mlane::runtime::XlaService;
 use mlane::schedule::validate::{validate, validate_ports};
+use mlane::sim::SweepEngine;
 use mlane::topology::Cluster;
 
 fn main() {
@@ -39,12 +53,18 @@ fn main() {
     }
 }
 
-/// Minimal argument parser: positional command + `--key value` flags.
+/// Minimal argument parser: positional command + `--key value` flags,
+/// plus a known set of value-less boolean switches.
 struct Args {
     cmd: String,
     pos: Vec<String>,
     flags: HashMap<String, String>,
 }
+
+/// Switches that take no value; everything else still requires one
+/// (`--csv --threads 4` stays a hard error, not a directory named
+/// "true").
+const BOOL_FLAGS: &[&str] = &["list"];
 
 fn parse_args() -> Result<Args> {
     let mut argv = std::env::args().skip(1);
@@ -53,7 +73,11 @@ fn parse_args() -> Result<Args> {
     let mut flags = HashMap::new();
     while let Some(a) = argv.next() {
         if let Some(key) = a.strip_prefix("--") {
-            let val = argv.next().ok_or_else(|| anyhow!("--{key} needs a value"))?;
+            let val = if BOOL_FLAGS.contains(&key) {
+                "true".to_string()
+            } else {
+                argv.next().ok_or_else(|| anyhow!("--{key} needs a value"))?
+            };
             flags.insert(key.to_string(), val);
         } else {
             pos.push(a);
@@ -70,13 +94,15 @@ impl Args {
         }
     }
 
+    fn bool_flag(&self, key: &str) -> bool {
+        self.flags.get(key).is_some_and(|v| v != "false")
+    }
+
     fn persona(&self) -> Result<PersonaName> {
-        Ok(match self.flags.get("persona").map(String::as_str) {
-            None | Some("openmpi") => PersonaName::OpenMpi,
-            Some("intelmpi") => PersonaName::IntelMpi,
-            Some("mpich") => PersonaName::Mpich,
-            Some(other) => bail!("unknown persona {other}"),
-        })
+        match self.flags.get("persona") {
+            None => Ok(PersonaName::OpenMpi),
+            Some(v) => parse_persona(v),
+        }
     }
 
     fn cluster(&self) -> Result<Cluster> {
@@ -106,21 +132,120 @@ impl Args {
     }
 }
 
+fn parse_persona(v: &str) -> Result<PersonaName> {
+    PersonaName::parse(v)
+        .ok_or_else(|| anyhow!("unknown persona {v} (personas: openmpi|intelmpi|mpich)"))
+}
+
 fn op_names() -> Vec<&'static str> {
     OpKind::ALL.iter().map(|k| k.name()).collect()
+}
+
+/// The run configuration for this invocation: environment first
+/// (`RunConfig::from_env` — the CLI edge), explicit flags override.
+fn run_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig::from_env();
+    if let Some(v) = args.flags.get("reps") {
+        cfg.reps = parse_positive(v, "reps")?;
+    }
+    if let Some(v) = args.flags.get("threads") {
+        cfg.threads = parse_positive(v, "threads")?;
+    }
+    if let Some(v) = args.flags.get("cache-shapes") {
+        cfg.cache_shapes = parse_positive(v, "cache-shapes")?;
+    }
+    if let Some(v) = args.flags.get("out") {
+        cfg.out_dir = std::path::PathBuf::from(v);
+    }
+    Ok(cfg)
+}
+
+fn parse_positive(v: &str, what: &str) -> Result<usize> {
+    v.parse::<usize>()
+        .ok()
+        .filter(|&n| n > 0)
+        .ok_or_else(|| anyhow!("bad --{what} value: {v} (want a positive integer)"))
+}
+
+/// The measurement-config flags (`RunConfig`) a measuring command
+/// accepts; `--out` is listed separately, only where it is consumed.
+const MEASURE_FLAGS: &[&str] = &["reps", "threads", "cache-shapes"];
+const CLUSTER_FLAGS: &[&str] = &["nodes", "cores", "lanes"];
+
+/// Reject flags the command does not actually consume — both typos
+/// (`--count` must not fall back to a full default grid) and real
+/// flags in the wrong place (`mlane algs --reps 5` would be silently
+/// ignored otherwise).
+fn check_flags(args: &Args, groups: &[&[&str]]) -> Result<()> {
+    for key in args.flags.keys() {
+        if !groups.iter().any(|g| g.contains(&key.as_str())) {
+            bail!(
+                "unknown flag --{key} for `{}` (flags: {})",
+                args.cmd,
+                groups
+                    .iter()
+                    .flat_map(|g| g.iter())
+                    .map(|f| format!("--{f}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            );
+        }
+    }
+    Ok(())
 }
 
 fn run() -> Result<()> {
     let args = parse_args()?;
     match args.cmd.as_str() {
-        "table" => cmd_table(&args),
-        "tables" => cmd_tables(&args),
-        "run" => cmd_run(&args),
-        "autotune" => cmd_autotune(&args),
-        "compare" => cmd_compare(),
-        "trace" => cmd_trace(&args),
-        "validate" => cmd_validate(&args),
-        "algs" => cmd_algs(),
+        "table" => {
+            check_flags(&args, &[&["persona", "csv"], MEASURE_FLAGS])?;
+            cmd_table(&args)
+        }
+        "tables" => {
+            check_flags(&args, &[&["csv"], MEASURE_FLAGS])?;
+            cmd_tables(&args)
+        }
+        "sweep" => {
+            check_flags(
+                &args,
+                &[
+                    &["preset", "op", "alg", "k", "counts", "persona", "format", "list", "out"],
+                    CLUSTER_FLAGS,
+                    MEASURE_FLAGS,
+                ],
+            )?;
+            cmd_sweep(&args)
+        }
+        "run" => {
+            check_flags(
+                &args,
+                &[&["op", "alg", "k", "c", "backend", "persona"], CLUSTER_FLAGS, MEASURE_FLAGS],
+            )?;
+            cmd_run(&args)
+        }
+        "autotune" => {
+            check_flags(&args, &[&["op", "c", "persona"], CLUSTER_FLAGS, MEASURE_FLAGS])?;
+            cmd_autotune(&args)
+        }
+        "compare" => {
+            check_flags(&args, &[MEASURE_FLAGS])?;
+            cmd_compare(&args)
+        }
+        "trace" => {
+            check_flags(
+                &args,
+                &[&["op", "alg", "k", "c", "persona", "out", "cache-shapes"], CLUSTER_FLAGS],
+            )?;
+            cmd_trace(&args)
+        }
+        "validate" => {
+            check_flags(&args, &[&["persona"], CLUSTER_FLAGS])?;
+            cmd_validate(&args)
+        }
+        "algs" => {
+            check_flags(&args, &[])?;
+            cmd_algs()
+        }
         "help" | "--help" | "-h" => {
             println!("{}", help());
             Ok(())
@@ -136,8 +261,13 @@ fn help() -> String {
         "mlane — k-ported vs. k-lane collective algorithms (Träff 2020 reproduction)
 
 commands:
-  table <N>   regenerate paper table N (2..49)   [--csv DIR]
-  tables      regenerate all 48 tables (2..49)   [--csv DIR]
+  table <N>   regenerate paper table N (2..49)   [--persona P --csv DIR]
+  tables      regenerate all 48 tables (2..49), plan-parallel over one worker pool  [--csv DIR --threads T]
+  sweep       run a user-defined scenario grid through the experiment-plan API
+                [--preset {presets}]
+                [--nodes --cores --lanes --op OP[,OP] --alg NAME[:K][,NAME[:K]] --k K]
+                [--counts C[,C] --persona P[,P] --format text|csv|json --out DIR]
+                [--reps R --threads T --list]
   run         run one collective                 [--op --alg --k --c --nodes --cores --lanes --backend --persona]
   autotune    pick the fastest algorithm         [--op --c --nodes --cores --lanes --persona]
   compare     simulated vs paper anchor cells
@@ -148,11 +278,14 @@ commands:
 flags:      --op  {}
             --alg {}
 
-environment: MLANE_REPS         (simulated repetitions, default 20)
-             MLANE_THREADS      (table-generation workers, default: available parallelism)
+environment (parsed once, at this CLI edge, into harness::RunConfig;
+flags override):
+             MLANE_REPS         (simulated repetitions, default 20)
+             MLANE_THREADS      (plan worker threads, default: available parallelism)
              MLANE_CACHE_SHAPES (shared schedule-cache bound, default 8)",
         op_names().join("|"),
-        registry().names().join("|")
+        registry().names().join("|"),
+        presets = Plan::PRESETS.join("|"),
     )
 }
 
@@ -182,34 +315,240 @@ fn cmd_table(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("usage: mlane table <N>"))?
         .parse()
         .context("table number")?;
-    let spec = harness::table(n).ok_or_else(|| anyhow!("no table {n} (range 2..49)"))?;
-    let out = harness::run_table(&spec);
-    print!("{}", out.render());
+    let cfg = run_config(args)?;
+    let mut spec = harness::table(n).ok_or_else(|| anyhow!("no table {n} (range 2..49)"))?;
+    // Re-run the paper grid under a different library persona on request.
+    if args.flags.contains_key("persona") {
+        spec.persona = args.persona()?;
+    }
+    let out = harness::run_table(&spec, &cfg)?;
+    let report = Report { tables: vec![out] };
+    emit_text(&report)?;
     if let Some(dir) = args.flags.get("csv") {
-        let p = out.write_csv(std::path::Path::new(dir))?;
-        eprintln!("csv: {}", p.display());
+        emit_csv(&report, dir)?;
     }
     Ok(())
 }
 
 fn cmd_tables(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    // The outer table loop is plan-parallel: all sections of all 48
+    // tables drain through one work-stealing pool over the shared
+    // engine. Emission below is in table order — byte-identical to a
+    // serial run for any thread count.
+    let report = harness::run_plan(&Plan::paper(), &cfg)?;
+    emit_text(&report)?;
     let dir = args.flags.get("csv").cloned().unwrap_or_else(|| "bench_out".into());
-    // All tables share the harness engine: overlapping sections across
-    // tables are served from one cross-table schedule cache.
-    for spec in harness::registry() {
-        let out = harness::run_table(&spec);
-        print!("{}", out.render());
-        let p = out.write_csv(std::path::Path::new(&dir))?;
+    emit_csv(&report, &dir)?;
+    Ok(())
+}
+
+fn emit_text(report: &Report) -> Result<()> {
+    let stdout = std::io::stdout();
+    report.emit(&mut TextSink::new(stdout.lock()))?;
+    Ok(())
+}
+
+fn emit_csv(report: &Report, dir: impl Into<std::path::PathBuf>) -> Result<()> {
+    let mut sink = CsvSink::new(dir);
+    report.emit(&mut sink)?;
+    for p in sink.written() {
         eprintln!("csv: {}", p.display());
     }
     Ok(())
 }
 
+/// Per-operation default count series (the paper's grids).
+fn default_counts(op: OpKind) -> &'static [u64] {
+    match op {
+        OpKind::Bcast => harness::BCAST_COUNTS,
+        OpKind::Scatter | OpKind::Gather => harness::SCATTER_COUNTS,
+        OpKind::Allgather | OpKind::Alltoall => harness::ALLTOALL_COUNTS,
+    }
+}
+
+/// Split a comma list, trimming items; empty lists (e.g. `--counts ","`)
+/// are an error, never a silent empty plan.
+fn parse_list<'a>(raw: &'a str, what: &str) -> Result<Vec<&'a str>> {
+    let items: Vec<&str> =
+        raw.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    if items.is_empty() {
+        bail!("--{what} needs at least one value");
+    }
+    Ok(items)
+}
+
+/// Build a plan from the sweep flags: one table per persona, sections =
+/// (algorithms × ops) on the given cluster.
+fn sweep_plan(args: &Args) -> Result<Plan> {
+    let cl = args.cluster()?;
+    let default_k = args.flag("k", cl.lanes)?;
+
+    let ops: Vec<OpKind> = match args.flags.get("op") {
+        None => vec![OpKind::Bcast],
+        Some(list) => parse_list(list, "op")?
+            .into_iter()
+            .map(|s| {
+                OpKind::parse(s)
+                    .ok_or_else(|| anyhow!("unknown op {s} (ops: {})", op_names().join("|")))
+            })
+            .collect::<Result<_>>()?,
+    };
+
+    let algs: Vec<Alg> = match args.flags.get("alg") {
+        // fulllane + native support every operation — a safe default grid.
+        None => vec![registry().resolve("fulllane", 0)?, registry().resolve("native", 0)?],
+        Some(list) => parse_list(list, "alg")?
+            .into_iter()
+            .map(|item| {
+                let (name, k) = match item.split_once(':') {
+                    Some((n, ks)) => (
+                        n,
+                        ks.parse::<u32>().map_err(|_| anyhow!("bad k in --alg {item}"))?,
+                    ),
+                    None => (item, default_k),
+                };
+                Ok(registry().resolve(name, k)?)
+            })
+            .collect::<Result<_>>()?,
+    };
+
+    let personas: Vec<PersonaName> = match args.flags.get("persona") {
+        None => vec![PersonaName::OpenMpi],
+        Some(list) => {
+            parse_list(list, "persona")?.into_iter().map(parse_persona).collect::<Result<_>>()?
+        }
+    };
+
+    let counts: Option<Vec<u64>> = match args.flags.get("counts") {
+        None => None,
+        Some(list) => Some(
+            parse_list(list, "counts")?
+                .into_iter()
+                .map(|s| s.parse::<u64>().map_err(|_| anyhow!("bad --counts value {s}")))
+                .collect::<Result<Vec<u64>>>()?,
+        ),
+    };
+
+    let caption = format!(
+        "sweep: {} x {} on {}x{} (lanes={})",
+        ops.iter().map(|o| o.name()).collect::<Vec<_>>().join(","),
+        algs.iter().map(|a| a.label()).collect::<Vec<_>>().join(","),
+        cl.nodes,
+        cl.cores,
+        cl.lanes
+    );
+    let mut plan = Plan::new();
+    for (pi, &persona) in personas.iter().enumerate() {
+        let mut sections = Vec::new();
+        for &op in &ops {
+            let cts: &[u64] = match &counts {
+                Some(v) => v,
+                None => default_counts(op),
+            };
+            sections.extend(
+                Grid::new()
+                    .cluster(cl)
+                    .op(op)
+                    .algs(algs.iter().cloned())
+                    .counts(cts)
+                    .sections(),
+            );
+        }
+        plan.tables.push(harness::TableSpec {
+            number: pi as u32 + 1,
+            caption: caption.clone(),
+            persona,
+            sections,
+        });
+    }
+    Ok(plan)
+}
+
+fn print_plan(plan: &Plan, cfg: &RunConfig) {
+    println!(
+        "plan: {} tables, {} sections, {} cells (reps={}, threads={})",
+        plan.tables.len(),
+        plan.num_sections(),
+        plan.num_cells(),
+        cfg.reps,
+        cfg.threads
+    );
+    for t in &plan.tables {
+        println!("table {}: {} [{}]", t.number, t.caption, t.persona.label());
+        for s in &t.sections {
+            let k = s.alg.k().map(|k| k.to_string()).unwrap_or_else(|| "-".into());
+            println!(
+                "    {:<44} {} {}:{} on {}x{} (lanes={}), {} counts",
+                s.heading,
+                s.op,
+                s.alg.name(),
+                k,
+                s.cluster.nodes,
+                s.cluster.cores,
+                s.cluster.lanes,
+                s.counts.len()
+            );
+        }
+    }
+}
+
+/// Grid-shaping flags that conflict with `--preset` (a preset IS the
+/// grid; silently ignoring these would run something the user didn't
+/// ask for).
+const GRID_FLAGS: &[&str] =
+    &["op", "alg", "counts", "persona", "k", "nodes", "cores", "lanes"];
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let plan = match args.flags.get("preset") {
+        Some(name) => {
+            if let Some(conflict) = GRID_FLAGS.iter().find(|f| args.flags.contains_key(**f)) {
+                bail!("--preset defines the whole grid; drop --{conflict} (grid flags: {})",
+                    GRID_FLAGS.iter().map(|f| format!("--{f}")).collect::<Vec<_>>().join(" "));
+            }
+            Plan::preset(name).ok_or_else(|| {
+                anyhow!("unknown preset {name} (presets: {})", Plan::PRESETS.join(", "))
+            })?
+        }
+        None => sweep_plan(args)?,
+    };
+    if args.bool_flag("list") {
+        print_plan(&plan, &cfg);
+        return Ok(());
+    }
+    let report = harness::run_plan(&plan, &cfg)?;
+    match args.flags.get("format").map(String::as_str) {
+        None | Some("text") => emit_text(&report)?,
+        Some("json") => {
+            let stdout = std::io::stdout();
+            report.emit(&mut JsonSink::new(stdout.lock()))?;
+        }
+        Some("csv") => emit_csv(&report, &cfg.out_dir)?,
+        Some(other) => bail!("unknown format {other} (formats: text|csv|json)"),
+    }
+    Ok(())
+}
+
+/// A `Collectives` configured from the invocation's `RunConfig` —
+/// including the schedule-cache bound (`--cache-shapes` /
+/// `MLANE_CACHE_SHAPES`), which applies to every command, not just the
+/// plan runners.
+fn collectives(cl: Cluster, persona: PersonaName, cfg: &RunConfig) -> Collectives {
+    let engine = Arc::new(SweepEngine::with_capacity(cfg.cache_shapes));
+    let mut coll = Collectives::with_engine(cl, persona, engine);
+    coll.reps = cfg.reps;
+    coll.warmup = cfg.warmup;
+    coll.seed = cfg.seed;
+    coll
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
     let cl = args.cluster()?;
     let op = args.op()?;
     let alg = args.algorithm()?;
-    let coll = Collectives::new(cl, args.persona()?);
+    let coll = collectives(cl, args.persona()?, &cfg);
     match args.flags.get("backend").map(String::as_str) {
         Some("sim") | None => {
             let m = coll.run(op, &alg)?;
@@ -248,9 +587,10 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn cmd_autotune(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
     let cl = args.cluster()?;
     let op = args.op()?;
-    let coll = Collectives::new(cl, args.persona()?);
+    let coll = collectives(cl, args.persona()?, &cfg);
     let candidates = coll.default_candidates(op);
     println!(
         "autotune {} c={} on {}x{} (k={} lanes):",
@@ -269,13 +609,14 @@ fn cmd_autotune(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_compare() -> Result<()> {
+fn cmd_compare(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
     println!("simulated vs paper anchors (ratio = simulated / paper):");
     println!(
         "{:>6} {:<28} {:>9} {:>12} {:>12} {:>7}",
         "table", "section", "c", "paper(us)", "sim(us)", "ratio"
     );
-    for c in anchors::compare_all() {
+    for c in anchors::compare_all(&cfg)? {
         println!(
             "{:>6} {:<28} {:>9} {:>12.2} {:>12.2} {:>7.2}",
             c.anchor.table,
@@ -330,10 +671,11 @@ fn cmd_validate(args: &Args) -> Result<()> {
 }
 
 fn cmd_trace(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
     let cl = args.cluster()?;
     let op = args.op()?;
     let alg = args.algorithm()?;
-    let coll = Collectives::new(cl, args.persona()?);
+    let coll = collectives(cl, args.persona()?, &cfg);
     let built = coll.schedule(op, &alg)?;
     let out = args.flags.get("out").cloned().unwrap_or_else(|| "trace.json".into());
     let trace = mlane::sim::trace::trace_run(&built.schedule, &coll.persona.model, 1);

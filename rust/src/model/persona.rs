@@ -33,6 +33,21 @@ impl PersonaName {
     pub fn all() -> [PersonaName; 3] {
         [PersonaName::OpenMpi, PersonaName::IntelMpi, PersonaName::Mpich]
     }
+
+    /// Short machine name: the CLI `--persona` value and the JSON
+    /// sink's `persona` key.
+    pub fn key(&self) -> &'static str {
+        match self {
+            PersonaName::OpenMpi => "openmpi",
+            PersonaName::IntelMpi => "intelmpi",
+            PersonaName::Mpich => "mpich",
+        }
+    }
+
+    /// Inverse of [`PersonaName::key`].
+    pub fn parse(s: &str) -> Option<PersonaName> {
+        PersonaName::all().into_iter().find(|p| p.key() == s)
+    }
 }
 
 /// A native collective choice: the schedule the library would run plus

@@ -71,17 +71,24 @@ pub fn measure_sim(
     col.summary()
 }
 
-/// Paper measurement parameters (§4). The simulator defaults to fewer
-/// repetitions for the large sweeps; benches may override via
-/// `MLANE_REPS`.
+/// Paper measurement parameters (§4). The harness defaults to fewer
+/// repetitions for the large sweeps (see [`DEFAULT_REPS`]).
 pub const PAPER_REPS: usize = 100;
 pub const PAPER_WARMUP: usize = 5;
 
 /// Default repetitions for the table harness (jitter converges well
-/// before 100 reps in simulation; override with MLANE_REPS).
-pub fn default_reps() -> usize {
-    std::env::var("MLANE_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(20)
-}
+/// before 100 reps in simulation). The library reads no environment;
+/// the CLI maps `MLANE_REPS` onto `harness::RunConfig::reps`.
+pub const DEFAULT_REPS: usize = 20;
+
+/// Default unmeasured warm-up repetitions. Single source for both
+/// `Collectives` and `harness::RunConfig`, so coordinator-level and
+/// plan-level runs of the same scenario cannot silently drift.
+pub const DEFAULT_WARMUP: usize = 2;
+
+/// Default measurement seed (per-rep streams derive from it); shared by
+/// `Collectives` and `harness::RunConfig` for the same reason.
+pub const DEFAULT_SEED: u64 = 0xC0FFEE;
 
 #[cfg(test)]
 mod tests {

@@ -31,7 +31,8 @@
 //! allocation-free and thread-local.
 //!
 //! The cache holds at most [`SweepEngine::max_shapes`] shapes
-//! (`MLANE_CACHE_SHAPES`, default 8), evicting the oldest insertion —
+//! (default [`DEFAULT_CACHE_SHAPES`]; the CLI maps `MLANE_CACHE_SHAPES`
+//! through `harness::RunConfig`), evicting the oldest insertion —
 //! this bounds memory of long `mlane tables` runs at roughly
 //! `max_shapes × largest-shape` (a Hydra-scale alltoall shape is
 //! ~10^2 MB; paper tables have ≤ 3 sections, so 8 keeps whole tables
@@ -187,14 +188,15 @@ impl Default for SweepEngine {
     }
 }
 
+/// Default bound on cached shapes. The library reads no environment;
+/// the CLI maps `MLANE_CACHE_SHAPES` onto
+/// `harness::RunConfig::cache_shapes`.
+pub const DEFAULT_CACHE_SHAPES: usize = 8;
+
 impl SweepEngine {
+    /// An engine with the default shape bound ([`DEFAULT_CACHE_SHAPES`]).
     pub fn new() -> Self {
-        let max_shapes = std::env::var("MLANE_CACHE_SHAPES")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .filter(|&n| n > 0)
-            .unwrap_or(8);
-        Self::with_capacity(max_shapes)
+        Self::with_capacity(DEFAULT_CACHE_SHAPES)
     }
 
     /// An engine holding at most `max_shapes` cached shapes.
@@ -224,7 +226,7 @@ impl SweepEngine {
         slots.iter().filter(|s| s.lock().unwrap().is_some()).count()
     }
 
-    /// Cache-size bound (shapes), from `MLANE_CACHE_SHAPES`.
+    /// Cache-size bound (shapes).
     pub fn max_shapes(&self) -> usize {
         self.max_shapes
     }

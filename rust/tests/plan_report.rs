@@ -1,0 +1,386 @@
+//! Plan/report contract tests:
+//!
+//! 1. **Golden rendering** — the Text and Csv sinks must be
+//!    byte-identical to the pre-redesign `TableOut::render`/`write_csv`
+//!    (verbatim copies of that code live below as the oracle);
+//! 2. **JSON sink schema** — the emitted JSON must parse (a minimal
+//!    strict parser below) and carry the full spec (cluster dims, op,
+//!    algorithm, count series) plus one row per (section, count);
+//! 3. **Plan-level determinism** — `run_plan` output is identical for
+//!    `threads ∈ {1, 4}`.
+//!
+//! No environment mutation: all parameters flow through `RunConfig`.
+
+use std::sync::Arc;
+
+use mlane::harness::{self, run_plan_with, CsvSink, Plan, Report, RunConfig, TableOut, TextSink};
+use mlane::sim::SweepEngine;
+use mlane::topology::Cluster;
+
+// ---- the pre-redesign renderer, verbatim (the golden oracle) ----------
+
+fn legacy_render(out: &TableOut) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "Table {}: {} [{}]",
+        out.spec.number,
+        out.spec.caption,
+        out.spec.persona.label()
+    );
+    let mut current = String::new();
+    for r in &out.rows {
+        if r.section != current {
+            current = r.section.clone();
+            let _ = writeln!(s, "  -- {current} --");
+            let _ = writeln!(
+                s,
+                "  {:>2} {:>4} {:>4} {:>5} {:>9} {:>12} {:>12}",
+                "k", "n", "N", "p", "c", "avg(us)", "min(us)"
+            );
+        }
+        let _ = writeln!(
+            s,
+            "  {:>2} {:>4} {:>4} {:>5} {:>9} {:>12.2} {:>12.2}",
+            r.k, r.n, r.nodes, r.p, r.c, r.avg, r.min
+        );
+    }
+    s
+}
+
+fn legacy_csv(out: &TableOut) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::from("table,persona,section,k,n,N,p,c,avg_us,min_us\n");
+    for r in &out.rows {
+        let _ = writeln!(
+            s,
+            "{},{},{},{},{},{},{},{},{:.2},{:.2}",
+            out.spec.number,
+            out.spec.persona.label(),
+            r.section,
+            r.k,
+            r.n,
+            r.nodes,
+            r.p,
+            r.c,
+            r.avg,
+            r.min
+        );
+    }
+    s
+}
+
+// ---- a minimal strict JSON parser (schema validation oracle) ----------
+
+#[derive(Debug)]
+enum Json {
+    Null,
+    // The parser is a complete oracle; bools never occur in our output.
+    #[allow(dead_code)]
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(items) => items.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn arr(&self) -> &[Json] {
+        match self {
+            Json::Arr(v) => v,
+            other => panic!("not an array: {other:?}"),
+        }
+    }
+
+    fn num(&self) -> f64 {
+        match self {
+            Json::Num(n) => *n,
+            other => panic!("not a number: {other:?}"),
+        }
+    }
+
+    fn string(&self) -> &str {
+        match self {
+            Json::Str(s) => s,
+            other => panic!("not a string: {other:?}"),
+        }
+    }
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Self {
+        Parser { s: s.as_bytes(), i: 0 }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+
+    fn ws(&mut self) {
+        while self.peek().is_some_and(|b| b.is_ascii_whitespace()) {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", b as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.ws();
+        match self.peek().ok_or("unexpected eof")? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.quoted()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.s[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while self
+            .peek()
+            .is_some_and(|b| b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.s[start..self.i])
+            .map_err(|_| "bad utf-8 in number".to_string())?
+            .parse::<f64>()
+            .map(Json::Num)
+            .map_err(|e| format!("bad number at byte {start}: {e}"))
+    }
+
+    fn quoted(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek().ok_or("eof inside string")? {
+                b'"' => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    self.i += 1;
+                    let e = self.peek().ok_or("eof after escape")?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hex = self
+                                .s
+                                .get(self.i..self.i + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .ok_or("truncated \\u escape")?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            self.i += 4;
+                            out.push(char::from_u32(cp).ok_or("bad codepoint")?);
+                        }
+                        other => return Err(format!("bad escape \\{}", other as char)),
+                    }
+                }
+                _ => {
+                    let rest = std::str::from_utf8(&self.s[self.i..])
+                        .map_err(|_| "bad utf-8 in string".to_string())?;
+                    let ch = rest.chars().next().expect("non-empty");
+                    out.push(ch);
+                    self.i += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("bad array at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(items));
+        }
+        loop {
+            self.ws();
+            let key = self.quoted()?;
+            self.ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            items.push((key, val));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(items));
+                }
+                _ => return Err(format!("bad object at byte {}", self.i)),
+            }
+        }
+    }
+}
+
+fn parse_json(s: &str) -> Result<Json, String> {
+    let mut p = Parser::new(s);
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.s.len() {
+        return Err(format!("trailing data at byte {}", p.i));
+    }
+    Ok(v)
+}
+
+// ---- fixtures ---------------------------------------------------------
+
+/// Table 12 (full-lane Bcast + native MPI_Bcast — exercises both the
+/// cached and the uncached engine path) shrunk to a fast grid.
+fn small12() -> harness::TableSpec {
+    harness::table(12).unwrap().with_grid(Cluster::new(3, 4, 2), &[1, 600, 6000])
+}
+
+/// Table 8 (k-lane bcast k=1,2,3 — three cacheable sections) shrunk.
+fn small8() -> harness::TableSpec {
+    harness::table(8).unwrap().with_grid(Cluster::new(3, 4, 2), &[1, 600])
+}
+
+fn cfg() -> RunConfig {
+    RunConfig::default().reps(3).warmup(1)
+}
+
+fn run(plan: &Plan, cfg: &RunConfig) -> Report {
+    run_plan_with(&Arc::new(SweepEngine::new()), plan, cfg).expect("paper specs are valid")
+}
+
+// ---- the tests --------------------------------------------------------
+
+#[test]
+fn text_sink_is_byte_identical_to_the_pre_redesign_renderer() {
+    let plan = Plan { tables: vec![small12()] };
+    let report = run(&plan, &cfg());
+    let golden: String = report.tables.iter().map(legacy_render).collect();
+    assert!(!golden.is_empty() && golden.contains("MPI_Bcast"), "{golden}");
+
+    // Report::text and a streamed TextSink must both match.
+    assert_eq!(report.text(), golden);
+    let mut buf = Vec::new();
+    report.emit(&mut TextSink::new(&mut buf)).unwrap();
+    assert_eq!(String::from_utf8(buf).unwrap(), golden);
+}
+
+#[test]
+fn csv_sink_is_byte_identical_to_the_pre_redesign_writer() {
+    let report = run(&Plan { tables: vec![small12()] }, &cfg());
+    let dir = std::env::temp_dir().join("mlane_plan_report_csv");
+    let mut sink = CsvSink::new(&dir);
+    report.emit(&mut sink).unwrap();
+    assert_eq!(sink.written().len(), 1);
+    let got = std::fs::read_to_string(&sink.written()[0]).unwrap();
+    assert_eq!(got, legacy_csv(&report.tables[0]));
+    assert!(sink.written()[0].ends_with("table_12.csv"), "{:?}", sink.written());
+}
+
+#[test]
+fn json_sink_parses_and_carries_the_full_spec() {
+    let plan = Plan { tables: vec![small8(), small12()] };
+    let report = run(&plan, &cfg());
+    let json = report.json();
+    let doc = parse_json(&json).unwrap_or_else(|e| panic!("invalid JSON ({e}):\n{json}"));
+
+    let tables = doc.arr();
+    assert_eq!(tables.len(), 2);
+    for (t, spec) in tables.iter().zip(&plan.tables) {
+        assert_eq!(t.get("table").unwrap().num() as u32, spec.number);
+        assert_eq!(t.get("caption").unwrap().string(), spec.caption);
+        assert_eq!(t.get("persona").unwrap().string(), spec.persona.key());
+        let sections = t.get("sections").unwrap().arr();
+        assert_eq!(sections.len(), spec.sections.len());
+        for (js, s) in sections.iter().zip(&spec.sections) {
+            assert_eq!(js.get("heading").unwrap().string(), s.heading);
+            assert_eq!(js.get("nodes").unwrap().num() as u32, s.cluster.nodes);
+            assert_eq!(js.get("cores").unwrap().num() as u32, s.cluster.cores);
+            assert_eq!(js.get("lanes").unwrap().num() as u32, s.cluster.lanes);
+            assert_eq!(js.get("op").unwrap().string(), s.op.name());
+            assert_eq!(js.get("alg").unwrap().string(), s.alg.name());
+            let counts: Vec<u64> =
+                js.get("counts").unwrap().arr().iter().map(|c| c.num() as u64).collect();
+            assert_eq!(counts[..], s.counts[..]);
+            match s.alg.k() {
+                Some(k) => assert_eq!(js.get("k").unwrap().num() as u32, k),
+                None => assert!(matches!(js.get("k").unwrap(), Json::Null)),
+            }
+        }
+        // One row per (section, count), section order preserved.
+        let rows = t.get("rows").unwrap().arr();
+        let want: usize = spec.sections.iter().map(|s| s.counts.len()).sum();
+        assert_eq!(rows.len(), want);
+        for r in rows {
+            assert!(r.get("avg_us").unwrap().num() >= r.get("min_us").unwrap().num());
+            assert!(r.get("c").unwrap().num() >= 1.0);
+        }
+    }
+}
+
+#[test]
+fn run_plan_is_deterministic_across_thread_counts() {
+    let plan = Plan { tables: vec![small8(), small12()] };
+    let serial = run(&plan, &cfg().threads(1));
+    let parallel = run(&plan, &cfg().threads(4));
+    assert_eq!(serial.text(), parallel.text(), "threads must not change output");
+    assert_eq!(serial.json(), parallel.json(), "threads must not change output");
+}

@@ -3,12 +3,12 @@
 //! table builds **zero** new schedules — while personas with different
 //! cost models stay isolated within the same engine.
 //!
-//! One test function: it mutates `MLANE_REPS`, and parallel test
-//! threads in this binary would race on the environment otherwise.
+//! Run parameters come from an explicit `RunConfig` (no environment
+//! mutation: these tests are safe under parallel test runs).
 
 use std::sync::Arc;
 
-use mlane::harness::{self, run_table_with};
+use mlane::harness::{self, run_table_with, RunConfig};
 use mlane::sim::SweepEngine;
 use mlane::topology::Cluster;
 
@@ -16,27 +16,22 @@ use mlane::topology::Cluster;
 /// k=1,2,3; Open MPI / Intel MPI) are all-cacheable: no count-dependent
 /// native selection.
 fn small_table(number: u32) -> harness::TableSpec {
-    let mut t = harness::table(number).unwrap();
-    for s in &mut t.sections {
-        s.cluster = Cluster::new(3, 4, 2);
-        s.counts = &[1, 600];
-    }
-    t
+    harness::table(number).unwrap().with_grid(Cluster::new(3, 4, 2), &[1, 600])
 }
 
 #[test]
 fn shared_engine_reuses_shapes_across_tables_and_isolates_personas() {
-    std::env::set_var("MLANE_REPS", "2");
+    let cfg = RunConfig::default().reps(2);
     let engine = Arc::new(SweepEngine::new());
     let t = small_table(8);
 
     // First run: one schedule per k-lane section.
-    let first = run_table_with(&engine, &t);
+    let first = run_table_with(&engine, &t, &cfg).unwrap();
     let built_after_first = engine.stats().schedules_built;
     assert_eq!(built_after_first, 3, "one shape per section: {:?}", engine.stats());
 
     // Second run of the same table/persona: served entirely from cache.
-    let second = run_table_with(&engine, &t);
+    let second = run_table_with(&engine, &t, &cfg).unwrap();
     let st = engine.stats();
     assert_eq!(
         st.schedules_built, built_after_first,
@@ -45,14 +40,13 @@ fn shared_engine_reuses_shapes_across_tables_and_isolates_personas() {
     assert_eq!(st.cells, 12, "{st:?}");
     assert!(st.recosts + st.cache_hits >= 6, "{st:?}");
     // Shared-cache runs are bitwise identical to the first pass.
-    assert_eq!(first.render(), second.render());
+    assert_eq!(first.text(), second.text());
 
     // Same sections under a different persona (= different cost model):
     // shapes must NOT be shared — timings under the wrong model would be
     // silent corruption — so the build counter grows by one per section.
     let intel = small_table(13);
-    let third = run_table_with(&engine, &intel);
-    std::env::remove_var("MLANE_REPS");
+    let third = run_table_with(&engine, &intel, &cfg).unwrap();
     assert_eq!(
         engine.stats().schedules_built,
         built_after_first + 3,
