@@ -1,0 +1,57 @@
+//! Per-size tuned selection end to end: build decision tables for every
+//! operation, print their breakpoints, persist them as a `TuningBook`
+//! JSON artifact, and show the `tuned` meta-algorithm dispatching to
+//! the per-count winner — beating (or matching) the native library at
+//! every sampled size, which no fixed algorithm manages.
+//!
+//! Run: `cargo run --release --example tuned_selection`
+
+use std::sync::Arc;
+
+use mlane::algorithms::registry::{registry, tuned, OpKind};
+use mlane::coordinator::Collectives;
+use mlane::harness;
+use mlane::model::PersonaName;
+use mlane::tuning::{self, Scenario, TuneConfig};
+
+fn main() {
+    let cluster = mlane::topology::Cluster::new(4, 8, 2);
+    let persona = PersonaName::OpenMpi;
+    let engine = harness::shared_engine();
+
+    // One tuning scenario per operation: registry default candidates
+    // over the paper's count grid, swept through the shared engine.
+    let scenarios: Vec<Scenario> = OpKind::ALL
+        .into_iter()
+        .map(|op| Scenario::default_for(cluster, op, persona))
+        .collect();
+    let book = tuning::tune_all(&engine, &scenarios, &TuneConfig::default(), 4)
+        .expect("default scenarios tune");
+    print!("{}", book.text());
+
+    let path = std::env::temp_dir().join("mlane_tuned_selection.json");
+    book.save(&path).expect("persist the book");
+    println!("\npersisted: {} ({} tables)\n", path.display(), book.tables.len());
+
+    // The payoff: `tuned` vs the native library at every bcast count.
+    let mut coll = Collectives::with_engine(cluster, persona, Arc::clone(&engine));
+    coll.reps = 5;
+    coll.warmup = 1;
+    let meta = tuned();
+    let native = registry().resolve("native", 0).expect("native");
+    println!("bcast: tuned dispatch vs native MPI_Bcast");
+    println!("{:>9} {:<26} {:>12} {:>12} {:>8}", "c", "dispatched", "tuned(us)", "native(us)", "speedup");
+    for &c in harness::default_counts(OpKind::Bcast) {
+        let op = OpKind::Bcast.op(c);
+        let t = coll.run(op, &meta).expect("tuned runs everywhere");
+        let n = coll.run(op, &native).expect("native runs everywhere");
+        println!(
+            "{:>9} {:<26} {:>12.2} {:>12.2} {:>8.2}",
+            c,
+            t.algorithm,
+            t.summary.avg,
+            n.summary.avg,
+            n.summary.avg / t.summary.avg
+        );
+    }
+}

@@ -11,10 +11,12 @@ use std::time::Instant;
 use mlane::algorithms::{alltoall, bcast};
 use mlane::exec::ExecRuntime;
 use mlane::harness::BCAST_COUNTS;
-use mlane::model::CostModel;
+use mlane::model::{CostModel, PersonaName};
 use mlane::runtime::XlaService;
 use mlane::sim::{self, AlgId, OpShape, Simulator, SweepEngine, SweepKey};
 use mlane::topology::Cluster;
+use mlane::algorithms::registry::OpKind;
+use mlane::tuning::{self, Scenario, TuneConfig};
 
 fn main() {
     let m = CostModel::hydra_baseline();
@@ -65,7 +67,8 @@ fn main() {
     );
 
     let sweep = bench_sweep(cl);
-    write_bench_json(events_per_s, &sweep);
+    let tune = bench_tune(cl);
+    write_bench_json(events_per_s, &sweep, &tune);
 
     println!("\n=== exec backend (4x4, klane alltoall c=1024) ===");
     let cl = Cluster::new(4, 4, 2);
@@ -214,15 +217,45 @@ fn bench_sweep(cl: Cluster) -> SweepBench {
     bench
 }
 
+struct TuneBench {
+    tune_s: f64,
+    breakpoints: usize,
+}
+
+/// Decision-table build cost at Hydra scale: one full bcast tuning
+/// scenario (default candidates × BCAST_COUNTS) through a fresh engine
+/// — the price `mlane tune` pays per (cluster, op, persona) and the
+/// `tuned` meta-algorithm pays once per process on a cold cache.
+fn bench_tune(cl: Cluster) -> TuneBench {
+    println!("\n=== tuning: decision-table build (hydra bcast, default candidates) ===");
+    let sc = Scenario::default_for(cl, OpKind::Bcast, PersonaName::OpenMpi);
+    let cfg = TuneConfig { reps: 1, warmup: 0, seed: 7 };
+    let engine = std::sync::Arc::new(SweepEngine::new());
+    let t0 = Instant::now();
+    let table = tuning::tune_scenario(&engine, &sc, &cfg).expect("hydra bcast tunes");
+    let tune_s = t0.elapsed().as_secs_f64();
+    println!(
+        "tuned {} counts x {} candidates in {:.2?}: {} breakpoint{}",
+        sc.counts.len(),
+        sc.candidates.len(),
+        std::time::Duration::from_secs_f64(tune_s),
+        table.entries.len(),
+        if table.entries.len() == 1 { "" } else { "s" }
+    );
+    print!("{}", table.text());
+    TuneBench { tune_s, breakpoints: table.entries.len() }
+}
+
 /// Machine-readable perf record for trajectory tracking across PRs.
-fn write_bench_json(events_per_s: f64, sweep: &SweepBench) {
+fn write_bench_json(events_per_s: f64, sweep: &SweepBench, tune: &TuneBench) {
     let json = format!(
         "{{\n  \"bench\": \"engine_perf\",\n  \"events_per_s\": {:.0},\n  \
          \"sweep_cells\": {},\n  \"sweep_cold_s\": {:.6},\n  \"sweep_warm_s\": {:.6},\n  \
          \"sweep_cold_cells_per_s\": {:.2},\n  \"sweep_warm_cells_per_s\": {:.2},\n  \
          \"sweep_e2e_speedup\": {:.3},\n  \"prep_cold_us\": {:.3},\n  \
          \"prep_warm_us\": {:.3},\n  \"prep_speedup\": {:.2},\n  \
-         \"schedules_built\": {}\n}}\n",
+         \"schedules_built\": {},\n  \"tune_scenario_s\": {:.6},\n  \
+         \"tune_breakpoints\": {}\n}}\n",
         events_per_s,
         sweep.cells,
         sweep.cold_s,
@@ -234,6 +267,8 @@ fn write_bench_json(events_per_s: f64, sweep: &SweepBench) {
         sweep.prep_warm_s * 1e6,
         sweep.prep_speedup,
         sweep.schedules_built,
+        tune.tune_s,
+        tune.breakpoints,
     );
     match std::fs::write("BENCH_engine.json", &json) {
         Ok(()) => println!("wrote BENCH_engine.json"),

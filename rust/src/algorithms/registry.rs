@@ -527,6 +527,54 @@ impl CollectiveAlgorithm for RecursiveDoubling {
     }
 }
 
+/// Per-size tuned selection (arXiv:cs/0408034): dispatches each count
+/// to the winner recorded in a `tuning::DecisionTable` — an installed
+/// `TuningBook` when one covers the scenario, otherwise a table
+/// auto-built from the registry's default candidates over the paper's
+/// count grid and cached process-wide. The meta-entry holds no
+/// algorithm knowledge of its own; `tuning::dispatch` is the brain.
+struct Tuned;
+
+impl CollectiveAlgorithm for Tuned {
+    fn name(&self) -> &'static str {
+        "tuned"
+    }
+    fn label(&self) -> String {
+        "tuned".into()
+    }
+    fn k(&self) -> Option<u32> {
+        None
+    }
+    fn supports(&self, _op: OpKind) -> bool {
+        // Every operation has default candidates (full-lane and native
+        // cover all five), so tuned dispatch is always well-defined.
+        true
+    }
+    fn ports_required(&self, cl: Cluster, op: OpKind) -> u32 {
+        // The meta-entry's *budget*: the widest candidate it may
+        // dispatch to. Validating a specific built schedule should use
+        // the dispatched algorithm's own budget instead (resolve it via
+        // `tuning::dispatch` — see `cmd_validate` and
+        // `rust/tests/registry_validation.rs`).
+        registry()
+            .candidates(cl, op)
+            .iter()
+            .map(|a| a.ports_required(cl, op))
+            .max()
+            .unwrap_or(1)
+    }
+    fn cache_id(&self) -> Option<AlgId> {
+        // Dispatch switches algorithms by count — never shape-cacheable,
+        // exactly like the native wrappers.
+        None
+    }
+    fn build(&self, cl: Cluster, persona: &Persona, op: Op) -> Result<Built, AlgError> {
+        let alg = crate::tuning::dispatch(cl, persona.name, op.kind(), op.count())?;
+        debug_assert_ne!(alg.name(), "tuned", "decision tables may not self-dispatch");
+        alg.build(cl, persona, op)
+    }
+}
+
 /// The persona's native MPI_<op>: count-dependent algorithm selection
 /// plus the observed pathology quirks — never cacheable.
 struct Native;
@@ -730,6 +778,17 @@ impl Registry {
                     default_ks: |_, _| vec![0],
                     validation_ks: unparameterized,
                 },
+                Registration {
+                    name: "tuned",
+                    about: "per-size tuned selection via decision tables (arXiv:cs/0408034)",
+                    parameterized: false,
+                    make: |_| Alg::new(Tuned),
+                    // Never its own autotune candidate: the candidate
+                    // set is what tuned dispatches *over*; including it
+                    // would recurse.
+                    default_ks: |_, _| vec![],
+                    validation_ks: unparameterized,
+                },
             ],
         }
     }
@@ -829,6 +888,10 @@ pub fn native() -> Alg {
     registry().resolve("native", 0).expect("native")
 }
 
+pub fn tuned() -> Alg {
+    registry().resolve("tuned", 0).expect("tuned")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -911,9 +974,52 @@ mod tests {
             if let Some(id) = alg.cache_id() {
                 assert!(seen.insert(id), "duplicate cache id {id:?} ({})", alg.label());
             } else {
-                assert_eq!(alg.name(), "native", "only native may be uncacheable");
+                assert!(
+                    matches!(alg.name(), "native" | "tuned"),
+                    "only count-dependent selections may be uncacheable, not {}",
+                    alg.label()
+                );
             }
         }
+    }
+
+    #[test]
+    fn tuned_registered_but_never_its_own_candidate() {
+        let cl = Cluster::new(4, 4, 2);
+        let alg = registry().resolve("tuned", 0).unwrap();
+        assert!(OpKind::ALL.into_iter().all(|op| alg.supports(op)));
+        assert!(alg.cache_id().is_none(), "dispatch is count-dependent");
+        // The meta port budget covers the widest candidate (2-ported
+        // bcast needs 2 ports on this cluster).
+        assert!(alg.ports_required(cl, OpKind::Bcast) >= 2);
+        for op in OpKind::ALL {
+            let cands = registry().candidates(cl, op);
+            assert!(!cands.is_empty(), "{op}: tuned needs candidates to dispatch over");
+            assert!(
+                cands.iter().all(|a| a.name() != "tuned"),
+                "{op}: tuned must not be its own candidate (would recurse)"
+            );
+        }
+    }
+
+    #[test]
+    fn tuned_builds_the_dispatched_schedule() {
+        let cl = Cluster::new(2, 4, 2);
+        let built =
+            tuned().build(cl, &persona(), Op::Bcast { root: 0, c: 64 }).unwrap();
+        // Whatever won, it is a real schedule of a concrete algorithm
+        // with neutral-or-native quirks, not a meta artifact.
+        assert!(!built.schedule.algorithm.is_empty());
+        let direct = crate::tuning::dispatch(
+            cl,
+            crate::model::PersonaName::OpenMpi,
+            OpKind::Bcast,
+            64,
+        )
+        .unwrap();
+        let direct_built =
+            direct.build(cl, &persona(), Op::Bcast { root: 0, c: 64 }).unwrap();
+        assert_eq!(built.schedule.algorithm, direct_built.schedule.algorithm);
     }
 
     #[test]

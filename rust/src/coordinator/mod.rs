@@ -59,6 +59,18 @@ impl Op {
             | Op::Alltoall { c } => *c,
         }
     }
+
+    /// The same operation shape (kind and root) at a different element
+    /// count — the step a count sweep takes between cells.
+    pub fn with_count(self, c: u64) -> Op {
+        match self {
+            Op::Bcast { root, .. } => Op::Bcast { root, c },
+            Op::Scatter { root, .. } => Op::Scatter { root, c },
+            Op::Gather { root, .. } => Op::Gather { root, c },
+            Op::Allgather { .. } => Op::Allgather { c },
+            Op::Alltoall { .. } => Op::Alltoall { c },
+        }
+    }
 }
 
 /// One measurement row (matches the paper's table columns).
@@ -68,6 +80,16 @@ pub struct Measurement {
     pub k: u32,
     pub c: u64,
     pub summary: Summary,
+}
+
+/// One per-count autotune winner: the fastest candidate at element
+/// count `c` and its measurement. A series of these is the raw material
+/// a `tuning::DecisionTable` compresses into breakpoints.
+#[derive(Clone, Debug)]
+pub struct CountWinner {
+    pub c: u64,
+    pub alg: Alg,
+    pub measurement: Measurement,
 }
 
 pub struct Collectives {
@@ -210,15 +232,44 @@ impl Collectives {
     /// candidates. This is the coordinator's answer to the paper's
     /// conclusion that native selection "can easily be improved".
     pub fn autotune(&self, op: Op, candidates: &[Alg]) -> Result<(Alg, Measurement), AlgError> {
+        let w = self
+            .autotune_counts(op, &[op.count()], candidates)?
+            .pop()
+            .expect("one count in, one winner out");
+        Ok((w.alg, w.measurement))
+    }
+
+    /// Per-count winners over a whole count grid: for every `c` in
+    /// `counts`, the candidate with the lowest simulated average (ties
+    /// keep the earlier candidate, so the result is deterministic in
+    /// candidate order). Count sweeps share each candidate's cached
+    /// schedule through the engine, so the grid costs one build plus a
+    /// recost per (candidate, count) — this is the sweep the `tuning`
+    /// module compresses into decision tables.
+    pub fn autotune_counts(
+        &self,
+        op: Op,
+        counts: &[u64],
+        candidates: &[Alg],
+    ) -> Result<Vec<CountWinner>, AlgError> {
         assert!(!candidates.is_empty());
-        let mut best: Option<(Alg, Measurement)> = None;
-        for alg in candidates {
-            let m = self.run(op, alg)?;
-            if best.as_ref().is_none_or(|(_, b)| m.summary.avg < b.summary.avg) {
-                best = Some((alg.clone(), m));
-            }
-        }
-        Ok(best.expect("non-empty candidates"))
+        counts
+            .iter()
+            .map(|&c| {
+                let op = op.with_count(c);
+                let mut best: Option<CountWinner> = None;
+                for alg in candidates {
+                    let m = self.run(op, alg)?;
+                    if best
+                        .as_ref()
+                        .is_none_or(|b| m.summary.avg < b.measurement.summary.avg)
+                    {
+                        best = Some(CountWinner { c, alg: alg.clone(), measurement: m });
+                    }
+                }
+                Ok(best.expect("non-empty candidates"))
+            })
+            .collect()
     }
 
     /// The registry's default candidate set for this operation.
@@ -301,6 +352,31 @@ mod tests {
             matches!(best_alg.name(), "fulllane" | "kported"),
             "{best_alg:?}"
         );
+    }
+
+    #[test]
+    fn autotune_counts_matches_per_count_autotune() {
+        // The grid form must agree with N single-count autotunes — the
+        // refactor only batches, it must not change winners or values.
+        let c = coll();
+        let counts = [1u64, 600, 100_000];
+        let op = Op::Bcast { root: 0, c: 1 };
+        let cands = c.default_candidates(op);
+        let winners = c.autotune_counts(op, &counts, &cands).unwrap();
+        assert_eq!(winners.len(), counts.len());
+        for (w, &count) in winners.iter().zip(&counts) {
+            assert_eq!(w.c, count);
+            let (alg, m) = c.autotune(op.with_count(count), &cands).unwrap();
+            assert_eq!((w.alg.name(), w.alg.k()), (alg.name(), alg.k()), "c={count}");
+            assert_eq!(w.measurement.summary, m.summary, "c={count}");
+        }
+    }
+
+    #[test]
+    fn with_count_preserves_the_shape() {
+        let op = Op::Scatter { root: 3, c: 8 };
+        assert_eq!(op.with_count(99), Op::Scatter { root: 3, c: 99 });
+        assert_eq!(Op::Alltoall { c: 1 }.with_count(7), Op::Alltoall { c: 7 });
     }
 
     #[test]

@@ -60,6 +60,17 @@ pub const ALLTOALL_COUNTS: &[u64] = &[1, 6, 9, 53, 87, 521, 869];
 pub const NODE_VS_NET_COUNTS: &[u64] =
     &[1, 2, 4, 19, 32, 188, 313, 1875, 3125, 18750, 31250];
 
+/// The paper's default count series for an operation — the grid
+/// `mlane sweep`/`mlane tune` fall back to and the one the `tuned`
+/// meta-algorithm's auto-built decision tables sample.
+pub fn default_counts(op: OpKind) -> &'static [u64] {
+    match op {
+        OpKind::Bcast => BCAST_COUNTS,
+        OpKind::Scatter | OpKind::Gather => SCATTER_COUNTS,
+        OpKind::Allgather | OpKind::Alltoall => ALLTOALL_COUNTS,
+    }
+}
+
 /// One series within a table (the paper's tables stack 1–3 of these).
 /// Usually produced by [`Grid::sections`] rather than written by hand.
 #[derive(Clone, Debug)]

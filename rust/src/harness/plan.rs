@@ -296,12 +296,13 @@ impl Plan {
         match name {
             "paper" => Some(Plan::paper()),
             "appendix" => Some(Plan::appendix()),
+            "tuned" => Some(Plan::tuned()),
             _ => None,
         }
     }
 
     /// Preset names accepted by [`Plan::preset`].
-    pub const PRESETS: &[&str] = &["paper", "appendix"];
+    pub const PRESETS: &[&str] = &["paper", "appendix", "tuned"];
 
     /// The paper's full evaluation: every table of Tables 2–49, as grid
     /// declarations. Algorithms are registry handles — the specs carry
@@ -431,6 +432,42 @@ impl Plan {
             plan = plan.table(
                 50 + pi as u32,
                 "two-phase vs adapted k-lane Bcast on Hydra (appendix)",
+                persona,
+                &grid,
+            );
+        }
+        plan
+    }
+
+    /// Tuned-selection preset (tables 53–55, one per persona): the
+    /// `tuned` meta-algorithm side by side with every fixed algorithm
+    /// of its default broadcast candidate set on Hydra, across the
+    /// paper's count range — the end-to-end demonstration that per-size
+    /// selection tracks the per-count winner where every fixed choice
+    /// loses somewhere.
+    pub fn tuned() -> Plan {
+        let cl = hydra();
+        let mut algs = vec![registry::tuned()];
+        algs.extend(registry::registry().candidates(cl, OpKind::Bcast));
+        let grid = Grid::new()
+            .cluster(cl)
+            .op(OpKind::Bcast)
+            .algs(algs)
+            .counts(BCAST_COUNTS)
+            .heading(|_: Cluster, op: OpKind, a: &Alg| {
+                if a.name() == "tuned" {
+                    format!("{} (tuned selection)", op.title())
+                } else if a.name() == "native" {
+                    format!("MPI_{}", op.title())
+                } else {
+                    format!("{}, {}", op.title(), a.label())
+                }
+            });
+        let mut plan = Plan::new();
+        for (pi, persona) in PersonaName::all().into_iter().enumerate() {
+            plan = plan.table(
+                53 + pi as u32,
+                "tuned selection vs fixed algorithms, Bcast on Hydra",
                 persona,
                 &grid,
             );
@@ -825,6 +862,33 @@ mod tests {
         assert_eq!(t.sections[5].heading, "Bcast, k = 6 lanes (two-phase)");
         assert!(Plan::preset("nosuch").is_none());
         assert!(Plan::PRESETS.contains(&"appendix"));
+    }
+
+    #[test]
+    fn tuned_preset_compares_tuned_against_its_candidates() {
+        let plan = Plan::preset("tuned").unwrap();
+        assert_eq!(plan.tables.len(), 3);
+        let t = &plan.tables[0];
+        assert_eq!(t.number, 53);
+        assert_eq!(t.sections[0].heading, "Bcast (tuned selection)");
+        assert_eq!(t.sections[0].alg.name(), "tuned");
+        // One section per fixed candidate rides along, none of them the
+        // meta-entry itself.
+        assert!(t.sections.len() >= 5, "{}", t.sections.len());
+        assert!(t.sections.iter().skip(1).all(|s| s.alg.name() != "tuned"));
+        assert!(t.sections.iter().any(|s| s.heading == "MPI_Bcast"));
+        assert!(Plan::PRESETS.contains(&"tuned"));
+    }
+
+    #[test]
+    fn tuned_preset_runs_end_to_end_on_a_small_grid() {
+        // Shrunk grid: the tuned sections dispatch per count (building
+        // auto decision tables on the way) and the whole plan completes
+        // through the normal executor with one row per (section, count).
+        let spec = Plan::tuned().tables.remove(0).with_grid(tiny(), &[1, 6000]);
+        let out = run_table_with(&Arc::new(SweepEngine::new()), &spec, &cfg()).unwrap();
+        assert_eq!(out.rows.len(), 2 * spec.sections.len());
+        assert!(out.rows.iter().all(|r| r.avg.is_finite() && r.avg >= r.min));
     }
 
     #[test]

@@ -202,8 +202,9 @@ impl<W: Write> Sink for JsonSink<W> {
 }
 
 /// Minimal JSON string escaping (the emitted strings are ASCII labels,
-/// but stay correct for anything).
-fn esc(s: &str) -> String {
+/// but stay correct for anything). Shared with the `tuning` module's
+/// decision-table writer so both hand-rolled emitters escape alike.
+pub(crate) fn esc(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for ch in s.chars() {
         match ch {

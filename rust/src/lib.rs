@@ -8,4 +8,5 @@ pub mod exec;
 pub mod runtime;
 pub mod coordinator;
 pub mod harness;
+pub mod tuning;
 pub mod util;

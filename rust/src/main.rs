@@ -4,15 +4,17 @@
 //! ```text
 //! mlane table <N> [--persona openmpi|intelmpi|mpich] [--csv DIR]
 //! mlane tables [--csv DIR] [--threads T]  # all 48 tables (2..49), plan-parallel
-//! mlane sweep  [--preset paper|appendix]
+//! mlane sweep  [--preset paper|appendix|tuned]
 //!              [--nodes N --cores n --lanes L] [--op OP[,OP...]]
 //!              [--alg NAME[:K][,NAME[:K]...]] [--k K] [--counts C[,C...]]
 //!              [--persona P[,P...]] [--format text|csv|json] [--out DIR]
 //!              [--reps R] [--threads T] [--list]
+//! mlane tune   [--preset paper|appendix|tuned] [grid flags as sweep]
+//!              [--format text|json] [--out FILE]  # per-size decision tables
 //! mlane run --op bcast|scatter|gather|allgather|alltoall
-//!           --alg <registry name: kported|klane|klane2p|fulllane|bruck|...>
+//!           --alg <registry name: kported|klane|klane2p|fulllane|bruck|tuned|...>
 //!           [--k K] [--c C] [--nodes N] [--cores n] [--lanes L]
-//!           [--backend sim|exec|xla] [--persona P]
+//!           [--backend sim|exec|xla] [--persona P] [--table FILE]
 //! mlane autotune --op <op> [--c C] [--nodes N] [--cores n] [--lanes L]
 //! mlane compare                       # simulated vs paper anchors
 //! mlane trace --op <op> --alg <alg> [--out FILE]  # Chrome trace of one run
@@ -45,6 +47,7 @@ use mlane::runtime::XlaService;
 use mlane::schedule::validate::{validate, validate_ports};
 use mlane::sim::SweepEngine;
 use mlane::topology::Cluster;
+use mlane::tuning::{self, Scenario, TuneConfig, TuningBook};
 
 fn main() {
     if let Err(e) = run() {
@@ -216,10 +219,25 @@ fn run() -> Result<()> {
             )?;
             cmd_sweep(&args)
         }
+        "tune" => {
+            check_flags(
+                &args,
+                &[
+                    &["preset", "op", "alg", "k", "counts", "persona", "format", "out"],
+                    CLUSTER_FLAGS,
+                    MEASURE_FLAGS,
+                ],
+            )?;
+            cmd_tune(&args)
+        }
         "run" => {
             check_flags(
                 &args,
-                &[&["op", "alg", "k", "c", "backend", "persona"], CLUSTER_FLAGS, MEASURE_FLAGS],
+                &[
+                    &["op", "alg", "k", "c", "backend", "persona", "table"],
+                    CLUSTER_FLAGS,
+                    MEASURE_FLAGS,
+                ],
             )?;
             cmd_run(&args)
         }
@@ -268,7 +286,11 @@ commands:
                 [--nodes --cores --lanes --op OP[,OP] --alg NAME[:K][,NAME[:K]] --k K]
                 [--counts C[,C] --persona P[,P] --format text|csv|json --out DIR]
                 [--reps R --threads T --list]
-  run         run one collective                 [--op --alg --k --c --nodes --cores --lanes --backend --persona]
+  tune        build per-size decision tables (count breakpoints -> fastest algorithm);
+              the `tuned` meta-algorithm dispatches from them
+                [--preset {presets}] [grid flags as sweep]
+                [--format text|json --out FILE --reps R --threads T]
+  run         run one collective                 [--op --alg --k --c --nodes --cores --lanes --backend --persona --table FILE]
   autotune    pick the fastest algorithm         [--op --c --nodes --cores --lanes --persona]
   compare     simulated vs paper anchor cells
   trace       emit a Chrome-trace of one simulated run  [--op --alg ... --out FILE]
@@ -358,15 +380,6 @@ fn emit_csv(report: &Report, dir: impl Into<std::path::PathBuf>) -> Result<()> {
     Ok(())
 }
 
-/// Per-operation default count series (the paper's grids).
-fn default_counts(op: OpKind) -> &'static [u64] {
-    match op {
-        OpKind::Bcast => harness::BCAST_COUNTS,
-        OpKind::Scatter | OpKind::Gather => harness::SCATTER_COUNTS,
-        OpKind::Allgather | OpKind::Alltoall => harness::ALLTOALL_COUNTS,
-    }
-}
-
 /// Split a comma list, trimming items; empty lists (e.g. `--counts ","`)
 /// are an error, never a silent empty plan.
 fn parse_list<'a>(raw: &'a str, what: &str) -> Result<Vec<&'a str>> {
@@ -378,26 +391,25 @@ fn parse_list<'a>(raw: &'a str, what: &str) -> Result<Vec<&'a str>> {
     Ok(items)
 }
 
-/// Build a plan from the sweep flags: one table per persona, sections =
-/// (algorithms × ops) on the given cluster.
-fn sweep_plan(args: &Args) -> Result<Plan> {
-    let cl = args.cluster()?;
-    let default_k = args.flag("k", cl.lanes)?;
-
-    let ops: Vec<OpKind> = match args.flags.get("op") {
-        None => vec![OpKind::Bcast],
+/// `--op OP[,OP]` (default: bcast). Shared by `sweep` and `tune`.
+fn parse_ops(args: &Args) -> Result<Vec<OpKind>> {
+    match args.flags.get("op") {
+        None => Ok(vec![OpKind::Bcast]),
         Some(list) => parse_list(list, "op")?
             .into_iter()
             .map(|s| {
                 OpKind::parse(s)
                     .ok_or_else(|| anyhow!("unknown op {s} (ops: {})", op_names().join("|")))
             })
-            .collect::<Result<_>>()?,
-    };
+            .collect(),
+    }
+}
 
-    let algs: Vec<Alg> = match args.flags.get("alg") {
-        // fulllane + native support every operation — a safe default grid.
-        None => vec![registry().resolve("fulllane", 0)?, registry().resolve("native", 0)?],
+/// `--alg NAME[:K][,NAME[:K]]` resolved against the registry (`None`
+/// when the flag is absent, so each command picks its own default).
+fn parse_algs(args: &Args, default_k: u32) -> Result<Option<Vec<Alg>>> {
+    match args.flags.get("alg") {
+        None => Ok(None),
         Some(list) => parse_list(list, "alg")?
             .into_iter()
             .map(|item| {
@@ -410,25 +422,47 @@ fn sweep_plan(args: &Args) -> Result<Plan> {
                 };
                 Ok(registry().resolve(name, k)?)
             })
-            .collect::<Result<_>>()?,
-    };
+            .collect::<Result<_>>()
+            .map(Some),
+    }
+}
 
-    let personas: Vec<PersonaName> = match args.flags.get("persona") {
-        None => vec![PersonaName::OpenMpi],
+/// `--persona P[,P]` (default: openmpi).
+fn parse_personas(args: &Args) -> Result<Vec<PersonaName>> {
+    match args.flags.get("persona") {
+        None => Ok(vec![PersonaName::OpenMpi]),
         Some(list) => {
-            parse_list(list, "persona")?.into_iter().map(parse_persona).collect::<Result<_>>()?
+            parse_list(list, "persona")?.into_iter().map(parse_persona).collect()
         }
-    };
+    }
+}
 
-    let counts: Option<Vec<u64>> = match args.flags.get("counts") {
-        None => None,
-        Some(list) => Some(
-            parse_list(list, "counts")?
-                .into_iter()
-                .map(|s| s.parse::<u64>().map_err(|_| anyhow!("bad --counts value {s}")))
-                .collect::<Result<Vec<u64>>>()?,
-        ),
+/// `--counts C[,C]` (`None` falls back to the per-op paper grid).
+fn parse_counts(args: &Args) -> Result<Option<Vec<u64>>> {
+    match args.flags.get("counts") {
+        None => Ok(None),
+        Some(list) => parse_list(list, "counts")?
+            .into_iter()
+            .map(|s| s.parse::<u64>().map_err(|_| anyhow!("bad --counts value {s}")))
+            .collect::<Result<Vec<u64>>>()
+            .map(Some),
+    }
+}
+
+/// Build a plan from the sweep flags: one table per persona, sections =
+/// (algorithms × ops) on the given cluster.
+fn sweep_plan(args: &Args) -> Result<Plan> {
+    let cl = args.cluster()?;
+    let default_k = args.flag("k", cl.lanes)?;
+
+    let ops = parse_ops(args)?;
+    let algs: Vec<Alg> = match parse_algs(args, default_k)? {
+        // fulllane + native support every operation — a safe default grid.
+        None => vec![registry().resolve("fulllane", 0)?, registry().resolve("native", 0)?],
+        Some(list) => list,
     };
+    let personas = parse_personas(args)?;
+    let counts = parse_counts(args)?;
 
     let caption = format!(
         "sweep: {} x {} on {}x{} (lanes={})",
@@ -444,7 +478,7 @@ fn sweep_plan(args: &Args) -> Result<Plan> {
         for &op in &ops {
             let cts: &[u64] = match &counts {
                 Some(v) => v,
-                None => default_counts(op),
+                None => harness::default_counts(op),
             };
             sections.extend(
                 Grid::new()
@@ -530,6 +564,108 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Tuning scenarios from the grid flags: (personas × ops) on the given
+/// cluster. Explicit `--alg` names the candidate set (filtered per op;
+/// an op left with no supporting candidate is a typed error downstream);
+/// otherwise each op tunes over its registry default candidates.
+fn tune_scenarios(args: &Args) -> Result<Vec<Scenario>> {
+    let cl = args.cluster()?;
+    let default_k = args.flag("k", cl.lanes)?;
+    let ops = parse_ops(args)?;
+    let explicit = parse_algs(args, default_k)?;
+    let personas = parse_personas(args)?;
+    let counts = parse_counts(args)?;
+    let mut out = Vec::new();
+    for &persona in &personas {
+        for &op in &ops {
+            out.push(Scenario {
+                cluster: cl,
+                op,
+                persona,
+                counts: counts
+                    .clone()
+                    .unwrap_or_else(|| harness::default_counts(op).to_vec()),
+                candidates: match &explicit {
+                    Some(list) => list.clone(),
+                    None => registry().candidates(cl, op),
+                },
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Tuning scenarios covering a preset plan: one scenario per distinct
+/// (cluster, op, persona) its tables sweep, counts = the union of the
+/// sections' grids, candidates = the registry defaults.
+fn scenarios_from_plan(plan: &Plan) -> Vec<Scenario> {
+    let mut out: Vec<Scenario> = Vec::new();
+    for t in &plan.tables {
+        for s in &t.sections {
+            match out
+                .iter_mut()
+                .find(|sc| sc.cluster == s.cluster && sc.op == s.op && sc.persona == t.persona)
+            {
+                Some(sc) => sc.counts.extend(s.counts.iter().copied()),
+                None => out.push(Scenario {
+                    cluster: s.cluster,
+                    op: s.op,
+                    persona: t.persona,
+                    counts: s.counts.to_vec(),
+                    candidates: registry().candidates(s.cluster, s.op),
+                }),
+            }
+        }
+    }
+    for sc in &mut out {
+        sc.counts.sort_unstable();
+        sc.counts.dedup();
+    }
+    out
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    // Decision tables are reproducible artifacts: tuning runs under the
+    // fixed TuneConfig defaults (the same parameters the `tuned`
+    // meta-algorithm auto-builds with), not the measurement env —
+    // explicit --reps overrides for quick experiments.
+    let mut tune_cfg = TuneConfig::default();
+    if let Some(v) = args.flags.get("reps") {
+        tune_cfg.reps = parse_positive(v, "reps")?;
+    }
+    let scenarios = match args.flags.get("preset") {
+        Some(name) => {
+            if let Some(conflict) = GRID_FLAGS.iter().find(|f| args.flags.contains_key(**f)) {
+                bail!(
+                    "--preset defines the whole grid; drop --{conflict} (grid flags: {})",
+                    GRID_FLAGS.iter().map(|f| format!("--{f}")).collect::<Vec<_>>().join(" ")
+                );
+            }
+            let plan = Plan::preset(name).ok_or_else(|| {
+                anyhow!("unknown preset {name} (presets: {})", Plan::PRESETS.join(", "))
+            })?;
+            scenarios_from_plan(&plan)
+        }
+        None => tune_scenarios(args)?,
+    };
+    // A command-local engine sized by --cache-shapes / MLANE_CACHE_SHAPES
+    // (the process singleton ignores later capacity requests); it is
+    // still shared across all scenarios and tune workers.
+    let engine = Arc::new(SweepEngine::with_capacity(cfg.cache_shapes));
+    let book = tuning::tune_all(&engine, &scenarios, &tune_cfg, cfg.threads)?;
+    match args.flags.get("format").map(String::as_str) {
+        None | Some("text") => print!("{}", book.text()),
+        Some("json") => print!("{}", book.to_json()),
+        Some(other) => bail!("unknown format {other} (formats: text|json)"),
+    }
+    if let Some(path) = args.flags.get("out") {
+        book.save(path).with_context(|| format!("write decision tables to {path}"))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
 /// A `Collectives` configured from the invocation's `RunConfig` —
 /// including the schedule-cache bound (`--cache-shapes` /
 /// `MLANE_CACHE_SHAPES`), which applies to every command, not just the
@@ -548,7 +684,29 @@ fn cmd_run(args: &Args) -> Result<()> {
     let cl = args.cluster()?;
     let op = args.op()?;
     let alg = args.algorithm()?;
-    let coll = collectives(cl, args.persona()?, &cfg);
+    let persona = args.persona()?;
+    // `--table FILE`: load persisted decision tables so `--alg tuned`
+    // dispatches from the artifact instead of auto-building one. A book
+    // that does not cover the requested scenario is an error — silently
+    // falling back to an auto-built table would report results that
+    // have nothing to do with the supplied artifact.
+    if let Some(path) = args.flags.get("table") {
+        let book = TuningBook::load(path)?;
+        if alg.name() == "tuned" && book.get(cl, op.kind(), persona).is_none() {
+            let covered: Vec<String> = book.tables.iter().map(|t| t.label()).collect();
+            bail!(
+                "{path}: no decision table for {} on {}x{} (lanes={}) [{}]; tables cover: {}",
+                op.kind(),
+                cl.nodes,
+                cl.cores,
+                cl.lanes,
+                persona.key(),
+                if covered.is_empty() { "<none>".to_string() } else { covered.join("; ") }
+            );
+        }
+        tuning::install(book)?;
+    }
+    let coll = collectives(cl, persona, &cfg);
     match args.flags.get("backend").map(String::as_str) {
         Some("sim") | None => {
             let m = coll.run(op, &alg)?;
@@ -654,13 +812,21 @@ fn cmd_validate(args: &Args) -> Result<()> {
             if !alg.supports(kind) {
                 continue;
             }
+            let c = validation_count(kind);
             let built = alg
-                .build(cl, &persona, kind.op(validation_count(kind)))
+                .build(cl, &persona, kind.op(c))
                 .map_err(|e| anyhow!("{} {kind}: {e}", alg.label()))?;
             let s = &built.schedule;
             validate(s).map_err(|v| anyhow!("{}: {v}", s.algorithm))?;
-            validate_ports(s, alg.ports_required(cl, kind))
-                .map_err(|v| anyhow!("{} ports: {v}", s.algorithm))?;
+            // The tuned meta-entry builds whatever its decision table
+            // picked: verify the *dispatched* algorithm's port budget,
+            // not the meta budget (which is the max over candidates).
+            let ports = if alg.name() == "tuned" {
+                tuning::dispatch(cl, persona.name, kind, c)?.ports_required(cl, kind)
+            } else {
+                alg.ports_required(cl, kind)
+            };
+            validate_ports(s, ports).map_err(|v| anyhow!("{} ports: {v}", s.algorithm))?;
             count += 1;
         }
     }

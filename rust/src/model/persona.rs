@@ -14,7 +14,7 @@ use crate::algorithms::{allgather, alltoall, bcast, gather, scatter};
 use crate::schedule::Schedule;
 use crate::topology::{Cluster, Rank};
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PersonaName {
     OpenMpi,
     IntelMpi,

@@ -1,0 +1,912 @@
+//! Per-size tuned algorithm selection (arXiv:cs/0408034, *Fast Tuning
+//! of Intra-Cluster Collective Communications*).
+//!
+//! The paper's tables show that no single algorithm wins across message
+//! sizes: the k-ported, k-lane and full-lane variants cross over as
+//! counts grow. This module turns that observation into a persistent
+//! product:
+//!
+//! * [`tune_scenario`] sweeps one (cluster, operation, persona) over a
+//!   count grid through the shared [`SweepEngine`] (each candidate's
+//!   schedule is built once and re-costed per count), computes the
+//!   per-size winners via [`Collectives::autotune_counts`], and
+//!   compresses them into a [`DecisionTable`] — sorted count
+//!   breakpoints, each naming the fastest registry algorithm from that
+//!   count up to the next breakpoint;
+//! * [`TuningBook`] is a set of decision tables with hand-rolled JSON
+//!   persistence ([`TuningBook::to_json`] / [`TuningBook::parse`], the
+//!   `report::JsonSink` idiom — no external deps) — the `mlane tune`
+//!   artifact;
+//! * [`dispatch`] resolves (cluster, persona, op, count) to the winning
+//!   algorithm: from an [`install`]ed book if one covers the scenario,
+//!   otherwise from an auto-built table (default registry candidates ×
+//!   the paper's count grid, cached process-wide). The registry's
+//!   `tuned` meta-algorithm is a thin wrapper over this call.
+//!
+//! ## Breakpoint semantics
+//!
+//! `entries` are sorted by strictly-ascending `from` and deduplicated
+//! (adjacent entries always name different algorithms). Entry *i*
+//! applies to every count in `[from_i, from_{i+1})`; the last entry is
+//! open-ended and counts below `entries[0].from` saturate to the first
+//! entry, so [`DecisionTable::pick`] is total over the count domain.
+//! Every `from` is one of the sampled grid counts — the winner at a
+//! breakpoint is *exactly* the measured argmin there (the property
+//! tests in `rust/tests/tuning_properties.rs` pin this); between
+//! samples the table interpolates by holding the last winner.
+//!
+//! Determinism: winners are argmins of simulated averages under a fixed
+//! [`TuneConfig`] (reps/warmup/seed), and the engine's recost path is
+//! bitwise-identical to fresh builds, so the same scenario always
+//! yields the same table — tables are reproducible artifacts, not
+//! snapshots of a noisy run.
+
+pub(crate) mod json;
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::algorithms::registry::{registry, Alg, AlgError, OpKind};
+use crate::coordinator::Collectives;
+use crate::harness::report::esc;
+use crate::harness::{default_counts, shared_engine};
+use crate::model::PersonaName;
+use crate::sim::{self, SweepEngine};
+use crate::topology::Cluster;
+
+use json::Value;
+
+/// Default measured repetitions per tuning cell. Low on purpose: the
+/// simulated averages separate algorithms well before the paper's 100
+/// reps, and decision tables must stay cheap to (re)build.
+pub const TUNE_REPS: usize = 5;
+/// Default unmeasured warm-up repetitions per tuning cell.
+pub const TUNE_WARMUP: usize = 1;
+
+/// Measurement parameters a decision table is built under. Fixed
+/// defaults (not `RunConfig`'s) so auto-built tables and `mlane tune`
+/// artifacts agree byte-for-byte unless explicitly overridden.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TuneConfig {
+    pub reps: usize,
+    pub warmup: usize,
+    pub seed: u64,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig { reps: TUNE_REPS, warmup: TUNE_WARMUP, seed: sim::DEFAULT_SEED }
+    }
+}
+
+/// Typed tuning errors — CLI-reachable paths must never panic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TuneError {
+    /// A candidate sweep failed (carries the scenario and the registry
+    /// error underneath).
+    Alg { scenario: String, source: AlgError },
+    /// After filtering to supporters of the operation, no candidate was
+    /// left to tune over.
+    NoCandidates { op: OpKind },
+    /// The scenario's count grid was empty.
+    EmptyCounts { scenario: String },
+    /// A persisted book failed strict parsing or validation.
+    Parse(String),
+    /// A persisted book could not be read or written.
+    Io(String),
+}
+
+impl fmt::Display for TuneError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TuneError::Alg { scenario, source } => write!(f, "tuning {scenario}: {source}"),
+            TuneError::NoCandidates { op } => write!(
+                f,
+                "no tuning candidates support {op} (registry supporters: {})",
+                tunable_supporters(*op).join(", ")
+            ),
+            TuneError::EmptyCounts { scenario } => {
+                write!(f, "tuning {scenario}: empty count grid")
+            }
+            TuneError::Parse(msg) => write!(f, "decision tables: {msg}"),
+            TuneError::Io(msg) => write!(f, "decision tables: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TuneError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TuneError::Alg { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// Registry families that can actually serve as tuning candidates for
+/// `op` — `supporting(op)` minus `tuned` itself, which the candidate
+/// filter always rejects (suggesting it in "supporters" help text would
+/// send the user in a circle).
+fn tunable_supporters(op: OpKind) -> Vec<&'static str> {
+    registry().supporting(op).into_iter().filter(|n| *n != "tuned").collect()
+}
+
+impl TuneError {
+    /// Map onto [`AlgError`] for the registry's `tuned` meta-algorithm
+    /// (whose `build` contract is `Result<_, AlgError>`).
+    fn into_alg_error(self, op: OpKind) -> AlgError {
+        match self {
+            TuneError::Alg { source, .. } => source,
+            TuneError::NoCandidates { op } => AlgError::UnsupportedCombination {
+                alg: "tuned".to_string(),
+                op,
+                supported: tunable_supporters(op),
+            },
+            // Unreachable from the auto path (fixed non-empty grids, no
+            // parsing); surfaced as an unknown-algorithm error if a
+            // future refactor ever routes one here.
+            other => AlgError::UnknownAlgorithm {
+                name: format!("tuned ({other} while tuning {op})"),
+                known: registry().names(),
+            },
+        }
+    }
+}
+
+/// One breakpoint: from this count (inclusive) up to the next entry,
+/// dispatch to `(alg, k)`. `avg_us` records the winner's simulated
+/// average at the grid count that opened the breakpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Breakpoint {
+    pub from: u64,
+    /// Registry family name (`--alg` vocabulary).
+    pub alg: String,
+    /// Bound `k` (0 for unparameterized families).
+    pub k: u32,
+    pub avg_us: f64,
+}
+
+/// Per-size winners for one (cluster, operation, persona), compressed
+/// to count breakpoints. See the module doc for breakpoint semantics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecisionTable {
+    pub cluster: Cluster,
+    pub op: OpKind,
+    pub persona: PersonaName,
+    pub entries: Vec<Breakpoint>,
+}
+
+impl DecisionTable {
+    /// Human-readable scenario id, used in errors and headings.
+    pub fn label(&self) -> String {
+        format!(
+            "{} on {}x{} (lanes={}) [{}]",
+            self.op,
+            self.cluster.nodes,
+            self.cluster.cores,
+            self.cluster.lanes,
+            self.persona.key()
+        )
+    }
+
+    /// The breakpoint governing count `c` (total: counts below the
+    /// first breakpoint saturate to it, the last is open-ended).
+    pub fn pick(&self, c: u64) -> &Breakpoint {
+        assert!(!self.entries.is_empty(), "decision table has no entries");
+        let i = self.entries.partition_point(|b| b.from <= c);
+        &self.entries[i.saturating_sub(1)]
+    }
+
+    /// Resolve the winning algorithm at count `c` against the registry.
+    pub fn resolve(&self, c: u64) -> Result<Alg, AlgError> {
+        let b = self.pick(c);
+        // `validate`/`tune_scenario` exclude self-reference; builds
+        // would recurse forever if one slipped through.
+        debug_assert_ne!(b.alg, "tuned", "self-referential decision table");
+        registry().resolve(&b.alg, b.k)
+    }
+
+    /// Structural invariants: non-empty, strictly-ascending `from`,
+    /// adjacent entries name different algorithms, every entry resolves
+    /// in the registry, and none dispatches back to `tuned`.
+    pub fn validate(&self) -> Result<(), TuneError> {
+        let at = self.label();
+        if self.entries.is_empty() {
+            return Err(TuneError::Parse(format!("{at}: no entries")));
+        }
+        for w in self.entries.windows(2) {
+            if w[0].from >= w[1].from {
+                return Err(TuneError::Parse(format!(
+                    "{at}: breakpoints not strictly ascending ({} then {})",
+                    w[0].from, w[1].from
+                )));
+            }
+            if w[0].alg == w[1].alg && w[0].k == w[1].k {
+                return Err(TuneError::Parse(format!(
+                    "{at}: duplicate adjacent breakpoints at {} and {} ({})",
+                    w[0].from, w[1].from, w[0].alg
+                )));
+            }
+        }
+        for b in &self.entries {
+            if b.alg == "tuned" {
+                return Err(TuneError::Parse(format!(
+                    "{at}: a decision table may not dispatch to `tuned` itself"
+                )));
+            }
+            if !b.avg_us.is_finite() {
+                return Err(TuneError::Parse(format!(
+                    "{at}: non-finite avg_us at from={}",
+                    b.from
+                )));
+            }
+            registry()
+                .resolve(&b.alg, b.k)
+                .map_err(|e| TuneError::Parse(format!("{at}: {e}")))?;
+        }
+        Ok(())
+    }
+
+    /// Compact single-line JSON object (the book's `tables` items).
+    pub fn json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = write!(
+            out,
+            "{{\"op\":\"{}\",\"persona\":\"{}\",\"nodes\":{},\"cores\":{},\"lanes\":{},\"entries\":[",
+            self.op.name(),
+            self.persona.key(),
+            self.cluster.nodes,
+            self.cluster.cores,
+            self.cluster.lanes,
+        );
+        for (i, b) in self.entries.iter().enumerate() {
+            let _ = write!(
+                out,
+                "{}{{\"from\":{},\"alg\":\"{}\",\"k\":{},\"avg_us\":{}}}",
+                if i == 0 { "" } else { "," },
+                b.from,
+                esc(&b.alg),
+                b.k,
+                b.avg_us,
+            );
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Human-readable breakpoint listing (`mlane tune` default output).
+    pub fn text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "decision table: {} on {}x{} (lanes={}) [{}]",
+            self.op,
+            self.cluster.nodes,
+            self.cluster.cores,
+            self.cluster.lanes,
+            self.persona.label()
+        );
+        let _ = writeln!(out, "  {:>9} {:<10} {:>3} {:>12}", "from", "alg", "k", "avg(us)");
+        for b in &self.entries {
+            let k = if b.k == 0 { "-".to_string() } else { b.k.to_string() };
+            let _ = writeln!(out, "  {:>9} {:<10} {:>3} {:>12.2}", b.from, b.alg, k, b.avg_us);
+        }
+        out
+    }
+
+    fn from_value(v: &Value) -> Result<DecisionTable, TuneError> {
+        strict_obj(v, "table", &["op", "persona", "nodes", "cores", "lanes", "entries"])?;
+        let op_name = str_field(v, "table", "op")?;
+        let op = OpKind::parse(op_name)
+            .ok_or_else(|| TuneError::Parse(format!("table: unknown op {op_name:?}")))?;
+        let persona_key = str_field(v, "table", "persona")?;
+        let persona = PersonaName::parse(persona_key)
+            .ok_or_else(|| TuneError::Parse(format!("table: unknown persona {persona_key:?}")))?;
+        let nodes = u32_field(v, "table", "nodes")?;
+        let cores = u32_field(v, "table", "cores")?;
+        let lanes = u32_field(v, "table", "lanes")?;
+        if nodes == 0 || cores == 0 || lanes == 0 {
+            return Err(TuneError::Parse("table: degenerate cluster dimensions".into()));
+        }
+        let entries_v = v
+            .get("entries")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| TuneError::Parse("table: entries must be an array".into()))?;
+        let mut entries = Vec::with_capacity(entries_v.len());
+        for e in entries_v {
+            strict_obj(e, "entry", &["from", "alg", "k", "avg_us"])?;
+            let from = e
+                .get("from")
+                .and_then(Value::as_u64)
+                .ok_or_else(|| TuneError::Parse("entry: from must be a u64".into()))?;
+            let alg = str_field(e, "entry", "alg")?.to_string();
+            let k = u32_field(e, "entry", "k")?;
+            let avg_us = e
+                .get("avg_us")
+                .and_then(Value::as_f64)
+                .ok_or_else(|| TuneError::Parse("entry: avg_us must be a number".into()))?;
+            entries.push(Breakpoint { from, alg, k, avg_us });
+        }
+        let table =
+            DecisionTable { cluster: Cluster::new(nodes, cores, lanes), op, persona, entries };
+        table.validate()?;
+        Ok(table)
+    }
+}
+
+// ---- strict-object field helpers --------------------------------------
+
+/// Reject unknown and duplicate keys: both ends of the format are ours,
+/// so any surprise key is a bug or a corrupted file, not extensibility.
+fn strict_obj(v: &Value, what: &str, allowed: &[&str]) -> Result<(), TuneError> {
+    let items = v
+        .entries()
+        .ok_or_else(|| TuneError::Parse(format!("{what}: expected an object")))?;
+    for (i, (k, _)) in items.iter().enumerate() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(TuneError::Parse(format!("{what}: unknown key {k:?}")));
+        }
+        if items[..i].iter().any(|(prev, _)| prev == k) {
+            return Err(TuneError::Parse(format!("{what}: duplicate key {k:?}")));
+        }
+    }
+    Ok(())
+}
+
+fn str_field<'v>(v: &'v Value, what: &str, key: &str) -> Result<&'v str, TuneError> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .ok_or_else(|| TuneError::Parse(format!("{what}: {key} must be a string")))
+}
+
+fn u32_field(v: &Value, what: &str, key: &str) -> Result<u32, TuneError> {
+    v.get(key)
+        .and_then(Value::as_u64)
+        .and_then(|n| u32::try_from(n).ok())
+        .ok_or_else(|| TuneError::Parse(format!("{what}: {key} must be a u32")))
+}
+
+fn usize_field(v: &Value, what: &str, key: &str) -> Result<usize, TuneError> {
+    v.get(key)
+        .and_then(Value::as_u64)
+        .and_then(|n| usize::try_from(n).ok())
+        .ok_or_else(|| TuneError::Parse(format!("{what}: {key} must be a usize")))
+}
+
+// ---- the persisted book ------------------------------------------------
+
+/// A set of decision tables plus the [`TuneConfig`] they were built
+/// under — the `mlane tune` artifact. JSON is hand-rolled both ways
+/// (`to_json`/`parse`, strict round-trip) with no dependencies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuningBook {
+    pub tune: TuneConfig,
+    pub tables: Vec<DecisionTable>,
+}
+
+impl TuningBook {
+    /// The table covering (cluster, op, persona), if the book has one.
+    pub fn get(
+        &self,
+        cluster: Cluster,
+        op: OpKind,
+        persona: PersonaName,
+    ) -> Option<&DecisionTable> {
+        self.tables
+            .iter()
+            .find(|t| t.cluster == cluster && t.op == op && t.persona == persona)
+    }
+
+    /// Every table valid, and scenario keys unique (a duplicate would
+    /// make [`TuningBook::get`] order-dependent).
+    pub fn validate(&self) -> Result<(), TuneError> {
+        for (i, t) in self.tables.iter().enumerate() {
+            t.validate()?;
+            if self.tables[..i]
+                .iter()
+                .any(|p| p.cluster == t.cluster && p.op == t.op && p.persona == t.persona)
+            {
+                return Err(TuneError::Parse(format!("duplicate table for {}", t.label())));
+            }
+        }
+        Ok(())
+    }
+
+    /// The persisted format: one table object per line inside a
+    /// `tables` array (the `JsonSink` layout idiom).
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = write!(
+            out,
+            "{{\"version\":1,\"tune\":{{\"reps\":{},\"warmup\":{},\"seed\":{}}},\"tables\":[",
+            self.tune.reps, self.tune.warmup, self.tune.seed
+        );
+        for (i, t) in self.tables.iter().enumerate() {
+            out.push_str(if i == 0 { "\n" } else { ",\n" });
+            out.push_str(&t.json());
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+
+    /// Strict parse + validation of the persisted format. Re-serializing
+    /// the result is byte-identical to the input `to_json` produced
+    /// (`rust/tests/tuning_roundtrip.rs` pins this).
+    pub fn parse(s: &str) -> Result<TuningBook, TuneError> {
+        let v = json::parse(s).map_err(TuneError::Parse)?;
+        strict_obj(&v, "book", &["version", "tune", "tables"])?;
+        let version = u32_field(&v, "book", "version")?;
+        if version != 1 {
+            return Err(TuneError::Parse(format!("unsupported version {version}")));
+        }
+        let tune_v = v
+            .get("tune")
+            .ok_or_else(|| TuneError::Parse("book: missing tune".into()))?;
+        strict_obj(tune_v, "tune", &["reps", "warmup", "seed"])?;
+        let tune = TuneConfig {
+            reps: usize_field(tune_v, "tune", "reps")?,
+            warmup: usize_field(tune_v, "tune", "warmup")?,
+            seed: tune_v
+                .get("seed")
+                .and_then(Value::as_u64)
+                .ok_or_else(|| TuneError::Parse("tune: seed must be a u64".into()))?,
+        };
+        let tables_v = v
+            .get("tables")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| TuneError::Parse("book: tables must be an array".into()))?;
+        let tables = tables_v
+            .iter()
+            .map(DecisionTable::from_value)
+            .collect::<Result<Vec<_>, _>>()?;
+        let book = TuningBook { tune, tables };
+        book.validate()?;
+        Ok(book)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<TuningBook, TuneError> {
+        let path = path.as_ref();
+        let s = std::fs::read_to_string(path)
+            .map_err(|e| TuneError::Io(format!("read {}: {e}", path.display())))?;
+        TuningBook::parse(&s)
+    }
+
+    /// All tables as breakpoint listings.
+    pub fn text(&self) -> String {
+        let mut out = String::new();
+        for (i, t) in self.tables.iter().enumerate() {
+            if i > 0 {
+                out.push('\n');
+            }
+            out.push_str(&t.text());
+        }
+        out
+    }
+}
+
+// ---- tuning sweeps -----------------------------------------------------
+
+/// One tuning job: which (cluster, op, persona) to tune, over which
+/// counts, among which candidates.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub cluster: Cluster,
+    pub op: OpKind,
+    pub persona: PersonaName,
+    pub counts: Vec<u64>,
+    pub candidates: Vec<Alg>,
+}
+
+impl Scenario {
+    pub fn label(&self) -> String {
+        format!(
+            "{} on {}x{} (lanes={}) [{}]",
+            self.op,
+            self.cluster.nodes,
+            self.cluster.cores,
+            self.cluster.lanes,
+            self.persona.key()
+        )
+    }
+
+    /// The scenario for (cluster, op, persona) with the registry's
+    /// default candidate set and the paper's count grid — what the
+    /// `tuned` meta-algorithm auto-builds from.
+    pub fn default_for(cluster: Cluster, op: OpKind, persona: PersonaName) -> Scenario {
+        Scenario {
+            cluster,
+            op,
+            persona,
+            counts: default_counts(op).to_vec(),
+            candidates: registry().candidates(cluster, op),
+        }
+    }
+}
+
+/// Sweep one scenario and compress the per-count winners into a
+/// [`DecisionTable`]. Candidates that don't support the operation (and
+/// `tuned` itself — it would recurse) are filtered out; an empty
+/// remainder is a typed error, not a panic or an empty table.
+pub fn tune_scenario(
+    engine: &Arc<SweepEngine>,
+    sc: &Scenario,
+    cfg: &TuneConfig,
+) -> Result<DecisionTable, TuneError> {
+    let cands: Vec<Alg> = sc
+        .candidates
+        .iter()
+        .filter(|a| a.name() != "tuned" && a.supports(sc.op))
+        .cloned()
+        .collect();
+    if cands.is_empty() {
+        return Err(TuneError::NoCandidates { op: sc.op });
+    }
+    let mut counts = sc.counts.clone();
+    counts.sort_unstable();
+    counts.dedup();
+    if counts.is_empty() {
+        return Err(TuneError::EmptyCounts { scenario: sc.label() });
+    }
+    let mut coll = Collectives::with_engine(sc.cluster, sc.persona, engine.clone());
+    coll.reps = cfg.reps;
+    coll.warmup = cfg.warmup;
+    coll.seed = cfg.seed;
+    let winners = coll
+        .autotune_counts(sc.op.op(1), &counts, &cands)
+        .map_err(|source| TuneError::Alg { scenario: sc.label(), source })?;
+    let mut entries: Vec<Breakpoint> = Vec::new();
+    for w in winners {
+        let (alg, k) = (w.alg.name(), w.alg.k().unwrap_or(0));
+        let same = entries.last().is_some_and(|last| last.alg == alg && last.k == k);
+        if !same {
+            entries.push(Breakpoint {
+                from: w.c,
+                alg: alg.to_string(),
+                k,
+                avg_us: w.measurement.summary.avg,
+            });
+        }
+    }
+    Ok(DecisionTable { cluster: sc.cluster, op: sc.op, persona: sc.persona, entries })
+}
+
+/// Tune every scenario (in parallel over `threads` workers — scenarios
+/// are independent, so successful output is deterministic and ordered
+/// like the input) into one [`TuningBook`]. On failure the first
+/// recorded error (input order) is returned; remaining scenarios are
+/// abandoned early (as in `run_plan`, *which* failure surfaces may vary
+/// when several scenarios are broken, but whether the tune fails never
+/// does).
+pub fn tune_all(
+    engine: &Arc<SweepEngine>,
+    scenarios: &[Scenario],
+    cfg: &TuneConfig,
+    threads: usize,
+) -> Result<TuningBook, TuneError> {
+    let workers = threads.min(scenarios.len()).max(1);
+    let mut slots: Vec<Option<Result<DecisionTable, TuneError>>> =
+        scenarios.iter().map(|_| None).collect();
+    if workers <= 1 {
+        for (i, sc) in scenarios.iter().enumerate() {
+            let r = tune_scenario(engine, sc, cfg);
+            let is_err = r.is_err();
+            slots[i] = Some(r);
+            if is_err {
+                break;
+            }
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        // Mirror the serial early exit: once any scenario fails, workers
+        // stop picking up new ones instead of sweeping the rest of a
+        // (possibly Hydra-scale) grid just to discard it.
+        let failed = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut done = Vec::new();
+                        loop {
+                            if failed.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= scenarios.len() {
+                                break;
+                            }
+                            let r = tune_scenario(engine, &scenarios[i], cfg);
+                            if r.is_err() {
+                                failed.store(true, Ordering::Relaxed);
+                            }
+                            done.push((i, r));
+                        }
+                        done
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, r) in h.join().expect("tune worker panicked") {
+                    slots[i] = Some(r);
+                }
+            }
+        });
+    }
+    let mut tables = Vec::with_capacity(scenarios.len());
+    for slot in slots {
+        match slot {
+            Some(Ok(t)) => tables.push(t),
+            Some(Err(e)) => return Err(e),
+            None => {} // serial early exit; the error already surfaced
+        }
+    }
+    Ok(TuningBook { tune: *cfg, tables })
+}
+
+// ---- dispatch (the `tuned` meta-algorithm's brain) ---------------------
+
+fn installed_slot() -> &'static Mutex<Option<Arc<TuningBook>>> {
+    static SLOT: OnceLock<Mutex<Option<Arc<TuningBook>>>> = OnceLock::new();
+    SLOT.get_or_init(|| Mutex::new(None))
+}
+
+/// Install a book process-wide: [`dispatch`] consults it before falling
+/// back to auto-built tables (`mlane run --table <file>` wires this).
+pub fn install(book: TuningBook) -> Result<(), TuneError> {
+    book.validate()?;
+    *installed_slot().lock().unwrap() = Some(Arc::new(book));
+    Ok(())
+}
+
+/// The currently installed book, if any.
+pub fn installed() -> Option<Arc<TuningBook>> {
+    installed_slot().lock().unwrap().clone()
+}
+
+/// Remove the installed book (test hygiene; auto tables take over).
+pub fn clear_installed() {
+    *installed_slot().lock().unwrap() = None;
+}
+
+type AutoKey = (Cluster, OpKind, PersonaName);
+
+fn auto_cache() -> &'static Mutex<HashMap<AutoKey, Arc<DecisionTable>>> {
+    static CACHE: OnceLock<Mutex<HashMap<AutoKey, Arc<DecisionTable>>>> = OnceLock::new();
+    CACHE.get_or_init(Default::default)
+}
+
+/// The auto-built decision table for (cluster, persona, op): default
+/// registry candidates over the paper's count grid under
+/// [`TuneConfig::default`], computed once per process and cached.
+/// Concurrent first calls may duplicate the sweep; results are
+/// identical (deterministic tuning) and the first insert wins.
+pub fn auto_table(
+    cluster: Cluster,
+    persona: PersonaName,
+    op: OpKind,
+) -> Result<Arc<DecisionTable>, AlgError> {
+    let key = (cluster, op, persona);
+    if let Some(t) = auto_cache().lock().unwrap().get(&key) {
+        return Ok(t.clone());
+    }
+    // Compute outside the cache lock: a tuning sweep can be slow and
+    // must not serialize unrelated (cluster, op, persona) lookups.
+    let sc = Scenario::default_for(cluster, op, persona);
+    let table = tune_scenario(&shared_engine(), &sc, &TuneConfig::default())
+        .map_err(|e| e.into_alg_error(op))?;
+    let arc = Arc::new(table);
+    Ok(auto_cache().lock().unwrap().entry(key).or_insert(arc).clone())
+}
+
+/// Resolve (cluster, persona, op, count) to the winning algorithm: the
+/// installed book's table if one covers the scenario, else the cached
+/// auto-built table. This is the whole of the registry's `tuned`
+/// meta-algorithm.
+pub fn dispatch(
+    cluster: Cluster,
+    persona: PersonaName,
+    op: OpKind,
+    c: u64,
+) -> Result<Alg, AlgError> {
+    if let Some(book) = installed() {
+        if let Some(t) = book.get(cluster, op, persona) {
+            return t.resolve(c);
+        }
+    }
+    auto_table(cluster, persona, op)?.resolve(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Cluster {
+        Cluster::new(2, 4, 2)
+    }
+
+    fn fast() -> TuneConfig {
+        TuneConfig { reps: 2, warmup: 0, seed: 7 }
+    }
+
+    fn scenario(op: OpKind, counts: &[u64]) -> Scenario {
+        Scenario {
+            cluster: tiny(),
+            op,
+            persona: PersonaName::OpenMpi,
+            counts: counts.to_vec(),
+            candidates: registry().candidates(tiny(), op),
+        }
+    }
+
+    #[test]
+    fn tune_scenario_compresses_winners_into_breakpoints() {
+        let eng = Arc::new(SweepEngine::new());
+        let sc = scenario(OpKind::Bcast, &[1, 64, 6000, 600_000]);
+        let t = tune_scenario(&eng, &sc, &fast()).unwrap();
+        t.validate().unwrap();
+        assert_eq!(t.entries[0].from, 1);
+        assert!(t.entries.len() <= 4);
+        // Every breakpoint opens at a sampled count.
+        for b in &t.entries {
+            assert!(sc.counts.contains(&b.from), "{}", b.from);
+        }
+    }
+
+    #[test]
+    fn tuning_is_deterministic() {
+        let sc = scenario(OpKind::Alltoall, &[1, 9, 869]);
+        let a = tune_scenario(&Arc::new(SweepEngine::new()), &sc, &fast()).unwrap();
+        let b = tune_scenario(&Arc::new(SweepEngine::new()), &sc, &fast()).unwrap();
+        assert_eq!(a, b);
+        // And identical through a shared warm engine (recost path).
+        let eng = Arc::new(SweepEngine::new());
+        let c = tune_scenario(&eng, &sc, &fast()).unwrap();
+        let d = tune_scenario(&eng, &sc, &fast()).unwrap();
+        assert_eq!(c, d);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn pick_is_total_and_breakpoint_aligned() {
+        let t = DecisionTable {
+            cluster: tiny(),
+            op: OpKind::Bcast,
+            persona: PersonaName::OpenMpi,
+            entries: vec![
+                Breakpoint { from: 1, alg: "binomial".into(), k: 0, avg_us: 1.0 },
+                Breakpoint { from: 600, alg: "klane".into(), k: 2, avg_us: 2.0 },
+                Breakpoint { from: 60_000, alg: "fulllane".into(), k: 0, avg_us: 3.0 },
+            ],
+        };
+        t.validate().unwrap();
+        assert_eq!(t.pick(0).alg, "binomial"); // saturates below
+        assert_eq!(t.pick(1).alg, "binomial");
+        assert_eq!(t.pick(599).alg, "binomial");
+        assert_eq!(t.pick(600).alg, "klane");
+        assert_eq!(t.pick(59_999).alg, "klane");
+        assert_eq!(t.pick(60_000).alg, "fulllane");
+        assert_eq!(t.pick(u64::MAX).alg, "fulllane");
+        assert_eq!(t.resolve(600).unwrap().label(), "2-lane");
+    }
+
+    #[test]
+    fn validate_rejects_broken_tables() {
+        let mk = |entries: Vec<Breakpoint>| DecisionTable {
+            cluster: tiny(),
+            op: OpKind::Bcast,
+            persona: PersonaName::OpenMpi,
+            entries,
+        };
+        let bp = |from: u64, alg: &str, k: u32| Breakpoint {
+            from,
+            alg: alg.into(),
+            k,
+            avg_us: 1.0,
+        };
+        assert!(mk(vec![]).validate().is_err(), "empty");
+        assert!(
+            mk(vec![bp(5, "fulllane", 0), bp(5, "binomial", 0)]).validate().is_err(),
+            "not strictly ascending"
+        );
+        assert!(
+            mk(vec![bp(1, "fulllane", 0), bp(9, "fulllane", 0)]).validate().is_err(),
+            "adjacent duplicate"
+        );
+        assert!(mk(vec![bp(1, "tuned", 0)]).validate().is_err(), "self-reference");
+        assert!(mk(vec![bp(1, "nosuch", 0)]).validate().is_err(), "unknown alg");
+        assert!(mk(vec![bp(1, "klane", 0)]).validate().is_err(), "k=0 on parameterized");
+    }
+
+    #[test]
+    fn empty_candidates_and_counts_are_typed_errors() {
+        let eng = Arc::new(SweepEngine::new());
+        let mut sc = scenario(OpKind::Bcast, &[1]);
+        sc.candidates = vec![registry().resolve("ring", 0).unwrap()]; // no bcast
+        let err = tune_scenario(&eng, &sc, &fast()).unwrap_err();
+        assert!(matches!(err, TuneError::NoCandidates { op: OpKind::Bcast }), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("no tuning candidates support bcast"), "{msg}");
+        // The supporter list must not send the user in a circle by
+        // suggesting `tuned` itself.
+        assert!(!msg.contains("tuned"), "{msg}");
+
+        let sc = scenario(OpKind::Bcast, &[]);
+        let err = tune_scenario(&eng, &sc, &fast()).unwrap_err();
+        assert!(matches!(err, TuneError::EmptyCounts { .. }), "{err}");
+    }
+
+    #[test]
+    fn book_json_round_trips_through_the_library_parser() {
+        let eng = Arc::new(SweepEngine::new());
+        let scs =
+            [scenario(OpKind::Bcast, &[1, 64, 6000]), scenario(OpKind::Scatter, &[1, 16, 869])];
+        let book = tune_all(&eng, &scs, &fast(), 2).unwrap();
+        assert_eq!(book.tables.len(), 2);
+        let json = book.to_json();
+        let parsed = TuningBook::parse(&json).unwrap();
+        assert_eq!(parsed, book);
+        assert_eq!(parsed.to_json(), json, "re-serialization must be byte-identical");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_books() {
+        let tune = "\"tune\":{\"reps\":1,\"warmup\":0,\"seed\":1}";
+        let self_table = concat!(
+            "{\"op\":\"bcast\",\"persona\":\"openmpi\",\"nodes\":2,\"cores\":4,",
+            "\"lanes\":2,\"entries\":[{\"from\":1,\"alg\":\"tuned\",\"k\":0,",
+            "\"avg_us\":1}]}"
+        );
+        for (what, s) in [
+            ("version", format!("{{\"version\":2,{tune},\"tables\":[]}}")),
+            ("unknown key", format!("{{\"version\":1,\"extra\":0,{tune},\"tables\":[]}}")),
+            ("missing tune", "{\"version\":1,\"tables\":[]}".to_string()),
+            ("trailing", format!("{{\"version\":1,{tune},\"tables\":[]}} x")),
+            (
+                "tuned self-dispatch",
+                format!("{{\"version\":1,{tune},\"tables\":[\n{self_table}\n]}}"),
+            ),
+        ] {
+            assert!(TuningBook::parse(&s).is_err(), "{what} should fail");
+        }
+    }
+
+    #[test]
+    fn duplicate_scenarios_rejected_at_book_level() {
+        let eng = Arc::new(SweepEngine::new());
+        let sc = scenario(OpKind::Bcast, &[1, 64]);
+        let t = tune_scenario(&eng, &sc, &fast()).unwrap();
+        let book = TuningBook { tune: fast(), tables: vec![t.clone(), t] };
+        let err = book.validate().unwrap_err();
+        assert!(err.to_string().contains("duplicate table"), "{err}");
+        assert!(install(book).is_err());
+    }
+
+    #[test]
+    fn dispatch_prefers_the_installed_book() {
+        // An installed table that always says "binomial" must override
+        // the auto table for its scenario — and only for its scenario.
+        let cl = Cluster::new(3, 4, 2);
+        let table = DecisionTable {
+            cluster: cl,
+            op: OpKind::Bcast,
+            persona: PersonaName::Mpich,
+            entries: vec![Breakpoint { from: 1, alg: "binomial".into(), k: 0, avg_us: 1.0 }],
+        };
+        install(TuningBook { tune: TuneConfig::default(), tables: vec![table] }).unwrap();
+        let picked = dispatch(cl, PersonaName::Mpich, OpKind::Bcast, 1_000_000).unwrap();
+        clear_installed();
+        assert_eq!(picked.name(), "binomial");
+        // Uncovered scenario falls through to the auto table.
+        let auto = dispatch(cl, PersonaName::Mpich, OpKind::Scatter, 16).unwrap();
+        assert_ne!(auto.name(), "tuned");
+    }
+}

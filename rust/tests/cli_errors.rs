@@ -97,15 +97,25 @@ fn help_and_algs_are_registry_driven() {
     let text = stdout(&help);
     // Doc-drift guards: all five ops, the trace command, the catalog,
     // the sweep command and its presets.
-    for needle in
-        ["gather", "allgather", "trace", "klane2p", "all 48 tables (2..49)", "sweep", "appendix"]
-    {
+    for needle in [
+        "gather",
+        "allgather",
+        "trace",
+        "klane2p",
+        "all 48 tables (2..49)",
+        "sweep",
+        "appendix",
+        "tune",
+        "decision tables",
+        "tuned",
+    ] {
         assert!(text.contains(needle), "help missing {needle:?}: {text}");
     }
 
     let algs = mlane(&["algs"]);
     assert_eq!(algs.status.code(), Some(0));
     assert!(stdout(&algs).contains("klane2p"), "{}", stdout(&algs));
+    assert!(stdout(&algs).contains("tuned"), "{}", stdout(&algs));
 }
 
 #[test]
@@ -180,6 +190,124 @@ fn sweep_emits_valid_json_for_a_user_grid() {
     assert!(s.contains("\"alg\":\"klane2p\""), "{s}");
     assert!(s.contains("\"counts\":[1,64]"), "{s}");
     assert!(s.contains("\"rows\":["), "{s}");
+}
+
+#[test]
+fn tune_preset_conflicts_and_unknowns_are_clean_errors() {
+    // A preset IS the grid, for tune exactly as for sweep.
+    let out = mlane(&["tune", "--preset", "appendix", "--counts", "1,64"]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("--preset defines the whole grid"), "{err}");
+    assert!(err.contains("drop --counts"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+
+    let out = mlane(&["tune", "--preset", "nosuch"]);
+    assert_eq!(out.status.code(), Some(1));
+    let err = stderr(&out);
+    assert!(err.contains("unknown preset nosuch"), "{err}");
+    assert!(err.contains("tuned"), "should list the tuned preset: {err}");
+
+    let out = mlane(&[
+        "tune", "--persona", "nosuch", "--op", "bcast", "--counts", "1", "--nodes", "2",
+        "--cores", "2",
+    ]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("unknown persona nosuch"), "{}", stderr(&out));
+}
+
+#[test]
+fn tune_empty_candidate_set_is_a_typed_error() {
+    // ring implements only allgather: tuning bcast over it leaves zero
+    // candidates — a typed message, not a panic or an empty table.
+    let out = mlane(&[
+        "tune", "--op", "bcast", "--alg", "ring", "--counts", "1,64", "--nodes", "2",
+        "--cores", "2", "--reps", "1",
+    ]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("no tuning candidates support bcast"), "{err}");
+    assert!(err.contains("kported"), "should list registry supporters: {err}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+#[test]
+fn tune_unwritable_out_is_a_clean_error() {
+    let out = mlane(&[
+        "tune", "--op", "bcast", "--counts", "1", "--nodes", "2", "--cores", "2",
+        "--reps", "1", "--out", "/nonexistent-mlane-dir/sub/tables.json",
+    ]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("write decision tables"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+#[test]
+fn tune_emits_a_decision_table_and_tuned_runs_from_it() {
+    // The acceptance path end to end: `mlane tune --op bcast` writes a
+    // JSON decision-table book; `mlane run --alg tuned --table FILE`
+    // dispatches from it.
+    let path = std::env::temp_dir().join("mlane_cli_tune_book.json");
+    let path = path.to_str().unwrap();
+    let out = mlane(&[
+        "tune", "--op", "bcast", "--nodes", "2", "--cores", "4", "--lanes", "2",
+        "--counts", "1,64,6000,600000", "--reps", "2", "--format", "json", "--out", path,
+    ]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.starts_with("{\"version\":1,"), "{s}");
+    assert!(s.contains("\"tables\":["), "{s}");
+    assert!(s.contains("\"op\":\"bcast\""), "{s}");
+    assert!(s.contains("\"entries\":[{\"from\":1,"), "{s}");
+
+    let out = mlane(&[
+        "run", "--op", "bcast", "--alg", "tuned", "--nodes", "2", "--cores", "4",
+        "--lanes", "2", "--c", "64", "--table", path,
+    ]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    // The dispatched (concrete) schedule ran, not a meta artifact.
+    assert!(stdout(&out).contains("bcast "), "stdout: {}", stdout(&out));
+
+    // A book that does not cover the requested scenario must be an
+    // error, not a silent fall-back to an auto-built table.
+    let out = mlane(&[
+        "run", "--op", "bcast", "--alg", "tuned", "--nodes", "3", "--cores", "4",
+        "--lanes", "2", "--c", "64", "--table", path,
+    ]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("no decision table for bcast on 3x4"), "{err}");
+    assert!(err.contains("tables cover:"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+
+    // A corrupt artifact is a typed load error.
+    let bad = std::env::temp_dir().join("mlane_cli_tune_bad.json");
+    std::fs::write(&bad, "{\"version\":1").unwrap();
+    let out = mlane(&[
+        "run", "--op", "bcast", "--alg", "tuned", "--table", bad.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(!stderr(&out).contains("panicked"), "{}", stderr(&out));
+}
+
+#[test]
+fn tuned_reachable_from_cli_without_a_table_file() {
+    // Auto-built decision tables: `--alg tuned` needs no artifact.
+    let out = mlane(&[
+        "run", "--op", "scatter", "--alg", "tuned", "--nodes", "2", "--cores", "4",
+        "--c", "16",
+    ]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    assert!(stdout(&out).contains("scatter "), "stdout: {}", stdout(&out));
+
+    // And the tuned sweep preset resolves and lists (not run: Hydra).
+    let out = mlane(&["sweep", "--preset", "tuned", "--list"]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.contains("table 53"), "{s}");
+    assert!(s.contains("tuned selection"), "{s}");
+    assert!(s.contains("MPI_Bcast"), "{s}");
 }
 
 #[test]

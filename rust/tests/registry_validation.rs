@@ -11,6 +11,7 @@ use mlane::algorithms::registry::{registry, OpKind};
 use mlane::model::{Persona, PersonaName};
 use mlane::schedule::validate::{validate, validate_ports};
 use mlane::topology::Cluster;
+use mlane::tuning;
 
 /// Small, structure-exercising counts (uneven splits included via the
 /// 3×5 cluster below).
@@ -43,14 +44,28 @@ fn every_registered_algorithm_validates_on_every_supported_op() {
                     );
                     continue;
                 }
+                let c = count_for(op);
                 let built = alg
-                    .build(cl, &persona, op.op(count_for(op)))
+                    .build(cl, &persona, op.op(c))
                     .unwrap_or_else(|e| panic!("{} {op} on {cl:?}: {e}", alg.label()));
                 let s = &built.schedule;
                 validate(s).unwrap_or_else(|v| {
                     panic!("{} {op} on {cl:?}: invalid: {v}", s.algorithm)
                 });
-                validate_ports(s, alg.ports_required(cl, op)).unwrap_or_else(|v| {
+                // `tuned` is a meta-entry: what it built is the schedule
+                // of whatever its decision table dispatched to, so the
+                // port budget to verify is the *dispatched* algorithm's
+                // own, not the meta budget (max over candidates) — a
+                // 1-ported winner must still fit 1 port.
+                let ports = if alg.name() == "tuned" {
+                    let d = tuning::dispatch(cl, PersonaName::OpenMpi, op, c)
+                        .unwrap_or_else(|e| panic!("tuned {op} on {cl:?}: {e}"));
+                    assert_ne!(d.name(), "tuned", "self-dispatch");
+                    d.ports_required(cl, op)
+                } else {
+                    alg.ports_required(cl, op)
+                };
+                validate_ports(s, ports).unwrap_or_else(|v| {
                     panic!("{} {op} on {cl:?}: ports: {v}", s.algorithm)
                 });
                 checked += 1;
@@ -77,6 +92,42 @@ fn native_schedules_validate_for_every_persona() {
                 validate(&built.schedule).unwrap_or_else(|v| {
                     panic!("{:?} native {op} c={c}: {v}", name)
                 });
+            }
+        }
+    }
+}
+
+#[test]
+fn tuned_dispatch_is_validated_for_every_persona() {
+    // The dispatched schedule (not the meta-entry) must hold the full
+    // invariants under every persona — native winners included, whose
+    // selection varies by persona and count.
+    let cl = Cluster::new(3, 4, 2);
+    let tuned = registry().resolve("tuned", 0).unwrap();
+    for name in PersonaName::all() {
+        let persona = Persona::get(name);
+        for op in OpKind::ALL {
+            for c in [1u64, 64, 100_000] {
+                let built = tuned
+                    .build(cl, &persona, op.op(c))
+                    .unwrap_or_else(|e| panic!("tuned {op} c={c} [{name:?}]: {e}"));
+                validate(&built.schedule).unwrap_or_else(|v| {
+                    panic!("{:?} tuned {op} c={c}: {v}", name)
+                });
+                let d = tuning::dispatch(cl, name, op, c)
+                    .unwrap_or_else(|e| panic!("dispatch {op} c={c} [{name:?}]: {e}"));
+                // What tuned built really is the dispatched algorithm's
+                // schedule (same deterministic table on both paths).
+                let direct = d
+                    .build(cl, &persona, op.op(c))
+                    .unwrap_or_else(|e| panic!("{} {op} c={c}: {e}", d.label()));
+                assert_eq!(
+                    built.schedule.algorithm, direct.schedule.algorithm,
+                    "{name:?} {op} c={c}"
+                );
+                validate_ports(&built.schedule, d.ports_required(cl, op)).unwrap_or_else(
+                    |v| panic!("{:?} tuned {op} c={c}: ports: {v}", name),
+                );
             }
         }
     }

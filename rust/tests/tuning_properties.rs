@@ -1,0 +1,168 @@
+//! Property tests for the tuning subsystem (via `util::prop::check` —
+//! proptest is unavailable offline):
+//!
+//! 1. Every `DecisionTable` built from random clusters/ops/personas
+//!    covers the full count domain through `pick` with sorted,
+//!    deduplicated breakpoints, each anchored at a sampled count;
+//! 2. `tuned` dispatch equals the argmin of its candidates' modeled
+//!    cost (simulated average under the fixed `TuneConfig`) at every
+//!    sampled count — and therefore costs no more than *any* fixed
+//!    registry candidate there.
+
+use std::sync::Arc;
+
+use mlane::algorithms::registry::{registry, OpKind};
+use mlane::coordinator::Collectives;
+use mlane::harness;
+use mlane::model::PersonaName;
+use mlane::sim::SweepEngine;
+use mlane::tuning::{self, Scenario, TuneConfig};
+use mlane::util::prop::{check, Gen};
+
+/// Count pool spanning the paper's grids (eager/rendezvous boundaries,
+/// uneven splits).
+const COUNT_POOL: &[u64] = &[1, 2, 6, 9, 53, 64, 87, 521, 869, 1000, 6000, 60_000];
+
+fn fast() -> TuneConfig {
+    TuneConfig { reps: 2, warmup: 0, seed: 0xC0FFEE }
+}
+
+fn random_scenario(g: &mut Gen) -> Scenario {
+    // Same cluster envelope the exhaustive validation sweeps (multi-node,
+    // multi-core, 1–2 lanes), including uneven core counts.
+    let cluster = mlane::topology::Cluster::new(
+        g.usize_in(2, 3) as u32,
+        g.usize_in(2, 5) as u32,
+        g.usize_in(1, 2) as u32,
+    );
+    let op = *g.choose(&OpKind::ALL);
+    let persona = *g.choose(&PersonaName::all());
+    let counts: Vec<u64> = (0..g.usize_in(1, 6)).map(|_| *g.choose(COUNT_POOL)).collect();
+    Scenario {
+        cluster,
+        op,
+        persona,
+        counts,
+        candidates: registry().candidates(cluster, op),
+    }
+}
+
+#[test]
+fn decision_tables_cover_the_domain_with_sorted_dedup_breakpoints() {
+    let engine = Arc::new(SweepEngine::new());
+    check("decision-table structure", 12, |g| {
+        let sc = random_scenario(g);
+        let mut sampled = sc.counts.clone();
+        sampled.sort_unstable();
+        sampled.dedup();
+        let t = tuning::tune_scenario(&engine, &sc, &fast())
+            .unwrap_or_else(|e| panic!("{}: {e}", sc.label()));
+        t.validate().unwrap_or_else(|e| panic!("{}: {e}", sc.label()));
+        assert!(!t.entries.is_empty());
+        // Sorted strictly ascending, adjacent entries dispatch
+        // differently (deduplicated compression).
+        for w in t.entries.windows(2) {
+            assert!(w[0].from < w[1].from, "unsorted: {} then {}", w[0].from, w[1].from);
+            assert!(
+                w[0].alg != w[1].alg || w[0].k != w[1].k,
+                "adjacent duplicate {} at {} and {}",
+                w[0].alg,
+                w[0].from,
+                w[1].from
+            );
+        }
+        // Anchored at the smallest sampled count; every breakpoint
+        // opens at a sampled count.
+        assert_eq!(t.entries[0].from, sampled[0]);
+        for b in &t.entries {
+            assert!(sampled.contains(&b.from), "breakpoint {} not sampled", b.from);
+        }
+        // Full-domain coverage: pick/resolve are total (below the first
+        // breakpoint, between samples, and beyond the last).
+        for c in [0u64, 1, 5, sampled[0], 1_000_000, u64::MAX] {
+            let b = t.pick(c);
+            assert!(b.from <= c.max(t.entries[0].from), "pick({c}) -> from={}", b.from);
+            t.resolve(c).unwrap_or_else(|e| panic!("resolve({c}): {e}"));
+        }
+    });
+}
+
+#[test]
+fn tuned_dispatch_is_the_argmin_of_modeled_cost() {
+    // A fixed small cluster so the auto tables (built once per
+    // (cluster, op, persona) under TuneConfig::default) are shared
+    // across cases; ops, personas and sampled counts vary randomly.
+    let cluster = mlane::topology::Cluster::new(2, 4, 2);
+    let cfg = TuneConfig::default();
+    check("tuned dispatch argmin", 8, |g| {
+        let op = *g.choose(&OpKind::ALL);
+        let persona = *g.choose(&PersonaName::all());
+        let c = *g.choose(harness::default_counts(op));
+        let picked = tuning::dispatch(cluster, persona, op, c).unwrap();
+        assert_ne!(picked.name(), "tuned", "self-dispatch");
+
+        // Recompute the winner independently under the same TuneConfig.
+        let mut coll = Collectives::new(cluster, persona);
+        coll.reps = cfg.reps;
+        coll.warmup = cfg.warmup;
+        coll.seed = cfg.seed;
+        let cands = registry().candidates(cluster, op);
+        let costs: Vec<f64> = cands
+            .iter()
+            .map(|a| coll.run(op.op(c), a).unwrap().summary.avg)
+            .collect();
+        let tuned_cost = coll.run(op.op(c), &picked).unwrap().summary.avg;
+        // tuned's modeled cost <= every fixed candidate's cost at c.
+        for (a, &cost) in cands.iter().zip(&costs) {
+            assert!(
+                tuned_cost <= cost,
+                "{op} c={c} [{persona:?}]: tuned picked {} ({tuned_cost}us) but {} costs {cost}us",
+                picked.label(),
+                a.label()
+            );
+        }
+        // And it is exactly the first argmin (ties keep candidate order).
+        let best = costs.iter().copied().fold(f64::INFINITY, f64::min);
+        let first = cands
+            .iter()
+            .zip(&costs)
+            .find(|(_, &cost)| cost == best)
+            .expect("non-empty candidate set")
+            .0;
+        assert_eq!(
+            (picked.name(), picked.k()),
+            (first.name(), first.k()),
+            "{op} c={c} [{persona:?}]"
+        );
+    });
+}
+
+#[test]
+fn every_breakpoint_is_optimal_at_its_own_count() {
+    // The acceptance property, stated directly on the auto tables: at
+    // every breakpoint count, the table's winner costs no more than any
+    // fixed registry candidate under the same TuneConfig.
+    let cluster = mlane::topology::Cluster::new(2, 4, 2);
+    let cfg = TuneConfig::default();
+    for op in OpKind::ALL {
+        let table = tuning::auto_table(cluster, PersonaName::OpenMpi, op).unwrap();
+        let mut coll = Collectives::new(cluster, PersonaName::OpenMpi);
+        coll.reps = cfg.reps;
+        coll.warmup = cfg.warmup;
+        coll.seed = cfg.seed;
+        for b in &table.entries {
+            let winner = table.resolve(b.from).unwrap();
+            let winner_cost = coll.run(op.op(b.from), &winner).unwrap().summary.avg;
+            for cand in registry().candidates(cluster, op) {
+                let cost = coll.run(op.op(b.from), &cand).unwrap().summary.avg;
+                assert!(
+                    winner_cost <= cost,
+                    "{op} breakpoint {}: {} ({winner_cost}us) beaten by {} ({cost}us)",
+                    b.from,
+                    winner.label(),
+                    cand.label()
+                );
+            }
+        }
+    }
+}

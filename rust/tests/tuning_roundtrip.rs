@@ -1,0 +1,148 @@
+//! Decision-table persistence round trip: serialize a `TuningBook` to
+//! JSON, re-parse it with the strict mini-parser promoted out of
+//! `plan_report.rs` (`tests/common` — an implementation *independent*
+//! of the library's reader), rebuild the book from the parsed document,
+//! and assert the re-serialization is byte-identical. The library's own
+//! strict parser must agree, and malformed artifacts must fail with
+//! typed errors.
+
+use std::sync::Arc;
+
+use mlane::algorithms::registry::{registry, OpKind};
+use mlane::model::PersonaName;
+use mlane::sim::SweepEngine;
+use mlane::topology::Cluster;
+use mlane::tuning::{
+    self, Breakpoint, DecisionTable, Scenario, TuneConfig, TuningBook,
+};
+
+mod common;
+use common::{parse_json, Json};
+
+fn tiny() -> Cluster {
+    Cluster::new(2, 4, 2)
+}
+
+fn fast() -> TuneConfig {
+    TuneConfig { reps: 2, warmup: 0, seed: 11 }
+}
+
+fn sample_book() -> TuningBook {
+    let engine = Arc::new(SweepEngine::new());
+    let scenarios: Vec<Scenario> = [OpKind::Bcast, OpKind::Scatter, OpKind::Alltoall]
+        .into_iter()
+        .map(|op| Scenario {
+            cluster: tiny(),
+            op,
+            persona: PersonaName::OpenMpi,
+            counts: vec![1, 64, 869, 6000, 600_000],
+            candidates: registry().candidates(tiny(), op),
+        })
+        .collect();
+    tuning::tune_all(&engine, &scenarios, &fast(), 2).expect("tiny scenarios tune")
+}
+
+/// Rebuild a book from the *independently parsed* document — the
+/// inverse mapping written against the parsed JSON, not the library
+/// structs, so a writer/reader disagreement cannot cancel out.
+fn book_from_json(doc: &Json) -> TuningBook {
+    assert_eq!(doc.get("version").unwrap().num() as u32, 1);
+    let tune_v = doc.get("tune").unwrap();
+    let tune = TuneConfig {
+        reps: tune_v.get("reps").unwrap().num() as usize,
+        warmup: tune_v.get("warmup").unwrap().num() as usize,
+        seed: tune_v.get("seed").unwrap().num() as u64,
+    };
+    let tables = doc
+        .get("tables")
+        .unwrap()
+        .arr()
+        .iter()
+        .map(|t| DecisionTable {
+            cluster: Cluster::new(
+                t.get("nodes").unwrap().num() as u32,
+                t.get("cores").unwrap().num() as u32,
+                t.get("lanes").unwrap().num() as u32,
+            ),
+            op: OpKind::parse(t.get("op").unwrap().string()).expect("known op"),
+            persona: PersonaName::parse(t.get("persona").unwrap().string())
+                .expect("known persona"),
+            entries: t
+                .get("entries")
+                .unwrap()
+                .arr()
+                .iter()
+                .map(|e| Breakpoint {
+                    from: e.get("from").unwrap().num() as u64,
+                    alg: e.get("alg").unwrap().string().to_string(),
+                    k: e.get("k").unwrap().num() as u32,
+                    avg_us: e.get("avg_us").unwrap().num(),
+                })
+                .collect(),
+        })
+        .collect();
+    TuningBook { tune, tables }
+}
+
+#[test]
+fn reserialization_is_byte_identical() {
+    let book = sample_book();
+    let json = book.to_json();
+
+    // Independent parse (the promoted mini-parser) -> rebuild -> emit.
+    let doc = parse_json(&json).unwrap_or_else(|e| panic!("invalid JSON ({e}):\n{json}"));
+    let rebuilt = book_from_json(&doc);
+    assert_eq!(rebuilt, book);
+    assert_eq!(rebuilt.to_json(), json, "re-serialization must be byte-identical");
+
+    // The library's strict parser agrees byte-for-byte too.
+    let lib = TuningBook::parse(&json).expect("library parser accepts its own writer");
+    assert_eq!(lib, book);
+    assert_eq!(lib.to_json(), json);
+}
+
+#[test]
+fn save_load_round_trips_through_disk() {
+    let book = sample_book();
+    let path = std::env::temp_dir().join("mlane_tuning_roundtrip.json");
+    book.save(&path).unwrap();
+    let loaded = TuningBook::load(&path).unwrap();
+    assert_eq!(loaded, book);
+    assert_eq!(loaded.to_json(), book.to_json());
+}
+
+#[test]
+fn breakpoint_semantics_survive_the_round_trip() {
+    let book = sample_book();
+    let loaded = TuningBook::parse(&book.to_json()).unwrap();
+    for (orig, re) in book.tables.iter().zip(&loaded.tables) {
+        // Dispatch decisions are identical at, between, and beyond the
+        // sampled breakpoints.
+        for c in [0u64, 1, 2, 64, 500, 869, 6000, 1_000_000, u64::MAX] {
+            assert_eq!(orig.pick(c), re.pick(c), "{} c={c}", orig.label());
+            assert_eq!(
+                orig.resolve(c).unwrap().label(),
+                re.resolve(c).unwrap().label(),
+                "{} c={c}",
+                orig.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn malformed_artifacts_fail_typed() {
+    let book = sample_book();
+    let json = book.to_json();
+
+    // Truncation, trailing garbage, and a corrupted alg name must all
+    // be errors — never panics, never silently-empty books.
+    assert!(TuningBook::parse(&json[..json.len() / 2]).is_err());
+    assert!(TuningBook::parse(&format!("{json}garbage")).is_err());
+    let corrupted = json.replace("\"alg\":\"", "\"alg\":\"zz");
+    assert!(TuningBook::parse(&corrupted).is_err(), "unknown algorithm must be rejected");
+
+    let missing = TuningBook::load(std::env::temp_dir().join("mlane_nonexistent_book.json"));
+    let err = missing.unwrap_err();
+    assert!(err.to_string().contains("read "), "{err}");
+}
