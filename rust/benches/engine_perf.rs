@@ -8,9 +8,11 @@
 
 use std::time::Instant;
 
-use mlane::algorithms::{alltoall, bcast};
+use mlane::algorithms::{alltoall, bcast, registry};
 use mlane::exec::ExecRuntime;
-use mlane::harness::BCAST_COUNTS;
+use mlane::harness::{
+    merge_dir, run_plan_with, write_shard, Grid, Merged, Plan, RunConfig, BCAST_COUNTS,
+};
 use mlane::model::{CostModel, PersonaName};
 use mlane::runtime::XlaService;
 use mlane::sim::{self, AlgId, OpShape, Simulator, SweepEngine, SweepKey};
@@ -68,7 +70,8 @@ fn main() {
 
     let sweep = bench_sweep(cl);
     let tune = bench_tune(cl);
-    write_bench_json(events_per_s, &sweep, &tune);
+    let shard = bench_shard_merge();
+    write_bench_json(events_per_s, &sweep, &tune, &shard);
 
     println!("\n=== exec backend (4x4, klane alltoall c=1024) ===");
     let cl = Cluster::new(4, 4, 2);
@@ -84,7 +87,8 @@ fn main() {
     );
 
     if std::path::Path::new("artifacts/manifest.txt").exists() {
-        let rt = ExecRuntime::with_xla(XlaService::start(std::path::Path::new("artifacts")).unwrap());
+        let svc = XlaService::start(std::path::Path::new("artifacts")).unwrap();
+        let rt = ExecRuntime::with_xla(svc);
         let rep = rt.run(&s, 10, 2).expect("exec xla");
         println!(
             "xla phases: avg={:.1}us min={:.1}us  (xla_phases={})",
@@ -246,8 +250,75 @@ fn bench_tune(cl: Cluster) -> TuneBench {
     TuneBench { tune_s, breakpoints: table.entries.len() }
 }
 
+struct ShardBench {
+    shards: u32,
+    rows: usize,
+    write_s: f64,
+    merge_s: f64,
+}
+
+/// Multi-process sharding overhead: write a 3-shard artifact set for a
+/// moderate plan and merge it back — the per-coordinator cost a
+/// distributed `mlane tables` run adds on top of the simulation itself
+/// (the simulation is benchmarked above; here we time only the
+/// artifact path, which must stay negligible next to one table sweep).
+fn bench_shard_merge() -> ShardBench {
+    println!("\n=== shard artifacts: 3-shard write + merge (small bcast plan) ===");
+    let grid = Grid::new()
+        .cluster(Cluster::new(3, 4, 2))
+        .op(OpKind::Bcast)
+        .algs((1..=3).map(registry::klane).chain([registry::native()]))
+        .counts(&[1, 600, 6000, 60_000]);
+    let plan = Plan::new()
+        .table(1, "shard bench", PersonaName::OpenMpi, &grid)
+        .table(2, "shard bench b", PersonaName::Mpich, &grid);
+    let cfg = RunConfig::default().reps(2).warmup(0).threads(2);
+    let shards = 3u32;
+    let dir = std::env::temp_dir().join("mlane_bench_shards");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("bench temp dir");
+
+    let reports: Vec<_> = (0..shards)
+        .map(|i| {
+            let engine = std::sync::Arc::new(SweepEngine::new());
+            run_plan_with(&engine, &plan.shard(shards, i), &cfg).expect("shard runs")
+        })
+        .collect();
+    let t0 = Instant::now();
+    for (i, report) in reports.iter().enumerate() {
+        write_shard(
+            dir.join(format!("shard_{i}.json")),
+            &plan,
+            &cfg,
+            shards,
+            i as u32,
+            report,
+        )
+        .expect("shard writes");
+    }
+    let write_s = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let merged = match merge_dir(&dir).expect("shards merge") {
+        Merged::Report(r) => r,
+        Merged::Book(_) => unreachable!("plan shards"),
+    };
+    let merge_s = t0.elapsed().as_secs_f64();
+    let rows: usize = merged.tables.iter().map(|t| t.rows.len()).sum();
+    // The distributed contract, kept honest in the bench too.
+    let single = run_plan_with(&std::sync::Arc::new(SweepEngine::new()), &plan, &cfg)
+        .expect("single run");
+    assert_eq!(merged.text(), single.text(), "merge must equal the single-process run");
+    println!(
+        "wrote {shards} shards in {:.2?}, merged {rows} rows in {:.2?}",
+        std::time::Duration::from_secs_f64(write_s),
+        std::time::Duration::from_secs_f64(merge_s)
+    );
+    ShardBench { shards, rows, write_s, merge_s }
+}
+
 /// Machine-readable perf record for trajectory tracking across PRs.
-fn write_bench_json(events_per_s: f64, sweep: &SweepBench, tune: &TuneBench) {
+fn write_bench_json(events_per_s: f64, sweep: &SweepBench, tune: &TuneBench, shard: &ShardBench) {
     let json = format!(
         "{{\n  \"bench\": \"engine_perf\",\n  \"events_per_s\": {:.0},\n  \
          \"sweep_cells\": {},\n  \"sweep_cold_s\": {:.6},\n  \"sweep_warm_s\": {:.6},\n  \
@@ -255,7 +326,9 @@ fn write_bench_json(events_per_s: f64, sweep: &SweepBench, tune: &TuneBench) {
          \"sweep_e2e_speedup\": {:.3},\n  \"prep_cold_us\": {:.3},\n  \
          \"prep_warm_us\": {:.3},\n  \"prep_speedup\": {:.2},\n  \
          \"schedules_built\": {},\n  \"tune_scenario_s\": {:.6},\n  \
-         \"tune_breakpoints\": {}\n}}\n",
+         \"tune_breakpoints\": {},\n  \"shard_count\": {},\n  \
+         \"shard_rows\": {},\n  \"shard_write_s\": {:.6},\n  \
+         \"shard_merge_s\": {:.6}\n}}\n",
         events_per_s,
         sweep.cells,
         sweep.cold_s,
@@ -269,6 +342,10 @@ fn write_bench_json(events_per_s: f64, sweep: &SweepBench, tune: &TuneBench) {
         sweep.schedules_built,
         tune.tune_s,
         tune.breakpoints,
+        shard.shards,
+        shard.rows,
+        shard.write_s,
+        shard.merge_s,
     );
     match std::fs::write("BENCH_engine.json", &json) {
         Ok(()) => println!("wrote BENCH_engine.json"),

@@ -23,7 +23,12 @@
 //!   thread count;
 //! * [`Report`] + [`Sink`] — emission layer ([`TextSink`] paper-style
 //!   text, [`CsvSink`] per-table CSV files, [`JsonSink`] full
-//!   spec-plus-rows JSON for trajectory tooling).
+//!   spec-plus-rows JSON for trajectory tooling);
+//! * [`shard`] — multi-process distribution: [`Plan::shard`] splits a
+//!   plan into disjoint sub-plans by stable hashing, [`ShardSink`]
+//!   emits self-describing shard artifacts, and [`merge_dir`]
+//!   reassembles them byte-identical to a single-process run
+//!   (DESIGN.md §Distributed execution).
 //!
 //! Table numbering follows the paper exactly: 2–7 — §4.1 node-vs-network
 //! alltoall at p = 32; 8–22 — §4.2 broadcast; 23–37 — §4.3 scatter;
@@ -38,11 +43,13 @@
 pub mod anchors;
 pub mod plan;
 pub mod report;
+pub mod shard;
 
 pub use plan::{
     run_plan, run_plan_with, run_table, run_table_with, Grid, Plan, PlanError, RunConfig,
 };
 pub use report::{CsvSink, JsonSink, Report, Sink, TextSink};
+pub use shard::{merge_dir, plan_fingerprint, write_shard, Merged, ShardSink};
 
 use std::sync::{Arc, OnceLock};
 
@@ -95,6 +102,16 @@ pub struct TableSpec {
 }
 
 impl TableSpec {
+    /// Indices of the sections shard `index` of `shards` owns, in
+    /// section order — the single definition of the shard partition,
+    /// shared by [`Plan::shard`] (which runs the owned sections) and
+    /// `shard::ShardSink` (which checks rows against the assignment).
+    pub(crate) fn owned_sections(&self, shards: u32, index: u32) -> Vec<usize> {
+        (0..self.sections.len())
+            .filter(|&s| plan::section_shard(self.number, s, shards) == index)
+            .collect()
+    }
+
     /// Test/bench helper: re-target every section at a different
     /// cluster and count series, keeping headings and algorithms.
     pub fn with_grid(mut self, cluster: Cluster, counts: &[u64]) -> TableSpec {

@@ -127,6 +127,28 @@ impl RunConfig {
     }
 }
 
+/// FNV-1a 64: the stable, dependency-free hash behind shard assignment
+/// and artifact fingerprints. Unlike `DefaultHasher` it is *specified*,
+/// so shard partitions agree across processes, builds and toolchains —
+/// the property distributed runs stand on.
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The shard a section belongs to: stable hash of (table number,
+/// section position) reduced mod `shards`.
+pub(crate) fn section_shard(table: u32, section: usize, shards: u32) -> u32 {
+    let mut id = [0u8; 12];
+    id[..4].copy_from_slice(&table.to_le_bytes());
+    id[4..].copy_from_slice(&(section as u64).to_le_bytes());
+    (fnv1a(&id) % shards as u64) as u32
+}
+
 type HeadingFn = Arc<dyn Fn(Cluster, OpKind, &Alg) -> String + Send + Sync>;
 
 /// Composable scenario-grid builder. Expands to the cartesian product
@@ -284,6 +306,46 @@ impl Plan {
             .flat_map(|t| &t.sections)
             .map(|s| s.counts.len())
             .sum()
+    }
+
+    /// Deterministically partition the plan's sections into `shards`
+    /// disjoint sub-plans and return shard `index` — the unit one
+    /// process (or machine) of a distributed table run executes.
+    ///
+    /// Assignment is a stable hash of the section's id (table number +
+    /// section position): no environment reads, no randomness, no
+    /// dependence on `shards`' siblings — so the union over
+    /// `index ∈ 0..shards` is exactly the original plan (exhaustive and
+    /// disjoint; `rust/tests/plan_shard.rs` pins this for several
+    /// shard counts) and every process computes the same partition from
+    /// the plan alone. Tables whose sections all land elsewhere are
+    /// dropped from the sub-plan; a shard may be empty (it still
+    /// produces a — rowless — shard artifact, which `merge` requires
+    /// for completeness).
+    ///
+    /// Cell values are independent of which sibling sections run
+    /// (schedules and seeds depend only on the section spec and
+    /// `RunConfig`), so re-merging shard rows reproduces a
+    /// single-process run byte for byte — see `harness::shard`.
+    ///
+    /// `shards` must be ≥ 1 and `index < shards` (caller-validated at
+    /// the CLI edge).
+    pub fn shard(&self, shards: u32, index: u32) -> Plan {
+        assert!(shards >= 1, "shards must be >= 1");
+        assert!(index < shards, "shard index {index} out of range 0..{shards}");
+        let mut tables = Vec::new();
+        for spec in &self.tables {
+            let owned = spec.owned_sections(shards, index);
+            if !owned.is_empty() {
+                tables.push(TableSpec {
+                    number: spec.number,
+                    caption: spec.caption.clone(),
+                    persona: spec.persona,
+                    sections: owned.into_iter().map(|s| spec.sections[s].clone()).collect(),
+                });
+            }
+        }
+        Plan { tables }
     }
 
     fn sorted(mut self) -> Plan {
@@ -564,6 +626,16 @@ pub enum PlanError {
     /// or `.algs(…)`) that would otherwise emit a silently useless
     /// empty report.
     EmptySpec { table: u32, section: Option<String> },
+    /// A shard artifact could not be read or written.
+    ShardIo { path: PathBuf, detail: String },
+    /// A shard artifact failed strict parsing or internal validation.
+    ShardParse { path: PathBuf, detail: String },
+    /// The artifacts of one merge disagree with each other — different
+    /// spec fingerprints (shards of *different* plans or configs),
+    /// different shard counts, or a duplicated shard index.
+    ShardMismatch { detail: String },
+    /// The merge set does not cover every shard of the run.
+    ShardIncomplete { missing: Vec<u32>, shards: u32 },
 }
 
 impl fmt::Display for PlanError {
@@ -578,6 +650,24 @@ impl fmt::Display for PlanError {
             PlanError::EmptySpec { table, section: None } => {
                 write!(f, "table {table}: no sections in spec")
             }
+            PlanError::ShardIo { path, detail } => {
+                write!(f, "shard {}: {detail}", path.display())
+            }
+            PlanError::ShardParse { path, detail } => {
+                write!(f, "shard {}: {detail}", path.display())
+            }
+            PlanError::ShardMismatch { detail } => {
+                write!(f, "shard set mismatch: {detail}")
+            }
+            PlanError::ShardIncomplete { missing, shards } => {
+                let list: Vec<String> = missing.iter().map(|i| i.to_string()).collect();
+                write!(
+                    f,
+                    "incomplete shard set: missing shard{} {} of {shards}",
+                    if missing.len() == 1 { "" } else { "s" },
+                    list.join(", ")
+                )
+            }
         }
     }
 }
@@ -586,7 +676,7 @@ impl std::error::Error for PlanError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             PlanError::Section { source, .. } => Some(source),
-            PlanError::EmptySpec { .. } => None,
+            _ => None,
         }
     }
 }

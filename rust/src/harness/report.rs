@@ -222,18 +222,23 @@ pub(crate) fn esc(s: &str) -> String {
     out
 }
 
-fn table_json(t: &TableOut) -> String {
+/// The spec part of a table's JSON object — the fields up to and
+/// including the `sections` array, without the enclosing braces. Shared
+/// between [`JsonSink`] table objects and the shard artifacts
+/// (`harness::shard`), so a merged report re-emits the exact bytes a
+/// single-process run would.
+pub(crate) fn table_spec_fields(spec: &super::TableSpec) -> String {
     use std::fmt::Write as _;
     let mut out = String::new();
     let _ = write!(
         out,
-        "{{\"table\":{},\"caption\":\"{}\",\"persona\":\"{}\",\"persona_label\":\"{}\",\"sections\":[",
-        t.spec.number,
-        esc(&t.spec.caption),
-        t.spec.persona.key(),
-        esc(t.spec.persona.label()),
+        "\"table\":{},\"caption\":\"{}\",\"persona\":\"{}\",\"persona_label\":\"{}\",\"sections\":[",
+        spec.number,
+        esc(&spec.caption),
+        spec.persona.key(),
+        esc(spec.persona.label()),
     );
-    for (i, s) in t.spec.sections.iter().enumerate() {
+    for (i, s) in spec.sections.iter().enumerate() {
         let k = match s.alg.k() {
             Some(k) => k.to_string(),
             None => "null".into(),
@@ -254,7 +259,15 @@ fn table_json(t: &TableOut) -> String {
             counts.join(","),
         );
     }
-    out.push_str("],\"rows\":[");
+    out.push(']');
+    out
+}
+
+fn table_json(t: &TableOut) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::from("{");
+    out.push_str(&table_spec_fields(&t.spec));
+    out.push_str(",\"rows\":[");
     for (i, r) in t.rows.iter().enumerate() {
         let _ = write!(
             out,

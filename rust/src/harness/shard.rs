@@ -1,0 +1,818 @@
+//! Multi-process plan sharding: shard artifacts and their merge.
+//!
+//! [`Plan::shard`] splits a plan into `N` disjoint sub-plans; each
+//! process runs one sub-plan through the ordinary [`run_plan`] pool and
+//! emits a **shard artifact** — a self-describing JSON file carrying
+//!
+//! * the *full* plan spec (every table, every section — identical in
+//!   every shard, so any single artifact documents the whole run),
+//! * a **fingerprint** binding the spec *and* the measurement config
+//!   (reps/warmup/seed) — shards of different plans or configs can
+//!   never be merged into a frankenreport,
+//! * the shard coordinates (`shards`, `shard`), and
+//! * the measured rows of the sections this shard owns, tagged with
+//!   their (table, section) position in the full spec.
+//!
+//! [`merge_dir`] reassembles a directory of shard artifacts into the
+//! [`Report`] a single-process run would have produced — **byte
+//! identical** through every sink (text, csv, json;
+//! `rust/tests/shard_merge.rs` pins this). That works because cell
+//! values depend only on (section spec, model, config) — never on
+//! sibling sections, thread count, or process boundaries — and because
+//! row numbers round-trip exactly (shortest-round-trip `f64` display,
+//! raw-text `u64` parsing, the `tuning::json` reader).
+//!
+//! Failure is typed, never a panic: fingerprint mismatches, missing or
+//! duplicated shards, truncated row sets and malformed files all
+//! surface as [`PlanError`] variants (exit 1 at the CLI).
+//!
+//! `mlane tune` shards ride the same merge entry point: a directory of
+//! tune-shard artifacts (written via `tuning::tune_shard_json`) merges
+//! into one `TuningBook`, dispatched by the artifact's `kind` field.
+
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::algorithms::registry::{self, OpKind};
+use crate::model::PersonaName;
+use crate::topology::Cluster;
+use crate::tuning::{self, json, json::Value};
+
+use super::plan::fnv1a;
+use super::report::{table_spec_fields, Report, Sink};
+use super::{Plan, PlanError, Row, RunConfig, Section, TableOut, TableSpec};
+
+/// Artifact schema version; bumped on breaking format changes.
+const SHARD_VERSION: u64 = 1;
+
+/// Upper bound on the shard count an artifact may declare. Merge-time
+/// bookkeeping allocates per declared shard, so a corrupt or forged
+/// artifact claiming billions of shards must fail *typed* here rather
+/// than abort in the allocator. 64Ki processes is far beyond any real
+/// deployment of this tool.
+pub const MAX_SHARDS: u32 = 65_536;
+
+/// Same guard for a tune artifact's declared scenario count (merge
+/// allocates one slot per scenario).
+const MAX_SCENARIOS: usize = 100_000;
+
+/// The `kind` tag of a plan-shard artifact ([`ShardSink`]); tune shards
+/// use `tuning::TUNE_SHARD_KIND`.
+pub const PLAN_SHARD_KIND: &str = "plan-shard";
+
+/// The full-plan spec as a JSON array (one table object per line — the
+/// `JsonSink` layout idiom). This exact text is embedded in every shard
+/// artifact and hashed into the fingerprint; at merge time the parsed
+/// specs are re-serialized through the same function, so spec equality
+/// across artifacts is checked on canonical bytes, not just the hash.
+fn spec_array(tables: &[TableSpec]) -> String {
+    let mut out = String::from("[");
+    for (i, spec) in tables.iter().enumerate() {
+        out.push_str(if i == 0 { "\n{" } else { ",\n{" });
+        out.push_str(&table_spec_fields(spec));
+        out.push('}');
+    }
+    out.push_str(if tables.is_empty() { "]" } else { "\n]" });
+    out
+}
+
+/// Fingerprint of (plan spec, measurement config): equal fingerprints
+/// are the merge-time proof that two artifacts are shards of the same
+/// run. FNV-1a over the spec text plus the config fields that influence
+/// cell values (`reps`/`warmup`/`seed`; threads and cache bounds do not
+/// change output, by the determinism contract).
+pub fn plan_fingerprint(plan: &Plan, cfg: &RunConfig) -> u64 {
+    spec_fingerprint(&spec_array(&plan.tables), cfg)
+}
+
+/// [`plan_fingerprint`] over already-serialized spec text, so callers
+/// that also embed the spec (the sink) serialize it exactly once — the
+/// fingerprinted bytes and the embedded bytes cannot drift apart.
+fn spec_fingerprint(spec_text: &str, cfg: &RunConfig) -> u64 {
+    let mut text = spec_text.to_string();
+    text.push_str(&format!("|reps={},warmup={},seed={}", cfg.reps, cfg.warmup, cfg.seed));
+    fnv1a(text.as_bytes())
+}
+
+/// One owned table of a shard: its position in the full plan, its
+/// number (cross-checked against incoming `TableOut`s), and the owned
+/// sections as (full section index, expected row count).
+struct OwnedTable {
+    position: usize,
+    number: u32,
+    sections: Vec<(usize, usize)>,
+}
+
+/// A [`Sink`] that emits the shard artifact for one `Plan::shard(n, i)`
+/// run. Construct it from the **full** plan plus the shard coordinates,
+/// then drive the shard's `Report` through it; `finish` writes the
+/// artifact in one piece.
+pub struct ShardSink<W: Write> {
+    w: W,
+    header: String,
+    spec: String,
+    /// Owned tables not yet received, in plan order.
+    expected: Vec<OwnedTable>,
+    /// How many of `expected` have been consumed.
+    next: usize,
+    rows: Vec<String>,
+}
+
+impl<W: Write> ShardSink<W> {
+    pub fn new(w: W, plan: &Plan, cfg: &RunConfig, shards: u32, index: u32) -> Self {
+        assert!(shards >= 1 && index < shards, "invalid shard coordinates");
+        let mut expected = Vec::new();
+        for (position, spec) in plan.tables.iter().enumerate() {
+            let sections: Vec<(usize, usize)> = spec
+                .owned_sections(shards, index)
+                .into_iter()
+                .map(|s| (s, spec.sections[s].counts.len()))
+                .collect();
+            if !sections.is_empty() {
+                expected.push(OwnedTable { position, number: spec.number, sections });
+            }
+        }
+        let spec = spec_array(&plan.tables);
+        let header = format!(
+            "{{\"version\":{SHARD_VERSION},\"kind\":\"{PLAN_SHARD_KIND}\",\
+             \"fingerprint\":\"{:016x}\",\"shards\":{shards},\"shard\":{index},\"spec\":",
+            spec_fingerprint(&spec, cfg)
+        );
+        ShardSink { w, header, spec, expected, next: 0, rows: Vec::new() }
+    }
+
+    fn bad(msg: String) -> io::Error {
+        io::Error::new(io::ErrorKind::InvalidData, msg)
+    }
+}
+
+impl<W: Write> Sink for ShardSink<W> {
+    fn table(&mut self, t: &TableOut) -> io::Result<()> {
+        let owned = self.expected.get(self.next).ok_or_else(|| {
+            Self::bad(format!(
+                "unexpected table {} — this shard owns {} table(s)",
+                t.spec.number,
+                self.expected.len()
+            ))
+        })?;
+        if owned.number != t.spec.number {
+            return Err(Self::bad(format!(
+                "table {} arrived where the shard assignment expects table {}",
+                t.spec.number, owned.number
+            )));
+        }
+        let want: usize = owned.sections.iter().map(|(_, n)| n).sum();
+        if t.rows.len() != want {
+            return Err(Self::bad(format!(
+                "table {}: {} rows for {} owned cells",
+                t.spec.number,
+                t.rows.len(),
+                want
+            )));
+        }
+        let mut rows = t.rows.iter();
+        for &(section, len) in &owned.sections {
+            for _ in 0..len {
+                let r = rows.next().expect("length checked above");
+                self.rows.push(format!(
+                    "{{\"table_index\":{},\"section_index\":{section},\"k\":{},\"n\":{},\
+                     \"N\":{},\"p\":{},\"c\":{},\"avg_us\":{},\"min_us\":{}}}",
+                    owned.position, r.k, r.n, r.nodes, r.p, r.c, r.avg, r.min
+                ));
+            }
+        }
+        self.next += 1;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> io::Result<()> {
+        if self.next != self.expected.len() {
+            return Err(Self::bad(format!(
+                "shard run incomplete: {} of {} owned tables emitted",
+                self.next,
+                self.expected.len()
+            )));
+        }
+        self.w.write_all(self.header.as_bytes())?;
+        self.w.write_all(self.spec.as_bytes())?;
+        self.w.write_all(b",\"rows\":[")?;
+        for (i, r) in self.rows.iter().enumerate() {
+            self.w.write_all(if i == 0 { b"\n" } else { b",\n" })?;
+            self.w.write_all(r.as_bytes())?;
+        }
+        self.w.write_all(if self.rows.is_empty() { b"]}\n" } else { b"\n]}\n" })?;
+        self.w.flush()
+    }
+}
+
+/// Run-and-write convenience: emit `report` (the result of running
+/// `plan.shard(shards, index)`) as a shard artifact at `path`.
+pub fn write_shard(
+    path: impl AsRef<Path>,
+    plan: &Plan,
+    cfg: &RunConfig,
+    shards: u32,
+    index: u32,
+    report: &Report,
+) -> Result<(), PlanError> {
+    let path = path.as_ref();
+    let io_err = |e: io::Error| PlanError::ShardIo {
+        path: path.to_path_buf(),
+        detail: e.to_string(),
+    };
+    let file = std::fs::File::create(path).map_err(io_err)?;
+    let mut sink = ShardSink::new(io::BufWriter::new(file), plan, cfg, shards, index);
+    report.emit(&mut sink).map_err(|e| {
+        // The sink reports assignment violations (report does not match
+        // plan.shard(shards, index)) as InvalidData — surface those as
+        // the mismatch they are, not as file I/O trouble.
+        if e.kind() == io::ErrorKind::InvalidData {
+            PlanError::ShardMismatch { detail: format!("{}: {e}", path.display()) }
+        } else {
+            io_err(e)
+        }
+    })
+}
+
+// ---- merge ------------------------------------------------------------
+
+/// What a directory of shard artifacts merges into, dispatched by the
+/// artifacts' `kind` field.
+#[derive(Debug)]
+pub enum Merged {
+    /// `plan-shard` artifacts: the reassembled plan report.
+    Report(Report),
+    /// `tune-shard` artifacts: the reassembled decision-table book.
+    Book(tuning::TuningBook),
+}
+
+/// Strict field access over the mini-parser's [`Value`], with
+/// [`PlanError::ShardParse`] errors naming the offending file.
+struct Doc<'v> {
+    path: &'v Path,
+    v: &'v Value,
+}
+
+impl<'v> Doc<'v> {
+    fn err(&self, detail: String) -> PlanError {
+        PlanError::ShardParse { path: self.path.to_path_buf(), detail }
+    }
+
+    fn get(&self, key: &str) -> Result<&'v Value, PlanError> {
+        self.v.get(key).ok_or_else(|| self.err(format!("missing key {key:?}")))
+    }
+
+    fn str(&self, key: &str) -> Result<&'v str, PlanError> {
+        self.get(key)?
+            .as_str()
+            .ok_or_else(|| self.err(format!("{key} must be a string")))
+    }
+
+    fn u64(&self, key: &str) -> Result<u64, PlanError> {
+        self.get(key)?
+            .as_u64()
+            .ok_or_else(|| self.err(format!("{key} must be an unsigned integer")))
+    }
+
+    fn u32(&self, key: &str) -> Result<u32, PlanError> {
+        self.u64(key)?
+            .try_into()
+            .map_err(|_| self.err(format!("{key} out of u32 range")))
+    }
+
+    fn f64(&self, key: &str) -> Result<f64, PlanError> {
+        self.get(key)?
+            .as_f64()
+            .ok_or_else(|| self.err(format!("{key} must be a number")))
+    }
+
+    fn arr(&self, key: &str) -> Result<&'v [Value], PlanError> {
+        self.get(key)?
+            .as_arr()
+            .ok_or_else(|| self.err(format!("{key} must be an array")))
+    }
+
+    fn sub(&self, v: &'v Value) -> Doc<'v> {
+        Doc { path: self.path, v }
+    }
+}
+
+/// One parsed plan-shard artifact.
+struct PlanShard {
+    path: PathBuf,
+    fingerprint: String,
+    /// The embedded spec re-serialized to canonical bytes — compared
+    /// *literally* across shards at merge time, so even a colliding or
+    /// forged fingerprint cannot splice rows into a different spec.
+    spec_text: String,
+    shards: u32,
+    shard: u32,
+    tables: Vec<TableOut>,
+    /// (table_index, section_index, row) triples in file order.
+    rows: Vec<(usize, usize, Row)>,
+}
+
+/// The shard coordinates every artifact kind carries, strictly read
+/// and range-checked.
+fn shard_coords(doc: &Doc) -> Result<(u32, u32), PlanError> {
+    let shards = doc.u32("shards")?;
+    let shard = doc.u32("shard")?;
+    if shards == 0 || shard >= shards {
+        return Err(doc.err(format!("shard {shard} out of range for {shards} shards")));
+    }
+    if shards > MAX_SHARDS {
+        return Err(doc.err(format!("{shards} shards exceeds the supported {MAX_SHARDS}")));
+    }
+    Ok((shards, shard))
+}
+
+/// The shard-set invariants shared by every artifact kind: equal
+/// fingerprints and shard counts, no duplicated index, and full
+/// coverage of `0..shards`. `metas` is (path, fingerprint, shards,
+/// shard) per artifact; callers layer kind-specific checks on top.
+fn check_shard_set(metas: &[(&Path, &str, u32, u32)]) -> Result<(), PlanError> {
+    let (first_path, first_fp, total, _) = metas[0];
+    for &(path, fp, shards, _) in &metas[1..] {
+        if fp != first_fp {
+            return Err(PlanError::ShardMismatch {
+                detail: format!(
+                    "{} has fingerprint {} but {} has {} — shards of different runs",
+                    first_path.display(),
+                    first_fp,
+                    path.display(),
+                    fp
+                ),
+            });
+        }
+        if shards != total {
+            return Err(PlanError::ShardMismatch {
+                detail: format!(
+                    "{} says {total} shards but {} says {shards}",
+                    first_path.display(),
+                    path.display()
+                ),
+            });
+        }
+    }
+    // total <= MAX_SHARDS by shard_coords, so this allocation is bounded.
+    let mut seen: Vec<Option<&Path>> = vec![None; total as usize];
+    for &(path, _, _, shard) in metas {
+        if let Some(prev) = seen[shard as usize] {
+            return Err(PlanError::ShardMismatch {
+                detail: format!(
+                    "shard {shard} appears in both {} and {}",
+                    prev.display(),
+                    path.display()
+                ),
+            });
+        }
+        seen[shard as usize] = Some(path);
+    }
+    let missing: Vec<u32> = (0..total).filter(|&i| seen[i as usize].is_none()).collect();
+    if !missing.is_empty() {
+        return Err(PlanError::ShardIncomplete { missing, shards: total });
+    }
+    Ok(())
+}
+
+fn parse_plan_shard(path: &Path, v: &Value) -> Result<PlanShard, PlanError> {
+    let doc = Doc { path, v };
+    let fingerprint = doc.str("fingerprint")?.to_string();
+    let (shards, shard) = shard_coords(&doc)?;
+
+    let mut specs: Vec<TableSpec> = Vec::new();
+    for tv in doc.arr("spec")? {
+        let td = doc.sub(tv);
+        let number = td.u32("table")?;
+        let caption = td.str("caption")?.to_string();
+        let persona_key = td.str("persona")?;
+        let persona = PersonaName::parse(persona_key)
+            .ok_or_else(|| doc.err(format!("unknown persona {persona_key:?}")))?;
+        let mut sections = Vec::new();
+        for sv in td.arr("sections")? {
+            let sd = doc.sub(sv);
+            let heading = sd.str("heading")?.to_string();
+            let (nodes, cores, lanes) = (sd.u32("nodes")?, sd.u32("cores")?, sd.u32("lanes")?);
+            if nodes == 0 || cores == 0 || lanes == 0 {
+                return Err(doc.err(format!("table {number}: degenerate cluster dimensions")));
+            }
+            let op_name = sd.str("op")?;
+            let op = OpKind::parse(op_name)
+                .ok_or_else(|| doc.err(format!("unknown op {op_name:?}")))?;
+            let alg_name = sd.str("alg")?;
+            let k = match sd.get("k")? {
+                Value::Null => 0,
+                _ => sd.u32("k")?,
+            };
+            let alg = registry::registry()
+                .resolve(alg_name, k)
+                .map_err(|e| doc.err(format!("table {number}: {e}")))?;
+            let counts: Vec<u64> = sd
+                .arr("counts")?
+                .iter()
+                .map(|c| c.as_u64())
+                .collect::<Option<_>>()
+                .ok_or_else(|| doc.err(format!("table {number}: counts must be u64s")))?;
+            sections.push(Section {
+                heading,
+                cluster: Cluster::new(nodes, cores, lanes),
+                op,
+                alg,
+                counts: Arc::from(&counts[..]),
+            });
+        }
+        specs.push(TableSpec { number, caption, persona, sections });
+    }
+    let spec_text = spec_array(&specs);
+    let tables: Vec<TableOut> =
+        specs.into_iter().map(|spec| TableOut { spec, rows: Vec::new() }).collect();
+
+    let mut rows = Vec::new();
+    for rv in doc.arr("rows")? {
+        let rd = doc.sub(rv);
+        let t = rd.u64("table_index")? as usize;
+        let s = rd.u64("section_index")? as usize;
+        let sec = tables
+            .get(t)
+            .and_then(|tab| tab.spec.sections.get(s))
+            .ok_or_else(|| doc.err(format!("row references unknown section ({t}, {s})")))?;
+        rows.push((
+            t,
+            s,
+            Row {
+                section: sec.heading.clone(),
+                k: rd.u32("k")?,
+                n: rd.u32("n")?,
+                nodes: rd.u32("N")?,
+                p: rd.u32("p")?,
+                c: rd.u64("c")?,
+                avg: rd.f64("avg_us")?,
+                min: rd.f64("min_us")?,
+            },
+        ));
+    }
+
+    Ok(PlanShard {
+        path: path.to_path_buf(),
+        fingerprint,
+        spec_text,
+        shards,
+        shard,
+        tables,
+        rows,
+    })
+}
+
+fn merge_plan_shards(mut shards: Vec<PlanShard>) -> Result<Report, PlanError> {
+    let metas: Vec<(&Path, &str, u32, u32)> = shards
+        .iter()
+        .map(|s| (s.path.as_path(), s.fingerprint.as_str(), s.shards, s.shard))
+        .collect();
+    check_shard_set(&metas)?;
+    drop(metas);
+    // Stronger than the (non-cryptographic) fingerprint: the embedded
+    // specs must agree byte for byte before any rows are spliced.
+    if let Some(s) = shards[1..].iter().find(|s| s.spec_text != shards[0].spec_text) {
+        return Err(PlanError::ShardMismatch {
+            detail: format!(
+                "{} embeds a different plan spec than {} despite equal fingerprints",
+                s.path.display(),
+                shards[0].path.display()
+            ),
+        });
+    }
+
+    // Reassemble: bucket rows by (table, section) across all shards,
+    // then validate each bucket against its count series — exactly one
+    // row per (section, count), in count order.
+    let mut tables: Vec<TableOut> = std::mem::take(&mut shards[0].tables);
+    let mut buckets: Vec<Vec<Vec<Row>>> = tables
+        .iter()
+        .map(|t| t.spec.sections.iter().map(|_| Vec::new()).collect())
+        .collect();
+    for s in &mut shards {
+        let path = s.path.clone();
+        for (t, sec, row) in s.rows.drain(..) {
+            // Indices were validated against each shard's own spec, but
+            // only fingerprint equality ties the specs together — a
+            // forged fingerprint must fail typed, not out-of-bounds.
+            let bucket = buckets.get_mut(t).and_then(|b| b.get_mut(sec)).ok_or_else(
+                || PlanError::ShardParse {
+                    path: path.clone(),
+                    detail: format!("row references section ({t}, {sec}) absent from the spec"),
+                },
+            )?;
+            bucket.push(row);
+        }
+    }
+    for (t, table) in tables.iter_mut().enumerate() {
+        for (si, sec) in table.spec.sections.iter().enumerate() {
+            let got = &buckets[t][si];
+            let want: Vec<u64> = sec.counts.to_vec();
+            let got_counts: Vec<u64> = got.iter().map(|r| r.c).collect();
+            if got_counts != want {
+                return Err(PlanError::ShardMismatch {
+                    detail: format!(
+                        "table {}, section {:?}: merged rows cover counts {:?} but the \
+                         spec sweeps {:?} (truncated or duplicated shard run?)",
+                        table.spec.number, sec.heading, got_counts, want
+                    ),
+                });
+            }
+        }
+        for bucket in std::mem::take(&mut buckets[t]) {
+            table.rows.extend(bucket);
+        }
+    }
+    Ok(Report { tables })
+}
+
+/// One parsed tune-shard artifact (`mlane tune --shards N`).
+struct TuneShard {
+    path: PathBuf,
+    fingerprint: String,
+    shards: u32,
+    shard: u32,
+    scenario_count: usize,
+    /// (global scenario index, its decision table) pairs, ascending.
+    tables: Vec<(usize, tuning::DecisionTable)>,
+    tune: tuning::TuneConfig,
+}
+
+fn parse_tune_shard(path: &Path, v: &Value) -> Result<TuneShard, PlanError> {
+    let doc = Doc { path, v };
+    let fingerprint = doc.str("fingerprint")?.to_string();
+    let (shards, shard) = shard_coords(&doc)?;
+    let scenario_count = doc.u64("scenario_count")? as usize;
+    if scenario_count > MAX_SCENARIOS {
+        return Err(doc.err(format!(
+            "scenario_count {scenario_count} exceeds the supported {MAX_SCENARIOS}"
+        )));
+    }
+    let tune_v = doc.get("tune")?;
+    let td = doc.sub(tune_v);
+    let tune = tuning::TuneConfig {
+        reps: td.u64("reps")? as usize,
+        warmup: td.u64("warmup")? as usize,
+        seed: td.u64("seed")?,
+    };
+    let indices: Vec<usize> = doc
+        .arr("indices")?
+        .iter()
+        .map(|i| i.as_u64().map(|n| n as usize))
+        .collect::<Option<_>>()
+        .ok_or_else(|| doc.err("indices must be unsigned integers".into()))?;
+    let tables_v = doc.arr("tables")?;
+    if indices.len() != tables_v.len() {
+        return Err(doc.err(format!(
+            "{} indices for {} tables",
+            indices.len(),
+            tables_v.len()
+        )));
+    }
+    if indices.windows(2).any(|w| w[0] >= w[1]) {
+        return Err(doc.err("indices must be strictly ascending".into()));
+    }
+    if indices.last().is_some_and(|&i| i >= scenario_count) {
+        return Err(doc.err(format!("index beyond scenario_count {scenario_count}")));
+    }
+    let mut tables = Vec::with_capacity(tables_v.len());
+    for (&i, tv) in indices.iter().zip(tables_v) {
+        let table = tuning::DecisionTable::from_value(tv)
+            .map_err(|e| doc.err(e.to_string()))?;
+        tables.push((i, table));
+    }
+    Ok(TuneShard {
+        path: path.to_path_buf(),
+        fingerprint,
+        shards,
+        shard,
+        scenario_count,
+        tables,
+        tune,
+    })
+}
+
+fn merge_tune_shards(shards: Vec<TuneShard>) -> Result<tuning::TuningBook, PlanError> {
+    let metas: Vec<(&Path, &str, u32, u32)> = shards
+        .iter()
+        .map(|s| (s.path.as_path(), s.fingerprint.as_str(), s.shards, s.shard))
+        .collect();
+    check_shard_set(&metas)?;
+    drop(metas);
+    let first = &shards[0];
+    for s in &shards[1..] {
+        // Belt-and-braces beyond the fingerprint: the tune parameters
+        // and scenario universe must agree literally.
+        if s.scenario_count != first.scenario_count || s.tune != first.tune {
+            return Err(PlanError::ShardMismatch {
+                detail: format!(
+                    "{} and {} are shards of different tune runs",
+                    first.path.display(),
+                    s.path.display()
+                ),
+            });
+        }
+    }
+    let scenario_count = first.scenario_count;
+    let tune = first.tune;
+    let mut slots: Vec<Option<tuning::DecisionTable>> = (0..scenario_count).map(|_| None).collect();
+    for s in shards {
+        for (i, table) in s.tables {
+            if slots[i].replace(table).is_some() {
+                return Err(PlanError::ShardMismatch {
+                    detail: format!("scenario {i} tuned by more than one shard"),
+                });
+            }
+        }
+    }
+    let holes: Vec<String> = slots
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.is_none())
+        .map(|(i, _)| i.to_string())
+        .collect();
+    if !holes.is_empty() {
+        return Err(PlanError::ShardMismatch {
+            detail: format!(
+                "scenario{} {} not covered by any shard (truncated run?)",
+                if holes.len() == 1 { "" } else { "s" },
+                holes.join(", ")
+            ),
+        });
+    }
+    let book = tuning::TuningBook {
+        tune,
+        tables: slots.into_iter().map(|t| t.expect("holes checked")).collect(),
+    };
+    book.validate().map_err(|e| PlanError::ShardMismatch { detail: e.to_string() })?;
+    Ok(book)
+}
+
+/// Merge every shard artifact (`*.json`) under `dir` back into the
+/// single-process result: a plan [`Report`] or a tune
+/// [`tuning::TuningBook`], depending on the artifacts' `kind`. All the
+/// artifact cross-checks (same fingerprint, complete disjoint shard
+/// set, full row coverage) are typed [`PlanError`]s.
+pub fn merge_dir(dir: impl AsRef<Path>) -> Result<Merged, PlanError> {
+    let dir = dir.as_ref();
+    let io_err = |e: io::Error| PlanError::ShardIo {
+        path: dir.to_path_buf(),
+        detail: e.to_string(),
+    };
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(io_err)?
+        .collect::<Result<Vec<_>, _>>()
+        .map_err(io_err)?
+        .into_iter()
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "json") && p.is_file())
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        return Err(PlanError::ShardIo {
+            path: dir.to_path_buf(),
+            detail: "no shard artifacts (*.json) found".into(),
+        });
+    }
+
+    let mut docs = Vec::with_capacity(paths.len());
+    for path in paths {
+        let text = std::fs::read_to_string(&path).map_err(|e| PlanError::ShardIo {
+            path: path.clone(),
+            detail: e.to_string(),
+        })?;
+        let v = json::parse(&text)
+            .map_err(|e| PlanError::ShardParse { path: path.clone(), detail: e })?;
+        let doc = Doc { path: &path, v: &v };
+        let version = doc.u64("version")?;
+        if version != SHARD_VERSION {
+            return Err(PlanError::ShardParse {
+                path,
+                detail: format!("unsupported shard version {version}"),
+            });
+        }
+        let kind = doc.str("kind")?.to_string();
+        docs.push((path, v, kind));
+    }
+    let kind = docs[0].2.clone();
+    if let Some((path, _, other)) = docs.iter().find(|(_, _, k)| *k != kind) {
+        return Err(PlanError::ShardMismatch {
+            detail: format!(
+                "{} is a {} artifact among {} artifacts",
+                path.display(),
+                other,
+                kind
+            ),
+        });
+    }
+    match kind.as_str() {
+        PLAN_SHARD_KIND => {
+            let shards = docs
+                .iter()
+                .map(|(p, v, _)| parse_plan_shard(p, v))
+                .collect::<Result<Vec<_>, _>>()?;
+            merge_plan_shards(shards).map(Merged::Report)
+        }
+        tuning::TUNE_SHARD_KIND => {
+            let shards = docs
+                .iter()
+                .map(|(p, v, _)| parse_tune_shard(p, v))
+                .collect::<Result<Vec<_>, _>>()?;
+            merge_tune_shards(shards).map(Merged::Book)
+        }
+        other => Err(PlanError::ShardParse {
+            path: docs[0].0.clone(),
+            detail: format!("unknown artifact kind {other:?}"),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run_plan_with, Grid};
+    use super::*;
+    use crate::sim::SweepEngine;
+
+    fn tiny_plan() -> Plan {
+        let grid = Grid::new()
+            .cluster(Cluster::new(2, 4, 2))
+            .op(OpKind::Bcast)
+            .algs([registry::klane(1), registry::klane(2), registry::fulllane()])
+            .counts(&[1, 600]);
+        Plan::new().table(1, "shard unit-test grid", PersonaName::OpenMpi, &grid)
+    }
+
+    fn cfg() -> RunConfig {
+        RunConfig::default().reps(2).warmup(0)
+    }
+
+    #[test]
+    fn fingerprint_binds_spec_and_config() {
+        let plan = tiny_plan();
+        let a = plan_fingerprint(&plan, &cfg());
+        assert_eq!(a, plan_fingerprint(&plan, &cfg()), "deterministic");
+        assert_ne!(a, plan_fingerprint(&plan, &cfg().reps(3)), "reps in fingerprint");
+        assert_ne!(a, plan_fingerprint(&plan, &cfg().seed(1)), "seed in fingerprint");
+        let other = Plan::new().table(
+            2,
+            "different",
+            PersonaName::OpenMpi,
+            &Grid::new()
+                .cluster(Cluster::new(2, 4, 2))
+                .op(OpKind::Bcast)
+                .alg(registry::klane(1))
+                .counts(&[1]),
+        );
+        assert_ne!(a, plan_fingerprint(&other, &cfg()), "spec in fingerprint");
+        // Thread count must NOT shard the fingerprint: output is
+        // thread-independent, so shards may use different pool sizes.
+        assert_eq!(a, plan_fingerprint(&plan, &cfg().threads(7)));
+    }
+
+    #[test]
+    fn shard_sink_rejects_tables_outside_its_assignment() {
+        let plan = tiny_plan();
+        let engine = Arc::new(SweepEngine::new());
+        let report = run_plan_with(&engine, &plan, &cfg()).unwrap();
+        // A full-plan report fed to a 2-shard sink has too many rows.
+        let mut buf = Vec::new();
+        let mut sink = ShardSink::new(&mut buf, &plan, &cfg(), 2, 0);
+        let err = report.emit(&mut sink).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{err}");
+    }
+
+    #[test]
+    fn empty_shard_artifact_round_trips() {
+        // A plan with fewer sections than shards leaves some shard
+        // empty; its artifact must still write and merge-parse.
+        let plan = Plan::new().table(
+            9,
+            "one section",
+            PersonaName::Mpich,
+            &Grid::new()
+                .cluster(Cluster::new(2, 2, 1))
+                .op(OpKind::Bcast)
+                .alg(registry::fulllane())
+                .counts(&[1]),
+        );
+        let shards = 4u32;
+        let empties: Vec<u32> = (0..shards)
+            .filter(|&i| plan.shard(shards, i).tables.is_empty())
+            .collect();
+        assert!(!empties.is_empty(), "expected at least one empty shard");
+        let i = empties[0];
+        let empty = plan.shard(shards, i);
+        let report =
+            run_plan_with(&Arc::new(SweepEngine::new()), &empty, &cfg()).unwrap();
+        let mut buf = Vec::new();
+        report.emit(&mut ShardSink::new(&mut buf, &plan, &cfg(), shards, i)).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("\"rows\":[]"), "{text}");
+        let v = json::parse(&text).unwrap();
+        let parsed = parse_plan_shard(Path::new("mem"), &v).unwrap();
+        assert_eq!(parsed.rows.len(), 0);
+        assert_eq!(parsed.tables.len(), 1, "spec still carries the full plan");
+    }
+}

@@ -4,13 +4,18 @@
 //! ```text
 //! mlane table <N> [--persona openmpi|intelmpi|mpich] [--csv DIR]
 //! mlane tables [--csv DIR] [--threads T]  # all 48 tables (2..49), plan-parallel
+//!              [--shards N --shard-index I --out FILE]  # one shard of a multi-process run
 //! mlane sweep  [--preset paper|appendix|tuned]
 //!              [--nodes N --cores n --lanes L] [--op OP[,OP...]]
 //!              [--alg NAME[:K][,NAME[:K]...]] [--k K] [--counts C[,C...]]
 //!              [--persona P[,P...]] [--format text|csv|json] [--out DIR]
 //!              [--reps R] [--threads T] [--list]
+//!              [--shards N --shard-index I]  # emit a shard artifact instead of a report
 //! mlane tune   [--preset paper|appendix|tuned] [grid flags as sweep]
 //!              [--format text|json] [--out FILE]  # per-size decision tables
+//!              [--shards N --shard-index I]  # emit a tune-shard artifact
+//! mlane merge  OUT DIR [--format text|csv|json]  # reassemble shard artifacts;
+//!              byte-identical to the single-process report (tune shards -> book json)
 //! mlane run --op bcast|scatter|gather|allgather|alltoall
 //!           --alg <registry name: kported|klane|klane2p|fulllane|bruck|tuned|...>
 //!           [--k K] [--c C] [--nodes N] [--cores n] [--lanes L]
@@ -40,7 +45,8 @@ use mlane::algorithms::registry::{registry, Alg, OpKind};
 use mlane::coordinator::{Collectives, Op};
 use mlane::exec::ExecRuntime;
 use mlane::harness::{
-    self, anchors, CsvSink, Grid, JsonSink, Plan, Report, RunConfig, TextSink,
+    self, anchors, CsvSink, Grid, JsonSink, Merged, Plan, Report, RunConfig, ShardSink,
+    TextSink,
 };
 use mlane::model::{Persona, PersonaName};
 use mlane::runtime::XlaService;
@@ -174,6 +180,42 @@ fn parse_positive(v: &str, what: &str) -> Result<usize> {
 /// accepts; `--out` is listed separately, only where it is consumed.
 const MEASURE_FLAGS: &[&str] = &["reps", "threads", "cache-shapes"];
 const CLUSTER_FLAGS: &[&str] = &["nodes", "cores", "lanes"];
+/// Multi-process sharding flags (`mlane sweep`/`tables`/`tune`).
+const SHARD_FLAGS: &[&str] = &["shards", "shard-index"];
+
+/// `--shards N --shard-index I`, validated as a pair: both or neither,
+/// N ≥ 1, I < N.
+fn shard_params(args: &Args) -> Result<Option<(u32, u32)>> {
+    match (args.flags.get("shards"), args.flags.get("shard-index")) {
+        (None, None) => Ok(None),
+        (Some(n), Some(i)) => {
+            let shards: u32 = n
+                .parse()
+                .ok()
+                .filter(|&v: &u32| v > 0)
+                .ok_or_else(|| anyhow!("bad --shards value: {n} (want a positive integer)"))?;
+            let index: u32 = i
+                .parse()
+                .map_err(|_| anyhow!("bad --shard-index value: {i}"))?;
+            if index >= shards {
+                bail!(
+                    "--shard-index {index} out of range for --shards {shards} (valid: 0..={})",
+                    shards - 1
+                );
+            }
+            if shards > harness::shard::MAX_SHARDS {
+                bail!(
+                    "--shards {shards} exceeds the supported {} (merge bookkeeping is \
+                     per-shard)",
+                    harness::shard::MAX_SHARDS
+                );
+            }
+            Ok(Some((shards, index)))
+        }
+        (Some(_), None) => bail!("--shards needs --shard-index (which shard this process runs)"),
+        (None, Some(_)) => bail!("--shard-index needs --shards (the total shard count)"),
+    }
+}
 
 /// Reject flags the command does not actually consume — both typos
 /// (`--count` must not fall back to a full default grid) and real
@@ -205,7 +247,7 @@ fn run() -> Result<()> {
             cmd_table(&args)
         }
         "tables" => {
-            check_flags(&args, &[&["csv"], MEASURE_FLAGS])?;
+            check_flags(&args, &[&["csv", "out"], SHARD_FLAGS, MEASURE_FLAGS])?;
             cmd_tables(&args)
         }
         "sweep" => {
@@ -213,6 +255,7 @@ fn run() -> Result<()> {
                 &args,
                 &[
                     &["preset", "op", "alg", "k", "counts", "persona", "format", "list", "out"],
+                    SHARD_FLAGS,
                     CLUSTER_FLAGS,
                     MEASURE_FLAGS,
                 ],
@@ -224,11 +267,16 @@ fn run() -> Result<()> {
                 &args,
                 &[
                     &["preset", "op", "alg", "k", "counts", "persona", "format", "out"],
+                    SHARD_FLAGS,
                     CLUSTER_FLAGS,
                     MEASURE_FLAGS,
                 ],
             )?;
             cmd_tune(&args)
+        }
+        "merge" => {
+            check_flags(&args, &[&["format"]])?;
+            cmd_merge(&args)
         }
         "run" => {
             check_flags(
@@ -281,15 +329,21 @@ fn help() -> String {
 commands:
   table <N>   regenerate paper table N (2..49)   [--persona P --csv DIR]
   tables      regenerate all 48 tables (2..49), plan-parallel over one worker pool  [--csv DIR --threads T]
+                [--shards N --shard-index I --out FILE]  (one shard of a multi-process run)
   sweep       run a user-defined scenario grid through the experiment-plan API
                 [--preset {presets}]
                 [--nodes --cores --lanes --op OP[,OP] --alg NAME[:K][,NAME[:K]] --k K]
                 [--counts C[,C] --persona P[,P] --format text|csv|json --out DIR]
                 [--reps R --threads T --list]
+                [--shards N --shard-index I]  (emit a shard artifact instead of a report)
   tune        build per-size decision tables (count breakpoints -> fastest algorithm);
               the `tuned` meta-algorithm dispatches from them
                 [--preset {presets}] [grid flags as sweep]
                 [--format text|json --out FILE --reps R --threads T]
+                [--shards N --shard-index I]  (emit a tune-shard artifact)
+  merge       reassemble shard artifacts from DIR into OUT — byte-identical to the
+              single-process report  [--format text|csv|json]  (tune shards: book json)
+                usage: mlane merge OUT DIR
   run         run one collective                 [--op --alg --k --c --nodes --cores --lanes --backend --persona --table FILE]
   autotune    pick the fastest algorithm         [--op --c --nodes --cores --lanes --persona]
   compare     simulated vs paper anchor cells
@@ -354,14 +408,52 @@ fn cmd_table(args: &Args) -> Result<()> {
 
 fn cmd_tables(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
+    let plan = Plan::paper();
+    // One shard of a multi-process table regeneration: run the owned
+    // sections, emit the shard artifact, and let `mlane merge`
+    // reassemble the full report on the coordinator. The shard-mode
+    // flags and the report-mode flags are mutually exclusive — a
+    // silently ignored flag would hide a misconfigured distributed run.
+    if let Some((shards, index)) = shard_params(args)? {
+        if args.flags.contains_key("csv") {
+            bail!("--csv applies to the merged report; a shard run emits an artifact (--out)");
+        }
+        return run_shard(args, &plan, &cfg, shards, index);
+    }
+    if args.flags.contains_key("out") {
+        bail!("--out names the shard artifact (with --shards); use --csv DIR for reports");
+    }
     // The outer table loop is plan-parallel: all sections of all 48
     // tables drain through one work-stealing pool over the shared
     // engine. Emission below is in table order — byte-identical to a
     // serial run for any thread count.
-    let report = harness::run_plan(&Plan::paper(), &cfg)?;
+    let report = harness::run_plan(&plan, &cfg)?;
     emit_text(&report)?;
     let dir = args.flags.get("csv").cloned().unwrap_or_else(|| "bench_out".into());
     emit_csv(&report, &dir)?;
+    Ok(())
+}
+
+/// Run one shard of `plan` and emit its artifact to `--out` (a file
+/// path in shard mode) or stdout.
+fn run_shard(args: &Args, plan: &Plan, cfg: &RunConfig, shards: u32, index: u32) -> Result<()> {
+    let sub = plan.shard(shards, index);
+    let report = harness::run_plan(&sub, cfg)?;
+    match args.flags.get("out") {
+        Some(path) => {
+            harness::write_shard(path, plan, cfg, shards, index, &report)?;
+            eprintln!(
+                "shard {index} of {shards} ({} of {} sections): {path}",
+                sub.num_sections(),
+                plan.num_sections()
+            );
+        }
+        None => {
+            let stdout = std::io::stdout();
+            let mut sink = ShardSink::new(stdout.lock(), plan, cfg, shards, index);
+            report.emit(&mut sink)?;
+        }
+    }
     Ok(())
 }
 
@@ -547,6 +639,19 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
         None => sweep_plan(args)?,
     };
+    if let Some((shards, index)) = shard_params(args)? {
+        if args.flags.contains_key("format") {
+            bail!(
+                "--shards emits a shard artifact, not a report; \
+                 --format belongs to `mlane merge`"
+            );
+        }
+        if args.bool_flag("list") {
+            print_plan(&plan.shard(shards, index), &cfg);
+            return Ok(());
+        }
+        return run_shard(args, &plan, &cfg, shards, index);
+    }
     if args.bool_flag("list") {
         print_plan(&plan, &cfg);
         return Ok(());
@@ -562,6 +667,66 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         Some(other) => bail!("unknown format {other} (formats: text|csv|json)"),
     }
     Ok(())
+}
+
+/// `mlane merge OUT DIR`: reassemble a directory of shard artifacts
+/// into the single-process result. Plan shards merge into a report
+/// (`--format text|csv|json`; text/json write OUT as a file, csv fills
+/// OUT as a directory); tune shards merge into the decision-table book
+/// (always JSON). Every shard-set inconsistency — fingerprint mismatch,
+/// missing/duplicate shards, truncated rows — is a typed error, exit 1.
+fn cmd_merge(args: &Args) -> Result<()> {
+    let (out, dir) = match &args.pos[..] {
+        [out, dir] => (out.as_str(), dir.as_str()),
+        _ => bail!(
+            "usage: mlane merge OUT DIR [--format text|csv|json] (got {} positional \
+             argument{})",
+            args.pos.len(),
+            if args.pos.len() == 1 { "" } else { "s" }
+        ),
+    };
+    // Refuse to write the merged output into the shard directory
+    // itself: merge_dir globs every direct-child *.json, so a later
+    // merge of the same directory would read OUT as a shard artifact.
+    if let Ok(d) = std::fs::canonicalize(dir) {
+        let parent = match std::path::Path::new(out).parent() {
+            Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+            _ => std::path::PathBuf::from("."),
+        };
+        if std::fs::canonicalize(&parent).is_ok_and(|p| p == d) {
+            bail!(
+                "OUT {out} lands inside the shard directory {dir}; a later merge would \
+                 read it as a shard artifact — write it elsewhere"
+            );
+        }
+    }
+    let format = args.flags.get("format").map(String::as_str);
+    match harness::merge_dir(dir)? {
+        Merged::Report(report) => match format {
+            None | Some("text") => write_out(out, &report.text())?,
+            Some("json") => write_out(out, &report.json())?,
+            Some("csv") => {
+                let mut sink = CsvSink::new(out);
+                report.emit(&mut sink).with_context(|| format!("write csv under {out}"))?;
+                for p in sink.written() {
+                    eprintln!("csv: {}", p.display());
+                }
+            }
+            Some(other) => bail!("unknown format {other} (formats: text|csv|json)"),
+        },
+        Merged::Book(book) => match format {
+            None | Some("json") => write_out(out, &book.to_json())?,
+            Some(other) => {
+                bail!("tune-shard merges emit the decision-table book as json, not {other}")
+            }
+        },
+    }
+    eprintln!("merged {dir} -> {out}");
+    Ok(())
+}
+
+fn write_out(path: &str, contents: &str) -> Result<()> {
+    std::fs::write(path, contents).with_context(|| format!("write {path}"))
 }
 
 /// Tuning scenarios from the grid flags: (personas × ops) on the given
@@ -649,6 +814,34 @@ fn cmd_tune(args: &Args) -> Result<()> {
         }
         None => tune_scenarios(args)?,
     };
+    // One shard of a multi-process tune: sweep only the owned scenarios
+    // and emit a tune-shard artifact carrying the whole job's
+    // fingerprint, for `mlane merge` to reassemble into one book.
+    if let Some((shards, index)) = shard_params(args)? {
+        if args.flags.contains_key("format") {
+            bail!(
+                "--shards emits a tune-shard artifact, not a report; \
+                 the merged book is always json"
+            );
+        }
+        let indices = tuning::shard_scenarios(scenarios.len(), shards, index);
+        let owned: Vec<Scenario> = indices.iter().map(|&i| scenarios[i].clone()).collect();
+        let engine = Arc::new(SweepEngine::with_capacity(cfg.cache_shapes));
+        let book = tuning::tune_all(&engine, &owned, &tune_cfg, cfg.threads)?;
+        let json = tuning::tune_shard_json(&scenarios, &tune_cfg, shards, index, &indices, &book);
+        match args.flags.get("out") {
+            Some(path) => {
+                write_out(path, &json)?;
+                eprintln!(
+                    "tune shard {index} of {shards} ({} of {} scenarios): {path}",
+                    owned.len(),
+                    scenarios.len()
+                );
+            }
+            None => print!("{json}"),
+        }
+        return Ok(());
+    }
     // A command-local engine sized by --cache-shapes / MLANE_CACHE_SHAPES
     // (the process singleton ignores later capacity requests); it is
     // still shared across all scenarios and tune workers.

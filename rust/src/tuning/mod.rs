@@ -299,7 +299,7 @@ impl DecisionTable {
         out
     }
 
-    fn from_value(v: &Value) -> Result<DecisionTable, TuneError> {
+    pub(crate) fn from_value(v: &Value) -> Result<DecisionTable, TuneError> {
         strict_obj(v, "table", &["op", "persona", "nodes", "cores", "lanes", "entries"])?;
         let op_name = str_field(v, "table", "op")?;
         let op = OpKind::parse(op_name)
@@ -652,6 +652,85 @@ pub fn tune_all(
     Ok(TuningBook { tune: *cfg, tables })
 }
 
+// ---- multi-process tune sharding --------------------------------------
+
+/// The `kind` tag of a tune-shard artifact (see `harness::shard`:
+/// `mlane merge` dispatches on it).
+pub const TUNE_SHARD_KIND: &str = "tune-shard";
+
+/// The shard a scenario belongs to: stable hash of its ordinal position
+/// in the (deterministic) scenario list — the tuning mirror of
+/// `Plan::shard`'s section assignment. No environment reads.
+pub fn scenario_shard(index: usize, shards: u32) -> u32 {
+    let hash = crate::harness::plan::fnv1a(format!("scenario:{index}").as_bytes());
+    (hash % shards as u64) as u32
+}
+
+/// The global indices of the scenarios shard `index` owns, ascending.
+/// Exhaustive and disjoint over `index ∈ 0..shards` by construction.
+pub fn shard_scenarios(total: usize, shards: u32, index: u32) -> Vec<usize> {
+    assert!(shards >= 1 && index < shards, "invalid shard coordinates");
+    (0..total).filter(|&i| scenario_shard(i, shards) == index).collect()
+}
+
+/// Fingerprint binding the whole tuning job: every scenario's identity
+/// (cluster/op/persona, count grid, candidate set) plus the
+/// [`TuneConfig`] — merge-time proof that two artifacts shard the same
+/// `mlane tune` invocation.
+pub fn scenarios_fingerprint(scenarios: &[Scenario], cfg: &TuneConfig) -> u64 {
+    use std::fmt::Write as _;
+    let mut text = String::new();
+    for sc in scenarios {
+        let _ = write!(text, "{};counts=", sc.label());
+        for c in &sc.counts {
+            let _ = write!(text, "{c},");
+        }
+        text.push_str(";cands=");
+        for a in &sc.candidates {
+            let _ = write!(text, "{}:{},", a.name(), a.k().unwrap_or(0));
+        }
+        text.push('|');
+    }
+    let _ = write!(text, "tune={},{},{}", cfg.reps, cfg.warmup, cfg.seed);
+    crate::harness::plan::fnv1a(text.as_bytes())
+}
+
+/// Serialize one tune shard: the `book` produced by tuning the owned
+/// scenarios (`indices`, ascending — `book.tables[i]` is scenario
+/// `indices[i]`), self-described with the job fingerprint and shard
+/// coordinates. `harness::shard::merge_dir` reassembles a directory of
+/// these into the single-process [`TuningBook`], byte-identical through
+/// [`TuningBook::to_json`].
+pub fn tune_shard_json(
+    scenarios: &[Scenario],
+    cfg: &TuneConfig,
+    shards: u32,
+    index: u32,
+    indices: &[usize],
+    book: &TuningBook,
+) -> String {
+    use std::fmt::Write as _;
+    assert_eq!(indices.len(), book.tables.len(), "one table per owned scenario");
+    let idx: Vec<String> = indices.iter().map(|i| i.to_string()).collect();
+    let mut out = format!(
+        "{{\"version\":1,\"kind\":\"{TUNE_SHARD_KIND}\",\"fingerprint\":\"{:016x}\",\
+         \"shards\":{shards},\"shard\":{index},\"scenario_count\":{},\"indices\":[{}],\
+         \"tune\":{{\"reps\":{},\"warmup\":{},\"seed\":{}}},\"tables\":[",
+        scenarios_fingerprint(scenarios, cfg),
+        scenarios.len(),
+        idx.join(","),
+        cfg.reps,
+        cfg.warmup,
+        cfg.seed,
+    );
+    for (i, t) in book.tables.iter().enumerate() {
+        out.push_str(if i == 0 { "\n" } else { ",\n" });
+        out.push_str(&t.json());
+    }
+    let _ = write!(out, "{}]}}\n", if book.tables.is_empty() { "" } else { "\n" });
+    out
+}
+
 // ---- dispatch (the `tuned` meta-algorithm's brain) ---------------------
 
 fn installed_slot() -> &'static Mutex<Option<Arc<TuningBook>>> {
@@ -888,6 +967,42 @@ mod tests {
         let err = book.validate().unwrap_err();
         assert!(err.to_string().contains("duplicate table"), "{err}");
         assert!(install(book).is_err());
+    }
+
+    #[test]
+    fn scenario_sharding_partitions_and_fingerprint_binds_the_job() {
+        // Exhaustive + disjoint over every shard, like Plan::shard.
+        for n in [1u32, 2, 3, 7] {
+            let mut all: Vec<usize> =
+                (0..n).flat_map(|i| shard_scenarios(5, n, i)).collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..5).collect::<Vec<_>>(), "n={n}");
+        }
+        // The fingerprint is deterministic and sensitive to the job:
+        // scenario set, counts and tune config all bind it.
+        let scs =
+            [scenario(OpKind::Bcast, &[1, 64]), scenario(OpKind::Scatter, &[1, 16])];
+        let a = scenarios_fingerprint(&scs, &fast());
+        assert_eq!(a, scenarios_fingerprint(&scs, &fast()));
+        let mut slower = fast();
+        slower.reps += 1;
+        assert_ne!(a, scenarios_fingerprint(&scs, &slower), "config binds");
+        assert_ne!(a, scenarios_fingerprint(&scs[..1], &fast()), "scenario set binds");
+    }
+
+    #[test]
+    fn tune_shard_artifact_is_self_describing() {
+        let eng = Arc::new(SweepEngine::new());
+        let scs = [scenario(OpKind::Bcast, &[1, 64]), scenario(OpKind::Scatter, &[1, 16])];
+        let indices = shard_scenarios(scs.len(), 2, 0);
+        let owned: Vec<Scenario> = indices.iter().map(|&i| scs[i].clone()).collect();
+        let book = tune_all(&eng, &owned, &fast(), 1).unwrap();
+        let artifact = tune_shard_json(&scs, &fast(), 2, 0, &indices, &book);
+        assert!(artifact.starts_with("{\"version\":1,\"kind\":\"tune-shard\""), "{artifact}");
+        assert!(artifact.contains("\"scenario_count\":2"), "{artifact}");
+        assert!(artifact.contains("\"fingerprint\":\""), "{artifact}");
+        // It parses with the strict in-library reader.
+        json::parse(&artifact).expect("artifact is valid json");
     }
 
     #[test]

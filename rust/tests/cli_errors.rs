@@ -311,6 +311,161 @@ fn tuned_reachable_from_cli_without_a_table_file() {
 }
 
 #[test]
+fn shard_flag_validation_is_clean() {
+    let grid = ["--nodes", "2", "--cores", "4", "--op", "bcast", "--alg", "klane:2",
+        "--counts", "1"];
+    let with = |extra: &[&str]| {
+        let mut args = vec!["sweep"];
+        args.extend_from_slice(&grid);
+        args.extend_from_slice(extra);
+        mlane(&args)
+    };
+
+    // Half a shard spec is an error, not a silent full run.
+    let out = with(&["--shards", "2"]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("needs --shard-index"), "{}", stderr(&out));
+    let out = with(&["--shard-index", "0"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("needs --shards"), "{}", stderr(&out));
+
+    // Out-of-range / zero shard counts.
+    let out = with(&["--shards", "2", "--shard-index", "2"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("out of range"), "{}", stderr(&out));
+    let out = with(&["--shards", "0", "--shard-index", "0"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("bad --shards"), "{}", stderr(&out));
+
+    // A shard run emits an artifact; --format belongs to merge.
+    let out = with(&["--shards", "2", "--shard-index", "0", "--format", "json"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("shard artifact"), "{}", stderr(&out));
+
+    // merge usage and a missing directory are clean errors.
+    let out = mlane(&["merge"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("usage: mlane merge"), "{}", stderr(&out));
+    let out = mlane(&["merge", "/tmp/mlane_nope.txt", "/nonexistent-mlane-shards"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(!stderr(&out).contains("panicked"), "{}", stderr(&out));
+}
+
+#[test]
+fn cli_shard_merge_round_trip_is_byte_identical() {
+    // The acceptance criterion end to end through real processes: a
+    // 2-shard `mlane sweep` merged back equals the single-process
+    // report byte for byte, for both the text and json sinks.
+    let grid = ["--nodes", "2", "--cores", "4", "--lanes", "2", "--op", "bcast",
+        "--alg", "klane:2,native", "--counts", "1,600"];
+    let dir = std::env::temp_dir().join("mlane_cli_shard_merge");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let single = {
+        let mut args = vec!["sweep"];
+        args.extend_from_slice(&grid);
+        let out = mlane(&args);
+        assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+        stdout(&out)
+    };
+    let single_json = {
+        let mut args = vec!["sweep"];
+        args.extend_from_slice(&grid);
+        args.extend_from_slice(&["--format", "json"]);
+        stdout(&mlane(&args))
+    };
+
+    let shard_dir = dir.join("shards");
+    std::fs::create_dir_all(&shard_dir).unwrap();
+    for i in 0..2 {
+        let path = shard_dir.join(format!("shard_{i}.json"));
+        let idx = i.to_string();
+        let mut args = vec!["sweep"];
+        args.extend_from_slice(&grid);
+        args.extend_from_slice(&[
+            "--shards", "2", "--shard-index", idx.as_str(), "--out",
+            path.to_str().unwrap(),
+        ]);
+        let out = mlane(&args);
+        assert_eq!(out.status.code(), Some(0), "shard {i} stderr: {}", stderr(&out));
+        let artifact = std::fs::read_to_string(&path).unwrap();
+        assert!(artifact.contains("\"kind\":\"plan-shard\""), "{artifact}");
+        assert!(artifact.contains("\"fingerprint\":"), "{artifact}");
+    }
+
+    let merged_txt = dir.join("merged.txt");
+    let out = mlane(&["merge", merged_txt.to_str().unwrap(), shard_dir.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    assert_eq!(std::fs::read_to_string(&merged_txt).unwrap(), single, "text diverged");
+
+    let merged_json = dir.join("merged.json");
+    let out = mlane(&[
+        "merge", merged_json.to_str().unwrap(), shard_dir.to_str().unwrap(),
+        "--format", "json",
+    ]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    assert_eq!(std::fs::read_to_string(&merged_json).unwrap(), single_json, "json diverged");
+
+    // An incomplete shard set must refuse to merge, exit 1.
+    std::fs::remove_file(shard_dir.join("shard_1.json")).unwrap();
+    let out = mlane(&["merge", merged_txt.to_str().unwrap(), shard_dir.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("missing shard"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+#[test]
+fn cli_tune_shards_merge_into_the_single_book() {
+    let grid = ["--nodes", "2", "--cores", "4", "--lanes", "2", "--op",
+        "bcast,scatter", "--counts", "1,64", "--reps", "1"];
+    let dir = std::env::temp_dir().join("mlane_cli_tune_shard");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let single = {
+        let mut args = vec!["tune"];
+        args.extend_from_slice(&grid);
+        args.extend_from_slice(&["--format", "json"]);
+        let out = mlane(&args);
+        assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+        stdout(&out)
+    };
+
+    let shard_dir = dir.join("shards");
+    std::fs::create_dir_all(&shard_dir).unwrap();
+    for i in 0..2 {
+        let path = shard_dir.join(format!("tune_{i}.json"));
+        let idx = i.to_string();
+        let mut args = vec!["tune"];
+        args.extend_from_slice(&grid);
+        args.extend_from_slice(&[
+            "--shards", "2", "--shard-index", idx.as_str(), "--out",
+            path.to_str().unwrap(),
+        ]);
+        let out = mlane(&args);
+        assert_eq!(out.status.code(), Some(0), "shard {i} stderr: {}", stderr(&out));
+        assert!(
+            std::fs::read_to_string(&path).unwrap().contains("\"kind\":\"tune-shard\""),
+            "not a tune-shard artifact"
+        );
+    }
+
+    let merged = dir.join("book.json");
+    let out = mlane(&["merge", merged.to_str().unwrap(), shard_dir.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    assert_eq!(std::fs::read_to_string(&merged).unwrap(), single, "book diverged");
+
+    // The merged artifact is a loadable decision-table book.
+    let out = mlane(&[
+        "run", "--op", "bcast", "--alg", "tuned", "--nodes", "2", "--cores", "4",
+        "--lanes", "2", "--c", "64", "--table", merged.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+}
+
+#[test]
 fn sweep_preset_lists_and_env_is_parsed_at_the_edge() {
     // --list prints the plan without running it, so the Hydra-scale
     // appendix preset stays cheap here; MLANE_REPS=2 (set by the test

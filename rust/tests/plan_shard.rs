@@ -1,0 +1,165 @@
+//! Shard-partition contract for `Plan::shard(n, i)`:
+//!
+//! 1. **Exhaustive + disjoint** — over `i ∈ 0..n` the shards' sections
+//!    are exactly the full plan's sections, each appearing exactly once
+//!    (checked as multisets for n ∈ {1, 2, 3, 7} on the full paper
+//!    plan and the presets);
+//! 2. **Stable** — the assignment is a pure function of the plan (no
+//!    environment, no randomness): recomputing from a freshly built
+//!    plan yields the identical partition;
+//! 3. **Order-preserving** — a shard keeps tables and sections in full
+//!    plan order, so shard artifacts map positionally;
+//! 4. `shard(1, 0)` is the identity partition.
+
+use mlane::algorithms::registry;
+use mlane::algorithms::registry::OpKind;
+use mlane::harness::{Grid, Plan};
+use mlane::model::PersonaName;
+use mlane::topology::Cluster;
+
+/// One section's identity, rich enough to distinguish any two sections
+/// of the paper plan (and to survive duplicate headings).
+fn section_ids(plan: &Plan) -> Vec<String> {
+    plan.tables
+        .iter()
+        .flat_map(|t| {
+            t.sections.iter().map(move |s| {
+                format!(
+                    "{}|{}|{:?}|{}|{}|{:?}|{:?}",
+                    t.number,
+                    t.persona.key(),
+                    s.cluster,
+                    s.op,
+                    s.alg.label(),
+                    s.heading,
+                    s.counts
+                )
+            })
+        })
+        .collect()
+}
+
+fn plans_under_test() -> Vec<(&'static str, Plan)> {
+    let user = Plan::new().table(
+        1,
+        "user grid",
+        PersonaName::Mpich,
+        &Grid::new()
+            .clusters([Cluster::new(2, 4, 2), Cluster::new(3, 4, 2)])
+            .ops([OpKind::Bcast, OpKind::Scatter])
+            .algs([registry::klane(1), registry::klane(2), registry::fulllane()])
+            .counts(&[1, 64]),
+    );
+    vec![
+        ("paper", Plan::paper()),
+        ("appendix", Plan::appendix()),
+        ("tuned", Plan::tuned()),
+        ("user", user),
+    ]
+}
+
+#[test]
+fn shards_partition_exhaustively_and_disjointly() {
+    for (name, plan) in plans_under_test() {
+        let mut full = section_ids(&plan);
+        full.sort();
+        for n in [1u32, 2, 3, 7] {
+            let mut union: Vec<String> = Vec::new();
+            for i in 0..n {
+                union.extend(section_ids(&plan.shard(n, i)));
+            }
+            // Same multiset: every section in exactly one shard.
+            assert_eq!(union.len(), full.len(), "{name}, n={n}: lost or duplicated sections");
+            union.sort();
+            assert_eq!(union, full, "{name}, n={n}: partition is not the full plan");
+        }
+    }
+}
+
+#[test]
+fn sharding_is_deterministic_across_plan_rebuilds() {
+    for n in [2u32, 3, 7] {
+        for i in 0..n {
+            // Two *independently built* paper plans — the partition must
+            // agree, because distributed processes each compute their own.
+            let a = section_ids(&Plan::paper().shard(n, i));
+            let b = section_ids(&Plan::paper().shard(n, i));
+            assert_eq!(a, b, "n={n}, i={i}");
+        }
+    }
+}
+
+#[test]
+fn shard_one_is_the_identity() {
+    let plan = Plan::paper();
+    let sharded = plan.shard(1, 0);
+    assert_eq!(section_ids(&sharded), section_ids(&plan));
+    assert_eq!(sharded.tables.len(), plan.tables.len());
+    let numbers: Vec<u32> = sharded.tables.iter().map(|t| t.number).collect();
+    let want: Vec<u32> = plan.tables.iter().map(|t| t.number).collect();
+    assert_eq!(numbers, want, "table order preserved");
+}
+
+#[test]
+fn shards_preserve_plan_order() {
+    let plan = Plan::paper();
+    let full = section_ids(&plan);
+    for i in 0..3u32 {
+        let ids = section_ids(&plan.shard(3, i));
+        // Each shard's sections appear in the same relative order as in
+        // the full plan (a subsequence), so positional row mapping in
+        // the shard artifacts is well-defined.
+        let mut cursor = 0usize;
+        for id in &ids {
+            let pos = full[cursor..]
+                .iter()
+                .position(|f| f == id)
+                .unwrap_or_else(|| panic!("shard {i}: section out of order: {id}"));
+            cursor += pos + 1;
+        }
+    }
+}
+
+#[test]
+fn small_plans_leave_some_shards_empty_but_none_lost() {
+    let plan = Plan::new().table(
+        42,
+        "single section",
+        PersonaName::OpenMpi,
+        &Grid::new()
+            .cluster(Cluster::new(2, 2, 1))
+            .op(OpKind::Bcast)
+            .alg(registry::fulllane())
+            .counts(&[1]),
+    );
+    let n = 7u32;
+    let non_empty: Vec<u32> =
+        (0..n).filter(|&i| !plan.shard(n, i).tables.is_empty()).collect();
+    assert_eq!(non_empty.len(), 1, "one section lives in exactly one shard");
+    let owned = plan.shard(n, non_empty[0]);
+    assert_eq!(section_ids(&owned), section_ids(&plan));
+    // Empty shards drop the table entirely rather than keeping a
+    // sectionless spec (which run_plan would reject as an EmptySpec).
+    for i in (0..n).filter(|i| *i != non_empty[0]) {
+        assert!(plan.shard(n, i).tables.is_empty(), "shard {i}");
+    }
+}
+
+#[test]
+fn paper_plan_shards_are_roughly_balanced() {
+    // Not a strict guarantee — just a regression guard that the hash
+    // spreads the 100+ paper sections instead of clumping them (which
+    // would silently serialize a "distributed" run).
+    let plan = Plan::paper();
+    let total = plan.num_sections();
+    for n in [2usize, 3] {
+        for i in 0..n {
+            let got = plan.shard(n as u32, i as u32).num_sections();
+            let fair = total / n;
+            assert!(
+                got >= fair / 2 && got <= fair * 2,
+                "n={n}, shard {i}: {got} sections of {total} (fair ≈ {fair})"
+            );
+        }
+    }
+}

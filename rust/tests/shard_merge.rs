@@ -1,0 +1,313 @@
+//! The distributed determinism contract, end to end in-library:
+//! running a plan as `N` shards (each through its own engine, as
+//! separate processes would) and merging the shard artifacts must
+//! reproduce the single-process report **byte for byte** through every
+//! sink — text, csv and json — for N ∈ {1, 3}. Sharded `mlane tune`
+//! books merge byte-identically too. Broken shard sets (fingerprint
+//! mismatch, missing/duplicate shards, corrupt files) fail with typed
+//! `PlanError`s, never panics.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use mlane::algorithms::registry::{self, registry, OpKind};
+use mlane::harness::{
+    merge_dir, run_plan_with, write_shard, CsvSink, Grid, Merged, Plan, PlanError, Report,
+    RunConfig,
+};
+use mlane::model::PersonaName;
+use mlane::sim::SweepEngine;
+use mlane::topology::Cluster;
+use mlane::tuning::{self, Scenario, TuneConfig};
+
+/// Two tables mixing cacheable (k-lane, full-lane) and uncacheable
+/// (native — count-dependent selection plus quirks) sections, on small
+/// clusters so the whole suite stays fast.
+fn tiny_plan() -> Plan {
+    let bcast = Grid::new()
+        .cluster(Cluster::new(3, 4, 2))
+        .op(OpKind::Bcast)
+        .algs([registry::klane(1), registry::klane(2), registry::native()])
+        .counts(&[1, 600, 6000]);
+    let alltoall = Grid::new()
+        .cluster(Cluster::new(2, 4, 2))
+        .op(OpKind::Alltoall)
+        .algs([registry::fulllane(), registry::native()])
+        .counts(&[1, 64]);
+    Plan::new()
+        .table(3, "shard golden: bcast", PersonaName::OpenMpi, &bcast)
+        .table(7, "shard golden: alltoall", PersonaName::IntelMpi, &alltoall)
+}
+
+fn cfg() -> RunConfig {
+    RunConfig::default().reps(3).warmup(1).threads(2)
+}
+
+fn run(plan: &Plan, cfg: &RunConfig) -> Report {
+    // A fresh engine per invocation — exactly what separate shard
+    // *processes* have. Byte-identity must not depend on cache sharing.
+    run_plan_with(&Arc::new(SweepEngine::new()), plan, cfg).expect("plan runs")
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn csv_bytes(report: &Report, dir: &Path) -> Vec<(String, String)> {
+    let mut sink = CsvSink::new(dir);
+    report.emit(&mut sink).unwrap();
+    sink.written()
+        .iter()
+        .map(|p| {
+            (
+                p.file_name().unwrap().to_string_lossy().into_owned(),
+                std::fs::read_to_string(p).unwrap(),
+            )
+        })
+        .collect()
+}
+
+fn write_all_shards(dir: &Path, plan: &Plan, cfg: &RunConfig, n: u32) {
+    for i in 0..n {
+        let report = run(&plan.shard(n, i), cfg);
+        write_shard(dir.join(format!("shard_{i}.json")), plan, cfg, n, i, &report)
+            .unwrap_or_else(|e| panic!("shard {i}: {e}"));
+    }
+}
+
+fn merged_report(dir: &Path) -> Report {
+    match merge_dir(dir).expect("merge succeeds") {
+        Merged::Report(r) => r,
+        Merged::Book(_) => panic!("plan shards merged into a book"),
+    }
+}
+
+// ---- the golden byte-identity test ------------------------------------
+
+#[test]
+fn merge_is_byte_identical_to_single_process_for_1_and_3_shards() {
+    let plan = tiny_plan();
+    let cfg = cfg();
+    let single = run(&plan, &cfg);
+    let golden_text = single.text();
+    let golden_json = single.json();
+    let golden_csv = csv_bytes(&single, &fresh_dir("mlane_shard_golden_csv_single"));
+    assert!(golden_text.contains("Table 3"), "{golden_text}");
+    assert!(golden_json.contains("\"alg\":\"native\""), "{golden_json}");
+
+    for n in [1u32, 3] {
+        let dir = fresh_dir(&format!("mlane_shard_golden_{n}"));
+        write_all_shards(&dir, &plan, &cfg, n);
+        let merged = merged_report(&dir);
+        assert_eq!(merged.text(), golden_text, "text diverged at n={n}");
+        assert_eq!(merged.json(), golden_json, "json diverged at n={n}");
+        let merged_csv =
+            csv_bytes(&merged, &fresh_dir(&format!("mlane_shard_golden_csv_{n}")));
+        assert_eq!(merged_csv, golden_csv, "csv diverged at n={n}");
+    }
+}
+
+#[test]
+fn shard_runs_do_not_depend_on_sibling_sections() {
+    // The property the merge contract stands on, pinned directly: a
+    // section's rows are the same whether it runs alone or with the
+    // whole plan.
+    let plan = tiny_plan();
+    let full = run(&plan, &cfg());
+    let sub = run(&plan.shard(3, 0), &cfg());
+    for table in &sub.tables {
+        let counterpart = full
+            .tables
+            .iter()
+            .find(|t| t.spec.number == table.spec.number)
+            .expect("shard tables exist in the full plan");
+        for row in &table.rows {
+            assert!(
+                counterpart.rows.iter().any(|r| {
+                    r.section == row.section
+                        && r.c == row.c
+                        && r.avg == row.avg
+                        && r.min == row.min
+                }),
+                "row {} c={} differs between shard and full run",
+                row.section,
+                row.c
+            );
+        }
+    }
+}
+
+// ---- typed failure paths ----------------------------------------------
+
+#[test]
+fn missing_shards_are_a_typed_error() {
+    let plan = tiny_plan();
+    let cfg = cfg();
+    let dir = fresh_dir("mlane_shard_missing");
+    let report = run(&plan.shard(3, 1), &cfg);
+    write_shard(dir.join("shard_1.json"), &plan, &cfg, 3, 1, &report).unwrap();
+    match merge_dir(&dir) {
+        Err(PlanError::ShardIncomplete { missing, shards: 3 }) => {
+            assert_eq!(missing, vec![0, 2]);
+        }
+        other => panic!("wanted ShardIncomplete, got {other:?}"),
+    }
+    let msg = merge_dir(&dir).unwrap_err().to_string();
+    assert!(msg.contains("missing shards 0, 2 of 3"), "{msg}");
+}
+
+#[test]
+fn fingerprint_mismatch_is_a_typed_error() {
+    // Same plan, different measurement config: the artifacts must
+    // refuse to merge — the rows would not belong to one run.
+    let plan = tiny_plan();
+    let (cfg_a, cfg_b) = (cfg(), cfg().reps(5));
+    let dir = fresh_dir("mlane_shard_fpmismatch");
+    write_shard(dir.join("shard_0.json"), &plan, &cfg_a, 2, 0, &run(&plan.shard(2, 0), &cfg_a))
+        .unwrap();
+    write_shard(dir.join("shard_1.json"), &plan, &cfg_b, 2, 1, &run(&plan.shard(2, 1), &cfg_b))
+        .unwrap();
+    match merge_dir(&dir) {
+        Err(PlanError::ShardMismatch { detail }) => {
+            assert!(detail.contains("fingerprint"), "{detail}");
+        }
+        other => panic!("wanted ShardMismatch, got {other:?}"),
+    }
+}
+
+#[test]
+fn duplicate_shards_and_corrupt_files_are_typed_errors() {
+    let plan = tiny_plan();
+    let cfg = cfg();
+    let dir = fresh_dir("mlane_shard_dup");
+    let report = run(&plan.shard(2, 0), &cfg);
+    write_shard(dir.join("a.json"), &plan, &cfg, 2, 0, &report).unwrap();
+    write_shard(dir.join("b.json"), &plan, &cfg, 2, 0, &report).unwrap();
+    match merge_dir(&dir) {
+        Err(PlanError::ShardMismatch { detail }) => {
+            assert!(detail.contains("shard 0 appears in both"), "{detail}");
+        }
+        other => panic!("wanted ShardMismatch, got {other:?}"),
+    }
+
+    let dir = fresh_dir("mlane_shard_corrupt");
+    std::fs::write(dir.join("bad.json"), "{\"version\":1,").unwrap();
+    assert!(
+        matches!(merge_dir(&dir), Err(PlanError::ShardParse { .. })),
+        "corrupt artifact must be a parse error"
+    );
+
+    let dir = fresh_dir("mlane_shard_empty");
+    match merge_dir(&dir) {
+        Err(PlanError::ShardIo { detail, .. }) => {
+            assert!(detail.contains("no shard artifacts"), "{detail}");
+        }
+        other => panic!("wanted ShardIo, got {other:?}"),
+    }
+}
+
+#[test]
+fn truncated_shard_rows_are_a_typed_error() {
+    // Hand-corrupt one artifact by dropping its last row: merge must
+    // detect the incomplete count coverage, not emit a short report.
+    let plan = tiny_plan();
+    let cfg = cfg();
+    let dir = fresh_dir("mlane_shard_truncated");
+    write_all_shards(&dir, &plan, &cfg, 2);
+    let victim = dir.join("shard_0.json");
+    let text = std::fs::read_to_string(&victim).unwrap();
+    // Remove the penultimate line (the last row object), keeping valid
+    // JSON: `...},\n{last}\n]}` -> `...{last}\n]}` with the previous
+    // line's trailing comma dropped.
+    let without_row = {
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.len() > 3, "artifact unexpectedly small");
+        let mut kept: Vec<String> = lines[..lines.len() - 3]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        kept.push(lines[lines.len() - 2].trim_end_matches(',').to_string());
+        kept.push(lines[lines.len() - 1].to_string());
+        kept.join("\n") + "\n"
+    };
+    std::fs::write(&victim, without_row).unwrap();
+    match merge_dir(&dir) {
+        Err(PlanError::ShardMismatch { detail }) => {
+            assert!(detail.contains("merged rows cover counts"), "{detail}");
+        }
+        Err(PlanError::ShardParse { .. }) => {} // also acceptable: strictness caught it
+        other => panic!("wanted a typed merge error, got {other:?}"),
+    }
+}
+
+// ---- tune shards -------------------------------------------------------
+
+#[test]
+fn tune_shards_merge_into_the_single_process_book() {
+    let cl = Cluster::new(2, 4, 2);
+    let scenarios: Vec<Scenario> = [OpKind::Bcast, OpKind::Scatter, OpKind::Alltoall]
+        .into_iter()
+        .map(|op| Scenario {
+            cluster: cl,
+            op,
+            persona: PersonaName::OpenMpi,
+            counts: vec![1, 64, 6000],
+            candidates: registry().candidates(cl, op),
+        })
+        .collect();
+    let tcfg = TuneConfig { reps: 2, warmup: 0, seed: 11 };
+
+    let full =
+        tuning::tune_all(&Arc::new(SweepEngine::new()), &scenarios, &tcfg, 2).unwrap();
+    let golden = full.to_json();
+
+    let n = 2u32;
+    let dir = fresh_dir("mlane_tune_shards");
+    let mut owned_total = 0usize;
+    for i in 0..n {
+        let indices = tuning::shard_scenarios(scenarios.len(), n, i);
+        owned_total += indices.len();
+        let owned: Vec<Scenario> = indices.iter().map(|&s| scenarios[s].clone()).collect();
+        let book =
+            tuning::tune_all(&Arc::new(SweepEngine::new()), &owned, &tcfg, 1).unwrap();
+        let artifact = tuning::tune_shard_json(&scenarios, &tcfg, n, i, &indices, &book);
+        std::fs::write(dir.join(format!("tune_{i}.json")), artifact).unwrap();
+    }
+    assert_eq!(owned_total, scenarios.len(), "tune sharding is exhaustive");
+
+    match merge_dir(&dir).expect("tune merge succeeds") {
+        Merged::Book(book) => {
+            assert_eq!(book.to_json(), golden, "merged book must be byte-identical");
+            assert_eq!(book, full);
+        }
+        Merged::Report(_) => panic!("tune shards merged into a plan report"),
+    }
+}
+
+#[test]
+fn mixing_plan_and_tune_shards_is_a_typed_error() {
+    let plan = tiny_plan();
+    let cfg = cfg();
+    let dir = fresh_dir("mlane_shard_mixed");
+    write_shard(dir.join("a.json"), &plan, &cfg, 1, 0, &run(&plan, &cfg)).unwrap();
+    let sc = Scenario {
+        cluster: Cluster::new(2, 4, 2),
+        op: OpKind::Bcast,
+        persona: PersonaName::OpenMpi,
+        counts: vec![1, 64],
+        candidates: registry().candidates(Cluster::new(2, 4, 2), OpKind::Bcast),
+    };
+    let tcfg = TuneConfig { reps: 1, warmup: 0, seed: 1 };
+    let book = tuning::tune_all(&Arc::new(SweepEngine::new()), &[sc.clone()], &tcfg, 1).unwrap();
+    let artifact = tuning::tune_shard_json(&[sc], &tcfg, 1, 0, &[0], &book);
+    std::fs::write(dir.join("b.json"), artifact).unwrap();
+    match merge_dir(&dir) {
+        Err(PlanError::ShardMismatch { detail }) => {
+            assert!(detail.contains("artifact"), "{detail}");
+        }
+        other => panic!("wanted ShardMismatch, got {other:?}"),
+    }
+}
