@@ -17,6 +17,7 @@ use mlane::model::{CostModel, PersonaName};
 use mlane::runtime::XlaService;
 use mlane::sim::{self, AlgId, OpShape, Simulator, SweepEngine, SweepKey};
 use mlane::topology::Cluster;
+use mlane::util::allocs::thread_allocations;
 use mlane::algorithms::registry::OpKind;
 use mlane::tuning::{self, Scenario, TuneConfig};
 
@@ -69,9 +70,10 @@ fn main() {
     );
 
     let sweep = bench_sweep(cl);
+    let series = bench_series();
     let tune = bench_tune(cl);
     let shard = bench_shard_merge();
-    write_bench_json(events_per_s, &sweep, &tune, &shard);
+    write_bench_json(events_per_s, &sweep, &series, &tune, &shard);
 
     println!("\n=== exec backend (4x4, klane alltoall c=1024) ===");
     let cl = Cluster::new(4, 4, 2);
@@ -182,7 +184,7 @@ fn bench_sweep(cl: Cluster) -> SweepBench {
     for i in 0..iters {
         let c = counts[(i + 1) % counts.len()]; // always a different count
         s.resize_count(c);
-        cached.recost(&s);
+        cached.recost(&s).expect("same structure");
         std::hint::black_box(cached.num_xfers());
     }
     let prep_warm_s = t0.elapsed().as_secs_f64() / iters as f64;
@@ -218,6 +220,98 @@ fn bench_sweep(cl: Cluster) -> SweepBench {
         bench.prep_speedup
     );
     println!("end-to-end sweep speedup (incl. simulation): {:.2}x", bench.e2e_speedup);
+    bench
+}
+
+struct SeriesBench {
+    cells: usize,
+    series_s: f64,
+    per_cell_s: f64,
+    series_allocs: u64,
+    per_cell_allocs: u64,
+}
+
+/// Batched series vs per-cell engine calls on a warm cache. The
+/// workload is deliberately tiny (p = 2, one off-node transfer): the
+/// simulation itself is a few hundred nanoseconds, so the measured gap
+/// is the per-call overhead the series path amortizes — cache lookup,
+/// slot lock, stats updates, per-call allocation. Both passes run the
+/// identical cell sequence and must agree bitwise; the warm series pass
+/// must allocate nothing (the same contract `tests/series_alloc.rs`
+/// gates, here measured on the benchmark workload).
+fn bench_series() -> SeriesBench {
+    println!("\n=== sweep engine: batched series vs per-cell calls (tiny bcast) ===");
+    let cl = Cluster::new(2, 1, 2);
+    let m = CostModel::hydra_baseline();
+    let alg = bcast::BcastAlg::Binomial;
+    let (reps, warmup, seed) = (1usize, 0usize, 7u64);
+    let counts: Vec<u64> = (0..1001).map(|i| BCAST_COUNTS[i % BCAST_COUNTS.len()]).collect();
+    let key = SweepKey {
+        cluster: cl,
+        op: OpShape::Bcast { root: 0 },
+        alg: AlgId { family: "binomial", k: 0 },
+    };
+    let build = |c| Ok::<_, std::convert::Infallible>(bcast::build(cl, 0, c, alg));
+
+    // Per-cell: N engine calls, each resolving the cache and updating
+    // stats on its own. Prime first so both sides run fully warm.
+    let eng = SweepEngine::new();
+    let mut st = None;
+    eng.measure(key, counts[0], &m, reps, warmup, seed, &mut st, build).unwrap();
+    let a0 = thread_allocations();
+    let t0 = Instant::now();
+    let mut per_cell_sum = 0.0;
+    for &c in &counts {
+        let cell = eng.measure(key, c, &m, reps, warmup, seed, &mut st, build).unwrap();
+        per_cell_sum += cell.summary.avg;
+    }
+    let per_cell_s = t0.elapsed().as_secs_f64();
+    let per_cell_allocs = thread_allocations() - a0;
+
+    // Series: one engine call for the whole grid. The first pass sizes
+    // the output buffer and rep state to their high-water marks; the
+    // timed second pass repeats the identical trajectory steady-state.
+    let eng = SweepEngine::new();
+    let mut st = None;
+    let mut out = Vec::new();
+    eng.measure_series_into(key, &counts, &m, reps, warmup, seed, &mut st, &mut out, build)
+        .unwrap();
+    out.clear();
+    let a0 = thread_allocations();
+    let t0 = Instant::now();
+    eng.measure_series_into(key, &counts, &m, reps, warmup, seed, &mut st, &mut out, build)
+        .unwrap();
+    let series_s = t0.elapsed().as_secs_f64();
+    let series_allocs = thread_allocations() - a0;
+    let series_sum: f64 = out.iter().map(|cell| cell.summary.avg).sum();
+    assert_eq!(per_cell_sum, series_sum, "series path diverged from per-cell calls");
+    assert_eq!(series_allocs, 0, "warm series must not touch the heap");
+
+    let bench = SeriesBench {
+        cells: counts.len(),
+        series_s,
+        per_cell_s,
+        series_allocs,
+        per_cell_allocs,
+    };
+    println!(
+        "per-cell: {:>8.2?} for {} cells  ({:.0} cells/s, {} allocs)",
+        std::time::Duration::from_secs_f64(bench.per_cell_s),
+        bench.cells,
+        bench.cells as f64 / bench.per_cell_s,
+        bench.per_cell_allocs
+    );
+    println!(
+        "series:   {:>8.2?} for {} cells  ({:.0} cells/s, {} allocs)",
+        std::time::Duration::from_secs_f64(bench.series_s),
+        bench.cells,
+        bench.cells as f64 / bench.series_s,
+        bench.series_allocs
+    );
+    println!(
+        "series speedup: {:.2}x (target >= 3x; CI gate: >= 1x and zero series allocs)",
+        bench.per_cell_s / bench.series_s
+    );
     bench
 }
 
@@ -318,14 +412,24 @@ fn bench_shard_merge() -> ShardBench {
 }
 
 /// Machine-readable perf record for trajectory tracking across PRs.
-fn write_bench_json(events_per_s: f64, sweep: &SweepBench, tune: &TuneBench, shard: &ShardBench) {
+fn write_bench_json(
+    events_per_s: f64,
+    sweep: &SweepBench,
+    series: &SeriesBench,
+    tune: &TuneBench,
+    shard: &ShardBench,
+) {
     let json = format!(
         "{{\n  \"bench\": \"engine_perf\",\n  \"events_per_s\": {:.0},\n  \
          \"sweep_cells\": {},\n  \"sweep_cold_s\": {:.6},\n  \"sweep_warm_s\": {:.6},\n  \
          \"sweep_cold_cells_per_s\": {:.2},\n  \"sweep_warm_cells_per_s\": {:.2},\n  \
          \"sweep_e2e_speedup\": {:.3},\n  \"prep_cold_us\": {:.3},\n  \
          \"prep_warm_us\": {:.3},\n  \"prep_speedup\": {:.2},\n  \
-         \"schedules_built\": {},\n  \"tune_scenario_s\": {:.6},\n  \
+         \"schedules_built\": {},\n  \"series_cells\": {},\n  \
+         \"series_s\": {:.6},\n  \"per_cell_s\": {:.6},\n  \
+         \"series_cells_per_s\": {:.2},\n  \"per_cell_cells_per_s\": {:.2},\n  \
+         \"series_speedup\": {:.3},\n  \"series_steady_allocs\": {},\n  \
+         \"per_cell_steady_allocs\": {},\n  \"tune_scenario_s\": {:.6},\n  \
          \"tune_breakpoints\": {},\n  \"shard_count\": {},\n  \
          \"shard_rows\": {},\n  \"shard_write_s\": {:.6},\n  \
          \"shard_merge_s\": {:.6}\n}}\n",
@@ -340,6 +444,14 @@ fn write_bench_json(events_per_s: f64, sweep: &SweepBench, tune: &TuneBench, sha
         sweep.prep_warm_s * 1e6,
         sweep.prep_speedup,
         sweep.schedules_built,
+        series.cells,
+        series.series_s,
+        series.per_cell_s,
+        series.cells as f64 / series.series_s,
+        series.cells as f64 / series.per_cell_s,
+        series.per_cell_s / series.series_s,
+        series.series_allocs,
+        series.per_cell_allocs,
         tune.tune_s,
         tune.breakpoints,
         shard.shards,

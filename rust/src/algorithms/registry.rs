@@ -103,6 +103,10 @@ pub enum AlgError {
     /// The `k` parameter is outside the algorithm's valid range on this
     /// cluster (e.g. k-lane needs k ≤ cores-per-node).
     InvalidK { alg: String, k: u32, reason: String },
+    /// The sweep engine's cached state disagreed with itself (see
+    /// `sim::MeasureError::Sim`) — an internal cache-identity failure
+    /// surfaced as an error rather than a panic.
+    Engine { detail: String },
 }
 
 impl fmt::Display for AlgError {
@@ -116,6 +120,9 @@ impl fmt::Display for AlgError {
             }
             AlgError::InvalidK { alg, k, reason } => {
                 write!(f, "{alg}: k = {k} is invalid ({reason})")
+            }
+            AlgError::Engine { detail } => {
+                write!(f, "sweep engine: {detail}")
             }
         }
     }

@@ -25,7 +25,7 @@ use anyhow::Result;
 use crate::algorithms::registry::{self, Alg, AlgError, Built, OpKind};
 use crate::exec::{ExecReport, ExecRuntime};
 use crate::model::{Persona, PersonaName};
-use crate::sim::{self, OpShape, RepState, SweepEngine, SweepKey, SweepStats};
+use crate::sim::{self, MeasureError, OpShape, RepState, SweepEngine, SweepKey, SweepStats};
 use crate::topology::{Cluster, Rank};
 use crate::util::Summary;
 
@@ -110,6 +110,17 @@ pub struct Collectives {
     state: RefCell<Option<RepState>>,
 }
 
+/// Collapse an engine error into the coordinator's error type: build
+/// errors pass through unchanged; an engine cache-identity failure
+/// (unreachable unless the cache itself is buggy) maps onto
+/// [`AlgError::Engine`].
+fn engine_err(e: MeasureError<AlgError>) -> AlgError {
+    match e {
+        MeasureError::Build(e) => e,
+        MeasureError::Sim(s) => AlgError::Engine { detail: s.to_string() },
+    }
+}
+
 /// The sweep-invariant part of an operation (cache-key component).
 fn op_shape(op: Op) -> OpShape {
     match op {
@@ -192,7 +203,8 @@ impl Collectives {
                         );
                         Ok(built.schedule)
                     },
-                )?;
+                )
+                .map_err(engine_err)?;
                 (cell, 0.0, 1.0)
             }
             None => {
@@ -222,6 +234,64 @@ impl Collectives {
         })
     }
 
+    /// Simulate (op shape, algorithm) over a whole count grid with one
+    /// engine call — the batched form of [`Collectives::run`]. For
+    /// count-invariant algorithms the engine resolves the cached shape
+    /// once and walks the grid in a single pass
+    /// (`SweepEngine::measure_series`); count-dependent ones (native,
+    /// tuned) fall back to a per-count [`Collectives::run`] loop, so the
+    /// results are element-for-element bitwise identical to calling
+    /// `run` per count in either case. `op`'s own count is ignored —
+    /// only its shape (kind, root) matters.
+    pub fn run_series(
+        &self,
+        op: Op,
+        counts: &[u64],
+        alg: &Alg,
+    ) -> Result<Vec<Measurement>, AlgError> {
+        let Some(alg_key) = alg.cache_id() else {
+            return counts.iter().map(|&c| self.run(op.with_count(c), alg)).collect();
+        };
+        let model = self.persona.model;
+        let key = SweepKey { cluster: self.cluster, op: op_shape(op), alg: alg_key };
+        let mut state = self.state.borrow_mut();
+        let cells = self
+            .engine
+            .measure_series(
+                key,
+                counts,
+                &model,
+                self.reps,
+                self.warmup,
+                self.seed,
+                &mut state,
+                |c| {
+                    let built = self.schedule(op.with_count(c), alg)?;
+                    // Cacheable algorithms must have neutral quirks
+                    // (quirks vary with count; the cache would pin
+                    // the first cell's values).
+                    debug_assert!(
+                        built.quirk_add == 0.0 && built.quirk_mult == 1.0,
+                        "non-neutral quirk on cacheable algorithm {}",
+                        alg.label()
+                    );
+                    Ok(built.schedule)
+                },
+            )
+            .map_err(engine_err)?;
+        let k = alg.k().unwrap_or(self.cluster.lanes);
+        Ok(cells
+            .into_iter()
+            .zip(counts)
+            .map(|(cell, &c)| Measurement {
+                algorithm: cell.algorithm.to_string(),
+                k,
+                c,
+                summary: cell.summary,
+            })
+            .collect())
+    }
+
     /// Execute (op, algorithm) for real on the threaded backend.
     pub fn execute(&self, op: Op, alg: &Alg, rt: &ExecRuntime) -> Result<ExecReport> {
         let built = self.schedule(op, alg)?;
@@ -242,10 +312,12 @@ impl Collectives {
     /// Per-count winners over a whole count grid: for every `c` in
     /// `counts`, the candidate with the lowest simulated average (ties
     /// keep the earlier candidate, so the result is deterministic in
-    /// candidate order). Count sweeps share each candidate's cached
-    /// schedule through the engine, so the grid costs one build plus a
-    /// recost per (candidate, count) — this is the sweep the `tuning`
-    /// module compresses into decision tables.
+    /// candidate order). The sweep is candidate-major — one
+    /// [`Collectives::run_series`] engine call per candidate covers the
+    /// whole grid — but winners and values are identical to a per-count
+    /// loop: each count still compares candidates in candidate order
+    /// with a strict `<`. This is the sweep the `tuning` module
+    /// compresses into decision tables.
     pub fn autotune_counts(
         &self,
         op: Op,
@@ -253,23 +325,19 @@ impl Collectives {
         candidates: &[Alg],
     ) -> Result<Vec<CountWinner>, AlgError> {
         assert!(!candidates.is_empty());
-        counts
-            .iter()
-            .map(|&c| {
-                let op = op.with_count(c);
-                let mut best: Option<CountWinner> = None;
-                for alg in candidates {
-                    let m = self.run(op, alg)?;
-                    if best
-                        .as_ref()
-                        .is_none_or(|b| m.summary.avg < b.measurement.summary.avg)
-                    {
-                        best = Some(CountWinner { c, alg: alg.clone(), measurement: m });
-                    }
+        let mut best: Vec<Option<CountWinner>> = counts.iter().map(|_| None).collect();
+        for alg in candidates {
+            let ms = self.run_series(op, counts, alg)?;
+            for ((slot, m), &c) in best.iter_mut().zip(ms).zip(counts) {
+                if slot
+                    .as_ref()
+                    .is_none_or(|b| m.summary.avg < b.measurement.summary.avg)
+                {
+                    *slot = Some(CountWinner { c, alg: alg.clone(), measurement: m });
                 }
-                Ok(best.expect("non-empty candidates"))
-            })
-            .collect()
+            }
+        }
+        Ok(best.into_iter().map(|w| w.expect("non-empty candidates")).collect())
     }
 
     /// The registry's default candidate set for this operation.

@@ -684,7 +684,10 @@ impl std::error::Error for PlanError {
 /// One section's count sweep. The `Collectives` shares the engine (so
 /// shapes persist across sections and tables) but owns its rep state —
 /// no allocation inside the sweep, no cross-thread contention except on
-/// a shared shape.
+/// a shared shape. The whole section is one `run_series` call: the
+/// engine resolves the cached shape once and walks the count grid in a
+/// single pass, so a worker touches the cache locks once per section,
+/// not once per cell.
 fn run_section(
     engine: &Arc<SweepEngine>,
     cfg: &RunConfig,
@@ -695,14 +698,13 @@ fn run_section(
     coll.reps = cfg.reps;
     coll.warmup = cfg.warmup;
     coll.seed = cfg.seed;
-    let mut rows = Vec::with_capacity(sec.counts.len());
-    for &c in sec.counts.iter() {
-        let m = coll.run(sec.op.op(c), &sec.alg).map_err(|source| PlanError::Section {
-            table: spec.number,
-            section: sec.heading.clone(),
-            source,
-        })?;
-        rows.push(Row {
+    let ms = coll.run_series(sec.op.op(1), &sec.counts, &sec.alg).map_err(|source| {
+        PlanError::Section { table: spec.number, section: sec.heading.clone(), source }
+    })?;
+    Ok(ms
+        .into_iter()
+        .zip(sec.counts.iter())
+        .map(|(m, &c)| Row {
             section: sec.heading.clone(),
             k: m.k,
             n: sec.cluster.cores,
@@ -711,9 +713,8 @@ fn run_section(
             c,
             avg: m.summary.avg,
             min: m.summary.min,
-        });
-    }
-    Ok(rows)
+        })
+        .collect())
 }
 
 type SectionResult = Result<Vec<Row>, PlanError>;

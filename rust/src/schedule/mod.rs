@@ -287,6 +287,103 @@ impl Schedule {
     pub fn num_transfers(&self) -> usize {
         self.rounds.iter().map(|r| r.transfers.len()).sum()
     }
+
+    /// Flatten this schedule's (sizing × per-transfer blocks) structure
+    /// into a [`CountSizer`]: the count→bytes function of every transfer,
+    /// in round-major order (the simulator's flattened transfer order),
+    /// detached from the nested rounds. A count sweep can then recompute
+    /// all byte sizes for a new count in one contiguous pass
+    /// ([`CountSizer::resize_count_into`]) without walking rounds or
+    /// holding the schedule — the sweep-engine series hot path.
+    pub fn count_sizer(&self) -> CountSizer {
+        let parts = match self.op.sizing() {
+            Sizing::Uniform { .. } => 0u64,
+            Sizing::Split { parts, .. } => u64::from(parts),
+        };
+        let n = self.num_transfers();
+        let mut nblocks = Vec::with_capacity(n);
+        let mut id_off = Vec::new();
+        let mut ids = Vec::new();
+        if parts != 0 {
+            id_off.reserve(n + 1);
+            id_off.push(0u32);
+        }
+        for round in &self.rounds {
+            for t in &round.transfers {
+                nblocks.push(t.blocks.count());
+                if parts != 0 {
+                    let start = ids.len();
+                    ids.extend(t.blocks.iter());
+                    // Sorted for the partition-point remainder count;
+                    // sums are order-independent, so sorting cannot
+                    // change the recomputed sizes.
+                    ids[start..].sort_unstable();
+                    id_off.push(ids.len() as u32);
+                }
+            }
+        }
+        CountSizer { elem_bytes: self.elem_bytes, parts, nblocks, id_off, ids }
+    }
+}
+
+/// The count→bytes function of one schedule, flattened: per transfer
+/// (round-major) everything needed to recompute its byte size at any
+/// element count. Built once per cached shape by
+/// [`Schedule::count_sizer`]; [`CountSizer::resize_count_into`] is then
+/// a branch-light loop over flat arrays, bitwise-identical to
+/// [`Schedule::resize_count`] (same u64 arithmetic; `Split` sums are
+/// reassociated over sorted ids, which is exact in integers).
+#[derive(Clone, Debug)]
+pub struct CountSizer {
+    elem_bytes: u64,
+    /// `Split { parts }` sizing; 0 encodes `Uniform` (a schedule's
+    /// `Split` always has ≥ 1 part, so 0 is free as a marker).
+    parts: u64,
+    /// Per transfer: number of blocks carried.
+    nblocks: Vec<u64>,
+    /// `Split` only — CSR of each transfer's sorted block ids, for the
+    /// remainder term (`base + 1` elements for ids below `c % parts`).
+    id_off: Vec<u32>,
+    ids: Vec<u64>,
+}
+
+impl CountSizer {
+    /// Number of transfers this sizer covers.
+    pub fn num_transfers(&self) -> usize {
+        self.nblocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nblocks.is_empty()
+    }
+
+    /// [`Schedule::resize_count`], flat form: write every transfer's
+    /// byte size at element count `c` into `out` (round-major order) in
+    /// one pass. `out.len()` must equal [`CountSizer::num_transfers`].
+    pub fn resize_count_into(&self, c: u64, out: &mut [u64]) {
+        assert_eq!(
+            out.len(),
+            self.nblocks.len(),
+            "resize_count_into: output length does not match transfer count"
+        );
+        let eb = self.elem_bytes;
+        if self.parts == 0 {
+            // Uniform: bytes = (c · nblocks) · elem_bytes.
+            for (o, &nb) in out.iter_mut().zip(&self.nblocks) {
+                *o = c * nb * eb;
+            }
+        } else {
+            // Split: each id holds base = c / parts elements, plus one
+            // more for ids below c % parts.
+            let base = c / self.parts;
+            let extra = c % self.parts;
+            for (i, (o, &nb)) in out.iter_mut().zip(&self.nblocks).enumerate() {
+                let ids = &self.ids[self.id_off[i] as usize..self.id_off[i + 1] as usize];
+                let below = ids.partition_point(|&id| id < extra) as u64;
+                *o = (nb * base + below) * eb;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -365,6 +462,59 @@ mod tests {
         let op = Collective::Bcast { root: 3, c: 100, segments: 4 };
         assert_eq!(op.with_count(7), Collective::Bcast { root: 3, c: 7, segments: 4 });
         assert_eq!(Collective::Alltoall { c: 1 }.with_count(9), Collective::Alltoall { c: 9 });
+    }
+
+    #[test]
+    fn count_sizer_matches_resize_count_uniform() {
+        let mut s = Schedule::new(cl(), Collective::Alltoall { c: 3 }, "test");
+        let t0 = s.transfer(0, 1, BlockSet::range(0, 2));
+        let t1 = s.transfer(2, 3, BlockSet::single(7));
+        s.push_round(Round::of(vec![t0]));
+        s.push_round(Round::of(vec![t1]));
+        let sizer = s.count_sizer();
+        assert_eq!(sizer.num_transfers(), 2);
+        let mut out = vec![0u64; 2];
+        for c in [0u64, 1, 25, 60_000] {
+            sizer.resize_count_into(c, &mut out);
+            s.resize_count(c);
+            let want: Vec<u64> = s
+                .rounds
+                .iter()
+                .flat_map(|r| r.transfers.iter().map(|t| t.bytes))
+                .collect();
+            assert_eq!(out, want, "c={c}");
+        }
+    }
+
+    #[test]
+    fn count_sizer_matches_resize_count_split() {
+        // Uneven split with out-of-order, strided block references:
+        // exercises the sorted-ids remainder count.
+        let mut s = Schedule::new(
+            cl(),
+            Collective::Bcast { root: 0, c: 10, segments: 3 },
+            "test",
+        );
+        let t0 = s.transfer(0, 1, BlockSet::strided(2, 2, 1).union(BlockSet::single(0)));
+        let t1 = s.transfer(0, 2, BlockSet::range(0, 3));
+        s.push_round(Round::of(vec![t0, t1]));
+        let sizer = s.count_sizer();
+        let mut out = vec![0u64; 2];
+        for c in [0u64, 1, 2, 3, 10, 869] {
+            sizer.resize_count_into(c, &mut out);
+            s.resize_count(c);
+            let want: Vec<u64> = s.rounds[0].transfers.iter().map(|t| t.bytes).collect();
+            assert_eq!(out, want, "c={c}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "output length")]
+    fn count_sizer_rejects_wrong_output_length() {
+        let mut s = Schedule::new(cl(), Collective::Alltoall { c: 3 }, "test");
+        let t = s.transfer(0, 1, BlockSet::single(0));
+        s.push_round(Round::of(vec![t]));
+        s.count_sizer().resize_count_into(5, &mut []);
     }
 
     #[test]

@@ -6,18 +6,60 @@
 //! offset tables) rather than as nested `Vec<Vec<...>>`: the event loop
 //! walks `send_ids`/`recv_ids` slices via two offset lookups, so a whole
 //! round's ops sit contiguously in cache and `Simulator` construction is
-//! the only place that allocates. Combined with [`Simulator::recost`]
-//! (rewrite per-transfer sizing in place for a new element count) and
+//! the only place that allocates.
+//!
+//! Transfer data is split by count-dependence: the shape
+//! (endpoints, node ids, on/off-node) lives in one array, while the
+//! sizing fields (`bytes`, `dur`, `eager`) and the per-transfer model
+//! constants (β, eager threshold) each get their own parallel array.
+//! Re-targeting a cached simulator to a new element count
+//! ([`Simulator::recost_count`]) is then two contiguous, branch-light
+//! passes over flat arrays — no rounds walk, no schedule. Combined with
 //! [`Simulator::ensure_state`] (reshape a [`RepState`] for reuse), a
 //! count sweep touches the allocator only on its first cell — see
 //! `sim::sweep`.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::fmt;
 
 use crate::model::CostModel;
-use crate::schedule::Schedule;
+use crate::schedule::{CountSizer, Schedule};
 use crate::util::Prng;
+
+/// Typed failure of [`Simulator::recost`]: the schedule handed in is
+/// structurally different from the one this simulator was built from,
+/// so re-costing it would silently time the wrong communication
+/// structure. Surfaced through `SweepEngine::measure` as
+/// `sweep::MeasureError::Sim` (a cache-identity bug is an error, not a
+/// panic).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimError {
+    /// The schedule's transfer count differs from the simulator's.
+    TransferCountMismatch { simulator: usize, schedule: usize },
+    /// Transfer `index` connects different endpoints (src, dst).
+    EndpointMismatch { index: usize, simulator: (u32, u32), schedule: (u32, u32) },
+}
+
+impl fmt::Display for SimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SimError::TransferCountMismatch { simulator, schedule } => write!(
+                f,
+                "recost on a structurally different schedule: simulator has {simulator} \
+                 transfers, schedule has {schedule}"
+            ),
+            SimError::EndpointMismatch { index, simulator, schedule } => write!(
+                f,
+                "recost on a structurally different schedule: transfer {index} is \
+                 {}->{} in the simulator but {}->{} in the schedule",
+                simulator.0, simulator.1, schedule.0, schedule.1
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 /// One rank's participation in one schedule round (construction-time
 /// temporary; flattened into the CSR arrays before simulation).
@@ -30,19 +72,16 @@ struct RoundOps {
     hinted: bool,
 }
 
-/// Flattened transfer. `bytes`, `dur` and `eager` are the count-dependent
-/// sizing fields rewritten by [`Simulator::recost`]; the rest is shape.
+/// Count-invariant per-transfer shape. The count-dependent sizing
+/// (`bytes`, `dur`, `eager`) lives in parallel arrays on [`Simulator`]
+/// so [`Simulator::recost_count`] rewrites it with contiguous passes.
 #[derive(Clone, Copy, Debug)]
-struct Xfer {
+struct XferShape {
     src: u32,
     dst: u32,
-    bytes: u64,
     offnode: bool,
     src_node: u32,
     dst_node: u32,
-    /// Precomputed transmission duration (bytes × β for its path).
-    dur: f64,
-    eager: bool,
 }
 
 /// Immutable simulation input, reusable across repetitions.
@@ -50,7 +89,22 @@ pub struct Simulator {
     p: u32,
     nodes: u32,
     model: CostModel,
-    xfers: Vec<Xfer>,
+    /// Count-invariant transfer shape, indexed by transfer id.
+    shapes: Vec<XferShape>,
+    /// Count-dependent sizing, parallel to `shapes`. Rewritten in place
+    /// by [`Simulator::recost`] / [`Simulator::recost_count`].
+    bytes: Vec<u64>,
+    /// Precomputed transmission duration (bytes × β for its path).
+    dur: Vec<f64>,
+    eager: Vec<bool>,
+    /// Per-transfer model constants (β and eager threshold of the
+    /// transfer's channel), hoisting the on/off-node branch out of the
+    /// recost loop.
+    beta: Vec<f64>,
+    eager_limit: Vec<u64>,
+    /// Flattened count→bytes function of the source schedule — lets
+    /// [`Simulator::recost_count`] re-target counts schedule-free.
+    sizer: CountSizer,
     /// CSR offsets: rank `r` owns slots `rank_off[r]..rank_off[r+1]`
     /// (one slot per round the rank participates in). Length p + 1.
     rank_off: Vec<u32>,
@@ -195,9 +249,27 @@ pub struct RepState {
     events: u64,
     /// When set, every transmission records a span (tracing mode).
     trace: Option<Vec<Span>>,
+    /// Measured-rep sample arena for `measure_sim`: owned here so a
+    /// series of cells reuses one buffer (capacity survives across
+    /// cells; the rep loop is allocation-free in steady state).
+    samples: Vec<f64>,
 }
 
 impl RepState {
+    /// Start a new measured-rep collection (clears, keeps capacity).
+    pub(crate) fn begin_samples(&mut self, reps: usize) {
+        self.samples.clear();
+        self.samples.reserve(reps);
+    }
+
+    pub(crate) fn push_sample(&mut self, t: f64) {
+        self.samples.push(t);
+    }
+
+    pub(crate) fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
     fn reset(&mut self, seed: u64) {
         self.rank_pos.iter_mut().for_each(|x| *x = 0);
         self.rank_outstanding.iter_mut().for_each(|x| *x = 0);
@@ -232,7 +304,13 @@ impl Simulator {
     pub fn new(schedule: &Schedule, model: &CostModel) -> Self {
         let p = schedule.p();
         let cl = schedule.cluster;
-        let mut xfers = Vec::with_capacity(schedule.num_transfers());
+        let n = schedule.num_transfers();
+        let mut shapes = Vec::with_capacity(n);
+        let mut bytes = Vec::with_capacity(n);
+        let mut dur = Vec::with_capacity(n);
+        let mut eager = Vec::with_capacity(n);
+        let mut beta = Vec::with_capacity(n);
+        let mut eager_limit = Vec::with_capacity(n);
         let mut progs: Vec<Vec<RoundOps>> = vec![Vec::new(); p as usize];
 
         let mut push_op = |rank: u32, round: u32, id: u32, is_send: bool, hinted: bool| {
@@ -252,23 +330,25 @@ impl Simulator {
         for (ri, round) in schedule.rounds.iter().enumerate() {
             let hinted = round.node_phase.is_some();
             for t in &round.transfers {
-                let id = xfers.len() as u32;
+                let id = shapes.len() as u32;
                 let offnode = !cl.same_node(t.src, t.dst);
-                let (beta, eager_limit) = if offnode {
+                let (b, lim) = if offnode {
                     (model.beta_net, model.eager_net)
                 } else {
                     (model.beta_shm, model.eager_shm)
                 };
-                xfers.push(Xfer {
+                shapes.push(XferShape {
                     src: t.src,
                     dst: t.dst,
-                    bytes: t.bytes,
                     offnode,
                     src_node: cl.node_of(t.src),
                     dst_node: cl.node_of(t.dst),
-                    dur: t.bytes as f64 * beta,
-                    eager: t.bytes <= eager_limit,
                 });
+                bytes.push(t.bytes);
+                dur.push(t.bytes as f64 * b);
+                eager.push(t.bytes <= lim);
+                beta.push(b);
+                eager_limit.push(lim);
                 push_op(t.src, ri as u32, id, true, hinted);
                 push_op(t.dst, ri as u32, id, false, hinted);
             }
@@ -301,7 +381,13 @@ impl Simulator {
             p,
             nodes: cl.nodes,
             model: *model,
-            xfers,
+            shapes,
+            bytes,
+            dur,
+            eager,
+            beta,
+            eager_limit,
+            sizer: schedule.count_sizer(),
             rank_off,
             slot_hinted,
             send_off,
@@ -313,7 +399,7 @@ impl Simulator {
 
     /// Number of flattened transfers (sweep-engine bookkeeping).
     pub fn num_xfers(&self) -> usize {
-        self.xfers.len()
+        self.shapes.len()
     }
 
     /// The cost model this simulator was built with (baked into every
@@ -332,32 +418,57 @@ impl Simulator {
     /// [`Simulator::new`] expression-for-expression, so a recost-ed
     /// simulator is bitwise-identical to a freshly built one.
     ///
-    /// Panics if the transfer count differs; debug-asserts that each
-    /// transfer's endpoints match.
-    pub fn recost(&mut self, schedule: &Schedule) {
-        let m = self.model;
+    /// A structurally different schedule (transfer count or endpoints)
+    /// is a typed [`SimError`] — the checks are always on, in release
+    /// builds too, since a silent mismatch would time the wrong
+    /// structure.
+    pub fn recost(&mut self, schedule: &Schedule) -> Result<(), SimError> {
         let mut i = 0usize;
         for round in &schedule.rounds {
             for t in &round.transfers {
-                assert!(i < self.xfers.len(), "recost: schedule has more transfers than simulator");
-                let xf = &mut self.xfers[i];
-                debug_assert_eq!(
-                    (xf.src, xf.dst),
-                    (t.src, t.dst),
-                    "recost on a structurally different schedule"
-                );
-                let (beta, eager_limit) = if xf.offnode {
-                    (m.beta_net, m.eager_net)
-                } else {
-                    (m.beta_shm, m.eager_shm)
+                let Some(sh) = self.shapes.get(i) else {
+                    return Err(SimError::TransferCountMismatch {
+                        simulator: self.shapes.len(),
+                        schedule: schedule.num_transfers(),
+                    });
                 };
-                xf.bytes = t.bytes;
-                xf.dur = t.bytes as f64 * beta;
-                xf.eager = t.bytes <= eager_limit;
+                if (sh.src, sh.dst) != (t.src, t.dst) {
+                    return Err(SimError::EndpointMismatch {
+                        index: i,
+                        simulator: (sh.src, sh.dst),
+                        schedule: (t.src, t.dst),
+                    });
+                }
+                self.bytes[i] = t.bytes;
+                self.dur[i] = t.bytes as f64 * self.beta[i];
+                self.eager[i] = t.bytes <= self.eager_limit[i];
                 i += 1;
             }
         }
-        assert_eq!(i, self.xfers.len(), "recost: schedule has fewer transfers than simulator");
+        if i != self.shapes.len() {
+            return Err(SimError::TransferCountMismatch {
+                simulator: self.shapes.len(),
+                schedule: i,
+            });
+        }
+        Ok(())
+    }
+
+    /// Schedule-free recost: re-target this simulator to element count
+    /// `c` via the flattened [`CountSizer`] captured at build time. Two
+    /// contiguous passes over flat arrays (bytes, then dur/eager) — the
+    /// series hot path, with no rounds walk and no branch on the
+    /// channel. Bitwise-identical to [`Schedule::resize_count`] followed
+    /// by [`Simulator::recost`]; `rust/tests/recost_equivalence.rs`
+    /// gates this for every algorithm. Infallible by construction: the
+    /// sizer always matches this simulator's transfer count.
+    pub fn recost_count(&mut self, c: u64) {
+        self.sizer.resize_count_into(c, &mut self.bytes);
+        for i in 0..self.bytes.len() {
+            let b = self.bytes[i];
+            self.dur[i] = b as f64 * self.beta[i];
+            self.eager[i] = b <= self.eager_limit[i];
+        }
     }
 
     /// Allocate a reusable per-repetition state.
@@ -367,7 +478,7 @@ impl Simulator {
             rank_pos: vec![0; self.p as usize],
             rank_outstanding: vec![0; self.p as usize],
             rank_clock: vec![0.0; self.p as usize],
-            xs: vec![XFER_INIT; self.xfers.len()],
+            xs: vec![XFER_INIT; self.shapes.len()],
             egress: vec![Pool::new(m.phys_lanes); self.nodes as usize],
             ingress: vec![Pool::new(m.phys_lanes); self.nodes as usize],
             bus: vec![Pool::new(m.bus_servers); self.nodes as usize],
@@ -376,6 +487,7 @@ impl Simulator {
             rng: Prng::new(0),
             events: 0,
             trace: None,
+            samples: Vec::new(),
         }
     }
 
@@ -387,7 +499,7 @@ impl Simulator {
         st.rank_pos.resize(p, 0);
         st.rank_outstanding.resize(p, 0);
         st.rank_clock.resize(p, 0.0);
-        st.xs.resize(self.xfers.len(), XFER_INIT);
+        st.xs.resize(self.shapes.len(), XFER_INIT);
         let m = &self.model;
         ensure_pools(&mut st.egress, self.nodes as usize, m.phys_lanes);
         ensure_pools(&mut st.ingress, self.nodes as usize, m.phys_lanes);
@@ -473,12 +585,11 @@ impl Simulator {
         for &x in sends {
             clock += m.o_post + jitter(st);
             st.xs[x as usize].send_posted = clock;
-            let xf = &self.xfers[x as usize];
-            let eager = self.is_eager(xf);
+            let eager = self.eager[x as usize];
             self.try_start(st, x);
             if eager {
                 // Buffered: the send op completes locally at post time.
-                self.op_done(st, xf.src, clock);
+                self.op_done(st, self.shapes[x as usize].src, clock);
             }
         }
         if clock > st.rank_clock[rank as usize] {
@@ -489,15 +600,10 @@ impl Simulator {
         self.op_done(st, rank, clock);
     }
 
-    #[inline]
-    fn is_eager(&self, xf: &Xfer) -> bool {
-        xf.eager
-    }
-
     /// Start the transmission if its preconditions are met.
     fn try_start(&self, st: &mut RepState, x: u32) {
-        let xf = &self.xfers[x as usize];
-        let xst = st.xs[x as usize];
+        let xi = x as usize;
+        let xst = st.xs[xi];
         if xst.started {
             return;
         }
@@ -505,7 +611,7 @@ impl Simulator {
         if sp.is_nan() {
             return;
         }
-        let ready = if self.is_eager(xf) {
+        let ready = if self.eager[xi] {
             sp
         } else {
             let rp = xst.recv_posted;
@@ -514,31 +620,31 @@ impl Simulator {
             }
             sp.max(rp)
         };
-        st.xs[x as usize].started = true;
+        st.xs[xi].started = true;
         let m = &self.model;
-        let arrival = if xf.offnode {
+        let sh = self.shapes[xi];
+        let dur = self.dur[xi];
+        let arrival = if sh.offnode {
             // Store-and-forward over the lanes: the message first holds an
             // egress lane server of the source node, then queues on an
             // ingress lane server of the destination node. The two stages
             // are decoupled (no hold-and-wait), so a saturated receiver
             // delays the arrival without blocking the sender's lane —
             // matching how NICs drain send queues independently.
-            let dur = xf.dur;
-            let (start_e, end_e) = st.egress[xf.src_node as usize].reserve(ready, dur);
+            let (start_e, end_e) = st.egress[sh.src_node as usize].reserve(ready, dur);
             if let Some(t) = &mut st.trace {
-                t.push(Span { src: xf.src, dst: xf.dst, start: start_e, end: end_e, bytes: xf.bytes, offnode: true });
+                t.push(Span { src: sh.src, dst: sh.dst, start: start_e, end: end_e, bytes: self.bytes[xi], offnode: true });
             }
             // Wire latency, then queue for the receive side. The ingress
             // occupancy models the receiver lane being busy `dur` per
             // message; overlapping with its own start is fine (cut-through).
             let in_ready = end_e - dur + m.alpha_net;
-            let (_s2, end_i) = st.ingress[xf.dst_node as usize].reserve(in_ready, dur);
+            let (_s2, end_i) = st.ingress[sh.dst_node as usize].reserve(in_ready, dur);
             end_i
         } else {
-            let dur = xf.dur;
-            let (start, end) = st.bus[xf.src_node as usize].reserve(ready, dur);
+            let (start, end) = st.bus[sh.src_node as usize].reserve(ready, dur);
             if let Some(t) = &mut st.trace {
-                t.push(Span { src: xf.src, dst: xf.dst, start, end, bytes: xf.bytes, offnode: false });
+                t.push(Span { src: sh.src, dst: sh.dst, start, end, bytes: self.bytes[xi], offnode: false });
             }
             end + m.alpha_shm
         };
@@ -547,11 +653,10 @@ impl Simulator {
     }
 
     fn do_arrive(&self, st: &mut RepState, x: u32, now: f64) {
-        let xf = self.xfers[x as usize];
         st.xs[x as usize].arrived = now;
-        if !self.is_eager(&xf) {
+        if !self.eager[x as usize] {
             // Rendezvous: the sender's op completes at arrival too.
-            self.op_done(st, xf.src, now);
+            self.op_done(st, self.shapes[x as usize].src, now);
         }
         self.try_complete_recv(st, x, now);
     }
@@ -563,7 +668,7 @@ impl Simulator {
             return;
         }
         let t = arr.max(rp) + self.model.o_match;
-        let dst = self.xfers[x as usize].dst;
+        let dst = self.shapes[x as usize].dst;
         self.op_done(st, dst, t.max(now));
     }
 
@@ -714,12 +819,65 @@ mod tests {
             let mut s = bcast::build(cl, 0, from, bcast::BcastAlg::FullLane);
             let mut sim = Simulator::new(&s, &m);
             s.resize_count(to);
-            sim.recost(&s);
+            sim.recost(&s).expect("same structure");
             let fresh = Simulator::new(&bcast::build(cl, 0, to, bcast::BcastAlg::FullLane), &m);
             for seed in [0u64, 42] {
                 assert_eq!(sim.run(seed), fresh.run(seed), "{from}->{to} seed {seed}");
             }
         }
+    }
+
+    #[test]
+    fn recost_count_matches_schedule_recost() {
+        // The schedule-free path must agree with resize_count + recost
+        // (full per-algorithm coverage: rust/tests/recost_equivalence.rs).
+        let cl = Cluster::new(3, 4, 2);
+        let m = CostModel::hydra_baseline();
+        let mut s = bcast::build(cl, 0, 1, bcast::BcastAlg::FullLane);
+        let mut via_schedule = Simulator::new(&s, &m);
+        let mut via_count = Simulator::new(&s, &m);
+        for c in [7u64, 869, 60_000, 1] {
+            s.resize_count(c);
+            via_schedule.recost(&s).expect("same structure");
+            via_count.recost_count(c);
+            for seed in [0u64, 42] {
+                assert_eq!(via_count.run(seed), via_schedule.run(seed), "c={c} seed={seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn recost_rejects_transfer_count_mismatch() {
+        let cl = Cluster::new(2, 4, 2);
+        let bcast_s = bcast::build(cl, 0, 64, bcast::BcastAlg::Binomial);
+        let a2a_s = alltoall::build(cl, 64, alltoall::AlltoallAlg::Pairwise);
+        let mut sim = Simulator::new(&bcast_s, &quiet());
+        let err = sim.recost(&a2a_s).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                SimError::TransferCountMismatch { .. } | SimError::EndpointMismatch { .. }
+            ),
+            "{err}"
+        );
+        assert!(err.to_string().contains("structurally different"), "{err}");
+        // The simulator is still usable for its own schedule afterwards.
+        let mut good = bcast_s.clone();
+        good.resize_count(869);
+        sim.recost(&good).expect("own structure still recosts");
+    }
+
+    #[test]
+    fn recost_rejects_endpoint_mismatch() {
+        // Same algorithm, different root: identical transfer count,
+        // different endpoints.
+        let cl = Cluster::new(2, 4, 2);
+        let root0 = bcast::build(cl, 0, 64, bcast::BcastAlg::Binomial);
+        let root7 = bcast::build(cl, cl.p() - 1, 64, bcast::BcastAlg::Binomial);
+        assert_eq!(root0.num_transfers(), root7.num_transfers());
+        let mut sim = Simulator::new(&root0, &quiet());
+        let err = sim.recost(&root7).unwrap_err();
+        assert!(matches!(err, SimError::EndpointMismatch { .. }), "{err}");
     }
 
     #[test]

@@ -32,12 +32,12 @@ mod engine;
 pub mod sweep;
 pub mod trace;
 
-pub use engine::{RepState, SimResult, Simulator};
-pub use sweep::{AlgId, CellResult, OpShape, SweepEngine, SweepKey, SweepStats};
+pub use engine::{RepState, SimError, SimResult, Simulator};
+pub use sweep::{AlgId, CellResult, MeasureError, OpShape, SweepEngine, SweepKey, SweepStats};
 
 use crate::model::CostModel;
 use crate::schedule::Schedule;
-use crate::util::stats::{RepCollector, Summary};
+use crate::util::stats::Summary;
 
 /// Simulate `reps` measured repetitions (after `warmup` unmeasured ones)
 /// and summarise like the paper's tables.
@@ -56,6 +56,9 @@ pub fn measure(
 /// Rep loop over an already-built simulator and state — the sweep-engine
 /// hot path ([`sweep::SweepEngine`] reuses both across cells). `st` must
 /// match the simulator's dimensions (see [`Simulator::ensure_state`]).
+/// Measured samples go into the arena owned by `st`, so a warm state
+/// makes the whole loop allocation-free (its capacity persists across
+/// cells of a series — see `rust/tests/series_alloc.rs`).
 pub fn measure_sim(
     sim: &Simulator,
     st: &mut RepState,
@@ -63,12 +66,14 @@ pub fn measure_sim(
     warmup: usize,
     seed: u64,
 ) -> Summary {
-    let mut col = RepCollector::new(warmup, reps);
+    st.begin_samples(reps);
     for rep in 0..reps + warmup {
         let r = sim.run_into(st, seed ^ (rep as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        col.push(r.makespan);
+        if rep >= warmup {
+            st.push_sample(r.makespan);
+        }
     }
-    col.summary()
+    Summary::of(st.samples())
 }
 
 /// Paper measurement parameters (§4). The harness defaults to fewer

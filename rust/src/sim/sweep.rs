@@ -10,9 +10,17 @@
 //! (arXiv:1910.13373). [`SweepEngine`] therefore builds each distinct
 //! shape once, and per cell only:
 //!
-//! 1. [`Schedule::resize_count`] — rewrite transfer byte sizes in place;
-//! 2. [`Simulator::recost`] — rewrite per-transfer `bytes`/`dur`/`eager`;
-//! 3. [`Simulator::ensure_state`] — reuse the caller's [`RepState`].
+//! 1. [`Simulator::recost_count`] — rewrite the flat per-transfer
+//!    `bytes`/`dur`/`eager` arrays for the new count (schedule-free);
+//! 2. [`Simulator::ensure_state`] — reuse the caller's [`RepState`].
+//!
+//! [`SweepEngine::measure_series`] is the batched form and the single
+//! code path ([`SweepEngine::measure`] is a one-count series): the
+//! cached shape is resolved *once* per series — one cache lookup, one
+//! slot lock acquisition, one batched stats update — and the count grid
+//! is walked in a tight loop over the flattened simulator. With a warm
+//! shape and a reused [`RepState`], a series performs zero steady-state
+//! allocations (gated by `rust/tests/series_alloc.rs`).
 //!
 //! Count-*dependent* selections (the native personas switch algorithms
 //! and quirks by size) go through [`SweepEngine::measure_uncached`],
@@ -52,8 +60,40 @@ use crate::schedule::Schedule;
 use crate::topology::{Cluster, Rank};
 use crate::util::stats::Summary;
 
-use super::engine::{RepState, Simulator};
+use super::engine::{RepState, SimError, Simulator};
 use super::measure_sim;
+
+/// Error from [`SweepEngine::measure`] / [`SweepEngine::measure_series`]:
+/// either the caller's build closure failed (the only user-reachable
+/// case), or the cached schedule and its simulator disagreed
+/// structurally — the cache-identity failure that used to be a panic
+/// inside `Simulator::recost`, surfaced as a typed error instead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MeasureError<E> {
+    /// The schedule build closure failed on a cache miss.
+    Build(E),
+    /// Cached schedule and simulator are out of sync (an engine bug,
+    /// not a user error — reported rather than panicking).
+    Sim(SimError),
+}
+
+impl<E: std::fmt::Display> std::fmt::Display for MeasureError<E> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MeasureError::Build(e) => e.fmt(f),
+            MeasureError::Sim(e) => write!(f, "sweep cache: {e}"),
+        }
+    }
+}
+
+impl<E: std::error::Error + 'static> std::error::Error for MeasureError<E> {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MeasureError::Build(e) => Some(e),
+            MeasureError::Sim(e) => Some(e),
+        }
+    }
+}
 
 /// An operation minus its element count: the sweep-invariant part.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -266,9 +306,12 @@ impl SweepEngine {
     /// Measure one cell of a count sweep for a count-invariant
     /// algorithm. `build` constructs the schedule for a given count and
     /// is only called when `key` misses the cache (a build error leaves
-    /// the cache unchanged); subsequent counts are served by resize +
-    /// recost. `state` is the caller's reusable rep state — pass the
-    /// same `Option` across cells to keep the rep loop allocation-free.
+    /// the cache unchanged); subsequent counts are served by recost.
+    /// `state` is the caller's reusable rep state — pass the same
+    /// `Option` across cells to keep the rep loop allocation-free.
+    ///
+    /// A one-count [`SweepEngine::measure_series`]: same code path,
+    /// same stats accounting, same bitwise results.
     #[allow(clippy::too_many_arguments)]
     pub fn measure<E>(
         &self,
@@ -280,57 +323,145 @@ impl SweepEngine {
         seed: u64,
         state: &mut Option<RepState>,
         build: impl FnOnce(u64) -> Result<Schedule, E>,
-    ) -> Result<CellResult, E> {
+    ) -> Result<CellResult, MeasureError<E>> {
+        let mut out = Vec::with_capacity(1);
+        self.measure_series_into(
+            key,
+            std::slice::from_ref(&count),
+            model,
+            reps,
+            warmup,
+            seed,
+            state,
+            &mut out,
+            build,
+        )?;
+        Ok(out.pop().expect("one count in, one cell out"))
+    }
+
+    /// Measure a whole count series against one cached shape: resolve
+    /// the slot once (one cache lookup, one lock acquisition), then walk
+    /// `counts` in a single pass over the flattened simulator —
+    /// [`Simulator::recost_count`] per distinct count, [`measure_sim`]
+    /// per cell — and batch the stats counters (one `fetch_add` per
+    /// counter for the whole series). Results are bitwise-identical to
+    /// per-cell [`SweepEngine::measure`] calls, cell for cell (gated by
+    /// `rust/tests/series_equivalence.rs`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn measure_series<E>(
+        &self,
+        key: SweepKey,
+        counts: &[u64],
+        model: &CostModel,
+        reps: usize,
+        warmup: usize,
+        seed: u64,
+        state: &mut Option<RepState>,
+        build: impl FnOnce(u64) -> Result<Schedule, E>,
+    ) -> Result<Vec<CellResult>, MeasureError<E>> {
+        let mut out = Vec::with_capacity(counts.len());
+        self.measure_series_into(key, counts, model, reps, warmup, seed, state, &mut out, build)?;
+        Ok(out)
+    }
+
+    /// [`SweepEngine::measure_series`] into a caller-owned buffer:
+    /// appends one [`CellResult`] per count to `out`, reusing its
+    /// capacity — with a warm shape, a warm `state` and a pre-sized
+    /// `out`, the entire series performs zero allocations (see
+    /// `rust/tests/series_alloc.rs`). An empty `counts` is a no-op.
+    #[allow(clippy::too_many_arguments)]
+    pub fn measure_series_into<E>(
+        &self,
+        key: SweepKey,
+        counts: &[u64],
+        model: &CostModel,
+        reps: usize,
+        warmup: usize,
+        seed: u64,
+        state: &mut Option<RepState>,
+        out: &mut Vec<CellResult>,
+        build: impl FnOnce(u64) -> Result<Schedule, E>,
+    ) -> Result<(), MeasureError<E>> {
+        let Some(&first) = counts.first() else {
+            return Ok(());
+        };
         let skey = ShapeKey { key, model_fp: model_fingerprint(model) };
         let slot = self.slot(skey);
         let mut guard = slot.lock().unwrap();
-        let mut built = false;
-        let mut recosted = false;
-        if guard.is_none() {
-            built = true;
-            let schedule = match build(count) {
+        let built = guard.is_none();
+        if built {
+            let schedule = match build(first) {
                 Ok(s) => s,
                 Err(e) => {
                     // Waiters on this slot keep their Arc and retry
                     // the build themselves; the map entry must go.
                     drop(guard);
                     self.forget(skey, &slot);
-                    return Err(e);
+                    return Err(MeasureError::Build(e));
                 }
             };
             let sim = Simulator::new(&schedule, model);
-            *guard = Some(CachedShape { schedule, sim, count });
+            *guard = Some(CachedShape { schedule, sim, count: first });
         } else {
-            let shape = guard.as_mut().expect("checked above");
+            let shape = guard.as_ref().expect("checked above");
             // Hard assert (cheap vs. a rep loop): a fingerprint
             // collision would silently produce timings under the
             // wrong model parameters otherwise.
-            assert_eq!(
-                shape.sim.model(),
-                model,
-                "sweep key reused with a different cost model"
-            );
-            if shape.count != count {
-                recosted = true;
-                shape.schedule.resize_count(count);
-                shape.sim.recost(&shape.schedule);
-                shape.count = count;
+            assert_eq!(shape.sim.model(), model, "sweep key reused with a different cost model");
+            // The cache-identity check recost used to panic on: a
+            // cached schedule that desynced from its simulator is a
+            // typed error now.
+            let (in_sim, in_sched) = (shape.sim.num_xfers(), shape.schedule.num_transfers());
+            if in_sim != in_sched {
+                return Err(MeasureError::Sim(SimError::TransferCountMismatch {
+                    simulator: in_sim,
+                    schedule: in_sched,
+                }));
             }
         }
-        let shape = guard.as_ref().expect("slot filled above");
+        let shape = guard.as_mut().expect("slot filled above");
         let st = state.get_or_insert_with(|| shape.sim.new_state());
         shape.sim.ensure_state(st);
-        let summary = measure_sim(&shape.sim, st, reps, warmup, seed);
-        let algorithm = shape.schedule.algorithm;
-        self.stats.cells.fetch_add(1, Ordering::Relaxed);
+
+        // The tight per-cell loop: recost only on a count change, stats
+        // accumulated locally (one atomic update per counter below).
+        let entry_count = shape.count;
+        let mut recost_cells = 0u64;
+        let mut hit_cells = 0u64;
+        out.reserve(counts.len());
+        // The build already sized the simulator at counts[0]; consume
+        // that first cell without classifying it as recost or hit.
+        let mut building = built;
+        for &c in counts {
+            if building {
+                building = false;
+            } else if c != shape.count {
+                shape.sim.recost_count(c);
+                shape.count = c;
+                recost_cells += 1;
+            } else {
+                hit_cells += 1;
+            }
+            let summary = measure_sim(&shape.sim, st, reps, warmup, seed);
+            out.push(CellResult { summary, algorithm: shape.schedule.algorithm });
+        }
+        // Keep the cached schedule byte-synced with its simulator: one
+        // nested-rounds resize per series instead of one per cell.
+        if shape.count != entry_count {
+            shape.schedule.resize_count(shape.count);
+        }
+
+        self.stats.cells.fetch_add(counts.len() as u64, Ordering::Relaxed);
         if built {
             self.stats.schedules_built.fetch_add(1, Ordering::Relaxed);
-        } else if recosted {
-            self.stats.recosts.fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
         }
-        Ok(CellResult { summary, algorithm })
+        if recost_cells > 0 {
+            self.stats.recosts.fetch_add(recost_cells, Ordering::Relaxed);
+        }
+        if hit_cells > 0 {
+            self.stats.cache_hits.fetch_add(hit_cells, Ordering::Relaxed);
+        }
+        Ok(())
     }
 
     /// Measure a prebuilt schedule without caching it (count-dependent
@@ -488,7 +619,8 @@ mod tests {
         let err = eng
             .measure(key(cl), 8, &m, 2, 0, 1, &mut st, |_| Err::<Schedule, _>("nope"))
             .unwrap_err();
-        assert_eq!(err, "nope");
+        assert_eq!(err, MeasureError::Build("nope"));
+        assert_eq!(err.to_string(), "nope");
         assert_eq!(eng.cached_shapes(), 0);
         assert_eq!(eng.stats().cells, 0);
         // The key is retried on the next attempt.
@@ -534,6 +666,66 @@ mod tests {
         }
         assert_eq!(eng.stats().schedules_built, 3);
         assert!(eng.cached_shapes() <= 2, "{}", eng.cached_shapes());
+    }
+
+    #[test]
+    fn series_matches_per_cell_measure_bitwise() {
+        // One series call vs N measure calls on separate engines: cells
+        // and stats totals must be identical (the series batches the
+        // counter updates but may not change what they add up to).
+        let cl = Cluster::new(2, 4, 2);
+        let m = CostModel::hydra_baseline();
+        let counts = [1u64, 50, 50, 1, 7, 7, 60_000];
+        let per = SweepEngine::new();
+        let mut st_a = None;
+        let cells_a: Vec<CellResult> = counts
+            .iter()
+            .map(|&c| per.measure(key(cl), c, &m, 3, 1, 7, &mut st_a, build(cl)).unwrap())
+            .collect();
+        let ser = SweepEngine::new();
+        let mut st_b = None;
+        let cells_b =
+            ser.measure_series(key(cl), &counts, &m, 3, 1, 7, &mut st_b, build(cl)).unwrap();
+        assert_eq!(cells_a.len(), cells_b.len());
+        for (i, (a, b)) in cells_a.iter().zip(&cells_b).enumerate() {
+            assert_eq!(a.summary, b.summary, "cell {i} (c={})", counts[i]);
+            assert_eq!(a.algorithm, b.algorithm, "cell {i}");
+        }
+        assert_eq!(per.stats(), ser.stats(), "stats totals must batch losslessly");
+        let st = ser.stats();
+        assert_eq!(
+            (st.cells, st.schedules_built, st.recosts, st.cache_hits),
+            (7, 1, 4, 2),
+            "{st:?}"
+        );
+    }
+
+    #[test]
+    fn empty_series_is_a_no_op() {
+        let cl = Cluster::new(2, 4, 2);
+        let m = CostModel::hydra_baseline();
+        let eng = SweepEngine::new();
+        let mut st = None;
+        let cells = eng.measure_series(key(cl), &[], &m, 2, 0, 1, &mut st, build(cl)).unwrap();
+        assert!(cells.is_empty());
+        assert_eq!(eng.stats(), SweepStats::default());
+        assert_eq!(eng.cached_shapes(), 0);
+    }
+
+    #[test]
+    fn series_build_error_leaves_cache_empty() {
+        let cl = Cluster::new(2, 4, 2);
+        let m = CostModel::hydra_baseline();
+        let eng = SweepEngine::new();
+        let mut st = None;
+        let err = eng
+            .measure_series(key(cl), &[1, 2, 3], &m, 2, 0, 1, &mut st, |_| {
+                Err::<Schedule, _>("nope")
+            })
+            .unwrap_err();
+        assert!(matches!(err, MeasureError::Build("nope")), "{err:?}");
+        assert_eq!(eng.cached_shapes(), 0);
+        assert_eq!(eng.stats().cells, 0);
     }
 
     #[test]

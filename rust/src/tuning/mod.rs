@@ -537,6 +537,11 @@ impl Scenario {
 /// [`DecisionTable`]. Candidates that don't support the operation (and
 /// `tuned` itself — it would recurse) are filtered out; an empty
 /// remainder is a typed error, not a panic or an empty table.
+///
+/// The sweep rides the batched series path: `autotune_counts` makes one
+/// `SweepEngine::measure_series` call per candidate, so tuning a
+/// scenario costs one cache resolution per candidate rather than one
+/// per (candidate, count) cell.
 pub fn tune_scenario(
     engine: &Arc<SweepEngine>,
     sc: &Scenario,

@@ -2,6 +2,7 @@
 //! and a property-testing harness (no external crates are available
 //! offline, so these are in-repo).
 
+pub mod allocs;
 pub mod prng;
 pub mod stats;
 pub mod prop;

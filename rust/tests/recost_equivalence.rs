@@ -4,7 +4,9 @@
 //! `Simulator::recost`) must produce bitwise-identical `SimResult`s
 //! (makespan and event count) to a fresh `Simulator::new` on a freshly
 //! built schedule — and the resized schedule itself must equal the
-//! fresh build structurally.
+//! fresh build structurally. The schedule-free `Simulator::recost_count`
+//! path (used by `SweepEngine::measure_series`) is held to the same
+//! bitwise standard in the same sweep.
 //!
 //! This is exactly the lane-decomposition property the cache relies on
 //! (arXiv:1910.13373: structure fixed, block sizes vary); any algorithm
@@ -31,10 +33,16 @@ fn check(name: &str, build: impl Fn(u64) -> Schedule) {
     let m = model();
     let mut s = build(COUNTS[0]);
     let mut sim = Simulator::new(&s, &m);
+    // The schedule-free series path (`Simulator::recost_count`, flat
+    // sizing arrays) must agree bitwise with both the schedule-driven
+    // recost and the fresh build.
+    let mut flat = Simulator::new(&s, &m);
     let mut st = sim.new_state();
+    let mut flat_st = flat.new_state();
     for &c in &COUNTS[1..] {
         s.resize_count(c);
-        sim.recost(&s);
+        sim.recost(&s).expect("same structure");
+        flat.recost_count(c);
         let fresh_sched = build(c);
         assert_eq!(
             s.rounds, fresh_sched.rounds,
@@ -44,8 +52,10 @@ fn check(name: &str, build: impl Fn(u64) -> Schedule) {
         let mut fresh_st = fresh.new_state();
         for seed in [0u64, 1, 0xC0FFEE] {
             let a = sim.run_into(&mut st, seed);
+            let f = flat.run_into(&mut flat_st, seed);
             let b = fresh.run_into(&mut fresh_st, seed);
             assert_eq!(a, b, "{name} c={c} seed={seed}: recost != fresh");
+            assert_eq!(f, b, "{name} c={c} seed={seed}: recost_count != fresh");
         }
     }
 }
@@ -158,7 +168,7 @@ fn hydra_scale_spot_check() {
     let mut st = sim.new_state();
     for c in [1_000u64, 1_000_000] {
         s.resize_count(c);
-        sim.recost(&s);
+        sim.recost(&s).expect("same structure");
         let fresh = Simulator::new(&bcast::build(cl, 0, c, alg), &m);
         assert_eq!(sim.run_into(&mut st, 3), fresh.run(3), "hydra klane bcast c={c}");
     }

@@ -1,0 +1,50 @@
+//! The zero-steady-state-allocation gate for the batched series path.
+//!
+//! The crate's global allocator (`mlane::util::allocs`) counts every
+//! heap allocation made by the current thread. A warm
+//! `SweepEngine::measure_series_into` pass — cached shape, reused
+//! `RepState`, pre-sized output buffer, identical count trajectory —
+//! must allocate nothing at all: the count grid is walked entirely
+//! over the simulator's flat arrays and the caller's arena.
+
+use mlane::algorithms::bcast::{self, BcastAlg};
+use mlane::model::CostModel;
+use mlane::schedule::Schedule;
+use mlane::sim::{AlgId, OpShape, SweepEngine, SweepKey};
+use mlane::topology::Cluster;
+use mlane::util::allocs::thread_allocations;
+
+#[test]
+fn warm_series_performs_zero_allocations() {
+    let cl = Cluster::new(3, 4, 2);
+    let m = CostModel::hydra_baseline();
+    let counts = [1u64, 7, 64, 869, 60_000, 7, 1];
+    let key = SweepKey {
+        cluster: cl,
+        op: OpShape::Bcast { root: 0 },
+        alg: AlgId { family: "klane", k: 2 },
+    };
+    let alg = BcastAlg::KLane { k: 2, two_phase: false };
+    let build = |c| Ok::<Schedule, std::convert::Infallible>(bcast::build(cl, 0, c, alg));
+    let eng = SweepEngine::new();
+    let mut st = None;
+    let mut out = Vec::new();
+
+    // Cold pass: builds the shape, sizes the rep state and the output
+    // buffer to their high-water marks for this trajectory.
+    eng.measure_series_into(key, &counts, &m, 3, 1, 7, &mut st, &mut out, build).unwrap();
+    let cold = out.clone();
+    out.clear();
+
+    // Warm pass: identical trajectory, everything reused.
+    let before = thread_allocations();
+    eng.measure_series_into(key, &counts, &m, 3, 1, 7, &mut st, &mut out, build).unwrap();
+    let after = thread_allocations();
+
+    assert_eq!(after - before, 0, "warm series must not touch the heap");
+    assert_eq!(out.len(), counts.len());
+    for (i, (a, b)) in cold.iter().zip(&out).enumerate() {
+        assert_eq!(a.summary, b.summary, "cell {i} (c={})", counts[i]);
+        assert_eq!(a.algorithm, b.algorithm, "cell {i}");
+    }
+}

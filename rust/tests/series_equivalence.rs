@@ -1,0 +1,89 @@
+//! Correctness gate for the batched series path: for every registry
+//! algorithm family, every operation it supports, and both cached and
+//! uncached (native-persona / count-dependent) code paths,
+//! `Collectives::run_series` over a count grid must be bitwise
+//! identical — cell for cell — to a per-count `Collectives::run` loop.
+//!
+//! The grid deliberately repeats counts (cache hits) and revisits
+//! earlier counts (recost back down) so every branch of the series
+//! loop is exercised, and the engine-level sweep stats are checked to
+//! add up identically whether the counters are updated per cell or
+//! batched once per series.
+
+use mlane::algorithms::registry::{registry, OpKind};
+use mlane::coordinator::{Collectives, Op};
+use mlane::model::PersonaName;
+use mlane::topology::Cluster;
+
+/// Repeats and revisits on purpose: build, recost, hit, recost-back.
+const COUNTS: &[u64] = &[1, 7, 64, 7, 869, 64, 60_000, 1];
+
+fn coll(persona: PersonaName) -> Collectives {
+    let mut c = Collectives::new(Cluster::new(2, 4, 2), persona);
+    c.reps = 3;
+    c.warmup = 1;
+    c
+}
+
+#[test]
+fn run_series_matches_per_count_run_for_every_registry_algorithm() {
+    for persona in [PersonaName::OpenMpi, PersonaName::IntelMpi] {
+        for entry in registry().entries() {
+            let alg = entry.instantiate(2);
+            for kind in OpKind::ALL {
+                if !entry.supports(kind) {
+                    continue;
+                }
+                let op = kind.op(1);
+                // Fresh Collectives per mode: both sweeps start from a
+                // cold cache, so equality covers the build cell too.
+                let per = coll(persona);
+                let cell_by_cell: Vec<_> = COUNTS
+                    .iter()
+                    .map(|&c| {
+                        per.run(op.with_count(c), &alg)
+                            .unwrap_or_else(|e| panic!("{kind} {alg:?} c={c}: {e}"))
+                    })
+                    .collect();
+                let ser = coll(persona);
+                let series = ser
+                    .run_series(op, COUNTS, &alg)
+                    .unwrap_or_else(|e| panic!("{kind} {alg:?}: {e}"));
+                assert_eq!(cell_by_cell.len(), series.len());
+                for (a, b) in cell_by_cell.iter().zip(&series) {
+                    let ctx = format!("{persona:?} {kind} {alg:?} c={}", a.c);
+                    assert_eq!(a.summary, b.summary, "{ctx}");
+                    assert_eq!(a.algorithm, b.algorithm, "{ctx}");
+                    assert_eq!(a.k, b.k, "{ctx}");
+                    assert_eq!(a.c, b.c, "{ctx}");
+                }
+                assert_eq!(
+                    per.sweep_stats(),
+                    ser.sweep_stats(),
+                    "{persona:?} {kind} {alg:?}: batched stats must add up identically"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn autotune_counts_is_stable_under_the_series_path() {
+    // The candidate-major autotune sweep rides run_series; its winners
+    // must match per-count autotune on a grid with repeated counts.
+    let c = coll(PersonaName::OpenMpi);
+    let counts = [64u64, 100_000, 64];
+    let op = OpKind::Scatter.op(1);
+    let cands = c.default_candidates(op);
+    let winners = c.autotune_counts(op, &counts, &cands).unwrap();
+    assert_eq!(winners.len(), counts.len());
+    for (w, &count) in winners.iter().zip(&counts) {
+        assert_eq!(w.c, count);
+        let (alg, m) = c.autotune(op.with_count(count), &cands).unwrap();
+        assert_eq!((w.alg.name(), w.alg.k()), (alg.name(), alg.k()), "c={count}");
+        assert_eq!(w.measurement.summary, m.summary, "c={count}");
+    }
+    // Repeated count, same candidate set: identical winner bitwise.
+    assert_eq!(winners[0].measurement.summary, winners[2].measurement.summary);
+    assert_eq!(winners[0].alg.name(), winners[2].alg.name());
+}
