@@ -9,11 +9,12 @@
 use std::time::Instant;
 
 use mlane::algorithms::{alltoall, bcast, registry};
+use mlane::analysis::{analyze, LintConfig};
 use mlane::exec::ExecRuntime;
 use mlane::harness::{
     merge_dir, run_plan_with, write_shard, Grid, Merged, Plan, RunConfig, BCAST_COUNTS,
 };
-use mlane::model::{CostModel, PersonaName};
+use mlane::model::{CostModel, Persona, PersonaName};
 use mlane::runtime::XlaService;
 use mlane::sim::{self, AlgId, OpShape, Simulator, SweepEngine, SweepKey};
 use mlane::topology::Cluster;
@@ -73,7 +74,8 @@ fn main() {
     let series = bench_series();
     let tune = bench_tune(cl);
     let shard = bench_shard_merge();
-    write_bench_json(events_per_s, &sweep, &series, &tune, &shard);
+    let lint = bench_lint(cl);
+    write_bench_json(events_per_s, &sweep, &series, &tune, &shard, &lint);
 
     println!("\n=== exec backend (4x4, klane alltoall c=1024) ===");
     let cl = Cluster::new(4, 4, 2);
@@ -411,6 +413,59 @@ fn bench_shard_merge() -> ShardBench {
     ShardBench { shards, rows, write_s, merge_s }
 }
 
+struct LintBench {
+    schedules: usize,
+    diags: usize,
+    lint_s: f64,
+}
+
+/// Static-analysis driver cost at Hydra scale: the registry's
+/// validation instances × every supported op, one `analyze` call per
+/// schedule — the `mlane lint` CI workload. Schedules are built outside
+/// the timer, so the number is the analysis cost alone: one shared
+/// bitset flow replay plus every pass, at p = 1152.
+fn bench_lint(cl: Cluster) -> LintBench {
+    println!("\n=== static analysis: full-registry lint (hydra scale) ===");
+    let persona = Persona::get(PersonaName::OpenMpi);
+    let count_for = |op: OpKind| match op {
+        OpKind::Bcast => 64u64,
+        OpKind::Scatter | OpKind::Gather => 16,
+        OpKind::Allgather | OpKind::Alltoall => 8,
+    };
+    let mut jobs = Vec::new();
+    for alg in registry::registry().validation_instances(cl) {
+        if alg.name() == "tuned" {
+            continue; // meta-entry: its cost is bench_tune's number
+        }
+        for op in OpKind::ALL {
+            if !alg.supports(op) {
+                continue;
+            }
+            let built = alg
+                .build(cl, &persona, op.op(count_for(op)))
+                .unwrap_or_else(|e| panic!("{} {op}: {e}", alg.label()));
+            jobs.push((built.schedule, alg.ports_required(cl, op)));
+        }
+    }
+    let t0 = Instant::now();
+    let mut diags = 0usize;
+    for (s, ports) in &jobs {
+        let a = analyze(s, &LintConfig::new(*ports));
+        assert!(a.is_clean(), "{} lints dirty at hydra scale:\n{}", s.algorithm, a.text());
+        diags += a.diagnostics.len();
+    }
+    let lint_s = t0.elapsed().as_secs_f64();
+    let bench = LintBench { schedules: jobs.len(), diags, lint_s };
+    println!(
+        "linted {} schedules in {:.2?} ({:.1} schedules/s, {} non-error diagnostics)",
+        bench.schedules,
+        std::time::Duration::from_secs_f64(bench.lint_s),
+        bench.schedules as f64 / bench.lint_s,
+        bench.diags
+    );
+    bench
+}
+
 /// Machine-readable perf record for trajectory tracking across PRs.
 fn write_bench_json(
     events_per_s: f64,
@@ -418,6 +473,7 @@ fn write_bench_json(
     series: &SeriesBench,
     tune: &TuneBench,
     shard: &ShardBench,
+    lint: &LintBench,
 ) {
     let json = format!(
         "{{\n  \"bench\": \"engine_perf\",\n  \"events_per_s\": {:.0},\n  \
@@ -432,7 +488,9 @@ fn write_bench_json(
          \"per_cell_steady_allocs\": {},\n  \"tune_scenario_s\": {:.6},\n  \
          \"tune_breakpoints\": {},\n  \"shard_count\": {},\n  \
          \"shard_rows\": {},\n  \"shard_write_s\": {:.6},\n  \
-         \"shard_merge_s\": {:.6}\n}}\n",
+         \"shard_merge_s\": {:.6},\n  \"lint_schedules\": {},\n  \
+         \"lint_diagnostics\": {},\n  \"lint_full_registry_s\": {:.6},\n  \
+         \"lint_schedules_per_s\": {:.2}\n}}\n",
         events_per_s,
         sweep.cells,
         sweep.cold_s,
@@ -458,6 +516,10 @@ fn write_bench_json(
         shard.rows,
         shard.write_s,
         shard.merge_s,
+        lint.schedules,
+        lint.diags,
+        lint.lint_s,
+        lint.schedules as f64 / lint.lint_s,
     );
     match std::fs::write("BENCH_engine.json", &json) {
         Ok(()) => println!("wrote BENCH_engine.json"),

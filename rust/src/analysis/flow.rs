@@ -1,0 +1,178 @@
+//! The shared holdings/flow computation every lint pass reads.
+//!
+//! One replay of the schedule in execution order (sends read the
+//! pre-round state; receives land when the round completes). Holdings
+//! are domain-indexed bitsets: each rank's *domain* is the sorted set
+//! of block ids it can ever hold (initial layout ∪ blocks addressed to
+//! it), so an alltoall at p = 1152 costs ~2p bits per rank instead of
+//! a p² hash set — the whole point of replacing the `HashSet` walk.
+//!
+//! The replay itself emits the per-transfer semantic facts — bad
+//! endpoints, unknown blocks, causality violations, redundant
+//! deliveries — in exactly the order the legacy first-error validator
+//! discovered them, which is what lets `schedule::validate` remain a
+//! thin "first diagnostic" wrapper.
+
+use super::{codes, DiagSink, Diagnostic, Severity};
+use crate::schedule::{Schedule, Transfer};
+
+/// Sentinel for "never" in the round-index tables.
+pub(crate) const NEVER: u32 = u32::MAX;
+
+/// Endpoint sanity shared by every pass: in-range, no self-message.
+pub(crate) fn endpoints_ok(s: &Schedule, t: &Transfer) -> bool {
+    let p = s.p();
+    t.src < p && t.dst < p && t.src != t.dst
+}
+
+fn word_len(bits: usize) -> usize {
+    bits.div_ceil(64)
+}
+
+fn test_bit(bits: &[u64], i: usize) -> bool {
+    bits[i >> 6] >> (i & 63) & 1 == 1
+}
+
+fn set_bit(bits: &mut [u64], i: usize) {
+    bits[i >> 6] |= 1 << (i & 63);
+}
+
+pub(crate) struct Flow {
+    /// Per rank: sorted, deduplicated block-id domain.
+    pub domain: Vec<Vec<u64>>,
+    /// Per rank: bitset over domain indices — holdings after the last
+    /// round.
+    held: Vec<Vec<u64>>,
+    /// Per rank, per domain index: round of first receive ([`NEVER`] =
+    /// initial or never held).
+    pub first_recv: Vec<Vec<u32>>,
+    /// Per rank, per domain index: round of the last send of a held
+    /// block ([`NEVER`] = never sent).
+    pub last_send: Vec<Vec<u32>>,
+}
+
+impl Flow {
+    /// Does `rank` hold `block` after the last round?
+    pub(crate) fn holds(&self, rank: usize, block: u64) -> bool {
+        self.domain[rank]
+            .binary_search(&block)
+            .is_ok_and(|i| test_bit(&self.held[rank], i))
+    }
+
+    pub(crate) fn run(s: &Schedule, sink: &mut DiagSink) -> Flow {
+        let p = s.p() as usize;
+        let nb = s.op.num_blocks(s.p());
+
+        let mut domain: Vec<Vec<u64>> =
+            (0..s.p()).map(|r| s.op.initial_blocks(r, s.p()).iter().collect()).collect();
+        for round in &s.rounds {
+            for t in &round.transfers {
+                if endpoints_ok(s, t) {
+                    domain[t.dst as usize].extend(t.blocks.iter());
+                }
+            }
+        }
+        for d in &mut domain {
+            d.sort_unstable();
+            d.dedup();
+        }
+
+        let mut held: Vec<Vec<u64>> =
+            domain.iter().map(|d| vec![0u64; word_len(d.len())]).collect();
+        let mut first_recv: Vec<Vec<u32>> = domain.iter().map(|d| vec![NEVER; d.len()]).collect();
+        let mut last_send = first_recv.clone();
+        for r in 0..p {
+            for b in s.op.initial_blocks(r as u32, s.p()).iter() {
+                let i = domain[r].binary_search(&b).expect("initial block is in the domain");
+                set_bit(&mut held[r], i);
+            }
+        }
+
+        for (ri, round) in s.rounds.iter().enumerate() {
+            // Sends read the pre-round state.
+            for (ti, t) in round.transfers.iter().enumerate() {
+                if !endpoints_ok(s, t) {
+                    sink.push(
+                        Diagnostic::new(
+                            Severity::Error,
+                            codes::BAD_ENDPOINTS,
+                            format!("bad endpoints {} -> {}", t.src, t.dst),
+                        )
+                        .at(ri, ti)
+                        .with("src", t.src)
+                        .with("dst", t.dst),
+                    );
+                    continue;
+                }
+                let src = t.src as usize;
+                for b in t.blocks.iter() {
+                    if b >= nb {
+                        sink.push(
+                            Diagnostic::new(
+                                Severity::Error,
+                                codes::UNKNOWN_BLOCK,
+                                format!("unknown block id {b}"),
+                            )
+                            .at(ri, ti)
+                            .with("block", b),
+                        );
+                        continue;
+                    }
+                    match domain[src].binary_search(&b) {
+                        Ok(i) if test_bit(&held[src], i) => last_send[src][i] = ri as u32,
+                        _ => sink.push(
+                            Diagnostic::new(
+                                Severity::Error,
+                                codes::CAUSALITY,
+                                format!("rank {} sent block {b} it does not hold", t.src),
+                            )
+                            .at(ri, ti)
+                            .with("src", t.src)
+                            .with("block", b),
+                        ),
+                    }
+                }
+            }
+            // Receives land when the round completes (bad-endpoint
+            // transfers deliver nothing).
+            for (ti, t) in round.transfers.iter().enumerate() {
+                if !endpoints_ok(s, t) {
+                    continue;
+                }
+                let dst = t.dst as usize;
+                let mut redundant = 0u64;
+                let mut sample = None;
+                for b in t.blocks.iter() {
+                    let i = domain[dst].binary_search(&b).expect("received block is in the domain");
+                    if test_bit(&held[dst], i) {
+                        redundant += 1;
+                        if sample.is_none() {
+                            sample = Some(b);
+                        }
+                    } else {
+                        set_bit(&mut held[dst], i);
+                        first_recv[dst][i] = ri as u32;
+                    }
+                }
+                if let Some(b) = sample {
+                    sink.push(
+                        Diagnostic::new(
+                            Severity::Warn,
+                            codes::REDUNDANT_TRANSFER,
+                            format!(
+                                "rank {} receives {redundant} block(s) it already holds (e.g. block {b})",
+                                t.dst
+                            ),
+                        )
+                        .at(ri, ti)
+                        .with("dst", t.dst)
+                        .with("count", redundant)
+                        .with("block", b),
+                    );
+                }
+            }
+        }
+
+        Flow { domain, held, first_recv, last_send }
+    }
+}

@@ -1,0 +1,550 @@
+//! Schedule static analysis: a lint driver over the schedule IR.
+//!
+//! The schedule is to this module what an AST is to a compiler front
+//! end. One shared flow computation ([`flow::Flow`]) replays the
+//! schedule once — per-rank holdings in domain-indexed bitsets, so full
+//! semantic analysis scales to the paper's p = 1152 alltoall schedules —
+//! and a registered set of lint passes ([`passes::PASSES`]) reads the
+//! result. Every finding becomes a structured [`Diagnostic`]; nothing
+//! stops at the first violation.
+//!
+//! Severities:
+//! * **error** — the schedule does not implement its collective
+//!   (causality, port budget, delivery, endpoint/block sanity) or
+//!   cannot complete (rendezvous deadlock);
+//! * **warn** — the schedule is correct but wasteful (redundant
+//!   transfers, dead data) or oversubscribes node lanes (§2.2);
+//! * **info** — optimality observations (round count vs. the §2 lower
+//!   bound, mergeable rounds) and truncation notices.
+//!
+//! `schedule::validate`'s first-error API is now a thin wrapper over
+//! this driver; `mlane lint` and `registry_validation.rs` consume it
+//! exhaustively.
+
+pub(crate) mod flow;
+pub(crate) mod passes;
+
+use crate::harness::report::esc;
+use crate::topology::Cluster;
+use crate::{model::CostModel, schedule::Schedule};
+
+/// Stable lint codes — one per pass output kind. These are API: tests,
+/// CI and downstream tooling match on them.
+pub mod codes {
+    /// A rank sends a block it does not hold.
+    pub const CAUSALITY: &str = "causality";
+    /// A rank exceeds the per-round k-ported send/recv budget (§2.1).
+    pub const PORT_BUDGET: &str = "port-budget";
+    /// A rank is missing a required block at completion.
+    pub const DELIVERY: &str = "delivery";
+    /// A transfer references a block id outside the collective layout.
+    pub const UNKNOWN_BLOCK: &str = "unknown-block";
+    /// Transfer src/dst out of range or self-message.
+    pub const BAD_ENDPOINTS: &str = "bad-endpoints";
+    /// A node drives more concurrent off-node messages than it has
+    /// lanes (§2.2) in some round.
+    pub const LANE_CONTENTION: &str = "lane-contention";
+    /// Schedule-level summary of lane contention: worst per-round
+    /// serialization factor.
+    pub const LANE_SERIALIZATION: &str = "lane-serialization";
+    /// A round's rendezvous sends form a waits-for cycle.
+    pub const DEADLOCK: &str = "deadlock";
+    /// A rank receives blocks it already holds.
+    pub const REDUNDANT_TRANSFER: &str = "redundant-transfer";
+    /// A rank receives blocks it neither requires nor forwards.
+    pub const DEAD_DATA: &str = "dead-data";
+    /// Round count exceeds the k-ported lower bound ceil(log_{k+1} p).
+    pub const ROUND_BOUND: &str = "round-bound";
+    /// Two adjacent rounds are independent and fit the port budget
+    /// merged.
+    pub const MERGEABLE_ROUNDS: &str = "mergeable-rounds";
+    /// Per-code diagnostic cap reached; the drop count is reported
+    /// instead of silently truncating.
+    pub const TRUNCATED: &str = "truncated";
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warn,
+    Info,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warn",
+            Severity::Info => "info",
+        }
+    }
+}
+
+impl std::fmt::Display for Severity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Where in the schedule a diagnostic points: a round, a (round,
+/// transfer index) pair, or the whole schedule (both `None`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Span {
+    pub round: Option<usize>,
+    pub transfer: Option<usize>,
+}
+
+/// A machine-readable payload value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+impl From<u64> for Value {
+    fn from(v: u64) -> Self {
+        Value::U64(v)
+    }
+}
+
+impl From<u32> for Value {
+    fn from(v: u32) -> Self {
+        Value::U64(u64::from(v))
+    }
+}
+
+impl From<usize> for Value {
+    fn from(v: usize) -> Self {
+        Value::U64(v as u64)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::F64(v)
+    }
+}
+
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(v.to_string())
+    }
+}
+
+impl Value {
+    fn push_json(&self, out: &mut String) {
+        match self {
+            Value::U64(v) => out.push_str(&v.to_string()),
+            Value::F64(v) => out.push_str(&format!("{v}")),
+            Value::Str(v) => {
+                out.push('"');
+                out.push_str(&esc(v));
+                out.push('"');
+            }
+        }
+    }
+}
+
+/// One lint finding.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    /// Stable code from [`codes`].
+    pub code: &'static str,
+    pub span: Span,
+    pub message: String,
+    /// Machine-readable fields, in emission order.
+    pub payload: Vec<(&'static str, Value)>,
+}
+
+impl Diagnostic {
+    pub fn new(severity: Severity, code: &'static str, message: String) -> Self {
+        Diagnostic { severity, code, span: Span::default(), message, payload: Vec::new() }
+    }
+
+    pub fn at_round(mut self, round: usize) -> Self {
+        self.span.round = Some(round);
+        self
+    }
+
+    pub fn at(mut self, round: usize, transfer: usize) -> Self {
+        self.span = Span { round: Some(round), transfer: Some(transfer) };
+        self
+    }
+
+    pub fn with(mut self, key: &'static str, value: impl Into<Value>) -> Self {
+        self.payload.push((key, value.into()));
+        self
+    }
+
+    /// Payload lookup for integer fields.
+    pub fn u64_field(&self, key: &str) -> Option<u64> {
+        self.payload.iter().find_map(|(k, v)| match v {
+            Value::U64(n) if *k == key => Some(*n),
+            _ => None,
+        })
+    }
+
+    /// One human-readable line: `severity[code] span: message`.
+    pub fn text_line(&self) -> String {
+        let span = match (self.span.round, self.span.transfer) {
+            (Some(r), Some(t)) => format!("round {r}/t{t}"),
+            (Some(r), None) => format!("round {r}"),
+            _ => "schedule".to_string(),
+        };
+        format!("{}[{}] {}: {}", self.severity, self.code, span, self.message)
+    }
+
+    fn push_json(&self, out: &mut String) {
+        out.push_str("{\"severity\":\"");
+        out.push_str(self.severity.name());
+        out.push_str("\",\"code\":\"");
+        out.push_str(self.code);
+        out.push_str("\",\"round\":");
+        match self.span.round {
+            Some(r) => out.push_str(&r.to_string()),
+            None => out.push_str("null"),
+        }
+        out.push_str(",\"transfer\":");
+        match self.span.transfer {
+            Some(t) => out.push_str(&t.to_string()),
+            None => out.push_str("null"),
+        }
+        out.push_str(",\"message\":\"");
+        out.push_str(&esc(&self.message));
+        out.push_str("\",\"payload\":{");
+        for (i, (k, v)) in self.payload.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('"');
+            out.push_str(k);
+            out.push_str("\":");
+            v.push_json(out);
+        }
+        out.push_str("}}");
+    }
+}
+
+/// Lint configuration. The defaults describe the shipped backends: the
+/// k of the k-ported model must be supplied (it is per-algorithm —
+/// `ports_required`); rendezvous thresholds default to "never" because
+/// the threaded exec backend buffers every message and cannot block a
+/// sender.
+#[derive(Clone, Copy, Debug)]
+pub struct LintConfig {
+    /// k of the k-ported model: per-rank per-round send/recv budget.
+    pub port_limit: u32,
+    /// Rendezvous threshold for off-node transfers, in bytes: messages
+    /// strictly larger are modelled as blocking the sender until the
+    /// receiver posts (what the deadlock pass searches for cycles
+    /// over). `u64::MAX` = fully buffered (our exec layer); set to a
+    /// persona's `eager_net` to lint portability against a
+    /// synchronous-rendezvous MPI.
+    pub rendezvous_net: u64,
+    /// Same threshold for on-node (shared-memory) transfers.
+    pub rendezvous_shm: u64,
+    /// Per-lint-code diagnostic cap; overflow surfaces as one
+    /// [`codes::TRUNCATED`] info per code, never silently.
+    pub max_per_lint: usize,
+}
+
+impl LintConfig {
+    pub fn new(port_limit: u32) -> Self {
+        LintConfig {
+            port_limit,
+            rendezvous_net: u64::MAX,
+            rendezvous_shm: u64::MAX,
+            max_per_lint: 50,
+        }
+    }
+
+    /// Model a synchronous-rendezvous backend: messages above the
+    /// given eager thresholds block the sender.
+    pub fn with_rendezvous(mut self, net: u64, shm: u64) -> Self {
+        self.rendezvous_net = net;
+        self.rendezvous_shm = shm;
+        self
+    }
+
+    /// Rendezvous thresholds from the baseline cost model's eager
+    /// limits (`CostModel::hydra_baseline`).
+    pub fn with_baseline_rendezvous(self) -> Self {
+        let m = CostModel::hydra_baseline();
+        self.with_rendezvous(m.eager_net, m.eager_shm)
+    }
+}
+
+/// Collects diagnostics with a per-code cap. Passes push findings in
+/// discovery order; `finish` appends one truncation notice per capped
+/// code so no drop is silent.
+pub(crate) struct DiagSink {
+    cap: usize,
+    diags: Vec<Diagnostic>,
+    kept: Vec<(&'static str, usize)>,
+    dropped: Vec<(&'static str, usize)>,
+}
+
+impl DiagSink {
+    pub(crate) fn new(cap: usize) -> Self {
+        DiagSink { cap: cap.max(1), diags: Vec::new(), kept: Vec::new(), dropped: Vec::new() }
+    }
+
+    pub(crate) fn push(&mut self, d: Diagnostic) {
+        match self.kept.iter_mut().find(|(c, _)| *c == d.code) {
+            Some((_, n)) if *n >= self.cap => {
+                match self.dropped.iter_mut().find(|(c, _)| *c == d.code) {
+                    Some((_, m)) => *m += 1,
+                    None => self.dropped.push((d.code, 1)),
+                }
+            }
+            Some((_, n)) => {
+                *n += 1;
+                self.diags.push(d);
+            }
+            None => {
+                self.kept.push((d.code, 1));
+                self.diags.push(d);
+            }
+        }
+    }
+
+    pub(crate) fn finish(mut self) -> Vec<Diagnostic> {
+        let cap = self.cap;
+        for (code, n) in std::mem::take(&mut self.dropped) {
+            self.diags.push(
+                Diagnostic::new(
+                    Severity::Info,
+                    codes::TRUNCATED,
+                    format!("{n} more {code} diagnostic(s) suppressed (cap {cap} per lint)"),
+                )
+                .with("lint", code)
+                .with("dropped", n)
+                .with("cap", cap),
+            );
+        }
+        self.diags
+    }
+}
+
+/// The result of linting one schedule: every finding, in pass order.
+#[derive(Clone, Debug)]
+pub struct Analysis {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Analysis {
+    pub fn count_of(&self, sev: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == sev).count()
+    }
+
+    pub fn errors(&self) -> usize {
+        self.count_of(Severity::Error)
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.count_of(Severity::Warn)
+    }
+
+    pub fn infos(&self) -> usize {
+        self.count_of(Severity::Info)
+    }
+
+    /// No error-severity findings (warnings/infos allowed).
+    pub fn is_clean(&self) -> bool {
+        self.errors() == 0
+    }
+
+    pub fn first_error(&self) -> Option<&Diagnostic> {
+        self.diagnostics.iter().find(|d| d.severity == Severity::Error)
+    }
+
+    /// One text line per diagnostic (empty string when clean and quiet).
+    pub fn text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&d.text_line());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// JSON array of diagnostics (strict, machine-readable).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("[");
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            out.push_str(if i == 0 { "\n  " } else { ",\n  " });
+            d.push_json(&mut out);
+        }
+        if !self.diagnostics.is_empty() {
+            out.push('\n');
+        }
+        out.push(']');
+        out
+    }
+}
+
+/// Run every registered lint pass over one shared flow computation and
+/// collect all findings.
+pub fn analyze(s: &Schedule, cfg: &LintConfig) -> Analysis {
+    let mut sink = DiagSink::new(cfg.max_per_lint);
+    let flow = flow::Flow::run(s, &mut sink);
+    let ctx = passes::PassCtx { s, cfg, flow: &flow };
+    for (_, pass) in passes::PASSES {
+        pass(&ctx, &mut sink);
+    }
+    Analysis { diagnostics: sink.finish() }
+}
+
+/// One linted (algorithm, op, count) cell of a lint run.
+#[derive(Clone, Debug)]
+pub struct LintEntry {
+    pub algorithm: String,
+    pub op: &'static str,
+    pub count: u64,
+    pub persona: &'static str,
+    pub cluster: Cluster,
+    pub port_limit: u32,
+    pub analysis: Analysis,
+}
+
+/// A full `mlane lint` run: one entry per linted schedule, renderable
+/// as text or strict JSON. Rendering lives here (not in the CLI) so it
+/// shares the report layer's string escaping.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    pub entries: Vec<LintEntry>,
+}
+
+impl LintReport {
+    pub fn errors(&self) -> usize {
+        self.entries.iter().map(|e| e.analysis.errors()).sum()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.entries.iter().map(|e| e.analysis.warnings()).sum()
+    }
+
+    pub fn infos(&self) -> usize {
+        self.entries.iter().map(|e| e.analysis.infos()).sum()
+    }
+
+    /// Text rendering: clean schedules stay silent; every finding is
+    /// listed under its schedule header; one summary line at the end.
+    pub fn text(&self) -> String {
+        let mut out = String::new();
+        for e in &self.entries {
+            if e.analysis.diagnostics.is_empty() {
+                continue;
+            }
+            out.push_str(&format!(
+                "== {} {} c={} on {}x{} (lanes={}) [{}] ports={}: {} error(s), {} warning(s), {} info(s)\n",
+                e.algorithm,
+                e.op,
+                e.count,
+                e.cluster.nodes,
+                e.cluster.cores,
+                e.cluster.lanes,
+                e.persona,
+                e.port_limit,
+                e.analysis.errors(),
+                e.analysis.warnings(),
+                e.analysis.infos(),
+            ));
+            for d in &e.analysis.diagnostics {
+                out.push_str("  ");
+                out.push_str(&d.text_line());
+                out.push('\n');
+            }
+        }
+        out.push_str(&format!(
+            "linted {} schedule(s): {} error(s), {} warning(s), {} info(s)\n",
+            self.entries.len(),
+            self.errors(),
+            self.warnings(),
+            self.infos(),
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{{\n  \"schedules\": {},\n  \"errors\": {},\n  \"warnings\": {},\n  \"infos\": {},\n  \"entries\": [",
+            self.entries.len(),
+            self.errors(),
+            self.warnings(),
+            self.infos(),
+        ));
+        for (i, e) in self.entries.iter().enumerate() {
+            out.push_str(if i == 0 { "\n    " } else { ",\n    " });
+            out.push_str(&format!(
+                "{{\"algorithm\":\"{}\",\"op\":\"{}\",\"count\":{},\"persona\":\"{}\",\"nodes\":{},\"cores\":{},\"lanes\":{},\"port_limit\":{},\"errors\":{},\"warnings\":{},\"infos\":{},\"diagnostics\":[",
+                esc(&e.algorithm),
+                e.op,
+                e.count,
+                e.persona,
+                e.cluster.nodes,
+                e.cluster.cores,
+                e.cluster.lanes,
+                e.port_limit,
+                e.analysis.errors(),
+                e.analysis.warnings(),
+                e.analysis.infos(),
+            ));
+            for (j, d) in e.analysis.diagnostics.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                d.push_json(&mut out);
+            }
+            out.push_str("]}");
+        }
+        if !self.entries.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str("]\n}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_line_spans() {
+        let d = Diagnostic::new(Severity::Error, codes::CAUSALITY, "boom".into());
+        assert_eq!(d.clone().text_line(), "error[causality] schedule: boom");
+        assert_eq!(d.clone().at_round(3).text_line(), "error[causality] round 3: boom");
+        assert_eq!(d.at(3, 1).text_line(), "error[causality] round 3/t1: boom");
+    }
+
+    #[test]
+    fn sink_caps_per_code_and_reports_drops() {
+        let mut sink = DiagSink::new(2);
+        for _ in 0..5 {
+            sink.push(Diagnostic::new(Severity::Warn, codes::REDUNDANT_TRANSFER, "dup".into()));
+        }
+        sink.push(Diagnostic::new(Severity::Error, codes::CAUSALITY, "real".into()));
+        let diags = sink.finish();
+        // 2 kept + 1 other-code + 1 truncation notice
+        assert_eq!(diags.len(), 4);
+        let trunc = diags.last().unwrap();
+        assert_eq!(trunc.code, codes::TRUNCATED);
+        assert_eq!(trunc.u64_field("dropped"), Some(3));
+        assert_eq!(trunc.u64_field("cap"), Some(2));
+    }
+
+    #[test]
+    fn json_escapes_and_nulls() {
+        let d = Diagnostic::new(Severity::Info, codes::ROUND_BOUND, "a \"b\"".into())
+            .with("rounds", 3u64);
+        let a = Analysis { diagnostics: vec![d] };
+        let j = a.to_json();
+        assert!(j.contains("\"round\":null"), "{j}");
+        assert!(j.contains("a \\\"b\\\""), "{j}");
+        assert!(j.contains("\"payload\":{\"rounds\":3}"), "{j}");
+    }
+}

@@ -1,0 +1,429 @@
+//! The registered lint passes.
+//!
+//! Every pass is a plain function over [`PassCtx`] (the schedule, the
+//! lint configuration, and the shared [`Flow`] computation) pushing
+//! findings into the [`DiagSink`]. To add a pass: write the function,
+//! give its output a stable code in [`super::codes`], and append one
+//! entry to [`PASSES`] — the driver, CLI, tests and report layer pick
+//! it up from there.
+
+use std::collections::{HashMap, HashSet};
+
+use super::flow::{endpoints_ok, Flow, NEVER};
+use super::{codes, DiagSink, Diagnostic, LintConfig, Severity};
+use crate::algorithms::common::ceil_log;
+use crate::schedule::Schedule;
+
+pub(crate) struct PassCtx<'a> {
+    pub s: &'a Schedule,
+    pub cfg: &'a LintConfig,
+    pub flow: &'a Flow,
+}
+
+pub(crate) type PassFn = fn(&PassCtx<'_>, &mut DiagSink);
+
+/// Registered lint passes, in emission order. The flow replay itself
+/// contributes the per-transfer facts (endpoints, unknown blocks,
+/// causality, redundant transfers) before any of these run.
+pub(crate) const PASSES: &[(&str, PassFn)] = &[
+    ("delivery", |ctx, sink| delivery(ctx.s, ctx.flow, sink)),
+    ("port-budget", |ctx, sink| ports(ctx.s, ctx.cfg.port_limit, false, sink)),
+    ("lane-contention", lane_contention),
+    ("deadlock", deadlock),
+    ("dead-data", dead_data),
+    ("round-bound", round_bound),
+    ("mergeable-rounds", mergeable_rounds),
+];
+
+/// The collective's postcondition: every rank holds its required
+/// blocks after the last round.
+pub(crate) fn delivery(s: &Schedule, flow: &Flow, sink: &mut DiagSink) {
+    let p = s.p();
+    for r in 0..p {
+        for b in s.op.required_blocks(r, p).iter() {
+            if !flow.holds(r as usize, b) {
+                sink.push(
+                    Diagnostic::new(
+                        Severity::Error,
+                        codes::DELIVERY,
+                        format!("rank {r} missing required block {b} at completion"),
+                    )
+                    .with("rank", r)
+                    .with("block", b),
+                );
+            }
+        }
+    }
+}
+
+/// The k-ported constraint (§2.1): within a round no rank sources or
+/// sinks more than `limit` messages. Counts are full-round totals over
+/// well-formed transfers; one diagnostic per (round, rank), anchored at
+/// the first transfer that touches the oversubscribed rank.
+///
+/// `emit_endpoints` re-emits bad-endpoint facts in transfer order —
+/// used by the standalone `validate_ports` wrapper, which must
+/// reproduce the legacy first-error ordering without running the full
+/// flow replay (the driver passes `false`: the flow already emitted
+/// them).
+pub(crate) fn ports(s: &Schedule, limit: u32, emit_endpoints: bool, sink: &mut DiagSink) {
+    let p = s.p() as usize;
+    let mut sends = vec![0u32; p];
+    let mut recvs = vec![0u32; p];
+    let mut reported = vec![false; p];
+    let mut flagged: Vec<usize> = Vec::new();
+    for (ri, round) in s.rounds.iter().enumerate() {
+        for (ti, t) in round.transfers.iter().enumerate() {
+            if !endpoints_ok(s, t) {
+                if emit_endpoints {
+                    sink.push(
+                        Diagnostic::new(
+                            Severity::Error,
+                            codes::BAD_ENDPOINTS,
+                            format!("bad endpoints {} -> {}", t.src, t.dst),
+                        )
+                        .at(ri, ti)
+                        .with("src", t.src)
+                        .with("dst", t.dst),
+                    );
+                }
+                continue;
+            }
+            sends[t.src as usize] += 1;
+            recvs[t.dst as usize] += 1;
+        }
+        for (ti, t) in round.transfers.iter().enumerate() {
+            if !endpoints_ok(s, t) {
+                continue;
+            }
+            for r in [t.src, t.dst] {
+                let (sn, rc) = (sends[r as usize], recvs[r as usize]);
+                if (sn > limit || rc > limit) && !reported[r as usize] {
+                    reported[r as usize] = true;
+                    flagged.push(r as usize);
+                    sink.push(
+                        Diagnostic::new(
+                            Severity::Error,
+                            codes::PORT_BUDGET,
+                            format!("rank {r} uses {sn} send / {rc} recv ports (limit {limit})"),
+                        )
+                        .at(ri, ti)
+                        .with("rank", r)
+                        .with("sends", sn)
+                        .with("recvs", rc)
+                        .with("limit", limit),
+                    );
+                }
+            }
+        }
+        for t in &round.transfers {
+            if endpoints_ok(s, t) {
+                sends[t.src as usize] = 0;
+                recvs[t.dst as usize] = 0;
+            }
+        }
+        for r in flagged.drain(..) {
+            reported[r] = false;
+        }
+    }
+}
+
+/// The k-lane constraint (§2.2): per round, a node's concurrent
+/// off-node sends (and receives) share its `lanes` network lanes. More
+/// than `lanes` of either means the backend serializes — warn with the
+/// per-round serialization factor, plus one schedule-level summary.
+/// Warn, not error: k-lane schedules drive all cores by design and pay
+/// for it in the cost model, but the oversubscription is worth seeing.
+fn lane_contention(ctx: &PassCtx<'_>, sink: &mut DiagSink) {
+    let s = ctx.s;
+    let cl = s.cluster;
+    let nodes = cl.nodes as usize;
+    let mut snd = vec![0u32; nodes];
+    let mut rcv = vec![0u32; nodes];
+    let mut touched: Vec<usize> = Vec::new();
+    let mut max_factor = 1u32;
+    let mut contended_rounds = 0u64;
+    for (ri, round) in s.rounds.iter().enumerate() {
+        for t in &round.transfers {
+            if !endpoints_ok(s, t) || cl.same_node(t.src, t.dst) {
+                continue;
+            }
+            let sn = cl.node_of(t.src) as usize;
+            let dn = cl.node_of(t.dst) as usize;
+            if snd[sn] == 0 && rcv[sn] == 0 {
+                touched.push(sn);
+            }
+            snd[sn] += 1;
+            if snd[dn] == 0 && rcv[dn] == 0 {
+                touched.push(dn);
+            }
+            rcv[dn] += 1;
+        }
+        let mut round_factor = 1u32;
+        for &n in &touched {
+            let peak = snd[n].max(rcv[n]);
+            if peak > cl.lanes {
+                let factor = peak.div_ceil(cl.lanes);
+                round_factor = round_factor.max(factor);
+                sink.push(
+                    Diagnostic::new(
+                        Severity::Warn,
+                        codes::LANE_CONTENTION,
+                        format!(
+                            "node {n} drives {} off-node sends / {} recvs over {} lane(s): ~{factor}x serialized",
+                            snd[n], rcv[n], cl.lanes
+                        ),
+                    )
+                    .at_round(ri)
+                    .with("node", n)
+                    .with("sends", snd[n])
+                    .with("recvs", rcv[n])
+                    .with("lanes", cl.lanes)
+                    .with("factor", factor),
+                );
+            }
+        }
+        if round_factor > 1 {
+            contended_rounds += 1;
+            max_factor = max_factor.max(round_factor);
+        }
+        for n in touched.drain(..) {
+            snd[n] = 0;
+            rcv[n] = 0;
+        }
+    }
+    if max_factor > 1 {
+        sink.push(
+            Diagnostic::new(
+                Severity::Info,
+                codes::LANE_SERIALIZATION,
+                format!(
+                    "{contended_rounds} of {} round(s) oversubscribe the node lanes (worst factor {max_factor})",
+                    s.rounds.len()
+                ),
+            )
+            .with("contended_rounds", contended_rounds)
+            .with("rounds", s.rounds.len())
+            .with("max_factor", max_factor),
+        );
+    }
+}
+
+/// Rendezvous deadlock: under a synchronous backend, a message above
+/// the eager threshold blocks its sender until the receiver posts —
+/// and a rank posts its receives only after its own sends complete
+/// (the per-round send-then-receive order both backends use). That
+/// induces a waits-for edge src → dst per rendezvous transfer; a cycle
+/// means no rank in it can ever progress. Our threaded exec layer
+/// buffers every message (thresholds default to "never"), so findings
+/// here are portability errors against rendezvous MPIs.
+fn deadlock(ctx: &PassCtx<'_>, sink: &mut DiagSink) {
+    let s = ctx.s;
+    let cl = s.cluster;
+    for (ri, round) in s.rounds.iter().enumerate() {
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for t in &round.transfers {
+            if !endpoints_ok(s, t) {
+                continue;
+            }
+            let threshold = if cl.same_node(t.src, t.dst) {
+                ctx.cfg.rendezvous_shm
+            } else {
+                ctx.cfg.rendezvous_net
+            };
+            if t.bytes > threshold {
+                edges.push((t.src, t.dst));
+            }
+        }
+        if edges.is_empty() {
+            continue;
+        }
+        let mut ranks: Vec<u32> = edges.iter().flat_map(|&(a, b)| [a, b]).collect();
+        ranks.sort_unstable();
+        ranks.dedup();
+        let idx = |r: u32| ranks.binary_search(&r).expect("endpoint is in the rank list");
+        let n = ranks.len();
+        let mut outdeg = vec![0u32; n];
+        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for &(a, b) in &edges {
+            let (ai, bi) = (idx(a), idx(b));
+            outdeg[ai] += 1;
+            preds[bi].push(ai);
+            succs[ai].push(bi);
+        }
+        // A rank with no pending rendezvous send completes its round;
+        // completing resolves every edge pointing at it. Fixpoint =
+        // Kahn's algorithm on the waits-for graph; leftovers wait
+        // forever.
+        let mut done: Vec<usize> = (0..n).filter(|&i| outdeg[i] == 0).collect();
+        let mut head = 0;
+        while head < done.len() {
+            let i = done[head];
+            head += 1;
+            for &a in &preds[i] {
+                outdeg[a] -= 1;
+                if outdeg[a] == 0 {
+                    done.push(a);
+                }
+            }
+        }
+        let stuck: Vec<usize> = (0..n).filter(|&i| outdeg[i] > 0).collect();
+        if stuck.is_empty() {
+            continue;
+        }
+        // Extract one concrete cycle: from any stuck rank, follow
+        // unresolved edges (which stay within the stuck set) until a
+        // rank repeats.
+        let mut on_path = vec![false; n];
+        let mut path: Vec<usize> = Vec::new();
+        let mut cur = stuck[0];
+        let cycle: Vec<u32> = loop {
+            if on_path[cur] {
+                let start = path.iter().position(|&x| x == cur).expect("repeat is on the path");
+                break path[start..].iter().map(|&i| ranks[i]).collect();
+            }
+            on_path[cur] = true;
+            path.push(cur);
+            cur = *succs[cur]
+                .iter()
+                .find(|&&j| outdeg[j] > 0)
+                .expect("a stuck rank waits on a stuck rank");
+        };
+        let mut desc = String::new();
+        for r in &cycle {
+            desc.push_str(&format!("{r} -> "));
+        }
+        desc.push_str(&cycle[0].to_string());
+        sink.push(
+            Diagnostic::new(
+                Severity::Error,
+                codes::DEADLOCK,
+                format!("{} rank(s) wait in a rendezvous cycle: {desc}", stuck.len()),
+            )
+            .at_round(ri)
+            .with("ranks", stuck.len())
+            .with("cycle_len", cycle.len()),
+        );
+    }
+}
+
+/// Dead data: blocks a rank received but neither requires nor ever
+/// forwards afterwards — wasted bandwidth the flow tables expose
+/// directly (first-receive vs. last-held-send round per domain block).
+fn dead_data(ctx: &PassCtx<'_>, sink: &mut DiagSink) {
+    let s = ctx.s;
+    let p = s.p();
+    for r in 0..p as usize {
+        let required = s.op.required_blocks(r as u32, p);
+        let mut count = 0u64;
+        let mut sample = None;
+        for (i, &b) in ctx.flow.domain[r].iter().enumerate() {
+            let fr = ctx.flow.first_recv[r][i];
+            if fr == NEVER || required.contains(b) {
+                continue;
+            }
+            let ls = ctx.flow.last_send[r][i];
+            if ls != NEVER && ls > fr {
+                continue; // forwarded after arrival
+            }
+            count += 1;
+            if sample.is_none() {
+                sample = Some(b);
+            }
+        }
+        if let Some(b) = sample {
+            sink.push(
+                Diagnostic::new(
+                    Severity::Warn,
+                    codes::DEAD_DATA,
+                    format!(
+                        "rank {r} receives {count} block(s) it neither requires nor forwards (e.g. block {b})"
+                    ),
+                )
+                .with("rank", r)
+                .with("count", count)
+                .with("block", b),
+            );
+        }
+    }
+}
+
+/// Round optimality (§2): any k-ported collective needs at least
+/// ceil(log_{k+1} p) rounds to even reach every rank. Slack over the
+/// bound is informational — latency-lean algorithms (round-robin
+/// alltoall, linear scatter) trade rounds for bandwidth on purpose.
+fn round_bound(ctx: &PassCtx<'_>, sink: &mut DiagSink) {
+    let s = ctx.s;
+    let p = s.p();
+    if p <= 1 || s.rounds.is_empty() || ctx.cfg.port_limit == 0 {
+        return;
+    }
+    let lower = ceil_log(p, ctx.cfg.port_limit + 1) as usize;
+    let rounds = s.rounds.len();
+    if rounds > lower {
+        sink.push(
+            Diagnostic::new(
+                Severity::Info,
+                codes::ROUND_BOUND,
+                format!(
+                    "{rounds} round(s); the {}-ported lower bound is {lower} (slack {})",
+                    ctx.cfg.port_limit,
+                    rounds - lower
+                ),
+            )
+            .with("rounds", rounds)
+            .with("lower", lower)
+            .with("slack", rounds - lower),
+        );
+    }
+}
+
+/// Adjacent rounds that could be one round: no data dependency (round
+/// r+1 sends nothing that arrived in round r), no shared (src, dst)
+/// pair, and the merged per-rank send/recv counts still fit the port
+/// budget. Node-phase rounds are structural (backends special-case
+/// them) and never merge candidates.
+fn mergeable_rounds(ctx: &PassCtx<'_>, sink: &mut DiagSink) {
+    let s = ctx.s;
+    let limit = ctx.cfg.port_limit;
+    for ri in 0..s.rounds.len().saturating_sub(1) {
+        let (a, b) = (&s.rounds[ri], &s.rounds[ri + 1]);
+        if a.node_phase.is_some() || b.node_phase.is_some() {
+            continue;
+        }
+        let pairs: HashSet<(u32, u32)> = a.transfers.iter().map(|t| (t.src, t.dst)).collect();
+        if b.transfers.iter().any(|t| pairs.contains(&(t.src, t.dst))) {
+            continue;
+        }
+        let mut ports: HashMap<u32, (u32, u32)> = HashMap::new();
+        for t in a.transfers.iter().chain(&b.transfers) {
+            ports.entry(t.src).or_default().0 += 1;
+            ports.entry(t.dst).or_default().1 += 1;
+        }
+        if ports.values().any(|&(sn, rc)| sn > limit || rc > limit) {
+            continue;
+        }
+        let received: HashSet<(u32, u64)> = a
+            .transfers
+            .iter()
+            .flat_map(|t| t.blocks.iter().map(move |bl| (t.dst, bl)))
+            .collect();
+        if b.transfers.iter().any(|t| t.blocks.iter().any(|bl| received.contains(&(t.src, bl)))) {
+            continue;
+        }
+        sink.push(
+            Diagnostic::new(
+                Severity::Info,
+                codes::MERGEABLE_ROUNDS,
+                format!(
+                    "rounds {ri} and {} are independent and fit the port budget merged",
+                    ri + 1
+                ),
+            )
+            .at_round(ri)
+            .with("round", ri)
+            .with("next", ri + 1),
+        );
+    }
+}

@@ -20,7 +20,7 @@ mod tests;
 
 pub use payload::{block_elem, gen_block};
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Barrier, Condvar, Mutex};
 use std::time::Instant;
 
@@ -55,24 +55,60 @@ pub(crate) type Message = Vec<(u64, Vec<i32>)>;
 /// Per-rank block storage, shared with phase leaders.
 pub(crate) type Store = Mutex<HashMap<u64, Vec<i32>>>;
 
-/// Per-rank mailbox keyed by (src, round).
+/// Typed execution-layer errors. These were `debug_assert!`s — invisible
+/// in release builds, and the duplicate-key case would then hang the
+/// run (a single-slot mailbox overwrite leaves the second `take`
+/// waiting forever). Now they surface as real errors everywhere.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ExecError {
+    /// Two transfers share a (src, dst, round) mailbox key: the
+    /// schedule breaks the one-message-per-pair-per-round invariant
+    /// the mailbox protocol is keyed on.
+    DuplicateMessage { src: u32, dst: u32, round: u32 },
+    /// An XLA phase leader assembled fewer elements for a (src, dst)
+    /// core pair than the group's uniform count promises.
+    UnderfilledPair { i: u32, j: u32, expected: u64, got: u64 },
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::DuplicateMessage { src, dst, round } => {
+                write!(f, "duplicate message {src} -> {dst} in round {round}")
+            }
+            ExecError::UnderfilledPair { i, j, expected, got } => {
+                write!(f, "pair ({i},{j}) underfilled: {got}/{expected} elements")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+/// Per-rank mailbox keyed by (src, round). Each key holds a queue, not
+/// a slot: delivery can never silently overwrite, so even a schedule
+/// that slips past validation cannot wedge a receiver — it fails with a
+/// typed [`ExecError`] at preflight instead.
 #[derive(Default)]
 struct Mailbox {
-    slots: Mutex<HashMap<(u32, u32), Message>>,
+    slots: Mutex<HashMap<(u32, u32), Vec<Message>>>,
     bell: Condvar,
 }
 
 impl Mailbox {
     fn put(&self, key: (u32, u32), msg: Message) {
-        let prev = self.slots.lock().unwrap().insert(key, msg);
-        debug_assert!(prev.is_none(), "duplicate message key {key:?}");
+        self.slots.lock().unwrap().entry(key).or_default().push(msg);
         self.bell.notify_all();
     }
 
     fn take(&self, key: (u32, u32)) -> Message {
         let mut slots = self.slots.lock().unwrap();
         loop {
-            if let Some(m) = slots.remove(&key) {
+            if let Some(q) = slots.get_mut(&key) {
+                let m = q.pop().expect("emptied queues are removed");
+                if q.is_empty() {
+                    slots.remove(&key);
+                }
                 return m;
             }
             slots = self.bell.wait(slots).unwrap();
@@ -132,6 +168,21 @@ impl ExecRuntime {
             bail!("exec backend refuses p = {p} > {} threads", self.max_threads);
         }
         let cl = schedule.cluster;
+
+        // ---- preflight: the mailbox protocol needs unique keys ----
+        let mut seen: HashSet<(u32, u32, u32)> = HashSet::new();
+        for (ri, round) in schedule.rounds.iter().enumerate() {
+            for t in &round.transfers {
+                if !seen.insert((t.src, t.dst, ri as u32)) {
+                    return Err(ExecError::DuplicateMessage {
+                        src: t.src,
+                        dst: t.dst,
+                        round: ri as u32,
+                    }
+                    .into());
+                }
+            }
+        }
 
         // ---- preprocess: per-rank rounds ----
         let mut rank_rounds: Vec<Vec<RankRound>> = (0..p).map(|_| Vec::new()).collect();

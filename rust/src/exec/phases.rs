@@ -11,7 +11,7 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, Result};
 
-use super::{PhaseGroup, Store};
+use super::{ExecError, PhaseGroup, Store};
 use crate::runtime::XlaService;
 use crate::schedule::{LocalOpKind, Schedule};
 
@@ -98,7 +98,15 @@ fn alltoall(
             x[pos..pos + d.len()].copy_from_slice(d);
             pos += d.len();
         }
-        debug_assert_eq!(pos - off, c, "pair ({i},{j}) underfilled");
+        if pos - off != c {
+            return Err(ExecError::UnderfilledPair {
+                i,
+                j,
+                expected: c as u64,
+                got: (pos - off) as u64,
+            }
+            .into());
+        }
     }
 
     let y = svc.run("node_alltoall", cl.cores, c as u64, x)?;

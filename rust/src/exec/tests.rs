@@ -78,6 +78,31 @@ fn wallclock_is_positive_and_warmup_discarded() {
 }
 
 #[test]
+fn duplicate_messages_are_a_typed_preflight_error() {
+    use crate::schedule::{BlockSet, Collective, Round, Schedule};
+    // Two transfers sharing (src, dst) in one round would collide on a
+    // mailbox key. This used to be a debug_assert — in release builds
+    // the second receive waited forever. The preflight now rejects the
+    // schedule with a typed ExecError before any worker thread spawns.
+    let cl = Cluster::new(1, 2, 1);
+    let mut s = Schedule::new(cl, Collective::Allgather { c: 2 }, "dup-test");
+    let a = s.transfer(0, 1, BlockSet::single(0));
+    let b = s.transfer(0, 1, BlockSet::single(0));
+    s.push_round(Round::of(vec![a, b]));
+    let err = channels().run(&s, 1, 0).unwrap_err();
+    assert!(
+        err.to_string().contains("duplicate message 0 -> 1 in round 0"),
+        "unexpected error: {err}"
+    );
+    // The same shape is what `mlane lint` reports as a port-budget /
+    // redundant-transfer finding; here we only pin the exec-layer guard.
+    assert_eq!(
+        ExecError::DuplicateMessage { src: 0, dst: 1, round: 0 }.to_string(),
+        "duplicate message 0 -> 1 in round 0"
+    );
+}
+
+#[test]
 fn xla_phase_path_klane_alltoall() {
     // klane alltoall's final local phase is a pure-local Alltoall group;
     // with n = 4 cores and c = 16 the artifact exists.

@@ -1,6 +1,13 @@
 //! `mlane` — k-ported vs. k-lane collective algorithms.
+// The one unsafe block in the crate is the counting global allocator
+// (`util::allocs`), which carries a scoped allow + SAFETY comment.
+#![deny(unsafe_code)]
+// Library code never prints: output goes through `harness::report`
+// sinks (the CLI binary and benches print, and are separate crates).
+#![deny(clippy::print_stdout)]
 pub mod topology;
 pub mod schedule;
+pub mod analysis;
 pub mod algorithms;
 pub mod model;
 pub mod sim;

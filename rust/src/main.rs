@@ -23,6 +23,10 @@
 //! mlane autotune --op <op> [--c C] [--nodes N] [--cores n] [--lanes L]
 //! mlane compare                       # simulated vs paper anchors
 //! mlane trace --op <op> --alg <alg> [--out FILE]  # Chrome trace of one run
+//! mlane lint   [--nodes N --cores n --lanes L] [--op OP[,OP...]]
+//!              [--alg NAME[:K][,NAME[:K]...]] [--k K] [--counts C[,C...]]
+//!              [--persona P] [--format text|json] [--out FILE]
+//!              [--eager-limit BYTES] [--max-per-lint N]  # exhaustive diagnostics
 //! mlane validate [--nodes N] [--cores n]  # registry-exhaustive invariants
 //! mlane algs                          # list the algorithm catalog
 //! ```
@@ -35,6 +39,7 @@
 //! `MLANE_REPS`/`MLANE_THREADS`/`MLANE_CACHE_SHAPES` are parsed here
 //! into a `harness::RunConfig` (flags override env) and passed down —
 //! the library itself is environment-free.
+#![deny(unsafe_code)]
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -42,6 +47,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Context, Result};
 
 use mlane::algorithms::registry::{registry, Alg, OpKind};
+use mlane::analysis::{analyze, LintConfig, LintEntry, LintReport};
 use mlane::coordinator::{Collectives, Op};
 use mlane::exec::ExecRuntime;
 use mlane::harness::{
@@ -50,7 +56,6 @@ use mlane::harness::{
 };
 use mlane::model::{Persona, PersonaName};
 use mlane::runtime::XlaService;
-use mlane::schedule::validate::{validate, validate_ports};
 use mlane::sim::SweepEngine;
 use mlane::topology::Cluster;
 use mlane::tuning::{self, Scenario, TuneConfig, TuningBook};
@@ -304,6 +309,26 @@ fn run() -> Result<()> {
             )?;
             cmd_trace(&args)
         }
+        "lint" => {
+            check_flags(
+                &args,
+                &[
+                    &[
+                        "op",
+                        "alg",
+                        "k",
+                        "counts",
+                        "persona",
+                        "format",
+                        "out",
+                        "eager-limit",
+                        "max-per-lint",
+                    ],
+                    CLUSTER_FLAGS,
+                ],
+            )?;
+            cmd_lint(&args)
+        }
         "validate" => {
             check_flags(&args, &[&["persona"], CLUSTER_FLAGS])?;
             cmd_validate(&args)
@@ -348,6 +373,13 @@ commands:
   autotune    pick the fastest algorithm         [--op --c --nodes --cores --lanes --persona]
   compare     simulated vs paper anchor cells
   trace       emit a Chrome-trace of one simulated run  [--op --alg ... --out FILE]
+  lint        run every static-analysis pass (invariants, lane contention,
+              rendezvous deadlock, redundancy, round optimality) over catalog
+              schedules; exhaustive diagnostics, exit 1 on any error finding
+                [--nodes --cores --lanes --op OP[,OP] --alg NAME[:K][,NAME[:K]] --k K]
+                [--counts C[,C] --persona P --format text|json --out FILE]
+                [--eager-limit BYTES  (model a rendezvous MPI; default: buffered)]
+                [--max-per-lint N  (per-code diagnostic cap, default 50)]
   validate    check schedule invariants for the whole catalog  [--nodes --cores --lanes --persona]
   algs        list the algorithm catalog
 
@@ -991,6 +1023,102 @@ fn validation_count(op: OpKind) -> u64 {
     }
 }
 
+/// The k-ported budget to lint/validate an instance against: the tuned
+/// meta-entry builds whatever its decision table picked, so verify the
+/// *dispatched* algorithm's port budget, not the meta budget (which is
+/// the max over candidates).
+fn port_budget(alg: &Alg, cl: Cluster, persona: PersonaName, kind: OpKind, c: u64) -> Result<u32> {
+    if alg.name() == "tuned" {
+        Ok(tuning::dispatch(cl, persona, kind, c)?.ports_required(cl, kind))
+    } else {
+        Ok(alg.ports_required(cl, kind))
+    }
+}
+
+/// `mlane lint`: every static-analysis pass over a grid of catalog
+/// schedules, all findings reported. Defaults to the full registry ×
+/// every supported operation at the full-scale 36x32 cluster — the CI
+/// gate runs exactly this and fails on any error-severity finding.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let cl = args.cluster()?;
+    let default_k = args.flag("k", cl.lanes)?;
+    let persona = Persona::get(args.persona()?);
+    // `parse_ops` defaults to bcast (the sweep default); lint wants the
+    // whole catalog unless the user narrows it.
+    let ops = match args.flags.get("op") {
+        None => OpKind::ALL.to_vec(),
+        Some(_) => parse_ops(args)?,
+    };
+    let algs = match parse_algs(args, default_k)? {
+        Some(list) => list,
+        None => registry().validation_instances(cl),
+    };
+    let counts = parse_counts(args)?;
+    let eager = match args.flags.get("eager-limit") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<u64>().map_err(|_| anyhow!("bad --eager-limit value: {v} (want bytes)"))?,
+        ),
+    };
+    let max_per_lint = match args.flags.get("max-per-lint") {
+        None => None,
+        Some(v) => Some(parse_positive(v, "max-per-lint")?),
+    };
+    let mut report = LintReport::default();
+    for alg in &algs {
+        for &kind in &OpKind::ALL {
+            if !ops.contains(&kind) || !alg.supports(kind) {
+                continue;
+            }
+            let cts: &[u64] = match &counts {
+                Some(v) => v,
+                None => &[validation_count(kind)],
+            };
+            for &c in cts {
+                let built = alg
+                    .build(cl, &persona, kind.op(c))
+                    .map_err(|e| anyhow!("{} {kind}: {e}", alg.label()))?;
+                let ports = port_budget(alg, cl, persona.name, kind, c)?;
+                let mut cfg = LintConfig::new(ports);
+                if let Some(limit) = eager {
+                    cfg = cfg.with_rendezvous(limit, limit);
+                }
+                if let Some(cap) = max_per_lint {
+                    cfg.max_per_lint = cap;
+                }
+                report.entries.push(LintEntry {
+                    algorithm: alg.label(),
+                    op: kind.name(),
+                    count: c,
+                    persona: persona.name.key(),
+                    cluster: cl,
+                    port_limit: ports,
+                    analysis: analyze(&built.schedule, &cfg),
+                });
+            }
+        }
+    }
+    if report.entries.is_empty() {
+        bail!("nothing to lint: no requested algorithm supports a requested op");
+    }
+    let rendered = match args.flags.get("format").map(String::as_str) {
+        None | Some("text") => report.text(),
+        Some("json") => report.to_json(),
+        Some(other) => bail!("unknown format {other} (formats: text|json)"),
+    };
+    match args.flags.get("out") {
+        Some(path) => {
+            write_out(path, &rendered)?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{rendered}"),
+    }
+    if report.errors() > 0 {
+        bail!("lint found {} error-severity diagnostic(s)", report.errors());
+    }
+    Ok(())
+}
+
 fn cmd_validate(args: &Args) -> Result<()> {
     let nodes = args.flag("nodes", 4u32)?;
     let cores = args.flag("cores", 4u32)?;
@@ -998,6 +1126,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
     let cl = Cluster::new(nodes, cores, lanes);
     let persona = Persona::get(args.persona()?);
     let mut count = 0;
+    let (mut warnings, mut infos) = (0, 0);
     // Registry-exhaustive: every registered instance × every operation
     // it supports — a new registration is covered with no edits here.
     for alg in registry().validation_instances(cl) {
@@ -1010,21 +1139,19 @@ fn cmd_validate(args: &Args) -> Result<()> {
                 .build(cl, &persona, kind.op(c))
                 .map_err(|e| anyhow!("{} {kind}: {e}", alg.label()))?;
             let s = &built.schedule;
-            validate(s).map_err(|v| anyhow!("{}: {v}", s.algorithm))?;
-            // The tuned meta-entry builds whatever its decision table
-            // picked: verify the *dispatched* algorithm's port budget,
-            // not the meta budget (which is the max over candidates).
-            let ports = if alg.name() == "tuned" {
-                tuning::dispatch(cl, persona.name, kind, c)?.ports_required(cl, kind)
-            } else {
-                alg.ports_required(cl, kind)
-            };
-            validate_ports(s, ports).map_err(|v| anyhow!("{} ports: {v}", s.algorithm))?;
+            let ports = port_budget(&alg, cl, persona.name, kind, c)?;
+            let analysis = analyze(s, &LintConfig::new(ports));
+            if let Some(d) = analysis.first_error() {
+                bail!("{} {kind}: {}", s.algorithm, d.text_line());
+            }
+            warnings += analysis.warnings();
+            infos += analysis.infos();
             count += 1;
         }
     }
     println!(
-        "validated {count} schedules on {nodes}x{cores} (lanes={lanes}): all invariants hold"
+        "validated {count} schedules on {nodes}x{cores} (lanes={lanes}): all invariants hold \
+         ({warnings} warnings, {infos} infos — `mlane lint` lists them)"
     );
     Ok(())
 }

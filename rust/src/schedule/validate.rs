@@ -1,4 +1,4 @@
-//! Schedule invariant checking.
+//! Schedule invariant checking — the first-error API.
 //!
 //! Three invariants, used both as library assertions and as the targets
 //! of the property tests:
@@ -12,14 +12,18 @@
 //! 3. **Delivery** — after the last round, every rank holds the blocks
 //!    the collective's postcondition requires.
 //!
-//! Causality/delivery track holdings with per-rank hash sets: O(total
-//! block movements). Fine for test-scale p; port checking is cheap and
-//! scales to the full p = 1152 schedules.
+//! Both checks are thin wrappers over the `analysis` lint driver (which
+//! replays holdings in domain-indexed bitsets, so they scale to the
+//! full p = 1152 schedules): run the relevant passes, return the first
+//! diagnostic as a typed [`Violation`]. Exhaustive callers — `mlane
+//! lint`, registry validation, CI — use [`crate::analysis::analyze`]
+//! directly and get *every* finding.
 
-use std::collections::HashSet;
+use crate::analysis::flow::Flow;
+use crate::analysis::{codes, passes, DiagSink, Diagnostic};
+use crate::topology::Rank;
 
 use super::{Schedule, Violation::*};
-use crate::topology::Rank;
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Violation {
@@ -58,84 +62,57 @@ impl std::fmt::Display for Violation {
     }
 }
 
+/// Map the first invariant diagnostic (in emission order, which matches
+/// the legacy first-error walk) back to a typed [`Violation`].
+/// Non-invariant lints riding along (e.g. redundant transfers the flow
+/// replay noticed) are ignored here.
+fn first_violation(diags: Vec<Diagnostic>) -> Result<(), Violation> {
+    for d in diags {
+        let round = d.span.round.unwrap_or(0);
+        let g = |k: &str| d.u64_field(k).unwrap_or(0);
+        match d.code {
+            codes::BAD_ENDPOINTS => {
+                return Err(BadEndpoints { round, src: g("src") as Rank, dst: g("dst") as Rank })
+            }
+            codes::UNKNOWN_BLOCK => return Err(UnknownBlock { round, block: g("block") }),
+            codes::CAUSALITY => {
+                return Err(CausalityViolated { round, src: g("src") as Rank, block: g("block") })
+            }
+            codes::DELIVERY => {
+                return Err(NotDelivered { rank: g("rank") as Rank, block: g("block") })
+            }
+            codes::PORT_BUDGET => {
+                return Err(PortLimitExceeded {
+                    round,
+                    rank: g("rank") as Rank,
+                    sends: g("sends") as u32,
+                    recvs: g("recvs") as u32,
+                    limit: g("limit") as u32,
+                })
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
 /// Check port limits only (cheap; scales to p = 1152 alltoall schedules).
 /// `limit` is the k of the k-ported model; k-lane schedules are built so
 /// each *rank* still sends/receives ≤ 1 message per round (lane sharing
 /// is a backend cost concern, not a schedule-shape one), so they pass
 /// with limit = 1.
 pub fn validate_ports(s: &Schedule, limit: u32) -> Result<(), Violation> {
-    let p = s.p() as usize;
-    let mut sends = vec![0u32; p];
-    let mut recvs = vec![0u32; p];
-    for (ri, round) in s.rounds.iter().enumerate() {
-        for t in &round.transfers {
-            if t.src >= s.p() || t.dst >= s.p() || t.src == t.dst {
-                return Err(BadEndpoints { round: ri, src: t.src, dst: t.dst });
-            }
-            sends[t.src as usize] += 1;
-            recvs[t.dst as usize] += 1;
-        }
-        for t in &round.transfers {
-            for r in [t.src, t.dst] {
-                let (sn, rc) = (sends[r as usize], recvs[r as usize]);
-                if sn > limit || rc > limit {
-                    return Err(PortLimitExceeded {
-                        round: ri,
-                        rank: r,
-                        sends: sn,
-                        recvs: rc,
-                        limit,
-                    });
-                }
-            }
-        }
-        for t in &round.transfers {
-            sends[t.src as usize] = 0;
-            recvs[t.dst as usize] = 0;
-        }
-    }
-    Ok(())
+    let mut sink = DiagSink::new(1);
+    passes::ports(s, limit, true, &mut sink);
+    first_violation(sink.finish())
 }
 
 /// Full semantic validation: causality + delivery (+ endpoint sanity).
 pub fn validate(s: &Schedule) -> Result<(), Violation> {
-    let p = s.p();
-    let nb = s.op.num_blocks(p);
-    let mut held: Vec<HashSet<u64>> = (0..p)
-        .map(|r| s.op.initial_blocks(r, p).iter().collect())
-        .collect();
-
-    for (ri, round) in s.rounds.iter().enumerate() {
-        // Sends read the pre-round state.
-        for t in &round.transfers {
-            if t.src >= p || t.dst >= p || t.src == t.dst {
-                return Err(BadEndpoints { round: ri, src: t.src, dst: t.dst });
-            }
-            for b in t.blocks.iter() {
-                if b >= nb {
-                    return Err(UnknownBlock { round: ri, block: b });
-                }
-                if !held[t.src as usize].contains(&b) {
-                    return Err(CausalityViolated { round: ri, src: t.src, block: b });
-                }
-            }
-        }
-        for t in &round.transfers {
-            let dst = t.dst as usize;
-            for b in t.blocks.iter() {
-                held[dst].insert(b);
-            }
-        }
-    }
-
-    for r in 0..p {
-        for b in s.op.required_blocks(r, p).iter() {
-            if !held[r as usize].contains(&b) {
-                return Err(NotDelivered { rank: r, block: b });
-            }
-        }
-    }
-    Ok(())
+    let mut sink = DiagSink::new(1);
+    let flow = Flow::run(s, &mut sink);
+    passes::delivery(s, &flow, &mut sink);
+    first_violation(sink.finish())
 }
 
 #[cfg(test)]
@@ -216,5 +193,28 @@ mod tests {
         };
         s.push_round(Round::of(vec![t]));
         assert!(matches!(validate(&s), Err(UnknownBlock { block: 5, .. })));
+    }
+
+    #[test]
+    fn violation_fields_survive_the_diagnostic_round_trip() {
+        // The wrapper rebuilds typed violations from diagnostic
+        // payloads; pin every field, not just the variant.
+        let mut s = sched();
+        let t = s.transfer(1, 2, BlockSet::single(0));
+        s.push_round(Round::of(vec![t]));
+        s.rounds.insert(0, Round::of(vec![]));
+        assert_eq!(
+            validate(&s),
+            Err(CausalityViolated { round: 1, src: 1, block: 0 })
+        );
+
+        let mut s = sched();
+        let t1 = s.transfer(0, 1, BlockSet::single(0));
+        let t2 = s.transfer(0, 2, BlockSet::single(0));
+        s.push_round(Round::of(vec![t1, t2]));
+        assert_eq!(
+            validate_ports(&s, 1),
+            Err(PortLimitExceeded { round: 0, rank: 0, sends: 2, recvs: 0, limit: 1 })
+        );
     }
 }

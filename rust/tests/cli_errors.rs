@@ -108,6 +108,9 @@ fn help_and_algs_are_registry_driven() {
         "tune",
         "decision tables",
         "tuned",
+        "lint",
+        "--eager-limit",
+        "--max-per-lint",
     ] {
         assert!(text.contains(needle), "help missing {needle:?}: {text}");
     }
@@ -116,6 +119,59 @@ fn help_and_algs_are_registry_driven() {
     assert_eq!(algs.status.code(), Some(0));
     assert!(stdout(&algs).contains("klane2p"), "{}", stdout(&algs));
     assert!(stdout(&algs).contains("tuned"), "{}", stdout(&algs));
+}
+
+#[test]
+fn lint_smoke_full_registry_exits_clean() {
+    // The static-analysis acceptance path through a real process: the
+    // whole registry on a small cluster lints with zero error-severity
+    // diagnostics and a summary line; JSON is the same data, strict.
+    let out = mlane(&["lint", "--nodes", "2", "--cores", "2", "--lanes", "2"]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.contains("linted "), "no summary line: {s}");
+    assert!(s.contains(" 0 error(s)"), "errors on a clean registry: {s}");
+
+    let out = mlane(&[
+        "lint", "--nodes", "2", "--cores", "2", "--lanes", "2", "--format", "json",
+    ]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.trim_start().starts_with('{'), "{s}");
+    assert!(s.contains("\"schedules\": "), "{s}");
+    assert!(s.contains("\"errors\": 0"), "{s}");
+
+    // Rendezvous modeling on the tree ops (the CI configuration): no
+    // cycles in any registered tree schedule.
+    let out = mlane(&[
+        "lint", "--nodes", "2", "--cores", "2", "--lanes", "2", "--op",
+        "bcast,scatter,gather", "--eager-limit", "8192",
+    ]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+}
+
+#[test]
+fn lint_flag_errors_are_clean() {
+    let out = mlane(&["lint", "--nodes", "2", "--cores", "2", "--format", "nosuch"]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("unknown format nosuch"), "{}", stderr(&out));
+
+    let out = mlane(&["lint", "--nodes", "2", "--cores", "2", "--eager-limit", "soon"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("bad --eager-limit value"), "{}", stderr(&out));
+
+    // lint takes grid flags, not run flags; typos are rejected loudly.
+    let out = mlane(&["lint", "--reps", "3"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("unknown flag --reps"), "{}", stderr(&out));
+
+    // An op/alg narrowing with an empty intersection is an error, not a
+    // vacuously green lint.
+    let out = mlane(&[
+        "lint", "--nodes", "2", "--cores", "2", "--op", "bcast", "--alg", "ring",
+    ]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("nothing to lint"), "{}", stderr(&out));
 }
 
 #[test]

@@ -1,15 +1,18 @@
-//! Registry-exhaustive validation: every registered algorithm × every
-//! operation it supports × a grid of cluster shapes must produce a
-//! schedule that passes `validate` (full data-movement invariants) and
-//! `validate_ports` under the algorithm's own `ports_required`.
+//! Registry-exhaustive validation, rewritten on the static-analysis
+//! driver: every registered algorithm × every operation it supports ×
+//! a grid of cluster shapes must lint **clean of errors** under the
+//! algorithm's own `ports_required` — causality, port budget, delivery,
+//! and endpoint/block sanity all come from one `analyze` call, and the
+//! exhaustive driver reports *every* finding, not just the first.
 //!
 //! This replaces the old hand-maintained checklist in `cmd_validate`:
 //! a newly registered algorithm (e.g. the two-phase k-lane broadcast
 //! variant, `klane2p`) is covered here with **no edits to this test**.
 
 use mlane::algorithms::registry::{registry, OpKind};
+use mlane::analysis::{analyze, codes, LintConfig};
 use mlane::model::{Persona, PersonaName};
-use mlane::schedule::validate::{validate, validate_ports};
+use mlane::schedule::Schedule;
 use mlane::topology::Cluster;
 use mlane::tuning;
 
@@ -28,8 +31,21 @@ fn clusters() -> [Cluster; 3] {
     [Cluster::new(2, 2, 1), Cluster::new(4, 4, 2), Cluster::new(3, 5, 2)]
 }
 
+/// Lint `s` under `ports` and panic with the full diagnostic list if
+/// any error-severity finding survives.
+fn assert_lints_clean(s: &Schedule, ports: u32, ctx: &str) {
+    let a = analyze(s, &LintConfig::new(ports));
+    assert!(
+        a.is_clean(),
+        "{ctx}: {} has {} error diagnostic(s):\n{}",
+        s.algorithm,
+        a.errors(),
+        a.text()
+    );
+}
+
 #[test]
-fn every_registered_algorithm_validates_on_every_supported_op() {
+fn every_registered_algorithm_lints_clean_on_every_supported_op() {
     let persona = Persona::get(PersonaName::OpenMpi);
     let mut checked = 0usize;
     for cl in clusters() {
@@ -48,10 +64,6 @@ fn every_registered_algorithm_validates_on_every_supported_op() {
                 let built = alg
                     .build(cl, &persona, op.op(c))
                     .unwrap_or_else(|e| panic!("{} {op} on {cl:?}: {e}", alg.label()));
-                let s = &built.schedule;
-                validate(s).unwrap_or_else(|v| {
-                    panic!("{} {op} on {cl:?}: invalid: {v}", s.algorithm)
-                });
                 // `tuned` is a meta-entry: what it built is the schedule
                 // of whatever its decision table dispatched to, so the
                 // port budget to verify is the *dispatched* algorithm's
@@ -65,9 +77,7 @@ fn every_registered_algorithm_validates_on_every_supported_op() {
                 } else {
                     alg.ports_required(cl, op)
                 };
-                validate_ports(s, ports).unwrap_or_else(|v| {
-                    panic!("{} {op} on {cl:?}: ports: {v}", s.algorithm)
-                });
+                assert_lints_clean(&built.schedule, ports, &format!("{op} on {cl:?}"));
                 checked += 1;
             }
         }
@@ -78,7 +88,7 @@ fn every_registered_algorithm_validates_on_every_supported_op() {
 }
 
 #[test]
-fn native_schedules_validate_for_every_persona() {
+fn native_schedules_lint_clean_for_every_persona() {
     // Native selection depends on the persona; exercise all three.
     let cl = Cluster::new(3, 4, 2);
     let native = registry().resolve("native", 0).unwrap();
@@ -89,16 +99,15 @@ fn native_schedules_validate_for_every_persona() {
                 let built = native
                     .build(cl, &persona, op.op(c))
                     .unwrap_or_else(|e| panic!("native {op} c={c}: {e}"));
-                validate(&built.schedule).unwrap_or_else(|v| {
-                    panic!("{:?} native {op} c={c}: {v}", name)
-                });
+                let ports = native.ports_required(cl, op);
+                assert_lints_clean(&built.schedule, ports, &format!("{name:?} native {op} c={c}"));
             }
         }
     }
 }
 
 #[test]
-fn tuned_dispatch_is_validated_for_every_persona() {
+fn tuned_dispatch_lints_clean_for_every_persona() {
     // The dispatched schedule (not the meta-entry) must hold the full
     // invariants under every persona — native winners included, whose
     // selection varies by persona and count.
@@ -111,9 +120,6 @@ fn tuned_dispatch_is_validated_for_every_persona() {
                 let built = tuned
                     .build(cl, &persona, op.op(c))
                     .unwrap_or_else(|e| panic!("tuned {op} c={c} [{name:?}]: {e}"));
-                validate(&built.schedule).unwrap_or_else(|v| {
-                    panic!("{:?} tuned {op} c={c}: {v}", name)
-                });
                 let d = tuning::dispatch(cl, name, op, c)
                     .unwrap_or_else(|e| panic!("dispatch {op} c={c} [{name:?}]: {e}"));
                 // What tuned built really is the dispatched algorithm's
@@ -125,8 +131,10 @@ fn tuned_dispatch_is_validated_for_every_persona() {
                     built.schedule.algorithm, direct.schedule.algorithm,
                     "{name:?} {op} c={c}"
                 );
-                validate_ports(&built.schedule, d.ports_required(cl, op)).unwrap_or_else(
-                    |v| panic!("{:?} tuned {op} c={c}: ports: {v}", name),
+                assert_lints_clean(
+                    &built.schedule,
+                    d.ports_required(cl, op),
+                    &format!("{name:?} tuned {op} c={c}"),
                 );
             }
         }
@@ -136,12 +144,24 @@ fn tuned_dispatch_is_validated_for_every_persona() {
 #[test]
 fn ports_required_is_tight_enough_to_matter() {
     // The declared port budgets must really be the limit: k-ported with
-    // k=2 must *violate* a 1-port validation (otherwise ports_required
-    // would be vacuous and the exhaustive test above toothless).
+    // k=2 must produce port-budget errors under a 1-port lint (otherwise
+    // ports_required would be vacuous and the exhaustive test above
+    // toothless) and lint clean under its own budget.
     let cl = Cluster::new(4, 4, 2);
     let persona = Persona::get(PersonaName::OpenMpi);
     let alg = registry().resolve("kported", 2).unwrap();
     let built = alg.build(cl, &persona, OpKind::Bcast.op(64)).unwrap();
-    assert!(validate_ports(&built.schedule, 1).is_err(), "2-ported fits 1 port?");
-    assert!(validate_ports(&built.schedule, 2).is_ok());
+    let tight = analyze(&built.schedule, &LintConfig::new(1));
+    assert!(
+        tight.diagnostics.iter().any(|d| d.code == codes::PORT_BUDGET),
+        "2-ported fits 1 port?\n{}",
+        tight.text()
+    );
+    let own = analyze(&built.schedule, &LintConfig::new(2));
+    assert!(
+        own.diagnostics.iter().all(|d| d.code != codes::PORT_BUDGET),
+        "2-ported violates its own budget:\n{}",
+        own.text()
+    );
+    assert!(own.is_clean(), "{}", own.text());
 }

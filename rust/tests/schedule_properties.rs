@@ -3,10 +3,20 @@
 //! algorithm must produce schedules that are causal, port-legal, and
 //! complete. Uses the in-repo deterministic property harness
 //! (`mlane::util::prop`) — failures print a replayable seed.
+//!
+//! The second half hand-builds schedules that trip each lint of the
+//! static-analysis driver (lane oversubscription, rendezvous deadlock,
+//! redundant sends, dead data, mergeable rounds, per-code truncation)
+//! and pins the exhaustive diagnostic lists — including a golden
+//! text/JSON snapshot re-parsed with the independent mini JSON parser
+//! in `common/`.
+
+mod common;
 
 use mlane::algorithms::{alltoall, bcast, scatter};
+use mlane::analysis::{analyze, codes, Analysis, LintConfig, Severity};
 use mlane::schedule::validate::{validate, validate_ports};
-use mlane::schedule::Schedule;
+use mlane::schedule::{BlockSet, Collective, Round, Schedule};
 use mlane::topology::Cluster;
 use mlane::util::prop::{check, Gen};
 
@@ -26,6 +36,10 @@ fn assert_valid(s: &Schedule, ports: u32, ctx: &str) {
     if let Err(v) = validate_ports(s, ports) {
         panic!("{ctx}: {} port violation: {v}", s.algorithm);
     }
+    // The exhaustive driver must agree with the first-error wrappers:
+    // a schedule both wrappers accept has zero error diagnostics.
+    let a = analyze(s, &LintConfig::new(ports));
+    assert!(a.is_clean(), "{ctx}: {} lint errors:\n{}", s.algorithm, a.text());
 }
 
 #[test]
@@ -169,4 +183,228 @@ fn prop_round_counts_match_paper_bounds() {
         let a2a = alltoall::build(cl, c, alltoall::AlltoallAlg::KPorted { k });
         assert_eq!(a2a.rounds.len() as u32, (p - 1).div_ceil(k), "cl={cl:?} k={k}");
     });
+}
+
+// ---------------------------------------------------------------------------
+// Hand-built schedules tripping each static-analysis lint.
+// ---------------------------------------------------------------------------
+
+/// The diagnostic codes of an analysis, in emission order.
+fn codes_of(a: &Analysis) -> Vec<&'static str> {
+    a.diagnostics.iter().map(|d| d.code).collect()
+}
+
+/// A 2-node × 2-core, 1-lane scatter from rank 0 whose first round
+/// drives two off-node sends (lane oversubscription) and whose second
+/// relays block 2 to rank 3, which neither requires nor forwards it
+/// (dead data). Correct — zero errors — but two warn lints fire.
+fn oversubscribed_scatter() -> Schedule {
+    let cl = Cluster::new(2, 2, 1);
+    let mut s = Schedule::new(cl, Collective::Scatter { root: 0, c: 4 }, "test");
+    let t1 = s.transfer(0, 2, BlockSet::single(2));
+    let t2 = s.transfer(0, 3, BlockSet::single(3));
+    s.push_round(Round::of(vec![t1, t2]));
+    let t3 = s.transfer(0, 1, BlockSet::single(1));
+    let t4 = s.transfer(2, 3, BlockSet::single(2));
+    s.push_round(Round::of(vec![t3, t4]));
+    s
+}
+
+#[test]
+fn lane_oversubscription_and_dead_data_are_linted() {
+    let s = oversubscribed_scatter();
+    let a = analyze(&s, &LintConfig::new(2));
+    assert!(a.is_clean(), "unexpected errors:\n{}", a.text());
+    assert_eq!(
+        codes_of(&a),
+        [
+            codes::LANE_CONTENTION,  // round 0, node 0: 2 sends over 1 lane
+            codes::LANE_CONTENTION,  // round 0, node 1: 2 recvs over 1 lane
+            codes::LANE_SERIALIZATION,
+            codes::DEAD_DATA, // rank 3 receives block 2 for nothing
+        ],
+        "\n{}",
+        a.text()
+    );
+    let node0 = &a.diagnostics[0];
+    assert_eq!(node0.severity, Severity::Warn);
+    assert_eq!(node0.span.round, Some(0));
+    assert_eq!(node0.u64_field("node"), Some(0));
+    assert_eq!(node0.u64_field("sends"), Some(2));
+    assert_eq!(node0.u64_field("recvs"), Some(0));
+    assert_eq!(node0.u64_field("factor"), Some(2));
+    let dead = &a.diagnostics[3];
+    assert_eq!(dead.severity, Severity::Warn);
+    assert_eq!(dead.u64_field("rank"), Some(3));
+    assert_eq!(dead.u64_field("block"), Some(2));
+}
+
+#[test]
+fn lint_text_snapshot_is_stable() {
+    // Golden text output: the full rendering, not just codes — CI tools
+    // grep these lines, so format drift must be deliberate.
+    let a = analyze(&oversubscribed_scatter(), &LintConfig::new(2));
+    assert_eq!(
+        a.text(),
+        "warn[lane-contention] round 0: node 0 drives 2 off-node sends / 0 recvs over 1 lane(s): ~2x serialized\n\
+         warn[lane-contention] round 0: node 1 drives 0 off-node sends / 2 recvs over 1 lane(s): ~2x serialized\n\
+         info[lane-serialization] schedule: 1 of 2 round(s) oversubscribe the node lanes (worst factor 2)\n\
+         warn[dead-data] schedule: rank 3 receives 1 block(s) it neither requires nor forwards (e.g. block 2)\n"
+    );
+}
+
+#[test]
+fn lint_json_snapshot_parses_and_round_trips() {
+    // The JSON emission, re-parsed with the independent strict parser:
+    // schema (severity/code/round/transfer/message/payload) and values.
+    let a = analyze(&oversubscribed_scatter(), &LintConfig::new(2));
+    let doc = common::parse_json(&a.to_json()).expect("diagnostics JSON parses");
+    let diags = doc.arr();
+    assert_eq!(diags.len(), 4);
+    let first = &diags[0];
+    assert_eq!(first.get("severity").unwrap().string(), "warn");
+    assert_eq!(first.get("code").unwrap().string(), "lane-contention");
+    assert_eq!(first.get("round").unwrap().num(), 0.0);
+    assert!(matches!(first.get("transfer"), Some(common::Json::Null)));
+    let payload = first.get("payload").unwrap();
+    assert_eq!(payload.get("node").unwrap().num(), 0.0);
+    assert_eq!(payload.get("sends").unwrap().num(), 2.0);
+    assert_eq!(payload.get("lanes").unwrap().num(), 1.0);
+    let last = &diags[3];
+    assert_eq!(last.get("code").unwrap().string(), "dead-data");
+    assert!(matches!(last.get("round"), Some(common::Json::Null)));
+    assert_eq!(last.get("payload").unwrap().get("block").unwrap().num(), 2.0);
+}
+
+#[test]
+fn rendezvous_cycle_is_a_deadlock_error() {
+    // Mutual exchange in one round: fine on a buffered backend (the
+    // default lint config stays silent), a deadlock under rendezvous
+    // semantics (both senders block, neither posts its receive).
+    let cl = Cluster::new(1, 2, 1);
+    let mut s = Schedule::new(cl, Collective::Allgather { c: 1 }, "test");
+    let t1 = s.transfer(0, 1, BlockSet::single(0));
+    let t2 = s.transfer(1, 0, BlockSet::single(1));
+    s.push_round(Round::of(vec![t1, t2]));
+
+    let buffered = analyze(&s, &LintConfig::new(1));
+    assert!(buffered.is_clean(), "{}", buffered.text());
+    assert!(buffered.diagnostics.is_empty(), "\n{}", buffered.text());
+
+    let sync = analyze(&s, &LintConfig::new(1).with_rendezvous(0, 0));
+    assert_eq!(codes_of(&sync), [codes::DEADLOCK], "\n{}", sync.text());
+    let d = &sync.diagnostics[0];
+    assert_eq!(d.severity, Severity::Error);
+    assert_eq!(d.span.round, Some(0));
+    assert_eq!(d.u64_field("ranks"), Some(2));
+    assert_eq!(d.u64_field("cycle_len"), Some(2));
+}
+
+#[test]
+fn redundant_transfer_and_round_slack_are_linted() {
+    // Sending block 0 to rank 1 twice: the second delivery is redundant,
+    // and the two rounds exceed the 1-ported lower bound for p = 2.
+    let cl = Cluster::new(1, 2, 1);
+    let mut s = Schedule::new(cl, Collective::Bcast { root: 0, c: 8, segments: 1 }, "test");
+    for _ in 0..2 {
+        let t = s.transfer(0, 1, BlockSet::single(0));
+        s.push_round(Round::of(vec![t]));
+    }
+    let a = analyze(&s, &LintConfig::new(1));
+    assert!(a.is_clean(), "{}", a.text());
+    assert_eq!(codes_of(&a), [codes::REDUNDANT_TRANSFER, codes::ROUND_BOUND], "\n{}", a.text());
+    let dup = &a.diagnostics[0];
+    assert_eq!(dup.span, mlane::analysis::Span { round: Some(1), transfer: Some(0) });
+    assert_eq!(dup.u64_field("count"), Some(1));
+    assert_eq!(dup.u64_field("block"), Some(0));
+    let slack = &a.diagnostics[1];
+    assert_eq!(slack.u64_field("rounds"), Some(2));
+    assert_eq!(slack.u64_field("lower"), Some(1));
+    assert_eq!(slack.u64_field("slack"), Some(1));
+}
+
+#[test]
+fn independent_rounds_are_flagged_mergeable() {
+    // A serialized linear scatter under a 2-port budget: adjacent rounds
+    // are independent and would fit merged — exactly what the lint is
+    // for. The round-bound info rides along (3 rounds vs. lower bound 2).
+    let cl = Cluster::new(1, 4, 1);
+    let mut s = Schedule::new(cl, Collective::Scatter { root: 0, c: 4 }, "test");
+    for dst in 1..4u32 {
+        let t = s.transfer(0, dst, BlockSet::single(dst as u64));
+        s.push_round(Round::of(vec![t]));
+    }
+    let a = analyze(&s, &LintConfig::new(2));
+    assert!(a.is_clean(), "{}", a.text());
+    assert_eq!(
+        codes_of(&a),
+        [codes::ROUND_BOUND, codes::MERGEABLE_ROUNDS, codes::MERGEABLE_ROUNDS],
+        "\n{}",
+        a.text()
+    );
+    assert_eq!(a.diagnostics[1].u64_field("round"), Some(0));
+    assert_eq!(a.diagnostics[1].u64_field("next"), Some(1));
+    assert_eq!(a.diagnostics[2].u64_field("round"), Some(1));
+    assert_eq!(a.diagnostics[2].u64_field("next"), Some(2));
+}
+
+#[test]
+fn per_lint_cap_truncates_loudly() {
+    // 60 rounds re-delivering the same block: 59 redundant-transfer
+    // warnings hit the per-code cap; the overflow surfaces as one
+    // truncation info (never silently).
+    let cl = Cluster::new(1, 2, 1);
+    let mut s = Schedule::new(cl, Collective::Bcast { root: 0, c: 8, segments: 1 }, "test");
+    for _ in 0..60 {
+        let t = s.transfer(0, 1, BlockSet::single(0));
+        s.push_round(Round::of(vec![t]));
+    }
+    let a = analyze(&s, &LintConfig::new(1));
+    assert_eq!(a.warnings(), 50, "\n{}", a.text());
+    let trunc = a.diagnostics.last().unwrap();
+    assert_eq!(trunc.code, codes::TRUNCATED);
+    assert_eq!(trunc.severity, Severity::Info);
+    assert_eq!(trunc.u64_field("dropped"), Some(9));
+    assert_eq!(trunc.u64_field("cap"), Some(50));
+
+    // A tighter cap keeps the cut proportional.
+    let mut cfg = LintConfig::new(1);
+    cfg.max_per_lint = 5;
+    let tight = analyze(&s, &cfg);
+    assert_eq!(tight.warnings(), 5);
+    assert_eq!(tight.diagnostics.last().unwrap().u64_field("dropped"), Some(54));
+}
+
+#[test]
+fn analysis_is_exhaustive_not_first_error() {
+    // One round carrying four distinct defects: the legacy validator
+    // stopped at the first; the driver must report every one of them,
+    // plus the downstream delivery and port-budget consequences.
+    let cl = Cluster::new(1, 4, 1);
+    let mut s = Schedule::new(cl, Collective::Bcast { root: 0, c: 8, segments: 1 }, "test");
+    let t0 = s.transfer(1, 2, BlockSet::single(0)); // causality: rank 1 holds nothing
+    let t1 = s.transfer(0, 1, BlockSet::single(0)); // fine
+    let t2 = mlane::schedule::Transfer { src: 0, dst: 3, blocks: BlockSet::single(5), bytes: 4 };
+    let t3 = mlane::schedule::Transfer { src: 3, dst: 3, blocks: BlockSet::single(0), bytes: 4 };
+    s.push_round(Round::of(vec![t0, t1, t2, t3]));
+    let a = analyze(&s, &LintConfig::new(1));
+    assert_eq!(
+        codes_of(&a),
+        [
+            codes::CAUSALITY,     // round 0/t0
+            codes::UNKNOWN_BLOCK, // round 0/t2: block 5 of 1
+            codes::BAD_ENDPOINTS, // round 0/t3: self-message
+            codes::DELIVERY,      // rank 3 never gets block 0
+            codes::PORT_BUDGET,   // rank 0 sends twice under limit 1
+            codes::DEAD_DATA,     // rank 3 sits on useless block 5
+        ],
+        "\n{}",
+        a.text()
+    );
+    assert_eq!(a.errors(), 5);
+    assert_eq!(a.diagnostics[0].span.transfer, Some(0));
+    assert_eq!(a.diagnostics[1].span.transfer, Some(2));
+    assert_eq!(a.diagnostics[2].span.transfer, Some(3));
+    assert_eq!(a.diagnostics[4].u64_field("rank"), Some(0));
+    assert_eq!(a.diagnostics[4].u64_field("sends"), Some(2));
 }
