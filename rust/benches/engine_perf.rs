@@ -15,6 +15,7 @@ use mlane::harness::{
     merge_dir, run_plan_with, write_shard, Grid, Merged, Plan, RunConfig, BCAST_COUNTS,
 };
 use mlane::model::{CostModel, Persona, PersonaName};
+use mlane::netsim::{NetSim, Scenario as NetScenario};
 use mlane::runtime::XlaService;
 use mlane::sim::{self, AlgId, OpShape, Simulator, SweepEngine, SweepKey};
 use mlane::topology::Cluster;
@@ -70,12 +71,13 @@ fn main() {
         dt.as_secs_f64() * 1e6 / n as f64
     );
 
+    let event = bench_event(cl);
     let sweep = bench_sweep(cl);
     let series = bench_series();
     let tune = bench_tune(cl);
     let shard = bench_shard_merge();
     let lint = bench_lint(cl);
-    write_bench_json(events_per_s, &sweep, &series, &tune, &shard, &lint);
+    write_bench_json(events_per_s, &event, &sweep, &series, &tune, &shard, &lint);
 
     println!("\n=== exec backend (4x4, klane alltoall c=1024) ===");
     let cl = Cluster::new(4, 4, 2);
@@ -101,6 +103,40 @@ fn main() {
     } else {
         println!("xla phases: skipped (no artifacts)");
     }
+}
+
+struct EventBench {
+    event_s: f64,
+    events_per_s: f64,
+}
+
+/// Event-backend throughput at Hydra scale: the discrete-event
+/// counterpart of the analytic number above, on the same k-lane bcast
+/// family (contention-free, so the two are modeling the same physics).
+/// State is allocated once and reused across reps — the same shape the
+/// sweep path uses — so the number is the event loop, not the setup.
+fn bench_event(cl: Cluster) -> EventBench {
+    println!("\n=== event backend throughput (hydra klane bcast, contention-free) ===");
+    let m = CostModel::hydra_baseline();
+    let s = bcast::build(cl, 0, 100_000, bcast::BcastAlg::KLane { k: 2, two_phase: false });
+    let net = NetSim::new(&s, &m, &NetScenario::contention_free())
+        .expect("contention-free scenario is always valid");
+    let mut st = net.new_state();
+    let reps = 5;
+    let t0 = Instant::now();
+    let mut events = 0u64;
+    for rep in 0..reps {
+        events += net.run_into(&mut st, rep as u64).expect("contention-free run").events;
+    }
+    let event_s = t0.elapsed().as_secs_f64();
+    let bench = EventBench { event_s, events_per_s: events as f64 / event_s };
+    println!(
+        "event run: {:.2?} for {reps} reps ({} transfers), {:.2}M events/s",
+        std::time::Duration::from_secs_f64(bench.event_s),
+        net.num_xfers(),
+        bench.events_per_s / 1e6
+    );
+    bench
 }
 
 struct SweepBench {
@@ -329,7 +365,7 @@ struct TuneBench {
 fn bench_tune(cl: Cluster) -> TuneBench {
     println!("\n=== tuning: decision-table build (hydra bcast, default candidates) ===");
     let sc = Scenario::default_for(cl, OpKind::Bcast, PersonaName::OpenMpi);
-    let cfg = TuneConfig { reps: 1, warmup: 0, seed: 7 };
+    let cfg = TuneConfig { reps: 1, warmup: 0, seed: 7, ..TuneConfig::default() };
     let engine = std::sync::Arc::new(SweepEngine::new());
     let t0 = Instant::now();
     let table = tuning::tune_scenario(&engine, &sc, &cfg).expect("hydra bcast tunes");
@@ -469,6 +505,7 @@ fn bench_lint(cl: Cluster) -> LintBench {
 /// Machine-readable perf record for trajectory tracking across PRs.
 fn write_bench_json(
     events_per_s: f64,
+    event: &EventBench,
     sweep: &SweepBench,
     series: &SeriesBench,
     tune: &TuneBench,
@@ -490,7 +527,8 @@ fn write_bench_json(
          \"shard_rows\": {},\n  \"shard_write_s\": {:.6},\n  \
          \"shard_merge_s\": {:.6},\n  \"lint_schedules\": {},\n  \
          \"lint_diagnostics\": {},\n  \"lint_full_registry_s\": {:.6},\n  \
-         \"lint_schedules_per_s\": {:.2}\n}}\n",
+         \"lint_schedules_per_s\": {:.2},\n  \"event_backend_s\": {:.6},\n  \
+         \"event_events_per_s\": {:.0}\n}}\n",
         events_per_s,
         sweep.cells,
         sweep.cold_s,
@@ -520,6 +558,8 @@ fn write_bench_json(
         lint.diags,
         lint.lint_s,
         lint.schedules as f64 / lint.lint_s,
+        event.event_s,
+        event.events_per_s,
     );
     match std::fs::write("BENCH_engine.json", &json) {
         Ok(()) => println!("wrote BENCH_engine.json"),

@@ -107,6 +107,11 @@ pub enum AlgError {
     /// `sim::MeasureError::Sim`) — an internal cache-identity failure
     /// surfaced as an error rather than a panic.
     Engine { detail: String },
+    /// The event-driven network backend refused the run: a drop-tail
+    /// queue overflow, an invalid scenario, or an unsupported
+    /// backend/cluster combination (see `netsim::NetError`). The
+    /// detail is the backend's own self-describing message.
+    Backend { detail: String },
 }
 
 impl fmt::Display for AlgError {
@@ -124,6 +129,7 @@ impl fmt::Display for AlgError {
             AlgError::Engine { detail } => {
                 write!(f, "sweep engine: {detail}")
             }
+            AlgError::Backend { detail } => f.write_str(detail),
         }
     }
 }

@@ -25,6 +25,7 @@ use anyhow::Result;
 use crate::algorithms::registry::{self, Alg, AlgError, Built, OpKind};
 use crate::exec::{ExecReport, ExecRuntime};
 use crate::model::{Persona, PersonaName};
+use crate::netsim::{Backend, NetError};
 use crate::sim::{self, MeasureError, OpShape, RepState, SweepEngine, SweepKey, SweepStats};
 use crate::topology::{Cluster, Rank};
 use crate::util::Summary;
@@ -98,6 +99,10 @@ pub struct Collectives {
     pub reps: usize,
     pub warmup: usize,
     pub seed: u64,
+    /// Which simulation backend times the schedules: the analytic
+    /// closed-form [`sim::Simulator`] (default) or the event-driven
+    /// [`crate::netsim::NetSim`] with its contention scenario.
+    pub backend: Backend,
     /// Shared schedule cache: count sweeps (tables, autotune candidate
     /// grids) build each communication structure once and re-cost it per
     /// count (see `sim::sweep`). Keyed by (cluster, op shape, algorithm,
@@ -118,7 +123,14 @@ fn engine_err(e: MeasureError<AlgError>) -> AlgError {
     match e {
         MeasureError::Build(e) => e,
         MeasureError::Sim(s) => AlgError::Engine { detail: s.to_string() },
+        MeasureError::Net(n) => net_err(n),
     }
+}
+
+/// Surface a network-backend refusal (overflow, bad scenario,
+/// unsupported combination) as the coordinator's typed error.
+fn net_err(e: NetError) -> AlgError {
+    AlgError::Backend { detail: e.to_string() }
 }
 
 /// The sweep-invariant part of an operation (cache-key component).
@@ -147,6 +159,7 @@ impl Collectives {
             reps: sim::DEFAULT_REPS,
             warmup: sim::DEFAULT_WARMUP,
             seed: sim::DEFAULT_SEED,
+            backend: Backend::default(),
             engine,
             state: RefCell::new(None),
         }
@@ -178,45 +191,79 @@ impl Collectives {
     /// cached structure per candidate.
     pub fn run(&self, op: Op, alg: &Alg) -> Result<Measurement, AlgError> {
         let model = self.persona.model;
-        let mut state = self.state.borrow_mut();
         let (cell, add, mult) = match alg.cache_id() {
             Some(alg_key) => {
                 let key =
                     SweepKey { cluster: self.cluster, op: op_shape(op), alg: alg_key };
-                let cell = self.engine.measure(
-                    key,
-                    op.count(),
-                    &model,
-                    self.reps,
-                    self.warmup,
-                    self.seed,
-                    &mut *state,
-                    |_| {
-                        let built = self.schedule(op, alg)?;
-                        // Cacheable algorithms must have neutral quirks
-                        // (quirks vary with count; the cache would pin
-                        // the first cell's values).
-                        debug_assert!(
-                            built.quirk_add == 0.0 && built.quirk_mult == 1.0,
-                            "non-neutral quirk on cacheable algorithm {}",
-                            alg.label()
-                        );
-                        Ok(built.schedule)
-                    },
-                )
+                let build = |_| {
+                    let built = self.schedule(op, alg)?;
+                    // Cacheable algorithms must have neutral quirks
+                    // (quirks vary with count; the cache would pin
+                    // the first cell's values).
+                    debug_assert!(
+                        built.quirk_add == 0.0 && built.quirk_mult == 1.0,
+                        "non-neutral quirk on cacheable algorithm {}",
+                        alg.label()
+                    );
+                    Ok(built.schedule)
+                };
+                let cell = match &self.backend {
+                    Backend::Analytic => {
+                        let mut state = self.state.borrow_mut();
+                        self.engine.measure(
+                            key,
+                            op.count(),
+                            &model,
+                            self.reps,
+                            self.warmup,
+                            self.seed,
+                            &mut *state,
+                            build,
+                        )
+                    }
+                    Backend::Event(sc) => self
+                        .engine
+                        .measure_series_event(
+                            key,
+                            std::slice::from_ref(&op.count()),
+                            &model,
+                            sc,
+                            self.reps,
+                            self.warmup,
+                            self.seed,
+                            build,
+                        )
+                        .map(|mut v| v.pop().expect("one count in, one cell out")),
+                }
                 .map_err(engine_err)?;
                 (cell, 0.0, 1.0)
             }
             None => {
                 let built = self.schedule(op, alg)?;
-                let cell = self.engine.measure_uncached(
-                    &built.schedule,
-                    &model,
-                    self.reps,
-                    self.warmup,
-                    self.seed,
-                    &mut *state,
-                );
+                let cell = match &self.backend {
+                    Backend::Analytic => {
+                        let mut state = self.state.borrow_mut();
+                        self.engine.measure_uncached(
+                            &built.schedule,
+                            &model,
+                            self.reps,
+                            self.warmup,
+                            self.seed,
+                            &mut *state,
+                        )
+                    }
+                    Backend::Event(sc) => self
+                        .engine
+                        .measure_uncached_event(
+                            &built.schedule,
+                            &model,
+                            sc,
+                            self.reps,
+                            self.warmup,
+                            self.seed,
+                        )
+                        .map_err(net_err)?,
+                };
                 (cell, built.quirk_add, built.quirk_mult)
             }
         };
@@ -254,31 +301,44 @@ impl Collectives {
         };
         let model = self.persona.model;
         let key = SweepKey { cluster: self.cluster, op: op_shape(op), alg: alg_key };
-        let mut state = self.state.borrow_mut();
-        let cells = self
-            .engine
-            .measure_series(
+        let build = |c| {
+            let built = self.schedule(op.with_count(c), alg)?;
+            // Cacheable algorithms must have neutral quirks
+            // (quirks vary with count; the cache would pin
+            // the first cell's values).
+            debug_assert!(
+                built.quirk_add == 0.0 && built.quirk_mult == 1.0,
+                "non-neutral quirk on cacheable algorithm {}",
+                alg.label()
+            );
+            Ok(built.schedule)
+        };
+        let cells = match &self.backend {
+            Backend::Analytic => {
+                let mut state = self.state.borrow_mut();
+                self.engine.measure_series(
+                    key,
+                    counts,
+                    &model,
+                    self.reps,
+                    self.warmup,
+                    self.seed,
+                    &mut state,
+                    build,
+                )
+            }
+            Backend::Event(sc) => self.engine.measure_series_event(
                 key,
                 counts,
                 &model,
+                sc,
                 self.reps,
                 self.warmup,
                 self.seed,
-                &mut state,
-                |c| {
-                    let built = self.schedule(op.with_count(c), alg)?;
-                    // Cacheable algorithms must have neutral quirks
-                    // (quirks vary with count; the cache would pin
-                    // the first cell's values).
-                    debug_assert!(
-                        built.quirk_add == 0.0 && built.quirk_mult == 1.0,
-                        "non-neutral quirk on cacheable algorithm {}",
-                        alg.label()
-                    );
-                    Ok(built.schedule)
-                },
-            )
-            .map_err(engine_err)?;
+                build,
+            ),
+        }
+        .map_err(engine_err)?;
         let k = alg.k().unwrap_or(self.cluster.lanes);
         Ok(cells
             .into_iter()
@@ -517,5 +577,61 @@ mod tests {
         let st = engine.stats();
         assert_eq!(st.schedules_built, 1, "{st:?}");
         assert_eq!(st.cache_hits, 1, "{st:?}");
+    }
+
+    #[test]
+    fn event_backend_run_matches_fresh_netsim() {
+        use crate::netsim::{NetSim, Scenario};
+        let mut c = coll();
+        c.backend = Backend::Event(Scenario::contention_free());
+        let op = Op::Bcast { root: 0, c: 64 };
+        let alg = registry::klane(2);
+        let m = c.run(op, &alg).unwrap();
+        let s = c.schedule(op, &alg).unwrap().schedule;
+        let net =
+            NetSim::new(&s, &c.persona.model, &Scenario::contention_free()).unwrap();
+        let mut st = net.new_state();
+        let fresh = sim::measure_backend(&net, &mut st, c.reps, c.warmup, c.seed).unwrap();
+        assert_eq!(m.summary, fresh);
+    }
+
+    #[test]
+    fn event_backend_series_matches_per_count_runs() {
+        use crate::netsim::Scenario;
+        let mut c = coll();
+        c.backend = Backend::Event(Scenario::contended());
+        let op = Op::Scatter { root: 0, c: 1 };
+        let alg = registry::fulllane();
+        let counts = [1u64, 100, 10_000];
+        let series = c.run_series(op, &counts, &alg).unwrap();
+        for (m, &count) in series.iter().zip(&counts) {
+            let single = c.run(op.with_count(count), &alg).unwrap();
+            assert_eq!(m.summary, single.summary, "c={count}");
+        }
+    }
+
+    #[test]
+    fn event_backend_applies_native_quirks() {
+        use crate::netsim::Scenario;
+        let mut c = Collectives::new(Cluster::hydra(2), PersonaName::IntelMpi);
+        c.reps = 2;
+        c.warmup = 0;
+        c.backend = Backend::Event(Scenario::contention_free());
+        let m = c.run(Op::Bcast { root: 0, c: 1 }, &registry::native()).unwrap();
+        assert!(m.summary.avg > 900.0, "Intel small-bcast floor: {}", m.summary.avg);
+    }
+
+    #[test]
+    fn event_backend_overflow_is_a_typed_error() {
+        use crate::netsim::Scenario;
+        let mut c = Collectives::new(Cluster::new(3, 4, 2), PersonaName::OpenMpi);
+        c.reps = 1;
+        c.warmup = 0;
+        let mut sc = Scenario::contention_free();
+        sc.queue_capacity = Some(0);
+        c.backend = Backend::Event(sc);
+        let err = c.run(Op::Alltoall { c: 10_000 }, &registry::fulllane()).unwrap_err();
+        assert!(matches!(err, AlgError::Backend { .. }), "{err}");
+        assert!(err.to_string().contains("queue overflow"), "{err}");
     }
 }

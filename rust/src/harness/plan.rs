@@ -29,6 +29,7 @@ use std::sync::Arc;
 use crate::algorithms::registry::{self, Alg, AlgError, OpKind};
 use crate::coordinator::Collectives;
 use crate::model::PersonaName;
+use crate::netsim::Backend;
 use crate::sim::{self, sweep::DEFAULT_CACHE_SHAPES, SweepEngine};
 use crate::topology::Cluster;
 
@@ -59,6 +60,11 @@ pub struct RunConfig {
     pub out_dir: PathBuf,
     /// Measurement seed (per-rep streams derive from it).
     pub seed: u64,
+    /// Simulation backend every section runs on: the analytic
+    /// closed-form model (default) or the event-driven network backend
+    /// with its contention scenario. Part of the shard fingerprint —
+    /// shards of different backends never merge.
+    pub backend: Backend,
 }
 
 impl Default for RunConfig {
@@ -70,6 +76,7 @@ impl Default for RunConfig {
             cache_shapes: DEFAULT_CACHE_SHAPES,
             out_dir: PathBuf::from("bench_out"),
             seed: sim::DEFAULT_SEED,
+            backend: Backend::default(),
         }
     }
 }
@@ -123,6 +130,11 @@ impl RunConfig {
 
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
         self
     }
 }
@@ -359,12 +371,13 @@ impl Plan {
             "paper" => Some(Plan::paper()),
             "appendix" => Some(Plan::appendix()),
             "tuned" => Some(Plan::tuned()),
+            "contention" => Some(Plan::contention()),
             _ => None,
         }
     }
 
     /// Preset names accepted by [`Plan::preset`].
-    pub const PRESETS: &[&str] = &["paper", "appendix", "tuned"];
+    pub const PRESETS: &[&str] = &["paper", "appendix", "tuned", "contention"];
 
     /// The paper's full evaluation: every table of Tables 2–49, as grid
     /// declarations. Algorithms are registry handles — the specs carry
@@ -536,6 +549,60 @@ impl Plan {
         }
         plan
     }
+
+    /// Contention preset (tables 56–58, not in the paper): a small
+    /// algorithm cross-section per operation on Hydra, intended for the
+    /// event-driven network backend (`mlane sweep --preset contention`
+    /// defaults to `--backend event` with the contended scenario — the
+    /// plan itself is backend-agnostic; `RunConfig::backend` decides).
+    /// Count grids are deliberately short: the event backend walks
+    /// every message through explicit port queues, so a cell costs far
+    /// more than an analytic recost.
+    pub fn contention() -> Plan {
+        let cl = hydra();
+        let rooted = |op: OpKind| {
+            Grid::new()
+                .cluster(cl)
+                .op(op)
+                .algs([
+                    registry::klane(2),
+                    registry::kported(2),
+                    registry::fulllane(),
+                    registry::native(),
+                ])
+                .counts(&[1, 1000, 100_000])
+        };
+        let alltoall = Grid::new()
+            .cluster(cl)
+            .op(OpKind::Alltoall)
+            .algs([
+                registry::klane(2),
+                registry::kported(2),
+                registry::fulllane(),
+                registry::bruck(2),
+                registry::native(),
+            ])
+            .counts(&[1, 87, 869]);
+        Plan::new()
+            .table(
+                56,
+                "Bcast under background tenant traffic on Hydra (contention)",
+                PersonaName::OpenMpi,
+                &rooted(OpKind::Bcast),
+            )
+            .table(
+                57,
+                "Scatter under background tenant traffic on Hydra (contention)",
+                PersonaName::OpenMpi,
+                &rooted(OpKind::Scatter),
+            )
+            .table(
+                58,
+                "Alltoall under background tenant traffic on Hydra (contention)",
+                PersonaName::OpenMpi,
+                &alltoall,
+            )
+    }
 }
 
 fn hydra() -> Cluster {
@@ -698,6 +765,7 @@ fn run_section(
     coll.reps = cfg.reps;
     coll.warmup = cfg.warmup;
     coll.seed = cfg.seed;
+    coll.backend = cfg.backend;
     let ms = coll.run_series(sec.op.op(1), &sec.counts, &sec.alg).map_err(|source| {
         PlanError::Section { table: spec.number, section: sec.heading.clone(), source }
     })?;
@@ -980,6 +1048,46 @@ mod tests {
         let out = run_table_with(&Arc::new(SweepEngine::new()), &spec, &cfg()).unwrap();
         assert_eq!(out.rows.len(), 2 * spec.sections.len());
         assert!(out.rows.iter().all(|r| r.avg.is_finite() && r.avg >= r.min));
+    }
+
+    #[test]
+    fn contention_preset_shape() {
+        let plan = Plan::preset("contention").unwrap();
+        assert_eq!(plan.tables.len(), 3);
+        assert_eq!(plan.tables[0].number, 56);
+        assert_eq!(plan.tables[2].number, 58);
+        assert_eq!(plan.tables[0].sections.len(), 4);
+        assert_eq!(plan.tables[2].sections.len(), 5);
+        assert!(plan.tables.iter().all(|t| t.persona == PersonaName::OpenMpi));
+        // Short grids: event-backend cells are expensive.
+        assert!(plan.num_cells() <= 40, "{}", plan.num_cells());
+        assert!(Plan::PRESETS.contains(&"contention"));
+    }
+
+    #[test]
+    fn contention_preset_runs_on_the_event_backend() {
+        use crate::netsim::Scenario;
+        let t = Plan::contention().tables.remove(0).with_grid(tiny(), &[1, 64]);
+        let c = cfg().backend(Backend::Event(Scenario::contended()));
+        let out = run_table_with(&Arc::new(SweepEngine::new()), &t, &c).unwrap();
+        assert_eq!(out.rows.len(), 2 * t.sections.len());
+        assert!(out.rows.iter().all(|r| r.avg.is_finite() && r.avg >= r.min));
+    }
+
+    #[test]
+    fn event_backend_plan_is_deterministic_across_thread_counts() {
+        use crate::netsim::Scenario;
+        let grid = Grid::new()
+            .cluster(tiny())
+            .op(OpKind::Bcast)
+            .algs([registry::klane(1), registry::klane(2), registry::fulllane()])
+            .counts(&[1, 64, 6000]);
+        let plan = Plan::new().table(1, "det", PersonaName::OpenMpi, &grid);
+        let run = |threads| {
+            let c = cfg().threads(threads).backend(Backend::Event(Scenario::contended()));
+            run_plan_with(&Arc::new(SweepEngine::new()), &plan, &c).unwrap().text()
+        };
+        assert_eq!(run(1), run(4));
     }
 
     #[test]

@@ -36,6 +36,7 @@ use std::sync::Arc;
 
 use crate::algorithms::registry::{self, OpKind};
 use crate::model::PersonaName;
+use crate::netsim::BackendKind;
 use crate::topology::Cluster;
 use crate::tuning::{self, json, json::Value};
 
@@ -80,8 +81,9 @@ fn spec_array(tables: &[TableSpec]) -> String {
 /// Fingerprint of (plan spec, measurement config): equal fingerprints
 /// are the merge-time proof that two artifacts are shards of the same
 /// run. FNV-1a over the spec text plus the config fields that influence
-/// cell values (`reps`/`warmup`/`seed`; threads and cache bounds do not
-/// change output, by the determinism contract).
+/// cell values (`reps`/`warmup`/`seed`/`backend` with every scenario
+/// knob; threads and cache bounds do not change output, by the
+/// determinism contract).
 pub fn plan_fingerprint(plan: &Plan, cfg: &RunConfig) -> u64 {
     spec_fingerprint(&spec_array(&plan.tables), cfg)
 }
@@ -91,7 +93,13 @@ pub fn plan_fingerprint(plan: &Plan, cfg: &RunConfig) -> u64 {
 /// fingerprinted bytes and the embedded bytes cannot drift apart.
 fn spec_fingerprint(spec_text: &str, cfg: &RunConfig) -> u64 {
     let mut text = spec_text.to_string();
-    text.push_str(&format!("|reps={},warmup={},seed={}", cfg.reps, cfg.warmup, cfg.seed));
+    text.push_str(&format!(
+        "|reps={},warmup={},seed={}|backend={}",
+        cfg.reps,
+        cfg.warmup,
+        cfg.seed,
+        cfg.backend.fingerprint_text()
+    ));
     fnv1a(text.as_bytes())
 }
 
@@ -552,10 +560,22 @@ fn parse_tune_shard(path: &Path, v: &Value) -> Result<TuneShard, PlanError> {
     }
     let tune_v = doc.get("tune")?;
     let td = doc.sub(tune_v);
+    // Older artifacts predate the backend tag; absent means analytic.
+    let backend = match tune_v.get("backend") {
+        None => BackendKind::Analytic,
+        Some(b) => {
+            let s = b
+                .as_str()
+                .ok_or_else(|| doc.err("tune.backend must be a string".into()))?;
+            BackendKind::parse(s)
+                .ok_or_else(|| doc.err(format!("unknown tune backend {s:?}")))?
+        }
+    };
     let tune = tuning::TuneConfig {
         reps: td.u64("reps")? as usize,
         warmup: td.u64("warmup")? as usize,
         seed: td.u64("seed")?,
+        backend,
     };
     let indices: Vec<usize> = doc
         .arr("indices")?
@@ -769,6 +789,18 @@ mod tests {
         // Thread count must NOT shard the fingerprint: output is
         // thread-independent, so shards may use different pool sizes.
         assert_eq!(a, plan_fingerprint(&plan, &cfg().threads(7)));
+        // The backend (and each scenario knob) measures different
+        // numbers, so it must shard the fingerprint.
+        use crate::netsim::{Backend, Scenario};
+        let ev = plan_fingerprint(&plan, &cfg().backend(Backend::Event(Scenario::contended())));
+        assert_ne!(a, ev, "backend in fingerprint");
+        let mut sc = Scenario::contended();
+        sc.tenant_flows += 1;
+        assert_ne!(
+            ev,
+            plan_fingerprint(&plan, &cfg().backend(Backend::Event(sc))),
+            "scenario knobs in fingerprint"
+        );
     }
 
     #[test]

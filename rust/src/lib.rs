@@ -11,6 +11,7 @@ pub mod analysis;
 pub mod algorithms;
 pub mod model;
 pub mod sim;
+pub mod netsim;
 pub mod exec;
 pub mod runtime;
 pub mod coordinator;

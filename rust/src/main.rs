@@ -5,13 +5,15 @@
 //! mlane table <N> [--persona openmpi|intelmpi|mpich] [--csv DIR]
 //! mlane tables [--csv DIR] [--threads T]  # all 48 tables (2..49), plan-parallel
 //!              [--shards N --shard-index I --out FILE]  # one shard of a multi-process run
-//! mlane sweep  [--preset paper|appendix|tuned]
+//! mlane sweep  [--preset paper|appendix|tuned|contention]
 //!              [--nodes N --cores n --lanes L] [--op OP[,OP...]]
 //!              [--alg NAME[:K][,NAME[:K]...]] [--k K] [--counts C[,C...]]
 //!              [--persona P[,P...]] [--format text|csv|json] [--out DIR]
 //!              [--reps R] [--threads T] [--list]
+//!              [--backend sim|event] [event scenario knobs, see below]
 //!              [--shards N --shard-index I]  # emit a shard artifact instead of a report
-//! mlane tune   [--preset paper|appendix|tuned] [grid flags as sweep]
+//! mlane tune   [--preset paper|appendix|tuned|contention] [grid flags as sweep]
+//!              [--backend sim|event]  # event books are tagged; shards never mix backends
 //!              [--format text|json] [--out FILE]  # per-size decision tables
 //!              [--shards N --shard-index I]  # emit a tune-shard artifact
 //! mlane merge  OUT DIR [--format text|csv|json]  # reassemble shard artifacts;
@@ -19,10 +21,14 @@
 //! mlane run --op bcast|scatter|gather|allgather|alltoall
 //!           --alg <registry name: kported|klane|klane2p|fulllane|bruck|tuned|...>
 //!           [--k K] [--c C] [--nodes N] [--cores n] [--lanes L]
-//!           [--backend sim|exec|xla] [--persona P] [--table FILE]
+//!           [--backend sim|event|exec|xla] [--persona P] [--table FILE]
 //! mlane autotune --op <op> [--c C] [--nodes N] [--cores n] [--lanes L]
 //! mlane compare                       # simulated vs paper anchors
-//! mlane trace --op <op> --alg <alg> [--out FILE]  # Chrome trace of one run
+//! mlane trace --op <op> --alg <alg> [--out FILE] [--backend sim|event]  # Chrome trace
+//! # event scenario knobs (with --backend event; the contention preset defaults to it):
+//! #   --tenants N --tenant-gap US --tenant-bytes B   background tenant flows per node
+//! #   --stragglers N --straggler-factor F            slow nodes (factor >= 1)
+//! #   --queue-capacity SLOTS                         drop-tail bound (overflow = typed error)
 //! mlane lint   [--nodes N --cores n --lanes L] [--op OP[,OP...]]
 //!              [--alg NAME[:K][,NAME[:K]...]] [--k K] [--counts C[,C...]]
 //!              [--persona P] [--format text|json] [--out FILE]
@@ -55,6 +61,7 @@ use mlane::harness::{
     TextSink,
 };
 use mlane::model::{Persona, PersonaName};
+use mlane::netsim::{Backend, BackendKind, Scenario as NetScenario};
 use mlane::runtime::XlaService;
 use mlane::sim::SweepEngine;
 use mlane::topology::Cluster;
@@ -185,6 +192,68 @@ fn parse_positive(v: &str, what: &str) -> Result<usize> {
 /// accepts; `--out` is listed separately, only where it is consumed.
 const MEASURE_FLAGS: &[&str] = &["reps", "threads", "cache-shapes"];
 const CLUSTER_FLAGS: &[&str] = &["nodes", "cores", "lanes"];
+/// Event-backend scenario knobs. Meaningless on the analytic backend —
+/// using one without `--backend event` is an error, not a silent no-op.
+const SCENARIO_FLAGS: &[&str] = &[
+    "tenants",
+    "tenant-gap",
+    "tenant-bytes",
+    "stragglers",
+    "straggler-factor",
+    "queue-capacity",
+];
+
+/// `--backend sim|event` plus the scenario knobs, resolved to a
+/// `netsim::Backend`. `contended` seeds the event scenario with
+/// `Scenario::contended()` (the `contention` preset's default — which
+/// also defaults the backend itself to event) instead of
+/// contention-free; explicit knob flags override the base either way.
+/// A scenario the backend would reject (`--straggler-factor 0.5`) fails
+/// here, at the CLI edge, not mid-sweep.
+fn parse_backend(args: &Args, contended: bool) -> Result<Backend> {
+    let event = match args.flags.get("backend").map(String::as_str) {
+        None => contended,
+        Some("sim") => false,
+        Some("event") => true,
+        Some(other) => bail!("unknown backend {other} (backends: sim|event)"),
+    };
+    if !event {
+        if let Some(f) = SCENARIO_FLAGS.iter().find(|f| args.flags.contains_key(**f)) {
+            bail!("--{f} applies to the event backend; add --backend event");
+        }
+        return Ok(Backend::Analytic);
+    }
+    let mut sc =
+        if contended { NetScenario::contended() } else { NetScenario::contention_free() };
+    if let Some(v) = args.flags.get("queue-capacity") {
+        let cap: u32 =
+            v.parse().map_err(|_| anyhow!("bad --queue-capacity value: {v} (want slots)"))?;
+        sc.queue_capacity = Some(cap);
+    }
+    if let Some(v) = args.flags.get("tenants") {
+        sc.tenant_flows =
+            v.parse().map_err(|_| anyhow!("bad --tenants value: {v} (want a flow count)"))?;
+    }
+    if let Some(v) = args.flags.get("tenant-gap") {
+        sc.tenant_gap_us =
+            v.parse().map_err(|_| anyhow!("bad --tenant-gap value: {v} (want microseconds)"))?;
+    }
+    if let Some(v) = args.flags.get("tenant-bytes") {
+        sc.tenant_bytes =
+            v.parse().map_err(|_| anyhow!("bad --tenant-bytes value: {v} (want bytes)"))?;
+    }
+    if let Some(v) = args.flags.get("stragglers") {
+        sc.straggler_nodes =
+            v.parse().map_err(|_| anyhow!("bad --stragglers value: {v} (want a node count)"))?;
+    }
+    if let Some(v) = args.flags.get("straggler-factor") {
+        sc.straggler_factor = v
+            .parse()
+            .map_err(|_| anyhow!("bad --straggler-factor value: {v} (want a slowdown >= 1)"))?;
+    }
+    sc.validate()?;
+    Ok(Backend::Event(sc))
+}
 /// Multi-process sharding flags (`mlane sweep`/`tables`/`tune`).
 const SHARD_FLAGS: &[&str] = &["shards", "shard-index"];
 
@@ -259,7 +328,11 @@ fn run() -> Result<()> {
             check_flags(
                 &args,
                 &[
-                    &["preset", "op", "alg", "k", "counts", "persona", "format", "list", "out"],
+                    &[
+                        "preset", "op", "alg", "k", "counts", "persona", "format", "list",
+                        "out", "backend",
+                    ],
+                    SCENARIO_FLAGS,
                     SHARD_FLAGS,
                     CLUSTER_FLAGS,
                     MEASURE_FLAGS,
@@ -271,7 +344,7 @@ fn run() -> Result<()> {
             check_flags(
                 &args,
                 &[
-                    &["preset", "op", "alg", "k", "counts", "persona", "format", "out"],
+                    &["preset", "op", "alg", "k", "counts", "persona", "format", "out", "backend"],
                     SHARD_FLAGS,
                     CLUSTER_FLAGS,
                     MEASURE_FLAGS,
@@ -288,6 +361,7 @@ fn run() -> Result<()> {
                 &args,
                 &[
                     &["op", "alg", "k", "c", "backend", "persona", "table"],
+                    SCENARIO_FLAGS,
                     CLUSTER_FLAGS,
                     MEASURE_FLAGS,
                 ],
@@ -305,7 +379,11 @@ fn run() -> Result<()> {
         "trace" => {
             check_flags(
                 &args,
-                &[&["op", "alg", "k", "c", "persona", "out", "cache-shapes"], CLUSTER_FLAGS],
+                &[
+                    &["op", "alg", "k", "c", "persona", "out", "cache-shapes", "backend"],
+                    SCENARIO_FLAGS,
+                    CLUSTER_FLAGS,
+                ],
             )?;
             cmd_trace(&args)
         }
@@ -359,20 +437,22 @@ commands:
                 [--preset {presets}]
                 [--nodes --cores --lanes --op OP[,OP] --alg NAME[:K][,NAME[:K]] --k K]
                 [--counts C[,C] --persona P[,P] --format text|csv|json --out DIR]
-                [--reps R --threads T --list]
+                [--reps R --threads T --list] [--backend sim|event + scenario knobs]
                 [--shards N --shard-index I]  (emit a shard artifact instead of a report)
   tune        build per-size decision tables (count breakpoints -> fastest algorithm);
               the `tuned` meta-algorithm dispatches from them
                 [--preset {presets}] [grid flags as sweep]
+                [--backend sim|event  (event books are tagged; backends never merge)]
                 [--format text|json --out FILE --reps R --threads T]
                 [--shards N --shard-index I]  (emit a tune-shard artifact)
   merge       reassemble shard artifacts from DIR into OUT — byte-identical to the
               single-process report  [--format text|csv|json]  (tune shards: book json)
                 usage: mlane merge OUT DIR
-  run         run one collective                 [--op --alg --k --c --nodes --cores --lanes --backend --persona --table FILE]
+  run         run one collective                 [--op --alg --k --c --nodes --cores --lanes --backend sim|event|exec|xla --persona --table FILE]
   autotune    pick the fastest algorithm         [--op --c --nodes --cores --lanes --persona]
   compare     simulated vs paper anchor cells
-  trace       emit a Chrome-trace of one simulated run  [--op --alg ... --out FILE]
+  trace       emit a Chrome-trace of one run     [--op --alg ... --out FILE --backend sim|event]
+              (--backend event adds per-event enqueue/dequeue/deliver instants with queue depth)
   lint        run every static-analysis pass (invariants, lane contention,
               rendezvous deadlock, redundancy, round optimality) over catalog
               schedules; exhaustive diagnostics, exit 1 on any error finding
@@ -385,6 +465,15 @@ commands:
 
 flags:      --op  {}
             --alg {}
+
+network backend (sweep/run/trace: --backend sim|event; `--preset contention`
+defaults to event with the contended scenario):
+            --tenants N           background tenant flows injected per node
+            --tenant-gap US       mean gap between tenant flow arrivals (microseconds)
+            --tenant-bytes B      tenant flow size in bytes
+            --stragglers N        nodes slowed by --straggler-factor
+            --straggler-factor F  per-node slowdown multiplier (>= 1)
+            --queue-capacity S    drop-tail port queue bound; overflow is a typed error
 
 environment (parsed once, at this CLI edge, into harness::RunConfig;
 flags override):
@@ -658,7 +747,12 @@ const GRID_FLAGS: &[&str] =
     &["op", "alg", "counts", "persona", "k", "nodes", "cores", "lanes"];
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    let cfg = run_config(args)?;
+    let mut cfg = run_config(args)?;
+    // The contention preset exists to exercise the event backend: it
+    // defaults to `--backend event` with the contended scenario. Any
+    // other grid stays analytic unless `--backend event` asks.
+    let contended = args.flags.get("preset").map(String::as_str) == Some("contention");
+    cfg.backend = parse_backend(args, contended)?;
     let plan = match args.flags.get("preset") {
         Some(name) => {
             if let Some(conflict) = GRID_FLAGS.iter().find(|f| args.flags.contains_key(**f)) {
@@ -831,6 +925,15 @@ fn cmd_tune(args: &Args) -> Result<()> {
     if let Some(v) = args.flags.get("reps") {
         tune_cfg.reps = parse_positive(v, "reps")?;
     }
+    // `--backend event` tunes on the event backend (contention-free
+    // scenario only — winners ranked under one tenant load would be
+    // wrong under another) and tags the book, so analytic and event
+    // artifacts never merge or install interchangeably.
+    tune_cfg.backend = match args.flags.get("backend").map(String::as_str) {
+        None | Some("sim") => BackendKind::Analytic,
+        Some("event") => BackendKind::Event,
+        Some(other) => bail!("unknown backend {other} (backends: sim|event)"),
+    };
     let scenarios = match args.flags.get("preset") {
         Some(name) => {
             if let Some(conflict) = GRID_FLAGS.iter().find(|f| args.flags.contains_key(**f)) {
@@ -931,9 +1034,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         tuning::install(book)?;
     }
-    let coll = collectives(cl, persona, &cfg);
     match args.flags.get("backend").map(String::as_str) {
-        Some("sim") | None => {
+        None | Some("sim") | Some("event") => {
+            let mut coll = collectives(cl, persona, &cfg);
+            coll.backend = parse_backend(args, false)?;
             let m = coll.run(op, &alg)?;
             println!(
                 "{} {} p={} c={}  avg={:.2}us min={:.2}us  ({} reps)",
@@ -947,6 +1051,10 @@ fn cmd_run(args: &Args) -> Result<()> {
             );
         }
         Some(backend @ ("exec" | "xla")) => {
+            if let Some(f) = SCENARIO_FLAGS.iter().find(|f| args.flags.contains_key(**f)) {
+                bail!("--{f} applies to the event backend; add --backend event");
+            }
+            let coll = collectives(cl, persona, &cfg);
             let rt = if backend == "xla" {
                 ExecRuntime::with_xla(XlaService::start(std::path::Path::new("artifacts"))?)
             } else {
@@ -1164,13 +1272,34 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let coll = collectives(cl, args.persona()?, &cfg);
     let built = coll.schedule(op, &alg)?;
     let out = args.flags.get("out").cloned().unwrap_or_else(|| "trace.json".into());
-    let trace = mlane::sim::trace::trace_run(&built.schedule, &coll.persona.model, 1);
-    std::fs::write(&out, trace.to_chrome_json())?;
-    println!(
-        "wrote {} ({} spans, makespan {:.2}us) — open in chrome://tracing or Perfetto",
-        out,
-        trace.spans.len(),
-        trace.makespan
-    );
+    match parse_backend(args, false)? {
+        Backend::Analytic => {
+            let trace = mlane::sim::trace::trace_run(&built.schedule, &coll.persona.model, 1);
+            std::fs::write(&out, trace.to_chrome_json())?;
+            println!(
+                "wrote {} ({} spans, makespan {:.2}us) — open in chrome://tracing or Perfetto",
+                out,
+                trace.spans.len(),
+                trace.makespan
+            );
+        }
+        Backend::Event(sc) => {
+            let et = mlane::sim::trace::trace_run_event(
+                &built.schedule,
+                &coll.persona.model,
+                &sc,
+                1,
+            )?;
+            std::fs::write(&out, et.to_chrome_json())?;
+            println!(
+                "wrote {} ({} spans, {} events, makespan {:.2}us) — open in chrome://tracing \
+                 or Perfetto",
+                out,
+                et.trace.spans.len(),
+                et.events.len(),
+                et.trace.makespan
+            );
+        }
+    }
     Ok(())
 }

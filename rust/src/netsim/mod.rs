@@ -1,0 +1,1206 @@
+//! Contention-aware discrete-event network backend.
+//!
+//! The analytic engine (`sim::engine`) prices a schedule with a
+//! closed-form reservation model: every port is a pool of
+//! earliest-free servers and a transfer's wire time is reserved the
+//! instant its preconditions are met, even if that instant is in the
+//! future. That is exact and fast, but it cannot express *dynamic*
+//! effects: finite switch buffers, background traffic stealing lane
+//! time, or slow nodes stretching their posting overheads. This module
+//! is the second backend behind [`crate::sim::SimBackend`]: the same
+//! `Schedule` is compiled into the same CSR round-program layout, but
+//! execution is a discrete-event simulation over explicit FIFO port
+//! queues.
+//!
+//! ## Event model
+//!
+//! Messages are flow-level units (one event per message per hop, not
+//! per packet). An off-node transfer travels store-and-forward through
+//! two ports: the source node's **net-out** port (one server per
+//! physical lane), then — one wire latency `alpha_net` after its
+//! egress service *starts*, i.e. cut-through, exactly the analytic
+//! `in_ready` — the destination node's **net-in** port. On-node
+//! transfers serialize on the node's **bus** port (`bus_servers`
+//! servers) and arrive `alpha_shm` after service end. Posting
+//! overheads (`o_post`, `o_match`, `node_collective_call`, jitter) and
+//! the eager/rendezvous protocol follow the analytic engine
+//! expression-for-expression, so on a contention-free scenario the two
+//! backends differ only in service *order* under port contention: the
+//! analytic model reserves earliest-free at post time, this backend
+//! queues FIFO-by-ready-time. Both disciplines are work-conserving,
+//! which is what bounds the cross-validation tolerance
+//! (`rust/tests/backend_crossval.rs`, DESIGN.md §Network backend).
+//!
+//! ## Determinism
+//!
+//! One `BinaryHeap` event queue with an insertion-sequence tie-break
+//! ([`queue`]), two seeded [`Prng`] streams (jitter mirrors the
+//! engine's; tenants get an independent stream so enabling them does
+//! not perturb jitter), no wall clock, no global state. A run is a
+//! pure function of (schedule, model, scenario, seed).
+//!
+//! ## Scenario knobs
+//!
+//! [`Scenario`] adds what the paper's testbed could not isolate:
+//! drop-tail port queues with finite capacity, per-node background
+//! tenant flows (Poisson arrivals, exponential sizes), and straggler
+//! nodes whose CPU-side overheads are scaled by a slowdown factor.
+//! The knobs deliberately live *outside* [`CostModel`] so the sweep
+//! cache's model fingerprint (and every analytic artifact) is
+//! untouched.
+
+mod queue;
+
+use std::collections::VecDeque;
+use std::fmt;
+
+use crate::model::CostModel;
+use crate::schedule::{CountSizer, Schedule};
+use crate::sim::{SimBackend, SimResult};
+use crate::sim::trace::Span;
+use crate::util::Prng;
+
+use queue::{EvKind, EventQueue, Job, JobId};
+
+/// Typed event-backend failures. CLI-reachable paths surface these as
+/// exit-1 messages (`rust/tests/cli_errors.rs`); the sweep layer wraps
+/// them in `sweep::MeasureError::Net` the way `SimError` rides
+/// `MeasureError::Sim`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetError {
+    /// A *collective* message hit a full drop-tail queue. Collectives
+    /// have no retransmit layer here, so a dropped message would hang
+    /// the schedule — the run aborts with the drop site instead.
+    /// (Tenant messages are dropped silently, as real best-effort
+    /// background traffic would be.)
+    QueueOverflow { node: u32, port: &'static str, capacity: u32 },
+    /// The scenario's knobs are self-contradictory or non-physical.
+    InvalidScenario { reason: &'static str },
+    /// The scenario asks for something this cluster shape cannot
+    /// express (e.g. tenant traffic with no inter-node network).
+    BackendUnsupported { what: &'static str },
+}
+
+impl fmt::Display for NetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NetError::QueueOverflow { node, port, capacity } => write!(
+                f,
+                "event backend: drop-tail queue overflow on node {node} {port} \
+                 (capacity {capacity}): a collective message was dropped; raise \
+                 --queue-capacity or reduce background load"
+            ),
+            NetError::InvalidScenario { reason } => {
+                write!(f, "event backend: invalid scenario: {reason}")
+            }
+            NetError::BackendUnsupported { what } => {
+                write!(f, "event backend does not support {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+/// Contention scenario for one event-backend run. All knobs off (the
+/// [`Scenario::contention_free`] default) reproduces the analytic
+/// model's assumptions: infinite buffers, idle network, uniform nodes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Scenario {
+    /// Drop-tail waiting-room capacity per port (jobs in service not
+    /// counted). `None` = unbounded.
+    pub queue_capacity: Option<u32>,
+    /// Background tenant flows per node. Each flow injects messages at
+    /// its node's net-out port with exponential inter-arrival gaps.
+    pub tenant_flows: u32,
+    /// Mean inter-arrival gap per tenant flow (µs).
+    pub tenant_gap_us: f64,
+    /// Mean tenant message size (bytes, exponentially distributed).
+    pub tenant_bytes: f64,
+    /// The first `straggler_nodes` nodes are stragglers.
+    pub straggler_nodes: u32,
+    /// CPU-side slowdown multiplier (≥ 1.0) applied to straggler
+    /// ranks' `o_post`, `o_match`, `node_collective_call`, and jitter.
+    pub straggler_factor: f64,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario::contention_free()
+    }
+}
+
+impl Scenario {
+    /// Infinite buffers, no tenants, no stragglers — the scenario the
+    /// analytic model prices, used by `backend_crossval.rs`.
+    pub fn contention_free() -> Scenario {
+        Scenario {
+            queue_capacity: None,
+            tenant_flows: 0,
+            tenant_gap_us: 0.0,
+            tenant_bytes: 0.0,
+            straggler_nodes: 0,
+            straggler_factor: 1.0,
+        }
+    }
+
+    /// The canned contended scenario behind the `contention` sweep
+    /// preset: moderate tenant load, a couple of stragglers, finite
+    /// (but generous) buffers.
+    pub fn contended() -> Scenario {
+        Scenario {
+            queue_capacity: Some(64),
+            tenant_flows: 4,
+            tenant_gap_us: 50.0,
+            tenant_bytes: 16_384.0,
+            straggler_nodes: 2,
+            straggler_factor: 1.5,
+        }
+    }
+
+    /// True iff every knob is at its analytic-equivalent setting.
+    pub fn is_contention_free(&self) -> bool {
+        self.queue_capacity.is_none()
+            && self.tenant_flows == 0
+            && (self.straggler_nodes == 0 || self.straggler_factor == 1.0)
+    }
+
+    /// Reject non-physical knobs with a typed error (CLI surfaces the
+    /// reason verbatim).
+    pub fn validate(&self) -> Result<(), NetError> {
+        let bad = |reason| Err(NetError::InvalidScenario { reason });
+        if !self.straggler_factor.is_finite() || self.straggler_factor < 1.0 {
+            return bad("straggler factor must be a finite slowdown multiplier >= 1.0");
+        }
+        if self.tenant_flows > 0 {
+            if !self.tenant_gap_us.is_finite() || self.tenant_gap_us <= 0.0 {
+                return bad("tenant gap must be a finite positive mean inter-arrival (us)");
+            }
+            if !self.tenant_bytes.is_finite() || self.tenant_bytes <= 0.0 {
+                return bad("tenant bytes must be a finite positive mean message size");
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical knob listing for artifact fingerprints (`f64` Display
+    /// is shortest-round-trip, so this is deterministic).
+    pub fn key_text(&self) -> String {
+        format!(
+            "qcap={},tenants={},gap={},bytes={},stragglers={},factor={}",
+            match self.queue_capacity {
+                Some(c) => c.to_string(),
+                None => "inf".to_string(),
+            },
+            self.tenant_flows,
+            self.tenant_gap_us,
+            self.tenant_bytes,
+            self.straggler_nodes,
+            self.straggler_factor
+        )
+    }
+}
+
+/// Which backend measures a cell, with the event backend's scenario
+/// riding along. `RunConfig`, `Collectives`, and the CLI all carry
+/// this; the analytic path is the default everywhere.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum Backend {
+    #[default]
+    Analytic,
+    Event(Scenario),
+}
+
+impl Backend {
+    pub fn kind(&self) -> BackendKind {
+        match self {
+            Backend::Analytic => BackendKind::Analytic,
+            Backend::Event(_) => BackendKind::Event,
+        }
+    }
+
+    /// Full identity text for shard fingerprints: the kind plus, for
+    /// the event backend, every scenario knob (different knobs measure
+    /// different numbers, so they must never merge).
+    pub fn fingerprint_text(&self) -> String {
+        match self {
+            Backend::Analytic => "analytic".to_string(),
+            Backend::Event(sc) => format!("event({})", sc.key_text()),
+        }
+    }
+}
+
+/// Scenario-free backend tag — what tuned books record (a book tuned
+/// under the event backend must not silently mix with analytic
+/// shards; the tuning path always uses the contention-free scenario,
+/// so the tag alone identifies it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    #[default]
+    Analytic,
+    Event,
+}
+
+impl BackendKind {
+    pub fn key(&self) -> &'static str {
+        match self {
+            BackendKind::Analytic => "analytic",
+            BackendKind::Event => "event",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "analytic" => Some(BackendKind::Analytic),
+            "event" => Some(BackendKind::Event),
+            _ => None,
+        }
+    }
+}
+
+// ---- port identity -----------------------------------------------------
+
+const PORTS_PER_NODE: u32 = 3;
+const NET_OUT: u32 = 0;
+const NET_IN: u32 = 1;
+const BUS: u32 = 2;
+
+#[inline]
+fn port_id(node: u32, kind: u32) -> u32 {
+    node * PORTS_PER_NODE + kind
+}
+
+#[inline]
+fn port_kind(port: u32) -> u32 {
+    port % PORTS_PER_NODE
+}
+
+#[inline]
+fn port_name(port: u32) -> &'static str {
+    match port_kind(port) {
+        NET_OUT => "net-out",
+        NET_IN => "net-in",
+        _ => "bus",
+    }
+}
+
+// ---- tracing -----------------------------------------------------------
+
+/// Per-event trace kinds (`mlane trace --backend event`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetEventKind {
+    /// A job reached a port (may start service immediately).
+    Enqueue,
+    /// A port server started serializing a job.
+    Dequeue,
+    /// A collective message fully arrived at its destination rank.
+    Deliver,
+    /// A job hit a full drop-tail queue.
+    Drop,
+}
+
+impl NetEventKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            NetEventKind::Enqueue => "enqueue",
+            NetEventKind::Dequeue => "dequeue",
+            NetEventKind::Deliver => "deliver",
+            NetEventKind::Drop => "drop",
+        }
+    }
+}
+
+/// One queue-level event captured by a traced run. `src`/`dst` are
+/// ranks for collective messages and *nodes* for tenant messages
+/// (`tenant` disambiguates). `depth` is the port's waiting-queue
+/// length at the instant (after the event's own effect for `Enqueue`
+/// refusals, before service for `Dequeue`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetEvent {
+    pub t: f64,
+    pub kind: NetEventKind,
+    pub port: &'static str,
+    pub node: u32,
+    pub depth: u32,
+    pub src: u32,
+    pub dst: u32,
+    pub bytes: u64,
+    pub tenant: bool,
+}
+
+#[derive(Debug, Default)]
+struct TraceBuf {
+    spans: Vec<Span>,
+    events: Vec<NetEvent>,
+}
+
+// ---- the simulator -----------------------------------------------------
+
+/// Count-invariant per-transfer shape (mirrors the analytic engine's).
+#[derive(Clone, Copy, Debug)]
+struct XferShape {
+    src: u32,
+    dst: u32,
+    offnode: bool,
+    src_node: u32,
+    dst_node: u32,
+}
+
+#[derive(Clone, Copy)]
+struct XferState {
+    send_posted: f64, // NaN = not yet
+    recv_posted: f64,
+    arrived: f64,
+    started: bool,
+}
+
+const XFER_INIT: XferState =
+    XferState { send_posted: f64::NAN, recv_posted: f64::NAN, arrived: f64::NAN, started: false };
+
+/// A FIFO multi-server port: `busy` servers in service plus a
+/// drop-tail waiting room.
+#[derive(Debug, Default)]
+struct Port {
+    busy: u32,
+    waiting: VecDeque<Job>,
+}
+
+/// Decorrelates the tenant stream from the jitter stream.
+const TENANT_SEED_XOR: u64 = 0x7E4A_17B6_5D3C_29F1;
+
+/// Immutable event-simulation input, reusable across repetitions and
+/// (via [`NetSim::recost_count`]) across sweep counts.
+pub struct NetSim {
+    p: u32,
+    nodes: u32,
+    model: CostModel,
+    scenario: Scenario,
+    shapes: Vec<XferShape>,
+    bytes: Vec<u64>,
+    dur: Vec<f64>,
+    eager: Vec<bool>,
+    beta: Vec<f64>,
+    eager_limit: Vec<u64>,
+    sizer: CountSizer,
+    rank_off: Vec<u32>,
+    slot_hinted: Vec<bool>,
+    send_off: Vec<u32>,
+    send_ids: Vec<u32>,
+    recv_off: Vec<u32>,
+    recv_ids: Vec<u32>,
+    /// Straggler slowdown per rank (1.0 for healthy nodes).
+    rank_factor: Vec<f64>,
+    /// Ranks with a non-empty program (run-loop termination target).
+    participants: u32,
+}
+
+/// Mutable per-repetition state; reset-in-place keeps allocations
+/// across the rep loop (the event backend is not the zero-alloc series
+/// path, but the rep loop itself should not thrash the allocator).
+pub struct NetState {
+    q: EventQueue,
+    ports: Vec<Port>,
+    rank_pos: Vec<u32>,
+    rank_outstanding: Vec<u32>,
+    rank_clock: Vec<f64>,
+    xs: Vec<XferState>,
+    rng: Prng,
+    trng: Prng,
+    finished: u32,
+    events: u64,
+    /// Tenant messages dropped by full queues this rep (best-effort
+    /// traffic; informational).
+    pub tenants_dropped: u64,
+    trace: Option<TraceBuf>,
+}
+
+impl NetSim {
+    /// Compile a schedule for the event backend. Validates the
+    /// scenario up front so every later `run_into` failure is a
+    /// genuine dynamic outcome (queue overflow), not a knob typo.
+    pub fn new(
+        schedule: &Schedule,
+        model: &CostModel,
+        scenario: &Scenario,
+    ) -> Result<NetSim, NetError> {
+        scenario.validate()?;
+        let cl = schedule.cluster;
+        if scenario.tenant_flows > 0 && cl.nodes < 2 {
+            return Err(NetError::BackendUnsupported {
+                what: "tenant traffic on a single-node cluster (no inter-node lanes to contend on)",
+            });
+        }
+        let p = schedule.p();
+        let n = schedule.num_transfers();
+        let mut shapes = Vec::with_capacity(n);
+        let mut bytes = Vec::with_capacity(n);
+        let mut dur = Vec::with_capacity(n);
+        let mut eager = Vec::with_capacity(n);
+        let mut beta = Vec::with_capacity(n);
+        let mut eager_limit = Vec::with_capacity(n);
+
+        // Per-rank round programs, then CSR-flattened — the same
+        // construction as `sim::engine::Simulator::new` so both
+        // backends walk identical programs.
+        #[derive(Clone, Default)]
+        struct RoundOps {
+            round: u32,
+            sends: Vec<u32>,
+            recvs: Vec<u32>,
+            hinted: bool,
+        }
+        let mut progs: Vec<Vec<RoundOps>> = vec![Vec::new(); p as usize];
+        let mut push_op = |rank: u32, round: u32, id: u32, is_send: bool, hinted: bool| {
+            let prog = &mut progs[rank as usize];
+            if prog.last().map(|r| r.round) != Some(round) {
+                prog.push(RoundOps { round, hinted, ..Default::default() });
+            }
+            let ops = prog.last_mut().unwrap();
+            ops.hinted |= hinted;
+            if is_send {
+                ops.sends.push(id);
+            } else {
+                ops.recvs.push(id);
+            }
+        };
+
+        for (ri, round) in schedule.rounds.iter().enumerate() {
+            let hinted = round.node_phase.is_some();
+            for t in &round.transfers {
+                let id = shapes.len() as u32;
+                let offnode = !cl.same_node(t.src, t.dst);
+                let (b, lim) = if offnode {
+                    (model.beta_net, model.eager_net)
+                } else {
+                    (model.beta_shm, model.eager_shm)
+                };
+                shapes.push(XferShape {
+                    src: t.src,
+                    dst: t.dst,
+                    offnode,
+                    src_node: cl.node_of(t.src),
+                    dst_node: cl.node_of(t.dst),
+                });
+                bytes.push(t.bytes);
+                dur.push(t.bytes as f64 * b);
+                eager.push(t.bytes <= lim);
+                beta.push(b);
+                eager_limit.push(lim);
+                push_op(t.src, ri as u32, id, true, hinted);
+                push_op(t.dst, ri as u32, id, false, hinted);
+            }
+        }
+
+        let slots: usize = progs.iter().map(|pr| pr.len()).sum();
+        let mut rank_off = Vec::with_capacity(p as usize + 1);
+        let mut slot_hinted = Vec::with_capacity(slots);
+        let mut send_off = Vec::with_capacity(slots + 1);
+        let mut recv_off = Vec::with_capacity(slots + 1);
+        let mut send_ids = Vec::new();
+        let mut recv_ids = Vec::new();
+        rank_off.push(0u32);
+        send_off.push(0u32);
+        recv_off.push(0u32);
+        for prog in &progs {
+            for ops in prog {
+                slot_hinted.push(ops.hinted);
+                send_ids.extend_from_slice(&ops.sends);
+                recv_ids.extend_from_slice(&ops.recvs);
+                send_off.push(send_ids.len() as u32);
+                recv_off.push(recv_ids.len() as u32);
+            }
+            rank_off.push(slot_hinted.len() as u32);
+        }
+
+        let rank_factor: Vec<f64> = (0..p)
+            .map(|r| {
+                if cl.node_of(r) < scenario.straggler_nodes {
+                    scenario.straggler_factor
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        let participants =
+            (0..p as usize).filter(|&r| rank_off[r + 1] > rank_off[r]).count() as u32;
+
+        Ok(NetSim {
+            p,
+            nodes: cl.nodes,
+            model: *model,
+            scenario: *scenario,
+            shapes,
+            bytes,
+            dur,
+            eager,
+            beta,
+            eager_limit,
+            sizer: schedule.count_sizer(),
+            rank_off,
+            slot_hinted,
+            send_off,
+            send_ids,
+            recv_off,
+            recv_ids,
+            rank_factor,
+            participants,
+        })
+    }
+
+    pub fn num_xfers(&self) -> usize {
+        self.shapes.len()
+    }
+
+    pub fn model(&self) -> &CostModel {
+        &self.model
+    }
+
+    pub fn scenario(&self) -> &Scenario {
+        &self.scenario
+    }
+
+    /// Schedule-free recost to element count `c` — the event mirror of
+    /// `Simulator::recost_count`, same two flat passes.
+    pub fn recost_count(&mut self, c: u64) {
+        self.sizer.resize_count_into(c, &mut self.bytes);
+        for i in 0..self.bytes.len() {
+            let b = self.bytes[i];
+            self.dur[i] = b as f64 * self.beta[i];
+            self.eager[i] = b <= self.eager_limit[i];
+        }
+    }
+
+    /// Allocate a reusable per-repetition state.
+    pub fn new_state(&self) -> NetState {
+        let nports = (self.nodes * PORTS_PER_NODE) as usize;
+        NetState {
+            q: EventQueue::new(),
+            ports: (0..nports).map(|_| Port::default()).collect(),
+            rank_pos: vec![0; self.p as usize],
+            rank_outstanding: vec![0; self.p as usize],
+            rank_clock: vec![0.0; self.p as usize],
+            xs: vec![XFER_INIT; self.shapes.len()],
+            rng: Prng::new(0),
+            trng: Prng::new(0),
+            finished: 0,
+            events: 0,
+            tenants_dropped: 0,
+            trace: None,
+        }
+    }
+
+    fn reset(&self, st: &mut NetState, seed: u64) {
+        st.q.clear();
+        for p in &mut st.ports {
+            p.busy = 0;
+            p.waiting.clear();
+        }
+        st.rank_pos.iter_mut().for_each(|x| *x = 0);
+        st.rank_outstanding.iter_mut().for_each(|x| *x = 0);
+        st.rank_clock.iter_mut().for_each(|x| *x = 0.0);
+        st.xs.iter_mut().for_each(|x| *x = XFER_INIT);
+        st.rng = Prng::new(seed);
+        st.trng = Prng::new(seed ^ TENANT_SEED_XOR);
+        st.finished = 0;
+        st.events = 0;
+        st.tenants_dropped = 0;
+        if let Some(t) = &mut st.trace {
+            t.spans.clear();
+            t.events.clear();
+        }
+    }
+
+    /// Runaway guard: tenant streams self-re-arm, so a pathological
+    /// gap/makespan combination could generate unbounded events. The
+    /// budget is far above any legitimate run (≤ ~6 events per
+    /// transfer plus generous tenant slack).
+    fn event_budget(&self) -> u64 {
+        10_000_000 + 64 * self.shapes.len() as u64
+    }
+
+    /// Run one repetition reusing `st`.
+    pub fn run_into(&self, st: &mut NetState, seed: u64) -> Result<SimResult, NetError> {
+        self.reset(st, seed);
+
+        for r in 0..self.p as usize {
+            if self.rank_off[r + 1] > self.rank_off[r] {
+                st.q.push(0.0, EvKind::Post { rank: r as u32 });
+            }
+        }
+        if self.scenario.tenant_flows > 0 {
+            for node in 0..self.nodes {
+                for _ in 0..self.scenario.tenant_flows {
+                    let t = st.trng.exp(self.scenario.tenant_gap_us);
+                    st.q.push(t, EvKind::Tenant { node });
+                }
+            }
+        }
+
+        let budget = self.event_budget();
+        // Terminate on collective completion, not heap exhaustion:
+        // tenant streams never drain on their own. Leftover events die
+        // with the reset.
+        while st.finished < self.participants {
+            let Some(ev) = st.q.pop() else { break };
+            st.events += 1;
+            if st.events > budget {
+                return Err(NetError::InvalidScenario {
+                    reason: "event budget exhausted (tenant rate far exceeds what this \
+                             schedule can absorb)",
+                });
+            }
+            match ev.kind {
+                EvKind::Post { rank } => self.do_post(st, rank, ev.t),
+                EvKind::Ready { xfer } => self.enqueue_xfer(st, xfer, ev.t)?,
+                EvKind::Forward { job } => self.forward(st, job, ev.t)?,
+                EvKind::SvcDone { port, job } => self.svc_done(st, port, job, ev.t),
+                EvKind::Deliver { xfer } => self.do_arrive(st, xfer, ev.t),
+                EvKind::Tenant { node } => self.tenant_arrival(st, node, ev.t)?,
+            }
+        }
+
+        let makespan = st.rank_clock.iter().copied().fold(0.0f64, f64::max);
+        Ok(SimResult { makespan, events: st.events })
+    }
+
+    /// Run one repetition on fresh state.
+    pub fn run(&self, seed: u64) -> Result<SimResult, NetError> {
+        let mut st = self.new_state();
+        self.run_into(&mut st, seed)
+    }
+
+    /// Run one repetition recording wire spans and queue events.
+    pub fn run_traced(
+        &self,
+        seed: u64,
+    ) -> Result<(SimResult, Vec<Span>, Vec<NetEvent>), NetError> {
+        let mut st = self.new_state();
+        st.trace = Some(TraceBuf::default());
+        let r = self.run_into(&mut st, seed)?;
+        let buf = st.trace.take().expect("trace buffer");
+        Ok((r, buf.spans, buf.events))
+    }
+
+    // ---- event handlers (CPU side mirrors sim::engine) -----------------
+
+    fn do_post(&self, st: &mut NetState, rank: u32, now: f64) {
+        let m = &self.model;
+        let r = rank as usize;
+        let f = self.rank_factor[r];
+        let slot = (self.rank_off[r] + st.rank_pos[r]) as usize;
+        let sends =
+            &self.send_ids[self.send_off[slot] as usize..self.send_off[slot + 1] as usize];
+        let recvs =
+            &self.recv_ids[self.recv_off[slot] as usize..self.recv_off[slot + 1] as usize];
+        let mut clock = now;
+        if self.slot_hinted[slot] {
+            clock += m.node_collective_call * f;
+        }
+        let jitter = |st: &mut NetState| {
+            if m.jitter_mean > 0.0 {
+                st.rng.exp(m.jitter_mean * f)
+            } else {
+                0.0
+            }
+        };
+        // +1 posting token, exactly as in the analytic engine: ops may
+        // complete synchronously mid-post; the token makes advance()
+        // fire once, after the whole round is posted.
+        st.rank_outstanding[r] = (sends.len() + recvs.len()) as u32 + 1;
+
+        for &x in recvs {
+            clock += m.o_post * f + jitter(st);
+            st.xs[x as usize].recv_posted = clock;
+            self.try_ready(st, x);
+            self.try_complete_recv(st, x, clock);
+        }
+        for &x in sends {
+            clock += m.o_post * f + jitter(st);
+            st.xs[x as usize].send_posted = clock;
+            let eager = self.eager[x as usize];
+            self.try_ready(st, x);
+            if eager {
+                self.op_done(st, self.shapes[x as usize].src, clock);
+            }
+        }
+        if clock > st.rank_clock[r] {
+            st.rank_clock[r] = clock;
+        }
+        self.op_done(st, rank, clock);
+    }
+
+    /// Schedule the transfer's port enqueue once its protocol
+    /// preconditions hold (eager: send posted; rendezvous: both
+    /// posted) — the event analog of the engine's `try_start`.
+    fn try_ready(&self, st: &mut NetState, x: u32) {
+        let xi = x as usize;
+        let xst = st.xs[xi];
+        if xst.started {
+            return;
+        }
+        let sp = xst.send_posted;
+        if sp.is_nan() {
+            return;
+        }
+        let ready = if self.eager[xi] {
+            sp
+        } else {
+            let rp = xst.recv_posted;
+            if rp.is_nan() {
+                return;
+            }
+            sp.max(rp)
+        };
+        st.xs[xi].started = true;
+        st.q.push(ready, EvKind::Ready { xfer: x });
+    }
+
+    fn enqueue_xfer(&self, st: &mut NetState, x: u32, now: f64) -> Result<(), NetError> {
+        let sh = self.shapes[x as usize];
+        let job = Job { id: JobId::Xfer(x), dur: self.dur[x as usize], bytes: self.bytes[x as usize] };
+        let port = if sh.offnode {
+            port_id(sh.src_node, NET_OUT)
+        } else {
+            port_id(sh.src_node, BUS)
+        };
+        self.enqueue(st, port, job, now)
+    }
+
+    /// Put a job on a port: start service if a server is free, else
+    /// wait — or drop against the capacity limit.
+    fn enqueue(&self, st: &mut NetState, port: u32, job: Job, now: f64) -> Result<(), NetError> {
+        let pi = port as usize;
+        let depth = st.ports[pi].waiting.len() as u32;
+        self.note(st, now, NetEventKind::Enqueue, port, depth, job);
+        if st.ports[pi].busy < self.servers(port) {
+            st.ports[pi].busy += 1;
+            self.start_service(st, port, job, now);
+            return Ok(());
+        }
+        if let Some(cap) = self.scenario.queue_capacity {
+            if depth >= cap {
+                self.note(st, now, NetEventKind::Drop, port, depth, job);
+                return match job.id {
+                    JobId::Xfer(_) => Err(NetError::QueueOverflow {
+                        node: port / PORTS_PER_NODE,
+                        port: port_name(port),
+                        capacity: cap,
+                    }),
+                    JobId::Tenant { .. } => {
+                        st.tenants_dropped += 1;
+                        Ok(())
+                    }
+                };
+            }
+        }
+        st.ports[pi].waiting.push_back(job);
+        Ok(())
+    }
+
+    fn start_service(&self, st: &mut NetState, port: u32, job: Job, now: f64) {
+        let depth = st.ports[port as usize].waiting.len() as u32;
+        self.note(st, now, NetEventKind::Dequeue, port, depth, job);
+        st.q.push(now + job.dur, EvKind::SvcDone { port, job });
+        match port_kind(port) {
+            NET_OUT => {
+                if let JobId::Xfer(x) = job.id {
+                    self.span(st, x, now, now + job.dur, true);
+                }
+                // Cut-through: the head reaches the far side one wire
+                // latency after serialization starts (the analytic
+                // model's `in_ready = start_e + alpha_net`).
+                st.q.push(now + self.model.alpha_net, EvKind::Forward { job });
+            }
+            BUS => {
+                if let JobId::Xfer(x) = job.id {
+                    self.span(st, x, now, now + job.dur, false);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn forward(&self, st: &mut NetState, job: Job, now: f64) -> Result<(), NetError> {
+        let dst_node = match job.id {
+            JobId::Xfer(x) => self.shapes[x as usize].dst_node,
+            JobId::Tenant { dst_node, .. } => dst_node,
+        };
+        self.enqueue(st, port_id(dst_node, NET_IN), job, now)
+    }
+
+    fn svc_done(&self, st: &mut NetState, port: u32, job: Job, now: f64) {
+        let pi = port as usize;
+        st.ports[pi].busy -= 1;
+        if let Some(next) = st.ports[pi].waiting.pop_front() {
+            st.ports[pi].busy += 1;
+            self.start_service(st, port, next, now);
+        }
+        match (port_kind(port), job.id) {
+            // Arrival = ingress service end (the engine's `end_i`).
+            (NET_IN, JobId::Xfer(x)) => st.q.push(now, EvKind::Deliver { xfer: x }),
+            // On-node arrival = bus service end + alpha_shm.
+            (BUS, JobId::Xfer(x)) => {
+                st.q.push(now + self.model.alpha_shm, EvKind::Deliver { xfer: x })
+            }
+            _ => {}
+        }
+    }
+
+    fn do_arrive(&self, st: &mut NetState, x: u32, now: f64) {
+        let xi = x as usize;
+        let sh = self.shapes[xi];
+        if st.trace.is_some() {
+            let port = if sh.offnode {
+                port_id(sh.dst_node, NET_IN)
+            } else {
+                port_id(sh.src_node, BUS)
+            };
+            let depth = st.ports[port as usize].waiting.len() as u32;
+            let job = Job { id: JobId::Xfer(x), dur: self.dur[xi], bytes: self.bytes[xi] };
+            self.note(st, now, NetEventKind::Deliver, port, depth, job);
+        }
+        st.xs[xi].arrived = now;
+        if !self.eager[xi] {
+            // Rendezvous: the sender's op completes at arrival too.
+            self.op_done(st, sh.src, now);
+        }
+        self.try_complete_recv(st, x, now);
+    }
+
+    fn try_complete_recv(&self, st: &mut NetState, x: u32, now: f64) {
+        let xi = x as usize;
+        let arr = st.xs[xi].arrived;
+        let rp = st.xs[xi].recv_posted;
+        if arr.is_nan() || rp.is_nan() {
+            return;
+        }
+        let dst = self.shapes[xi].dst;
+        let t = arr.max(rp) + self.model.o_match * self.rank_factor[dst as usize];
+        self.op_done(st, dst, t.max(now));
+    }
+
+    fn op_done(&self, st: &mut NetState, rank: u32, t: f64) {
+        let r = rank as usize;
+        debug_assert!(st.rank_outstanding[r] > 0);
+        st.rank_outstanding[r] -= 1;
+        if t > st.rank_clock[r] {
+            st.rank_clock[r] = t;
+        }
+        if st.rank_outstanding[r] == 0 {
+            self.advance(st, rank);
+        }
+    }
+
+    fn advance(&self, st: &mut NetState, rank: u32) {
+        let r = rank as usize;
+        st.rank_pos[r] += 1;
+        if self.rank_off[r] + st.rank_pos[r] < self.rank_off[r + 1] {
+            st.q.push(st.rank_clock[r], EvKind::Post { rank });
+        } else {
+            st.finished += 1;
+        }
+    }
+
+    fn tenant_arrival(&self, st: &mut NetState, node: u32, now: f64) -> Result<(), NetError> {
+        let sc = &self.scenario;
+        let bytes = st.trng.exp(sc.tenant_bytes).max(1.0);
+        let mut d = st.trng.below((self.nodes - 1) as u64) as u32;
+        if d >= node {
+            d += 1;
+        }
+        let job = Job {
+            id: JobId::Tenant { src_node: node, dst_node: d },
+            dur: bytes * self.model.beta_net,
+            bytes: bytes as u64,
+        };
+        // Re-arm this flow first so a dropped message doesn't silence
+        // the stream.
+        st.q.push(now + st.trng.exp(sc.tenant_gap_us), EvKind::Tenant { node });
+        self.enqueue(st, port_id(node, NET_OUT), job, now)
+    }
+
+    fn servers(&self, port: u32) -> u32 {
+        match port_kind(port) {
+            BUS => self.model.bus_servers.max(1),
+            _ => self.model.phys_lanes.max(1),
+        }
+    }
+
+    fn span(&self, st: &mut NetState, x: u32, start: f64, end: f64, offnode: bool) {
+        if let Some(tr) = &mut st.trace {
+            let sh = self.shapes[x as usize];
+            tr.spans.push(Span {
+                src: sh.src,
+                dst: sh.dst,
+                start,
+                end,
+                bytes: self.bytes[x as usize],
+                offnode,
+            });
+        }
+    }
+
+    fn note(
+        &self,
+        st: &mut NetState,
+        t: f64,
+        kind: NetEventKind,
+        port: u32,
+        depth: u32,
+        job: Job,
+    ) {
+        let Some(tr) = &mut st.trace else { return };
+        let node = port / PORTS_PER_NODE;
+        let (src, dst, tenant) = match job.id {
+            JobId::Xfer(x) => {
+                let sh = self.shapes[x as usize];
+                (sh.src, sh.dst, false)
+            }
+            JobId::Tenant { src_node, dst_node } => (src_node, dst_node, true),
+        };
+        tr.events.push(NetEvent {
+            t,
+            kind,
+            port: port_name(port),
+            node,
+            depth,
+            src,
+            dst,
+            bytes: job.bytes,
+            tenant,
+        });
+    }
+}
+
+impl SimBackend for NetSim {
+    type State = NetState;
+    type Error = NetError;
+
+    fn new_state(&self) -> NetState {
+        NetSim::new_state(self)
+    }
+
+    fn run_rep(&self, st: &mut NetState, seed: u64) -> Result<SimResult, NetError> {
+        self.run_into(st, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{alltoall, bcast};
+    use crate::topology::Cluster;
+
+    fn quiet() -> CostModel {
+        let mut m = CostModel::hydra_baseline();
+        m.jitter_mean = 0.0;
+        m
+    }
+
+    fn free() -> Scenario {
+        Scenario::contention_free()
+    }
+
+    #[test]
+    fn single_transfer_matches_closed_form() {
+        // Mirrors the analytic engine's unit test: one rendezvous
+        // transfer costs o_post + bytes·β + α + o_match on both
+        // backends, exactly.
+        let cl = Cluster::new(2, 1, 1);
+        let m = quiet();
+        let c = 10_000u64;
+        let s = bcast::build(cl, 0, c, bcast::BcastAlg::Binomial);
+        let net = NetSim::new(&s, &m, &free()).expect("scenario");
+        let got = net.run(1).expect("run").makespan;
+        let bytes = (c * 4) as f64;
+        let want = m.o_post + bytes * m.beta_net + m.alpha_net + m.o_match;
+        assert!((got - want).abs() < 1e-9, "got {got} want {want}");
+    }
+
+    #[test]
+    fn eager_transfer_matches_closed_form() {
+        let cl = Cluster::new(2, 1, 1);
+        let m = quiet();
+        let s = bcast::build(cl, 0, 4, bcast::BcastAlg::Binomial); // 16 B eager
+        let net = NetSim::new(&s, &m, &free()).expect("scenario");
+        let got = net.run(1).expect("run").makespan;
+        let want = m.o_post + 16.0 * m.beta_net + m.alpha_net + m.o_match;
+        assert!((got - want).abs() < 1e-9, "got {got} want {want}");
+    }
+
+    #[test]
+    fn repeated_runs_are_bitwise_identical() {
+        let cl = Cluster::new(3, 4, 2);
+        let m = CostModel::hydra_baseline(); // jitter on: exercises rng
+        let s = alltoall::build(cl, 500, alltoall::AlltoallAlg::Pairwise);
+        let mut sc = Scenario::contended();
+        sc.queue_capacity = None; // keep the run infallible
+        let net = NetSim::new(&s, &m, &sc).expect("scenario");
+        let a = net.run(42).expect("run");
+        let b = net.run(42).expect("run");
+        assert_eq!(a, b);
+        assert!(net.run(43).expect("run").makespan != a.makespan, "seed must matter");
+    }
+
+    #[test]
+    fn recost_count_matches_fresh_build() {
+        let cl = Cluster::new(3, 4, 2);
+        let m = quiet();
+        let mut s = bcast::build(cl, 0, 1, bcast::BcastAlg::FullLane);
+        let mut via_count = NetSim::new(&s, &m, &free()).expect("scenario");
+        for c in [7u64, 869, 60_000, 1] {
+            via_count.recost_count(c);
+            s.resize_count(c);
+            let fresh = NetSim::new(&s, &m, &free()).expect("scenario");
+            assert_eq!(
+                via_count.run(5).expect("run"),
+                fresh.run(5).expect("run"),
+                "c={c}"
+            );
+        }
+    }
+
+    #[test]
+    fn lane_serialization_queues() {
+        // 4 concurrent off-node messages over 1 lane must serialize;
+        // over 4 lanes they overlap (the engine's contention test,
+        // replayed on the event backend).
+        let mk = |lanes: u32| {
+            let mut m = quiet();
+            m.phys_lanes = lanes;
+            m
+        };
+        let cl = Cluster::new(2, 4, 4);
+        let s = alltoall::build(cl, 50_000, alltoall::AlltoallAlg::KLane);
+        let t1 = NetSim::new(&s, &mk(1), &free()).unwrap().run(1).unwrap().makespan;
+        let t4 = NetSim::new(&s, &mk(4), &free()).unwrap().run(1).unwrap().makespan;
+        assert!(t1 > 2.0 * t4, "1 lane {t1} vs 4 lanes {t4}");
+    }
+
+    #[test]
+    fn stragglers_slow_the_collective() {
+        let cl = Cluster::new(2, 1, 1);
+        let m = quiet();
+        let s = bcast::build(cl, 0, 10_000, bcast::BcastAlg::Binomial);
+        let base = NetSim::new(&s, &m, &free()).unwrap().run(1).unwrap().makespan;
+        let mut sc = free();
+        sc.straggler_nodes = 1;
+        sc.straggler_factor = 3.0;
+        let slow = NetSim::new(&s, &m, &sc).unwrap().run(1).unwrap().makespan;
+        // Root (node 0) posts at 3× o_post; the whole chain shifts.
+        assert!(slow > base, "straggler {slow} vs base {base}");
+    }
+
+    #[test]
+    fn tenant_traffic_delays_the_collective() {
+        let cl = Cluster::new(2, 2, 2);
+        let m = quiet();
+        let s = bcast::build(cl, 0, 100_000, bcast::BcastAlg::KPorted { k: 2 });
+        let base = NetSim::new(&s, &m, &free()).unwrap().run(9).unwrap().makespan;
+        let mut sc = free();
+        sc.tenant_flows = 32;
+        sc.tenant_gap_us = 0.2;
+        sc.tenant_bytes = 800_000.0;
+        let loaded = NetSim::new(&s, &m, &sc).unwrap().run(9).unwrap().makespan;
+        assert!(loaded > base, "tenants {loaded} vs idle {base}");
+    }
+
+    #[test]
+    fn queue_overflow_is_a_typed_error() {
+        // 4 ranks per node push concurrent off-node sends through 2
+        // lane servers with zero waiting room: the third concurrent
+        // message must drop, and a dropped collective message aborts.
+        let cl = Cluster::new(3, 4, 2);
+        let m = quiet();
+        let s = alltoall::build(cl, 10_000, alltoall::AlltoallAlg::Pairwise);
+        let mut sc = free();
+        sc.queue_capacity = Some(0);
+        let err = NetSim::new(&s, &m, &sc).unwrap().run(1).unwrap_err();
+        assert!(matches!(err, NetError::QueueOverflow { .. }), "{err}");
+        assert!(err.to_string().contains("queue overflow"), "{err}");
+    }
+
+    #[test]
+    fn tenant_drops_are_silent_and_counted() {
+        let cl = Cluster::new(2, 1, 1);
+        let m = quiet();
+        let s = bcast::build(cl, 0, 1, bcast::BcastAlg::Binomial);
+        let mut sc = free();
+        sc.tenant_flows = 16;
+        sc.tenant_gap_us = 0.05;
+        sc.tenant_bytes = 1_000_000.0;
+        sc.queue_capacity = Some(1);
+        let net = NetSim::new(&s, &m, &sc).unwrap();
+        let mut st = net.new_state();
+        // The tiny eager bcast may or may not squeeze through ahead of
+        // the flood; either way tenant drops must not be errors.
+        match net.run_into(&mut st, 3) {
+            Ok(_) => assert!(st.tenants_dropped > 0, "flood must drop tenants"),
+            Err(e) => assert!(matches!(e, NetError::QueueOverflow { .. }), "{e}"),
+        }
+    }
+
+    #[test]
+    fn invalid_scenarios_are_rejected() {
+        let cl = Cluster::new(2, 1, 1);
+        let s = bcast::build(cl, 0, 4, bcast::BcastAlg::Binomial);
+        let mut sc = free();
+        sc.straggler_factor = 0.5;
+        let err = NetSim::new(&s, &quiet(), &sc).unwrap_err();
+        assert!(matches!(err, NetError::InvalidScenario { .. }), "{err}");
+        let mut sc = free();
+        sc.tenant_flows = 2; // gap/bytes left at 0
+        let err = NetSim::new(&s, &quiet(), &sc).unwrap_err();
+        assert!(matches!(err, NetError::InvalidScenario { .. }), "{err}");
+    }
+
+    #[test]
+    fn tenants_on_single_node_cluster_unsupported() {
+        let cl = Cluster::new(1, 4, 2);
+        let s = bcast::build(cl, 0, 64, bcast::BcastAlg::Binomial);
+        let mut sc = Scenario::contended();
+        sc.queue_capacity = None;
+        let err = NetSim::new(&s, &quiet(), &sc).unwrap_err();
+        assert!(matches!(err, NetError::BackendUnsupported { .. }), "{err}");
+        assert!(err.to_string().contains("does not support"), "{err}");
+    }
+
+    #[test]
+    fn traced_run_matches_untraced_and_covers_transfers() {
+        let cl = Cluster::new(2, 2, 2);
+        let m = quiet();
+        let s = bcast::build(cl, 0, 1000, bcast::BcastAlg::KPorted { k: 2 });
+        let net = NetSim::new(&s, &m, &free()).unwrap();
+        let (r, spans, events) = net.run_traced(1).expect("traced");
+        assert_eq!(r.makespan, net.run(1).unwrap().makespan);
+        assert_eq!(spans.len(), s.num_transfers(), "one wire span per transfer");
+        assert!(!events.is_empty());
+        // Every collective transfer delivers exactly once.
+        let delivers =
+            events.iter().filter(|e| e.kind == NetEventKind::Deliver && !e.tenant).count();
+        assert_eq!(delivers, s.num_transfers());
+    }
+
+    #[test]
+    fn scenario_key_text_is_stable() {
+        assert_eq!(
+            Scenario::contention_free().key_text(),
+            "qcap=inf,tenants=0,gap=0,bytes=0,stragglers=0,factor=1"
+        );
+        assert_eq!(
+            Scenario::contended().key_text(),
+            "qcap=64,tenants=4,gap=50,bytes=16384,stragglers=2,factor=1.5"
+        );
+    }
+
+    #[test]
+    fn backend_tags_round_trip() {
+        assert_eq!(BackendKind::parse("analytic"), Some(BackendKind::Analytic));
+        assert_eq!(BackendKind::parse("event"), Some(BackendKind::Event));
+        assert_eq!(BackendKind::parse("exec"), None);
+        assert_eq!(Backend::Analytic.fingerprint_text(), "analytic");
+        assert!(Backend::Event(Scenario::contended())
+            .fingerprint_text()
+            .starts_with("event(qcap=64,"));
+    }
+}

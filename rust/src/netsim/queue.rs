@@ -1,0 +1,181 @@
+//! Deterministic discrete-event queue for the network backend.
+//!
+//! Same idiom as the analytic engine's heap (`sim::engine::Ev`): a
+//! `BinaryHeap` ordered earliest-first with a monotonically increasing
+//! insertion sequence as the tie-break, so events at equal timestamps
+//! pop in FIFO order and a run is a pure function of (schedule, model,
+//! scenario, seed) — no wall clock, no global RNG. Unlike the engine's
+//! packed 16-byte entry, netsim events carry structured payloads
+//! (jobs move *through* queues here, they are not just completion
+//! notifications), so the entry is a plain struct and the sequence is
+//! 64-bit — tenant streams can push far more events than a collective
+//! has transfers.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What a port is currently serializing (or holding in its drop-tail
+/// queue): a collective transfer or a background tenant message.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) enum JobId {
+    /// Flattened transfer id into the simulator's CSR arrays.
+    Xfer(u32),
+    /// Background tenant message from `src_node`'s egress, headed for
+    /// `dst_node`'s ingress.
+    Tenant { src_node: u32, dst_node: u32 },
+}
+
+/// A unit of port work: serialization time plus the payload size (the
+/// latter only for tracing — `dur` is already priced at enqueue time).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) struct Job {
+    pub id: JobId,
+    pub dur: f64,
+    pub bytes: u64,
+}
+
+/// Event payloads. `Post`/`Deliver` mirror the analytic engine's two
+/// kinds; the rest drive the store-and-forward port machinery.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) enum EvKind {
+    /// A rank posts all ops of its current round.
+    Post { rank: u32 },
+    /// A transfer's preconditions are met: enqueue it at its source port.
+    Ready { xfer: u32 },
+    /// A message cleared its egress head: enqueue at the destination
+    /// node's ingress (scheduled one wire latency after service start —
+    /// cut-through, matching the analytic `in_ready`).
+    Forward { job: Job },
+    /// A port server finished serializing `job`.
+    SvcDone { port: u32, job: Job },
+    /// A collective message fully arrived at its destination rank.
+    Deliver { xfer: u32 },
+    /// One tenant flow's next injection on `node` (self-re-arming).
+    Tenant { node: u32 },
+}
+
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Ev {
+    pub t: f64,
+    /// Insertion sequence: unique per event, FIFO tie-break at equal `t`.
+    pub seq: u64,
+    pub kind: EvKind,
+}
+
+// Ordering is by (t, seq) only; `seq` is unique, so `cmp == Equal`
+// implies the same event and the manual Eq is consistent with Ord.
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    #[inline]
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: reversed for earliest-first.
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The queue itself: push with a timestamp, pop earliest (FIFO among
+/// equals). `clear` keeps the heap's capacity for rep-loop reuse.
+#[derive(Debug, Default)]
+pub(crate) struct EventQueue {
+    heap: BinaryHeap<Ev>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn push(&mut self, t: f64, kind: EvKind) {
+        self.seq += 1;
+        self.heap.push(Ev { t, seq: self.seq, kind });
+    }
+
+    #[inline]
+    pub fn pop(&mut self) -> Option<Ev> {
+        self.heap.pop()
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, EvKind::Post { rank: 3 });
+        q.push(1.0, EvKind::Post { rank: 1 });
+        q.push(2.0, EvKind::Post { rank: 2 });
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop().map(|e| e.t)).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn equal_timestamps_pop_fifo() {
+        let mut q = EventQueue::new();
+        for rank in 0..100u32 {
+            q.push(5.0, EvKind::Post { rank });
+        }
+        for want in 0..100u32 {
+            match q.pop().expect("event").kind {
+                EvKind::Post { rank } => assert_eq!(rank, want),
+                other => panic!("unexpected kind {other:?}"),
+            }
+        }
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn interleaved_push_pop_is_deterministic() {
+        let run = || {
+            let mut q = EventQueue::new();
+            let mut log = Vec::new();
+            q.push(1.0, EvKind::Post { rank: 0 });
+            q.push(1.0, EvKind::Deliver { xfer: 7 });
+            let e = q.pop().unwrap();
+            log.push((e.t, e.seq));
+            q.push(0.5, EvKind::Tenant { node: 2 });
+            while let Some(e) = q.pop() {
+                log.push((e.t, e.seq));
+            }
+            log
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn clear_resets_sequence() {
+        let mut q = EventQueue::new();
+        q.push(1.0, EvKind::Post { rank: 0 });
+        q.clear();
+        assert_eq!(q.len(), 0);
+        q.push(1.0, EvKind::Post { rank: 1 });
+        let e = q.pop().unwrap();
+        assert_eq!(e.seq, 1);
+    }
+}

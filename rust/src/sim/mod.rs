@@ -39,6 +39,68 @@ use crate::model::CostModel;
 use crate::schedule::Schedule;
 use crate::util::stats::Summary;
 
+/// A simulation backend: something that can run one repetition of a
+/// compiled schedule against reusable per-rep state. The analytic
+/// [`Simulator`] (closed-form reservations, infallible) and the
+/// event-driven [`crate::netsim::NetSim`] (explicit FIFO port queues,
+/// fallible — drop-tail overflow is a typed error) both implement it,
+/// so measurement loops ([`measure_backend`]) and the sweep layer are
+/// generic over the backend.
+pub trait SimBackend {
+    type State;
+    type Error: std::error::Error;
+
+    /// Allocate per-repetition state sized for this backend.
+    fn new_state(&self) -> Self::State;
+
+    /// Run one repetition with the given jitter seed, reusing `st`.
+    fn run_rep(&self, st: &mut Self::State, seed: u64) -> Result<SimResult, Self::Error>;
+}
+
+impl SimBackend for Simulator {
+    type State = RepState;
+    type Error = SimError;
+
+    fn new_state(&self) -> RepState {
+        Simulator::new_state(self)
+    }
+
+    fn run_rep(&self, st: &mut RepState, seed: u64) -> Result<SimResult, SimError> {
+        Ok(self.run_into(st, seed))
+    }
+}
+
+/// Per-repetition seed derivation — one shared definition so the
+/// analytic hot path ([`measure_sim`]) and the generic backend loop
+/// ([`measure_backend`]) sample identical jitter streams for the same
+/// (seed, rep).
+#[inline]
+pub fn rep_seed(seed: u64, rep: usize) -> u64 {
+    seed ^ (rep as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Backend-generic rep loop: `reps` measured repetitions after
+/// `warmup` unmeasured ones. Unlike [`measure_sim`] this allocates a
+/// small sample buffer per call — the event backend is not part of the
+/// zero-alloc series contract (`rust/tests/series_alloc.rs` gates the
+/// analytic path only).
+pub fn measure_backend<B: SimBackend>(
+    backend: &B,
+    st: &mut B::State,
+    reps: usize,
+    warmup: usize,
+    seed: u64,
+) -> Result<Summary, B::Error> {
+    let mut samples = Vec::with_capacity(reps);
+    for rep in 0..reps + warmup {
+        let r = backend.run_rep(st, rep_seed(seed, rep))?;
+        if rep >= warmup {
+            samples.push(r.makespan);
+        }
+    }
+    Ok(Summary::of(&samples))
+}
+
 /// Simulate `reps` measured repetitions (after `warmup` unmeasured ones)
 /// and summarise like the paper's tables.
 pub fn measure(
@@ -68,7 +130,7 @@ pub fn measure_sim(
 ) -> Summary {
     st.begin_samples(reps);
     for rep in 0..reps + warmup {
-        let r = sim.run_into(st, seed ^ (rep as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let r = sim.run_into(st, rep_seed(seed, rep));
         if rep >= warmup {
             st.push_sample(r.makespan);
         }

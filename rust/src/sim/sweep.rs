@@ -56,12 +56,13 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::model::CostModel;
+use crate::netsim::{NetError, NetSim, Scenario};
 use crate::schedule::Schedule;
 use crate::topology::{Cluster, Rank};
 use crate::util::stats::Summary;
 
 use super::engine::{RepState, SimError, Simulator};
-use super::measure_sim;
+use super::{measure_backend, measure_sim};
 
 /// Error from [`SweepEngine::measure`] / [`SweepEngine::measure_series`]:
 /// either the caller's build closure failed (the only user-reachable
@@ -75,6 +76,9 @@ pub enum MeasureError<E> {
     /// Cached schedule and simulator are out of sync (an engine bug,
     /// not a user error — reported rather than panicking).
     Sim(SimError),
+    /// The event-driven network backend rejected the scenario or hit
+    /// a drop-tail overflow mid-measurement.
+    Net(NetError),
 }
 
 impl<E: std::fmt::Display> std::fmt::Display for MeasureError<E> {
@@ -82,6 +86,7 @@ impl<E: std::fmt::Display> std::fmt::Display for MeasureError<E> {
         match self {
             MeasureError::Build(e) => e.fmt(f),
             MeasureError::Sim(e) => write!(f, "sweep cache: {e}"),
+            MeasureError::Net(e) => e.fmt(f),
         }
     }
 }
@@ -91,6 +96,7 @@ impl<E: std::error::Error + 'static> std::error::Error for MeasureError<E> {
         match self {
             MeasureError::Build(e) => Some(e),
             MeasureError::Sim(e) => Some(e),
+            MeasureError::Net(e) => Some(e),
         }
     }
 }
@@ -484,6 +490,98 @@ impl SweepEngine {
         self.stats.schedules_built.fetch_add(1, Ordering::Relaxed);
         CellResult { summary, algorithm: schedule.algorithm }
     }
+
+    /// Measure a count series on the event-driven network backend,
+    /// sharing the analytic path's schedule cache: the slot is resolved
+    /// (and built on a miss) exactly like
+    /// [`SweepEngine::measure_series`], but the cached simulator and
+    /// schedule are read-only here — a [`NetSim`] is compiled from the
+    /// cached schedule once per series and re-costed per count. The
+    /// event backend allocates its state per series; it is not part of
+    /// the zero-alloc series contract (`rust/tests/series_alloc.rs`
+    /// gates the analytic path only).
+    #[allow(clippy::too_many_arguments)]
+    pub fn measure_series_event<E>(
+        &self,
+        key: SweepKey,
+        counts: &[u64],
+        model: &CostModel,
+        scenario: &Scenario,
+        reps: usize,
+        warmup: usize,
+        seed: u64,
+        build: impl FnOnce(u64) -> Result<Schedule, E>,
+    ) -> Result<Vec<CellResult>, MeasureError<E>> {
+        let Some(&first) = counts.first() else {
+            return Ok(Vec::new());
+        };
+        let skey = ShapeKey { key, model_fp: model_fingerprint(model) };
+        let slot = self.slot(skey);
+        let mut guard = slot.lock().unwrap();
+        let built = guard.is_none();
+        if built {
+            let schedule = match build(first) {
+                Ok(s) => s,
+                Err(e) => {
+                    drop(guard);
+                    self.forget(skey, &slot);
+                    return Err(MeasureError::Build(e));
+                }
+            };
+            let sim = Simulator::new(&schedule, model);
+            *guard = Some(CachedShape { schedule, sim, count: first });
+        } else {
+            let shape = guard.as_ref().expect("checked above");
+            assert_eq!(shape.sim.model(), model, "sweep key reused with a different cost model");
+            let (in_sim, in_sched) = (shape.sim.num_xfers(), shape.schedule.num_transfers());
+            if in_sim != in_sched {
+                return Err(MeasureError::Sim(SimError::TransferCountMismatch {
+                    simulator: in_sim,
+                    schedule: in_sched,
+                }));
+            }
+        }
+        let shape = guard.as_ref().expect("slot filled above");
+        // The cached schedule may be sized for whatever count the last
+        // analytic series left it at; every cell below recosts, so the
+        // construction count is irrelevant.
+        let mut net =
+            NetSim::new(&shape.schedule, model, scenario).map_err(MeasureError::Net)?;
+        let mut st = net.new_state();
+        let mut out = Vec::with_capacity(counts.len());
+        for &c in counts {
+            net.recost_count(c);
+            let summary =
+                measure_backend(&net, &mut st, reps, warmup, seed).map_err(MeasureError::Net)?;
+            out.push(CellResult { summary, algorithm: shape.schedule.algorithm });
+        }
+        self.stats.cells.fetch_add(counts.len() as u64, Ordering::Relaxed);
+        self.stats.recosts.fetch_add(counts.len() as u64, Ordering::Relaxed);
+        if built {
+            self.stats.schedules_built.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(out)
+    }
+
+    /// Event-backend analogue of [`SweepEngine::measure_uncached`]:
+    /// measure a prebuilt schedule (count-dependent algorithm selection
+    /// — native personas) on the network backend without caching it.
+    pub fn measure_uncached_event(
+        &self,
+        schedule: &Schedule,
+        model: &CostModel,
+        scenario: &Scenario,
+        reps: usize,
+        warmup: usize,
+        seed: u64,
+    ) -> Result<CellResult, NetError> {
+        let net = NetSim::new(schedule, model, scenario)?;
+        let mut st = net.new_state();
+        let summary = measure_backend(&net, &mut st, reps, warmup, seed)?;
+        self.stats.cells.fetch_add(1, Ordering::Relaxed);
+        self.stats.schedules_built.fetch_add(1, Ordering::Relaxed);
+        Ok(CellResult { summary, algorithm: schedule.algorithm })
+    }
 }
 
 #[cfg(test)]
@@ -726,6 +824,32 @@ mod tests {
         assert!(matches!(err, MeasureError::Build("nope")), "{err:?}");
         assert_eq!(eng.cached_shapes(), 0);
         assert_eq!(eng.stats().cells, 0);
+    }
+
+    #[test]
+    fn event_series_matches_fresh_netsim_and_shares_the_cache() {
+        use crate::netsim::{NetSim, Scenario};
+        let cl = Cluster::new(2, 4, 2);
+        let mut m = CostModel::hydra_baseline();
+        m.jitter_mean = 0.0;
+        let eng = SweepEngine::new();
+        let sc = Scenario::contention_free();
+        let counts = [1u64, 100, 6000];
+        // Analytic series first: the event series must reuse its shape.
+        let mut st = None;
+        eng.measure_series(key(cl), &counts, &m, 2, 0, 7, &mut st, build(cl)).unwrap();
+        let cells = eng
+            .measure_series_event(key(cl), &counts, &m, &sc, 2, 0, 7, build(cl))
+            .unwrap();
+        assert_eq!(eng.stats().schedules_built, 1, "event series must not rebuild");
+        for (i, &c) in counts.iter().enumerate() {
+            let s = bcast::build(cl, 0, c, BcastAlg::KLane { k: 2, two_phase: false });
+            let net = NetSim::new(&s, &m, &sc).unwrap();
+            let mut nst = net.new_state();
+            let fresh = sim::measure_backend(&net, &mut nst, 2, 0, 7).unwrap();
+            assert_eq!(cells[i].summary, fresh, "c = {c}");
+            assert_eq!(cells[i].algorithm, "bcast/k-lane");
+        }
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //! on-node/off-node interleaving of the k-lane algorithms are visible.
 
 pub use super::engine::Span;
+pub use crate::netsim::{NetEvent, NetEventKind};
 
 use crate::model::CostModel;
+use crate::netsim::{NetError, NetSim, Scenario};
 use crate::schedule::Schedule;
 use crate::sim::Simulator;
 
@@ -20,6 +22,84 @@ pub fn trace_run(schedule: &Schedule, model: &CostModel, seed: u64) -> Trace {
     let sim = Simulator::new(schedule, model);
     let (r, spans) = sim.run_traced(seed);
     Trace { spans, makespan: r.makespan, cluster: schedule.cluster }
+}
+
+/// An event-backend trace: the wire spans (same shape as the analytic
+/// [`Trace`]) plus the per-port queue events — enqueue/dequeue/deliver
+/// (and drop) with the queue depth at each instant, so contention is
+/// inspectable rather than inferred.
+pub struct EventTrace {
+    pub trace: Trace,
+    pub events: Vec<NetEvent>,
+}
+
+/// Run one repetition of `schedule` on the event-driven network backend
+/// under `scenario`, capturing spans and queue events.
+pub fn trace_run_event(
+    schedule: &Schedule,
+    model: &CostModel,
+    scenario: &Scenario,
+    seed: u64,
+) -> Result<EventTrace, NetError> {
+    let net = NetSim::new(schedule, model, scenario)?;
+    let (r, spans, events) = net.run_traced(seed)?;
+    Ok(EventTrace {
+        trace: Trace { spans, makespan: r.makespan, cluster: schedule.cluster },
+        events,
+    })
+}
+
+impl EventTrace {
+    /// Chrome-trace JSON: the wire spans as "X" complete events (same
+    /// encoding as [`Trace::to_chrome_json`]) followed by the queue
+    /// events as "i" instant events carrying the queue depth, grouped
+    /// pid = node, tid = port name via the args block.
+    pub fn to_chrome_json(&self) -> String {
+        let mut out = self.trace.to_chrome_json();
+        // Splice the instants before the closing ']'.
+        out.pop();
+        for (i, ev) in self.events.iter().enumerate() {
+            let who = if ev.tenant { "tenant" } else { "xfer" };
+            out.push_str(&format!(
+                "{}{{\"name\":\"{} {} {}->{}\",\"ph\":\"i\",\"ts\":{:.3},\"pid\":{},\"s\":\"t\",\"args\":{{\"port\":\"{}\",\"depth\":{},\"bytes\":{},\"kind\":\"{}\"}}}}\n",
+                if i == 0 && self.trace.spans.is_empty() { "" } else { "," },
+                ev.kind.label(),
+                who,
+                ev.src,
+                ev.dst,
+                ev.t,
+                ev.node,
+                ev.port,
+                ev.depth,
+                ev.bytes,
+                ev.kind.label(),
+            ));
+        }
+        out.push(']');
+        out
+    }
+
+    /// One line per queue event — the golden-snapshot surface
+    /// (`rust/tests/netsim_trace.rs` pins the time-stripped form).
+    pub fn text(&self) -> String {
+        let mut out = String::new();
+        for ev in &self.events {
+            let who = if ev.tenant { "tenant " } else { "" };
+            out.push_str(&format!(
+                "{:.3} {} {} node={} {}{}->{} {}B depth={}\n",
+                ev.t,
+                ev.kind.label(),
+                ev.port,
+                ev.node,
+                who,
+                ev.src,
+                ev.dst,
+                ev.bytes,
+                ev.depth,
+            ));
+        }
+        out
+    }
 }
 
 impl Trace {
@@ -97,6 +177,22 @@ mod tests {
         let j = t.to_chrome_json();
         assert!(j.starts_with('[') && j.ends_with(']'));
         assert_eq!(j.matches("\"ph\":\"X\"").count(), t.spans.len());
+    }
+
+    #[test]
+    fn event_trace_covers_transfers_and_json_is_wellformed() {
+        use crate::netsim::Scenario;
+        let cl = Cluster::new(2, 2, 1);
+        let s = bcast::build(cl, 0, 100, bcast::BcastAlg::Binomial);
+        let t = trace_run_event(&s, &quiet(), &Scenario::contention_free(), 1).unwrap();
+        assert_eq!(t.trace.spans.len(), s.num_transfers());
+        let delivers =
+            t.events.iter().filter(|e| e.kind == NetEventKind::Deliver).count();
+        assert_eq!(delivers, s.num_transfers());
+        let j = t.to_chrome_json();
+        assert!(j.starts_with('[') && j.ends_with(']'));
+        assert_eq!(j.matches("\"ph\":\"i\"").count(), t.events.len());
+        assert_eq!(t.text().lines().count(), t.events.len());
     }
 
     #[test]

@@ -54,6 +54,7 @@ use crate::coordinator::Collectives;
 use crate::harness::report::esc;
 use crate::harness::{default_counts, shared_engine};
 use crate::model::PersonaName;
+use crate::netsim::{Backend, BackendKind, Scenario as NetScenario};
 use crate::sim::{self, SweepEngine};
 use crate::topology::Cluster;
 
@@ -74,11 +75,32 @@ pub struct TuneConfig {
     pub reps: usize,
     pub warmup: usize,
     pub seed: u64,
+    /// Backend the winners were measured on. A tag, not a full
+    /// scenario: tuning on the event backend always uses the
+    /// contention-free scenario (a book tuned under one tenant load
+    /// would silently mis-rank under another), so the tag alone pins
+    /// the measurement semantics and `TuneConfig` stays `Copy + Eq`.
+    pub backend: BackendKind,
 }
 
 impl Default for TuneConfig {
     fn default() -> Self {
-        TuneConfig { reps: TUNE_REPS, warmup: TUNE_WARMUP, seed: sim::DEFAULT_SEED }
+        TuneConfig {
+            reps: TUNE_REPS,
+            warmup: TUNE_WARMUP,
+            seed: sim::DEFAULT_SEED,
+            backend: BackendKind::Analytic,
+        }
+    }
+}
+
+impl TuneConfig {
+    /// The full backend this config tunes on (event → contention-free).
+    pub fn full_backend(&self) -> Backend {
+        match self.backend {
+            BackendKind::Analytic => Backend::Analytic,
+            BackendKind::Event => Backend::Event(NetScenario::contention_free()),
+        }
     }
 }
 
@@ -424,8 +446,12 @@ impl TuningBook {
         let mut out = String::new();
         let _ = write!(
             out,
-            "{{\"version\":1,\"tune\":{{\"reps\":{},\"warmup\":{},\"seed\":{}}},\"tables\":[",
-            self.tune.reps, self.tune.warmup, self.tune.seed
+            "{{\"version\":1,\"tune\":{{\"reps\":{},\"warmup\":{},\"seed\":{},\
+             \"backend\":\"{}\"}},\"tables\":[",
+            self.tune.reps,
+            self.tune.warmup,
+            self.tune.seed,
+            self.tune.backend.key()
         );
         for (i, t) in self.tables.iter().enumerate() {
             out.push_str(if i == 0 { "\n" } else { ",\n" });
@@ -448,7 +474,15 @@ impl TuningBook {
         let tune_v = v
             .get("tune")
             .ok_or_else(|| TuneError::Parse("book: missing tune".into()))?;
-        strict_obj(tune_v, "tune", &["reps", "warmup", "seed"])?;
+        strict_obj(tune_v, "tune", &["reps", "warmup", "seed", "backend"])?;
+        // Books written before the network backend carry no tag; absent
+        // means analytic, so old artifacts keep parsing.
+        let backend = match tune_v.get("backend") {
+            None => BackendKind::Analytic,
+            Some(b) => b.as_str().and_then(BackendKind::parse).ok_or_else(|| {
+                TuneError::Parse("tune: backend must be \"analytic\" or \"event\"".into())
+            })?,
+        };
         let tune = TuneConfig {
             reps: usize_field(tune_v, "tune", "reps")?,
             warmup: usize_field(tune_v, "tune", "warmup")?,
@@ -456,6 +490,7 @@ impl TuningBook {
                 .get("seed")
                 .and_then(Value::as_u64)
                 .ok_or_else(|| TuneError::Parse("tune: seed must be a u64".into()))?,
+            backend,
         };
         let tables_v = v
             .get("tables")
@@ -566,6 +601,7 @@ pub fn tune_scenario(
     coll.reps = cfg.reps;
     coll.warmup = cfg.warmup;
     coll.seed = cfg.seed;
+    coll.backend = cfg.full_backend();
     let winners = coll
         .autotune_counts(sc.op.op(1), &counts, &cands)
         .map_err(|source| TuneError::Alg { scenario: sc.label(), source })?;
@@ -696,7 +732,8 @@ pub fn scenarios_fingerprint(scenarios: &[Scenario], cfg: &TuneConfig) -> u64 {
         }
         text.push('|');
     }
-    let _ = write!(text, "tune={},{},{}", cfg.reps, cfg.warmup, cfg.seed);
+    let _ =
+        write!(text, "tune={},{},{},{}", cfg.reps, cfg.warmup, cfg.seed, cfg.backend.key());
     crate::harness::plan::fnv1a(text.as_bytes())
 }
 
@@ -720,13 +757,14 @@ pub fn tune_shard_json(
     let mut out = format!(
         "{{\"version\":1,\"kind\":\"{TUNE_SHARD_KIND}\",\"fingerprint\":\"{:016x}\",\
          \"shards\":{shards},\"shard\":{index},\"scenario_count\":{},\"indices\":[{}],\
-         \"tune\":{{\"reps\":{},\"warmup\":{},\"seed\":{}}},\"tables\":[",
+         \"tune\":{{\"reps\":{},\"warmup\":{},\"seed\":{},\"backend\":\"{}\"}},\"tables\":[",
         scenarios_fingerprint(scenarios, cfg),
         scenarios.len(),
         idx.join(","),
         cfg.reps,
         cfg.warmup,
         cfg.seed,
+        cfg.backend.key(),
     );
     for (i, t) in book.tables.iter().enumerate() {
         out.push_str(if i == 0 { "\n" } else { ",\n" });
@@ -818,7 +856,7 @@ mod tests {
     }
 
     fn fast() -> TuneConfig {
-        TuneConfig { reps: 2, warmup: 0, seed: 7 }
+        TuneConfig { reps: 2, warmup: 0, seed: 7, ..TuneConfig::default() }
     }
 
     fn scenario(op: OpKind, counts: &[u64]) -> Scenario {
@@ -993,6 +1031,36 @@ mod tests {
         slower.reps += 1;
         assert_ne!(a, scenarios_fingerprint(&scs, &slower), "config binds");
         assert_ne!(a, scenarios_fingerprint(&scs[..1], &fast()), "scenario set binds");
+        let mut event = fast();
+        event.backend = BackendKind::Event;
+        assert_ne!(a, scenarios_fingerprint(&scs, &event), "backend binds");
+    }
+
+    #[test]
+    fn event_backend_books_round_trip_and_old_artifacts_default_analytic() {
+        let eng = Arc::new(SweepEngine::new());
+        let mut cfg = fast();
+        cfg.backend = BackendKind::Event;
+        let scs = [scenario(OpKind::Bcast, &[1, 64])];
+        let book = tune_all(&eng, &scs, &cfg, 1).unwrap();
+        let json = book.to_json();
+        assert!(json.contains("\"backend\":\"event\""), "{json}");
+        let parsed = TuningBook::parse(&json).unwrap();
+        assert_eq!(parsed, book);
+        assert_eq!(parsed.to_json(), json);
+        // Pre-backend artifacts (no tag) parse as analytic.
+        let old = concat!(
+            "{\"version\":1,\"tune\":{\"reps\":1,\"warmup\":0,\"seed\":1},",
+            "\"tables\":[]}\n"
+        );
+        let parsed = TuningBook::parse(old).unwrap();
+        assert_eq!(parsed.tune.backend, BackendKind::Analytic);
+        // A bad tag is a parse error, not a silent analytic fallback.
+        let bad = concat!(
+            "{\"version\":1,\"tune\":{\"reps\":1,\"warmup\":0,\"seed\":1,",
+            "\"backend\":\"quantum\"},\"tables\":[]}\n"
+        );
+        assert!(TuningBook::parse(bad).is_err());
     }
 
     #[test]

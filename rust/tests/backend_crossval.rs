@@ -1,0 +1,156 @@
+//! Cross-validation between the analytic closed-form simulator and the
+//! event-driven network backend, the same way `sim_exec_crossval.rs`
+//! gates sim-vs-exec.
+//!
+//! On a contention-free scenario the event backend models the *same*
+//! physics as the analytic backend — per-lane serialization, alpha/beta
+//! link costs, store-and-forward with cut-through readiness — so its
+//! cost must land within a small tolerance of the closed form for every
+//! registry algorithm, at full Hydra scale. The residual comes from
+//! queueing discipline: the event backend serves a port FIFO in event
+//! order while the analytic model packs transfers earliest-free; both
+//! are work-conserving, so totals agree to within a couple of
+//! microseconds plus a small relative slack, never by orders of
+//! magnitude.
+//!
+//! The second half pins determinism: same seed, same events, bitwise —
+//! across repeated runs and across plan-runner thread counts.
+
+use mlane::algorithms::registry::{registry, OpKind};
+use mlane::harness::{self, Grid, Plan, RunConfig, TableSpec};
+use mlane::model::{CostModel, Persona, PersonaName};
+use mlane::netsim::{Backend, NetSim, Scenario};
+use mlane::sim;
+use mlane::topology::Cluster;
+
+fn quiet() -> CostModel {
+    let mut m = CostModel::hydra_baseline();
+    m.jitter_mean = 0.0;
+    m
+}
+
+/// Validation element count per operation (mirrors `mlane validate`:
+/// structure and cost shape, not big-payload timing, are under test).
+fn crossval_count(op: OpKind) -> u64 {
+    match op {
+        OpKind::Bcast => 64,
+        OpKind::Scatter | OpKind::Gather => 16,
+        OpKind::Allgather | OpKind::Alltoall => 8,
+    }
+}
+
+#[test]
+fn event_backend_matches_analytic_when_contention_free() {
+    // Every registry instance x every op it supports, at the paper's
+    // 36x32 Hydra scale. `tuned` is skipped: it is dispatch, not a
+    // schedule, and its concrete picks are already in the instance list.
+    let cl = Cluster::hydra(2);
+    let persona = Persona::get(PersonaName::OpenMpi);
+    let m = quiet();
+    let scenario = Scenario::contention_free();
+    let mut checked = 0;
+    for alg in registry().validation_instances(cl) {
+        if alg.name() == "tuned" {
+            continue;
+        }
+        for kind in OpKind::ALL {
+            if !alg.supports(kind) {
+                continue;
+            }
+            let c = crossval_count(kind);
+            let built = alg
+                .build(cl, &persona, kind.op(c))
+                .unwrap_or_else(|e| panic!("{} {kind}: {e}", alg.label()));
+            let an = sim::measure(&built.schedule, &m, 1, 0, 1).avg;
+            let net = NetSim::new(&built.schedule, &m, &scenario)
+                .unwrap_or_else(|e| panic!("{} {kind}: {e}", alg.label()));
+            let mut st = net.new_state();
+            let ev = sim::measure_backend(&net, &mut st, 1, 0, 1)
+                .unwrap_or_else(|e| panic!("{} {kind}: {e}", alg.label()))
+                .avg;
+            // Tolerance: 2us absolute (rounding + cut-through edges on
+            // short chains) + 10% relative (FIFO-by-ready vs
+            // earliest-free port packing on long chains). See the module
+            // doc for why this is tight enough to catch a physics bug.
+            assert!(
+                (ev - an).abs() <= 2.0 + 0.10 * an,
+                "{} {kind}: event {ev:.3}us vs analytic {an:.3}us",
+                alg.label()
+            );
+            checked += 1;
+        }
+    }
+    // Coverage guard: the registry currently yields dozens of
+    // (instance, op) pairs; a refactor that silently empties the loop
+    // must fail here, not pass vacuously.
+    assert!(checked >= 20, "only {checked} (alg, op) pairs cross-validated");
+}
+
+#[test]
+fn event_backend_is_bitwise_deterministic_per_seed() {
+    let cl = Cluster::hydra(2);
+    let persona = Persona::get(PersonaName::OpenMpi);
+    let m = Persona::get(PersonaName::OpenMpi).model;
+    let built = registry()
+        .resolve("klane", 2)
+        .unwrap()
+        .build(cl, &persona, OpKind::Bcast.op(64))
+        .unwrap();
+    // Contended scenario: tenants + stragglers exercise the Prng and
+    // every queue path, the hardest case for determinism.
+    let net = NetSim::new(&built.schedule, &m, &Scenario::contended()).unwrap();
+    let a = net.run(42).unwrap();
+    let b = net.run(42).unwrap();
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "same seed must replay bitwise");
+    assert_eq!(a.events, b.events, "same seed must process the same events");
+    let other = net.run(43).unwrap();
+    assert_ne!(a.makespan.to_bits(), other.makespan.to_bits(), "seeds must differ");
+    // And independent state replays identically too.
+    let mut st = net.new_state();
+    let c = net.run_into(&mut st, 42).unwrap();
+    assert_eq!(a.makespan.to_bits(), c.makespan.to_bits());
+}
+
+#[test]
+fn event_backend_reports_are_byte_identical_across_thread_counts() {
+    // The acceptance determinism bar at the plan level: the same event
+    // sweep under 1 and 4 worker threads renders the same report, byte
+    // for byte — thread scheduling must never leak into event order.
+    let cl = Cluster::new(3, 4, 2);
+    let sections = [
+        Grid::new()
+            .cluster(cl)
+            .op(OpKind::Bcast)
+            .algs([
+                registry().resolve("klane", 2).unwrap(),
+                registry().resolve("fulllane", 0).unwrap(),
+            ])
+            .counts(&[1, 64, 6000])
+            .sections(),
+        Grid::new()
+            .cluster(cl)
+            .op(OpKind::Alltoall)
+            .algs([registry().resolve("bruck", 2).unwrap()])
+            .counts(&[1, 87])
+            .sections(),
+    ]
+    .concat();
+    let mut plan = Plan::new();
+    plan.tables.push(TableSpec {
+        number: 1,
+        caption: "event determinism".into(),
+        persona: PersonaName::OpenMpi,
+        sections,
+    });
+    let render = |threads: usize| {
+        let mut cfg = RunConfig::default();
+        cfg.reps = 2;
+        cfg.warmup = 1;
+        cfg.threads = threads;
+        cfg.backend = Backend::Event(Scenario::contended());
+        harness::run_plan(&plan, &cfg).unwrap().text()
+    };
+    let serial = render(1);
+    assert_eq!(serial, render(4), "thread count leaked into event results");
+    assert_eq!(serial, render(1), "repeat run diverged");
+}

@@ -522,6 +522,115 @@ fn cli_tune_shards_merge_into_the_single_book() {
 }
 
 #[test]
+fn event_backend_runs_and_traces_from_the_cli() {
+    // The event backend is a first-class `--backend` value on run …
+    let out = mlane(&[
+        "run", "--op", "bcast", "--alg", "klane", "--k", "2", "--nodes", "2", "--cores",
+        "4", "--c", "64", "--backend", "event",
+    ]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    assert!(stdout(&out).contains("avg="), "stdout: {}", stdout(&out));
+
+    // … including with contention knobs …
+    let out = mlane(&[
+        "run", "--op", "bcast", "--alg", "klane", "--k", "2", "--nodes", "2", "--cores",
+        "4", "--c", "64", "--backend", "event", "--tenants", "2", "--stragglers", "1",
+        "--straggler-factor", "1.5",
+    ]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    assert!(stdout(&out).contains("avg="), "stdout: {}", stdout(&out));
+
+    // … and for uncacheable personas (native quirks bypass the cache).
+    let out = mlane(&[
+        "run", "--op", "bcast", "--alg", "native", "--nodes", "2", "--cores", "4",
+        "--c", "64", "--backend", "event", "--persona", "intelmpi",
+    ]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    assert!(stdout(&out).contains("avg="), "stdout: {}", stdout(&out));
+
+    // trace --backend event emits the per-event chrome trace.
+    let trace = std::env::temp_dir().join("mlane_cli_event_trace.json");
+    let out = mlane(&[
+        "trace", "--op", "bcast", "--alg", "klane", "--k", "2", "--nodes", "2",
+        "--cores", "4", "--c", "64", "--backend", "event", "--out",
+        trace.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.contains("wrote "), "{s}");
+    assert!(s.contains(" events,"), "{s}");
+    let json = std::fs::read_to_string(&trace).unwrap();
+    assert!(json.contains("\"ph\":\"i\""), "no instant events in {json}");
+    assert!(json.contains("\"depth\":"), "no queue depth in {json}");
+}
+
+#[test]
+fn event_backend_errors_are_typed_and_clean() {
+    // Unknown backend still lists cleanly.
+    let out = mlane(&["run", "--op", "bcast", "--alg", "klane", "--backend", "nosuch"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("unknown backend"), "{}", stderr(&out));
+
+    // Scenario knobs without the event backend: refused, not ignored.
+    let out = mlane(&[
+        "run", "--op", "bcast", "--alg", "klane", "--nodes", "2", "--cores", "4",
+        "--tenants", "2",
+    ]);
+    assert_eq!(out.status.code(), Some(1));
+    let err = stderr(&out);
+    assert!(err.contains("--tenants applies to the event backend"), "{err}");
+    assert!(err.contains("add --backend event"), "{err}");
+
+    // Invalid scenario values fail at the CLI edge.
+    let out = mlane(&[
+        "run", "--op", "bcast", "--alg", "klane", "--nodes", "2", "--cores", "4",
+        "--backend", "event", "--straggler-factor", "0.5",
+    ]);
+    assert_eq!(out.status.code(), Some(1));
+    let err = stderr(&out);
+    assert!(err.contains("invalid scenario"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+
+    // Drop-tail overflow is a typed exit-1 NetError, not a panic: a
+    // zero-capacity queue cannot hold an alltoall fan-in.
+    let out = mlane(&[
+        "run", "--op", "alltoall", "--alg", "fulllane", "--nodes", "3", "--cores", "4",
+        "--c", "1000", "--backend", "event", "--queue-capacity", "0",
+    ]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("queue overflow"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+
+    // Tenants need off-node links: a single-node cluster is unsupported.
+    let out = mlane(&[
+        "run", "--op", "bcast", "--alg", "fulllane", "--nodes", "1", "--cores", "4",
+        "--c", "64", "--backend", "event", "--tenants", "2",
+    ]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("does not support"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+#[test]
+fn contention_preset_and_backend_help_are_wired() {
+    // The contention preset resolves and lists without running (Hydra).
+    let out = mlane(&["sweep", "--preset", "contention", "--list"]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.contains("table 56"), "{s}");
+    assert!(s.contains("contention"), "{s}");
+
+    let help = mlane(&["help"]);
+    let text = stdout(&help);
+    for needle in ["--backend", "contention", "--tenants", "--straggler-factor", "--queue-capacity"]
+    {
+        assert!(text.contains(needle), "help missing {needle:?}: {text}");
+    }
+}
+
+#[test]
 fn sweep_preset_lists_and_env_is_parsed_at_the_edge() {
     // --list prints the plan without running it, so the Hydra-scale
     // appendix preset stays cheap here; MLANE_REPS=2 (set by the test

@@ -1,0 +1,97 @@
+//! Golden-snapshot contract for `mlane trace --backend event`: the
+//! per-event span stream (enqueue/dequeue/deliver with queue depth) for
+//! the simplest possible network interaction — one off-node transfer —
+//! is pinned exactly, and the rendering is byte-deterministic.
+//!
+//! The golden sequence is the store-and-forward life of a message
+//! through the two serialization points: the source node's egress port,
+//! then (one wire latency later, cut-through) the destination node's
+//! ingress port, where delivery happens at ingress service end.
+
+use mlane::algorithms::bcast;
+use mlane::model::CostModel;
+use mlane::netsim::Scenario;
+use mlane::sim::trace::trace_run_event;
+use mlane::topology::Cluster;
+
+fn quiet() -> CostModel {
+    let mut m = CostModel::hydra_baseline();
+    m.jitter_mean = 0.0;
+    m
+}
+
+#[test]
+fn single_offnode_transfer_emits_the_golden_event_sequence() {
+    // Two single-core nodes, binomial bcast: exactly one transfer,
+    // rank 0 -> rank 1, off-node.
+    let cl = Cluster::new(2, 1, 1);
+    let s = bcast::build(cl, 0, 4, bcast::BcastAlg::Binomial);
+    assert_eq!(s.num_transfers(), 1, "golden assumes a single transfer");
+    let bytes = s.rounds[0].transfers[0].bytes;
+
+    let et = trace_run_event(&s, &quiet(), &Scenario::contention_free(), 1).unwrap();
+    let got: Vec<String> = et
+        .events
+        .iter()
+        .map(|e| {
+            format!(
+                "{} {} node={} {}->{} {}B depth={}",
+                e.kind.label(),
+                e.port,
+                e.node,
+                e.src,
+                e.dst,
+                e.bytes,
+                e.depth
+            )
+        })
+        .collect();
+    let golden = [
+        format!("enqueue net-out node=0 0->1 {bytes}B depth=0"),
+        format!("dequeue net-out node=0 0->1 {bytes}B depth=0"),
+        format!("enqueue net-in node=1 0->1 {bytes}B depth=0"),
+        format!("dequeue net-in node=1 0->1 {bytes}B depth=0"),
+        format!("deliver net-in node=1 0->1 {bytes}B depth=0"),
+    ];
+    assert_eq!(got, golden, "event sequence drifted from the golden snapshot");
+
+    // The text rendering carries the same sequence after stripping the
+    // leading timestamp, and timestamps are monotonically non-decreasing.
+    let text = et.text();
+    let mut last = 0.0f64;
+    for (line, want) in text.lines().zip(&golden) {
+        let (t, rest) = line.split_once(' ').expect("timestamp prefix");
+        let t: f64 = t.parse().expect("parseable timestamp");
+        assert!(t >= last, "timestamps went backwards: {text}");
+        last = t;
+        assert_eq!(rest, want);
+    }
+    assert_eq!(text.lines().count(), golden.len());
+
+    // One wire span per transfer rides along with the events.
+    assert_eq!(et.trace.spans.len(), 1);
+}
+
+#[test]
+fn event_trace_rendering_is_byte_deterministic_and_wellformed() {
+    let cl = Cluster::new(3, 4, 2);
+    let s = bcast::build(cl, 0, 64, bcast::BcastAlg::KLane { k: 2, two_phase: false });
+    let m = quiet();
+    // A contended scenario exercises queue depths > 0 and tenant events.
+    let sc = Scenario::contended();
+    let a = trace_run_event(&s, &m, &sc, 7).unwrap();
+    let b = trace_run_event(&s, &m, &sc, 7).unwrap();
+    assert_eq!(a.text(), b.text(), "text rendering must replay bitwise");
+    assert_eq!(a.to_chrome_json(), b.to_chrome_json(), "json must replay bitwise");
+
+    // Chrome-trace shape: a JSON array whose instant-event count equals
+    // the recorded event count (spans render as "X" duration events).
+    let json = a.to_chrome_json();
+    assert!(json.trim_start().starts_with('['), "{json}");
+    assert!(json.trim_end().ends_with(']'), "{json}");
+    assert_eq!(json.matches("\"ph\":\"i\"").count(), a.events.len(), "{json}");
+    assert!(json.contains("\"depth\":"), "{json}");
+    // A different seed reorders tenant arrivals — the trace must follow.
+    let c = trace_run_event(&s, &m, &sc, 8).unwrap();
+    assert_ne!(a.text(), c.text(), "seed must matter under tenant traffic");
+}

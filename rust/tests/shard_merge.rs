@@ -258,7 +258,7 @@ fn tune_shards_merge_into_the_single_process_book() {
             candidates: registry().candidates(cl, op),
         })
         .collect();
-    let tcfg = TuneConfig { reps: 2, warmup: 0, seed: 11 };
+    let tcfg = TuneConfig { reps: 2, warmup: 0, seed: 11, ..TuneConfig::default() };
 
     let full =
         tuning::tune_all(&Arc::new(SweepEngine::new()), &scenarios, &tcfg, 2).unwrap();
@@ -300,7 +300,7 @@ fn mixing_plan_and_tune_shards_is_a_typed_error() {
         counts: vec![1, 64],
         candidates: registry().candidates(Cluster::new(2, 4, 2), OpKind::Bcast),
     };
-    let tcfg = TuneConfig { reps: 1, warmup: 0, seed: 1 };
+    let tcfg = TuneConfig { reps: 1, warmup: 0, seed: 1, ..TuneConfig::default() };
     let book = tuning::tune_all(&Arc::new(SweepEngine::new()), &[sc.clone()], &tcfg, 1).unwrap();
     let artifact = tuning::tune_shard_json(&[sc], &tcfg, 1, 0, &[0], &book);
     std::fs::write(dir.join("b.json"), artifact).unwrap();

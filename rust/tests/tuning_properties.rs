@@ -24,7 +24,7 @@ use mlane::util::prop::{check, Gen};
 const COUNT_POOL: &[u64] = &[1, 2, 6, 9, 53, 64, 87, 521, 869, 1000, 6000, 60_000];
 
 fn fast() -> TuneConfig {
-    TuneConfig { reps: 2, warmup: 0, seed: 0xC0FFEE }
+    TuneConfig { reps: 2, warmup: 0, seed: 0xC0FFEE, ..TuneConfig::default() }
 }
 
 fn random_scenario(g: &mut Gen) -> Scenario {

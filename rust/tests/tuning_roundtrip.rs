@@ -24,7 +24,7 @@ fn tiny() -> Cluster {
 }
 
 fn fast() -> TuneConfig {
-    TuneConfig { reps: 2, warmup: 0, seed: 11 }
+    TuneConfig { reps: 2, warmup: 0, seed: 11, ..TuneConfig::default() }
 }
 
 fn sample_book() -> TuningBook {
@@ -52,6 +52,8 @@ fn book_from_json(doc: &Json) -> TuningBook {
         reps: tune_v.get("reps").unwrap().num() as usize,
         warmup: tune_v.get("warmup").unwrap().num() as usize,
         seed: tune_v.get("seed").unwrap().num() as u64,
+        backend: mlane::netsim::BackendKind::parse(tune_v.get("backend").unwrap().string())
+            .expect("known backend tag"),
     };
     let tables = doc
         .get("tables")
