@@ -8,6 +8,7 @@
 
 use std::time::Instant;
 
+use mlane::algorithms::registry::OpKind;
 use mlane::algorithms::{alltoall, bcast, registry};
 use mlane::analysis::{analyze, LintConfig};
 use mlane::exec::ExecRuntime;
@@ -17,11 +18,11 @@ use mlane::harness::{
 use mlane::model::{CostModel, Persona, PersonaName};
 use mlane::netsim::{NetSim, Scenario as NetScenario};
 use mlane::runtime::XlaService;
+use mlane::serve::Service;
 use mlane::sim::{self, AlgId, OpShape, Simulator, SweepEngine, SweepKey};
 use mlane::topology::Cluster;
+use mlane::tuning::{self, Scenario, TuneConfig, TuningBook};
 use mlane::util::allocs::thread_allocations;
-use mlane::algorithms::registry::OpKind;
-use mlane::tuning::{self, Scenario, TuneConfig};
 
 fn main() {
     let m = CostModel::hydra_baseline();
@@ -77,7 +78,8 @@ fn main() {
     let tune = bench_tune(cl);
     let shard = bench_shard_merge();
     let lint = bench_lint(cl);
-    write_bench_json(events_per_s, &event, &sweep, &series, &tune, &shard, &lint);
+    let serve = bench_serve();
+    write_bench_json(events_per_s, &event, &sweep, &series, &tune, &shard, &lint, &serve);
 
     println!("\n=== exec backend (4x4, klane alltoall c=1024) ===");
     let cl = Cluster::new(4, 4, 2);
@@ -502,7 +504,116 @@ fn bench_lint(cl: Cluster) -> LintBench {
     bench
 }
 
+struct ServeBench {
+    queries: usize,
+    serve_s: f64,
+    queries_per_s: f64,
+    batch_s: f64,
+    batch_queries_per_s: f64,
+    steady_allocs: u64,
+}
+
+/// Selection-service throughput: a compiled two-table book answering
+/// prebuilt single-query lines and one 512-query batch line through
+/// `Service::respond` — the transport-free hot path `mlane serve`
+/// runs per request. The warm single-query loop is gated to zero
+/// allocations, the same contract `tests/serve_alloc.rs` pins.
+fn bench_serve() -> ServeBench {
+    println!("\n=== serve: selection-service queries (tiny two-table book) ===");
+    let cl = Cluster::new(2, 4, 2);
+    let cfg = TuneConfig { reps: 1, warmup: 0, seed: 7, ..TuneConfig::default() };
+    let engine = std::sync::Arc::new(SweepEngine::new());
+    let counts = [1u64, 600, 6000, 60_000, 600_000];
+    let tables = [OpKind::Bcast, OpKind::Scatter]
+        .into_iter()
+        .map(|op| {
+            let sc = Scenario {
+                cluster: cl,
+                op,
+                persona: PersonaName::OpenMpi,
+                counts: counts.to_vec(),
+                candidates: registry::registry().candidates(cl, op),
+            };
+            tuning::tune_scenario(&engine, &sc, &cfg).expect("tiny scenario tunes")
+        })
+        .collect();
+    let book = TuningBook { tune: cfg, tables };
+    let svc = Service::from_book(&book).expect("bench book compiles");
+
+    // Request lines are prebuilt: the bench times answering queries,
+    // not formatting them. Counts land on and around breakpoints.
+    let reqs: Vec<String> = (0..64)
+        .map(|i| {
+            let op = if i % 2 == 0 { "bcast" } else { "scatter" };
+            let c = counts[i % counts.len()].saturating_add(i as u64 % 3);
+            format!(
+                "{{\"op\":\"{op}\",\"persona\":\"openmpi\",\"nodes\":2,\"cores\":4,\
+                 \"lanes\":2,\"count\":{c}}}"
+            )
+        })
+        .collect();
+    let batch_len = 512usize;
+    let items: Vec<&str> = (0..batch_len).map(|i| reqs[i % reqs.len()].as_str()).collect();
+    let batch = format!("{{\"batch\":[{}]}}", items.join(","));
+
+    // Warm every code path and size the response buffer, then time.
+    let mut out = String::new();
+    for line in &reqs {
+        out.clear();
+        svc.respond(line, &mut out);
+        assert!(out.starts_with("{\"ok\":true"), "bench queries must be covered: {out}");
+    }
+    let n = 200_000usize;
+    let a0 = thread_allocations();
+    let t0 = Instant::now();
+    for i in 0..n {
+        out.clear();
+        svc.respond(&reqs[i % reqs.len()], &mut out);
+        std::hint::black_box(out.len());
+    }
+    let serve_s = t0.elapsed().as_secs_f64();
+    let steady_allocs = thread_allocations() - a0;
+    assert_eq!(steady_allocs, 0, "warm serve queries must not touch the heap");
+
+    out.clear();
+    svc.respond(&batch, &mut out);
+    assert!(out.starts_with("{\"ok\":true,\"answers\":["), "batch must be covered: {out}");
+    let batch_reps = 200usize;
+    let t0 = Instant::now();
+    for _ in 0..batch_reps {
+        out.clear();
+        svc.respond(&batch, &mut out);
+        std::hint::black_box(out.len());
+    }
+    let batch_total_s = t0.elapsed().as_secs_f64();
+
+    let bench = ServeBench {
+        queries: n,
+        serve_s,
+        queries_per_s: n as f64 / serve_s,
+        batch_s: batch_total_s / batch_reps as f64,
+        batch_queries_per_s: (batch_len * batch_reps) as f64 / batch_total_s,
+        steady_allocs,
+    };
+    println!(
+        "single: {:>8.2?} for {} queries  ({:.2}M queries/s, {} allocs)",
+        std::time::Duration::from_secs_f64(bench.serve_s),
+        bench.queries,
+        bench.queries_per_s / 1e6,
+        bench.steady_allocs
+    );
+    println!(
+        "batch:  {:.1}us per {batch_len}-query line  ({:.2}M queries/s)",
+        bench.batch_s * 1e6,
+        bench.batch_queries_per_s / 1e6
+    );
+    bench
+}
+
 /// Machine-readable perf record for trajectory tracking across PRs.
+// One record, one writer: threading every bench struct through beats
+// global state, even past clippy's argument-count taste.
+#[allow(clippy::too_many_arguments)]
 fn write_bench_json(
     events_per_s: f64,
     event: &EventBench,
@@ -511,6 +622,7 @@ fn write_bench_json(
     tune: &TuneBench,
     shard: &ShardBench,
     lint: &LintBench,
+    serve: &ServeBench,
 ) {
     let json = format!(
         "{{\n  \"bench\": \"engine_perf\",\n  \"events_per_s\": {:.0},\n  \
@@ -528,7 +640,10 @@ fn write_bench_json(
          \"shard_merge_s\": {:.6},\n  \"lint_schedules\": {},\n  \
          \"lint_diagnostics\": {},\n  \"lint_full_registry_s\": {:.6},\n  \
          \"lint_schedules_per_s\": {:.2},\n  \"event_backend_s\": {:.6},\n  \
-         \"event_events_per_s\": {:.0}\n}}\n",
+         \"event_events_per_s\": {:.0},\n  \"serve_queries\": {},\n  \
+         \"serve_s\": {:.6},\n  \"serve_queries_per_s\": {:.0},\n  \
+         \"serve_batch_s\": {:.9},\n  \"serve_batch_queries_per_s\": {:.0},\n  \
+         \"serve_steady_allocs\": {}\n}}\n",
         events_per_s,
         sweep.cells,
         sweep.cold_s,
@@ -560,6 +675,12 @@ fn write_bench_json(
         lint.schedules as f64 / lint.lint_s,
         event.event_s,
         event.events_per_s,
+        serve.queries,
+        serve.serve_s,
+        serve.queries_per_s,
+        serve.batch_s,
+        serve.batch_queries_per_s,
+        serve.steady_allocs,
     );
     match std::fs::write("BENCH_engine.json", &json) {
         Ok(()) => println!("wrote BENCH_engine.json"),

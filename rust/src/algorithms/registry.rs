@@ -583,7 +583,14 @@ impl CollectiveAlgorithm for Tuned {
     }
     fn build(&self, cl: Cluster, persona: &Persona, op: Op) -> Result<Built, AlgError> {
         let alg = crate::tuning::dispatch(cl, persona.name, op.kind(), op.count())?;
-        debug_assert_ne!(alg.name(), "tuned", "decision tables may not self-dispatch");
+        // Table validation excludes self-reference, but a book is user
+        // input: fail typed rather than recurse if one slips through.
+        if alg.name() == "tuned" {
+            return Err(AlgError::Engine {
+                detail: "decision table dispatched back to `tuned` (self-referential table)"
+                    .into(),
+            });
+        }
         alg.build(cl, persona, op)
     }
 }

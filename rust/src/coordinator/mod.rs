@@ -384,7 +384,13 @@ impl Collectives {
         counts: &[u64],
         candidates: &[Alg],
     ) -> Result<Vec<CountWinner>, AlgError> {
-        assert!(!candidates.is_empty());
+        // Candidate sets come from user-facing paths (`--alg` lists,
+        // tuning scenarios): an empty one is an input error, not a bug.
+        if candidates.is_empty() {
+            return Err(AlgError::Engine {
+                detail: format!("autotune over an empty candidate set ({})", op.kind()),
+            });
+        }
         let mut best: Vec<Option<CountWinner>> = counts.iter().map(|_| None).collect();
         for alg in candidates {
             let ms = self.run_series(op, counts, alg)?;

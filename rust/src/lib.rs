@@ -17,4 +17,5 @@ pub mod runtime;
 pub mod coordinator;
 pub mod harness;
 pub mod tuning;
+pub mod serve;
 pub mod util;

@@ -18,6 +18,10 @@
 //!              [--shards N --shard-index I]  # emit a tune-shard artifact
 //! mlane merge  OUT DIR [--format text|csv|json]  # reassemble shard artifacts;
 //!              byte-identical to the single-process report (tune shards -> book json)
+//! mlane serve  --book FILE [--once] [--socket PATH] [--watch-ms MS]
+//!              # algorithm-selection daemon over a tuned book: line-JSON queries
+//!              # on stdin/stdout (or a unix socket), zero-alloc dispatch,
+//!              # torn-free hot reload ({"cmd":"reload"} or --watch-ms polling)
 //! mlane run --op bcast|scatter|gather|allgather|alltoall
 //!           --alg <registry name: kported|klane|klane2p|fulllane|bruck|tuned|...>
 //!           [--k K] [--c C] [--nodes N] [--cores n] [--lanes L]
@@ -85,7 +89,7 @@ struct Args {
 /// Switches that take no value; everything else still requires one
 /// (`--csv --threads 4` stays a hard error, not a directory named
 /// "true").
-const BOOL_FLAGS: &[&str] = &["list"];
+const BOOL_FLAGS: &[&str] = &["list", "once"];
 
 fn parse_args() -> Result<Args> {
     let mut argv = std::env::args().skip(1);
@@ -356,6 +360,10 @@ fn run() -> Result<()> {
             check_flags(&args, &[&["format"]])?;
             cmd_merge(&args)
         }
+        "serve" => {
+            check_flags(&args, &[&["book", "once", "socket", "watch-ms"]])?;
+            cmd_serve(&args)
+        }
         "run" => {
             check_flags(
                 &args,
@@ -448,6 +456,10 @@ commands:
   merge       reassemble shard artifacts from DIR into OUT — byte-identical to the
               single-process report  [--format text|csv|json]  (tune shards: book json)
                 usage: mlane merge OUT DIR
+  serve       algorithm-selection daemon over a tuned book: newline-JSON queries
+              (single, batch, reload/stats/quit commands) answered from a compiled
+              snapshot with a zero-alloc hot path and torn-free hot reload
+                usage: mlane serve --book FILE [--once] [--socket PATH] [--watch-ms MS]
   run         run one collective                 [--op --alg --k --c --nodes --cores --lanes --backend sim|event|exec|xla --persona --table FILE]
   autotune    pick the fastest algorithm         [--op --c --nodes --cores --lanes --persona]
   compare     simulated vs paper anchor cells
@@ -853,6 +865,49 @@ fn cmd_merge(args: &Args) -> Result<()> {
 
 fn write_out(path: &str, contents: &str) -> Result<()> {
     std::fs::write(path, contents).with_context(|| format!("write {path}"))
+}
+
+/// `mlane serve`: load + compile the book, then hand the transport
+/// loop to `mlane::serve`. `--once` drains stdin and exits (the batch
+/// mode CI scripts use), `--socket` accepts Unix-socket connections,
+/// `--watch-ms` polls the book file and hot-reloads on change.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let path = args
+        .flags
+        .get("book")
+        .ok_or_else(|| anyhow!("serve needs --book FILE (a `mlane tune --format json` book)"))?;
+    let once = args.bool_flag("once");
+    // Flag conflicts are cheaper than a book load: check them first.
+    if once && (args.flags.contains_key("socket") || args.flags.contains_key("watch-ms")) {
+        bail!("--once drains stdin and exits; drop --socket/--watch-ms");
+    }
+    let svc = Arc::new(mlane::serve::Service::load(path)?);
+    if let Some(v) = args.flags.get("watch-ms") {
+        let ms = parse_positive(v, "watch-ms")? as u64;
+        mlane::serve::watch_book(Arc::clone(&svc), std::time::Duration::from_millis(ms));
+    }
+    if let Some(sock) = args.flags.get("socket") {
+        return serve_socket_cli(sock, &svc);
+    }
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    mlane::serve::serve_lines(&svc, stdin.lock(), stdout.lock())?;
+    if once {
+        eprintln!("{}", svc.summary());
+    }
+    Ok(())
+}
+
+#[cfg(unix)]
+fn serve_socket_cli(sock: &str, svc: &Arc<mlane::serve::Service>) -> Result<()> {
+    eprintln!("mlane serve: listening on {sock}");
+    mlane::serve::serve_socket(svc, std::path::Path::new(sock))?;
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn serve_socket_cli(_sock: &str, _svc: &Arc<mlane::serve::Service>) -> Result<()> {
+    bail!("--socket needs Unix domain sockets; serve over stdin/stdout instead")
 }
 
 /// Tuning scenarios from the grid flags: (personas × ops) on the given

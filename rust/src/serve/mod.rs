@@ -1,0 +1,482 @@
+//! `mlane serve` — the algorithm-selection service.
+//!
+//! PR 4's decision tables made per-size selection a batch artifact;
+//! this module makes it a product. A [`Service`] loads a
+//! [`TuningBook`], compiles it into an immutable [`Snapshot`] — tables
+//! keyed by (cluster, op, persona) in one flat sorted key array,
+//! breakpoints as a flat `from` array searched branchlessly, and the
+//! *complete response text precomputed per breakpoint* — and answers
+//! newline-delimited JSON queries over stdin/stdout or a Unix socket.
+//!
+//! Protocol (one object per line, strict subset of JSON — see
+//! [`wire`]):
+//!
+//! ```text
+//! → {"op":"bcast","persona":"openmpi","nodes":36,"cores":32,"lanes":2,"count":1000}
+//! ← {"ok":true,"op":"bcast","persona":"openmpi","alg":"klane","k":2,"label":"2-lane","from":600,"avg_us":12.5}
+//! → {"batch":[<query>,...]}
+//! ← {"ok":true,"answers":[<answer>,...]}
+//! → {"cmd":"reload"} | {"cmd":"stats"} | {"cmd":"quit"}
+//! ← {"ok":false,"error":"..."}        (any malformed line; never an exit)
+//! ```
+//!
+//! Invariants:
+//!
+//! - **Zero-alloc hot path.** A well-formed covered query on a warm
+//!   buffer performs no allocation: wire scan borrows from the line,
+//!   the lookup is two binary searches, and the answer is a `push_str`
+//!   of precomputed text (`rust/tests/serve_alloc.rs` enforces this
+//!   with the counting allocator; `benches/engine_perf.rs` records
+//!   `serve_steady_allocs`, gated to 0 in CI).
+//! - **Torn-free reload.** A new snapshot is fully compiled off to the
+//!   side, then swapped behind the `RwLock` in one assignment; every
+//!   response (and every *batch*) is served from exactly one snapshot.
+//!   On any reload error the old snapshot stays installed.
+//! - **Registry work at load time.** Every breakpoint winner is
+//!   resolved against the registry when the snapshot is compiled —
+//!   the query path never touches the registry or the book.
+
+pub mod wire;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::algorithms::registry::registry;
+use crate::harness::report::esc;
+use crate::tuning::{TuneError, TuningBook};
+use self::wire::{Cmd, Query};
+
+/// Typed serve-layer failures. Request-shaped problems become error
+/// *responses* (the daemon never exits on bad input); book-shaped
+/// problems fail `load`/`reload` and keep the old snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// A request line failed the strict wire scan or named a scenario
+    /// the snapshot does not cover.
+    Request(String),
+    /// The backing book failed to load, validate, or compile.
+    Book(TuneError),
+    /// Reading requests or writing responses failed.
+    Io(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Request(msg) => write!(f, "bad request: {msg}"),
+            ServeError::Book(e) => write!(f, "serve book: {e}"),
+            ServeError::Io(msg) => write!(f, "serve io: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServeError::Book(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// Lookup key: cluster dims plus dense op/persona discriminants.
+/// Tuples of integers are `Ord`, so keys sort and binary-search
+/// directly (`OpKind`/`PersonaName` themselves are not `Ord`).
+type SlotKey = (u32, u32, u32, u8, u8);
+
+fn slot_key(q: &Query) -> SlotKey {
+    (q.nodes, q.cores, q.lanes, q.op as u8, q.persona as u8)
+}
+
+/// One decision table compiled for serving: breakpoints as a flat
+/// sorted `from` array plus the complete response text per breakpoint.
+struct CompiledTable {
+    froms: Vec<u64>,
+    /// Full single-query response line per breakpoint (trailing `\n`).
+    lines: Vec<String>,
+    /// The same object as a batch-array element (no newline).
+    items: Vec<String>,
+}
+
+impl CompiledTable {
+    /// Index of the breakpoint governing count `c`: the last `from <=
+    /// c`, saturating to 0 below the first breakpoint and open-ended
+    /// past the last — the same total semantics as
+    /// `DecisionTable::pick`, as a branchless halving search (the
+    /// select compiles to a conditional move, not a branch).
+    #[inline]
+    fn pick_idx(&self, c: u64) -> usize {
+        let froms = &self.froms;
+        let mut base = 0usize;
+        let mut size = froms.len();
+        while size > 1 {
+            let half = size / 2;
+            let mid = base + half;
+            base = if froms[mid] <= c { mid } else { base };
+            size -= half;
+        }
+        base
+    }
+}
+
+/// An immutable compiled view of one [`TuningBook`]. Built off to the
+/// side and swapped in atomically behind an `Arc`, so readers see the
+/// old snapshot or the new one, never a mix.
+pub struct Snapshot {
+    keys: Vec<SlotKey>,
+    tables: Vec<CompiledTable>,
+    generation: u64,
+}
+
+impl Snapshot {
+    /// Validate and compile `book`. Winner resolution (and therefore
+    /// every possible registry error) happens here, once per reload.
+    pub fn compile(book: &TuningBook, generation: u64) -> Result<Snapshot, ServeError> {
+        book.validate().map_err(ServeError::Book)?;
+        let mut pairs: Vec<(SlotKey, CompiledTable)> = Vec::with_capacity(book.tables.len());
+        for t in &book.tables {
+            let key = (
+                t.cluster.nodes,
+                t.cluster.cores,
+                t.cluster.lanes,
+                t.op as u8,
+                t.persona as u8,
+            );
+            let mut froms = Vec::with_capacity(t.entries.len());
+            let mut lines = Vec::with_capacity(t.entries.len());
+            let mut items = Vec::with_capacity(t.entries.len());
+            for b in &t.entries {
+                // `validate` already resolved every entry; resolving
+                // again keeps the error typed if the registry and the
+                // book ever disagree, and yields the display label.
+                let alg = registry().resolve(&b.alg, b.k).map_err(|e| {
+                    ServeError::Book(TuneError::Parse(format!("{}: {e}", t.label())))
+                })?;
+                let item = format!(
+                    "{{\"ok\":true,\"op\":\"{}\",\"persona\":\"{}\",\"alg\":\"{}\",\
+                     \"k\":{},\"label\":\"{}\",\"from\":{},\"avg_us\":{}}}",
+                    t.op.name(),
+                    t.persona.key(),
+                    esc(&b.alg),
+                    b.k,
+                    esc(&alg.label()),
+                    b.from,
+                    b.avg_us,
+                );
+                froms.push(b.from);
+                lines.push(format!("{item}\n"));
+                items.push(item);
+            }
+            pairs.push((key, CompiledTable { froms, lines, items }));
+        }
+        pairs.sort_by(|a, b| a.0.cmp(&b.0));
+        let (keys, tables) = pairs.into_iter().unzip();
+        Ok(Snapshot { keys, tables, generation })
+    }
+
+    /// Number of compiled tables.
+    pub fn tables(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Monotone reload counter (1 for the initially loaded book).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    #[inline]
+    fn lookup(&self, q: &Query) -> Option<(usize, usize)> {
+        let ti = self.keys.binary_search(&slot_key(q)).ok()?;
+        Some((ti, self.tables[ti].pick_idx(q.count)))
+    }
+
+    /// The full response line (trailing newline) for `q`, if covered.
+    fn line(&self, q: &Query) -> Option<&str> {
+        let (ti, bi) = self.lookup(q)?;
+        Some(&self.tables[ti].lines[bi])
+    }
+
+    /// The batch-element fragment (no newline) for `q`, if covered.
+    fn item(&self, q: &Query) -> Option<&str> {
+        let (ti, bi) = self.lookup(q)?;
+        Some(&self.tables[ti].items[bi])
+    }
+}
+
+/// What the transport loop should do after a response.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flow {
+    Continue,
+    /// `{"cmd":"quit"}` — close this stream.
+    Quit,
+}
+
+/// The daemon: an `Arc<Snapshot>` behind an `RwLock` plus counters.
+/// [`Service::respond`] is the whole protocol; the transports
+/// ([`serve_lines`], [`serve_socket`]) only move lines in and out.
+pub struct Service {
+    snap: RwLock<Arc<Snapshot>>,
+    book_path: Option<PathBuf>,
+    queries: AtomicU64,
+    errors: AtomicU64,
+    reloads: AtomicU64,
+}
+
+impl Service {
+    /// Serve an in-memory book (tests and benches). `{"cmd":"reload"}`
+    /// has no path to re-read and reports an error response.
+    pub fn from_book(book: &TuningBook) -> Result<Service, ServeError> {
+        Ok(Service {
+            snap: RwLock::new(Arc::new(Snapshot::compile(book, 1)?)),
+            book_path: None,
+            queries: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+        })
+    }
+
+    /// Load and compile a persisted book; `reload` re-reads this path.
+    pub fn load(path: impl AsRef<Path>) -> Result<Service, ServeError> {
+        let path = path.as_ref();
+        let book = TuningBook::load(path).map_err(ServeError::Book)?;
+        let mut svc = Service::from_book(&book)?;
+        svc.book_path = Some(path.to_path_buf());
+        Ok(svc)
+    }
+
+    /// The current snapshot (an `Arc` clone: no allocation).
+    pub fn snapshot(&self) -> Arc<Snapshot> {
+        self.snap.read().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Re-read the book path and swap the compiled snapshot in,
+    /// returning the new table count. The snapshot is fully built
+    /// before the brief write lock; on any error the old snapshot
+    /// stays installed and keeps serving.
+    pub fn reload(&self) -> Result<usize, ServeError> {
+        let path = self.book_path.as_deref().ok_or_else(|| {
+            ServeError::Io("no book path to reload (service built from an in-memory book)".into())
+        })?;
+        let book = TuningBook::load(path).map_err(ServeError::Book)?;
+        let generation = self.snapshot().generation() + 1;
+        let snap = Arc::new(Snapshot::compile(&book, generation)?);
+        let n = snap.tables();
+        *self.snap.write().unwrap_or_else(|e| e.into_inner()) = snap;
+        self.reloads.fetch_add(1, Ordering::Relaxed);
+        Ok(n)
+    }
+
+    fn error_response(&self, out: &mut String, msg: &str) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+        out.push_str("{\"ok\":false,\"error\":\"");
+        out.push_str(&esc(msg));
+        out.push_str("\"}\n");
+    }
+
+    fn uncovered(q: &Query) -> String {
+        format!(
+            "no table for {} on {}x{} (lanes={}) [{}]",
+            q.op.name(),
+            q.nodes,
+            q.cores,
+            q.lanes,
+            q.persona.key()
+        )
+    }
+
+    /// Answer one request line into `out` (caller clears the buffer).
+    /// Every failure becomes an `{"ok":false,...}` response — this
+    /// function cannot fail and must never panic on untrusted input.
+    pub fn respond(&self, line: &str, out: &mut String) -> Flow {
+        if line.trim().is_empty() {
+            return Flow::Continue;
+        }
+        match wire::classify(line) {
+            Ok(wire::Line::Query(q)) => {
+                // The read guard is held across the lookup, so the
+                // borrowed answer comes from one snapshot.
+                let snap = self.snap.read().unwrap_or_else(|e| e.into_inner());
+                match snap.line(&q) {
+                    Some(text) => {
+                        self.queries.fetch_add(1, Ordering::Relaxed);
+                        out.push_str(text);
+                    }
+                    None => self.error_response(out, &Self::uncovered(&q)),
+                }
+                Flow::Continue
+            }
+            Ok(wire::Line::Batch(mut cur)) => {
+                // One guard for the whole batch: a concurrent reload
+                // cannot mix books inside one response.
+                let snap = self.snap.read().unwrap_or_else(|e| e.into_inner());
+                let start = out.len();
+                out.push_str("{\"ok\":true,\"answers\":[");
+                let mut n = 0u64;
+                loop {
+                    match wire::batch_next(&mut cur) {
+                        Ok(None) => break,
+                        Ok(Some(q)) => match snap.item(&q) {
+                            Some(text) => {
+                                if n > 0 {
+                                    out.push(',');
+                                }
+                                out.push_str(text);
+                                n += 1;
+                            }
+                            None => {
+                                out.truncate(start);
+                                let msg = format!("batch item {n}: {}", Self::uncovered(&q));
+                                self.error_response(out, &msg);
+                                return Flow::Continue;
+                            }
+                        },
+                        Err(e) => {
+                            out.truncate(start);
+                            let err = ServeError::Request(format!("batch item {n}: {e}"));
+                            self.error_response(out, &err.to_string());
+                            return Flow::Continue;
+                        }
+                    }
+                }
+                out.push_str("]}\n");
+                self.queries.fetch_add(n, Ordering::Relaxed);
+                Flow::Continue
+            }
+            Ok(wire::Line::Cmd(cmd)) => self.command(cmd, out),
+            Err(e) => {
+                self.error_response(out, &ServeError::Request(e).to_string());
+                Flow::Continue
+            }
+        }
+    }
+
+    fn command(&self, cmd: Cmd, out: &mut String) -> Flow {
+        use std::fmt::Write as _;
+        match cmd {
+            Cmd::Stats => {
+                let snap = self.snapshot();
+                let _ = write!(
+                    out,
+                    "{{\"ok\":true,\"queries\":{},\"errors\":{},\"reloads\":{},\
+                     \"tables\":{},\"generation\":{}}}",
+                    self.queries.load(Ordering::Relaxed),
+                    self.errors.load(Ordering::Relaxed),
+                    self.reloads.load(Ordering::Relaxed),
+                    snap.tables(),
+                    snap.generation(),
+                );
+                out.push('\n');
+                Flow::Continue
+            }
+            Cmd::Reload => {
+                match self.reload() {
+                    Ok(n) => {
+                        let _ = write!(
+                            out,
+                            "{{\"ok\":true,\"reloaded\":true,\"tables\":{n},\"generation\":{}}}",
+                            self.snapshot().generation(),
+                        );
+                        out.push('\n');
+                    }
+                    Err(e) => self.error_response(out, &e.to_string()),
+                }
+                Flow::Continue
+            }
+            Cmd::Quit => {
+                out.push_str("{\"ok\":true,\"bye\":true}\n");
+                Flow::Quit
+            }
+        }
+    }
+
+    /// One-line stats summary (the CLI prints this to stderr after a
+    /// `--once` batch).
+    pub fn summary(&self) -> String {
+        format!(
+            "served {} queries ({} errors, {} reloads) from {}",
+            self.queries.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.reloads.load(Ordering::Relaxed),
+            self.book_path
+                .as_deref()
+                .map_or_else(|| "<memory>".to_string(), |p| p.display().to_string()),
+        )
+    }
+}
+
+/// Serve newline-delimited requests from `input` until EOF or
+/// `{"cmd":"quit"}`. The line and response buffers are reused, so the
+/// warm single-query exchange stays allocation-free end to end.
+pub fn serve_lines<R, W>(svc: &Service, mut input: R, mut output: W) -> Result<(), ServeError>
+where
+    R: std::io::BufRead,
+    W: std::io::Write,
+{
+    let mut line = String::new();
+    let mut out = String::new();
+    loop {
+        line.clear();
+        let n = input
+            .read_line(&mut line)
+            .map_err(|e| ServeError::Io(format!("read request: {e}")))?;
+        if n == 0 {
+            return Ok(());
+        }
+        out.clear();
+        let flow = svc.respond(&line, &mut out);
+        if !out.is_empty() {
+            output
+                .write_all(out.as_bytes())
+                .and_then(|()| output.flush())
+                .map_err(|e| ServeError::Io(format!("write response: {e}")))?;
+        }
+        if flow == Flow::Quit {
+            return Ok(());
+        }
+    }
+}
+
+/// Accept loop on a Unix domain socket: one thread per connection,
+/// each running [`serve_lines`] against the shared service. `quit`
+/// closes its own connection; the listener accepts until the process
+/// exits.
+#[cfg(unix)]
+pub fn serve_socket(svc: &Arc<Service>, path: &Path) -> Result<(), ServeError> {
+    use std::os::unix::net::UnixListener;
+    // A stale socket file from a previous run would fail the bind.
+    let _ = std::fs::remove_file(path);
+    let listener = UnixListener::bind(path)
+        .map_err(|e| ServeError::Io(format!("bind {}: {e}", path.display())))?;
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let svc = Arc::clone(svc);
+        std::thread::spawn(move || {
+            let Ok(reader) = stream.try_clone() else { return };
+            let _ = serve_lines(&svc, std::io::BufReader::new(reader), stream);
+        });
+    }
+    Ok(())
+}
+
+/// Poll the book file's mtime every `period` and hot-reload on change.
+/// Reload failures keep the old snapshot and are visible in
+/// `{"cmd":"stats"}` error counts; the watcher never kills the daemon.
+pub fn watch_book(svc: Arc<Service>, period: std::time::Duration) {
+    std::thread::spawn(move || {
+        let Some(path) = svc.book_path.clone() else { return };
+        let mtime = |p: &Path| std::fs::metadata(p).and_then(|m| m.modified()).ok();
+        let mut last = mtime(&path);
+        loop {
+            std::thread::sleep(period);
+            let now = mtime(&path);
+            if now != last {
+                last = now;
+                if svc.reload().is_err() {
+                    svc.errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    });
+}

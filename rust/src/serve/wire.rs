@@ -1,0 +1,417 @@
+//! Zero-allocation request scanner for the `mlane serve` hot path.
+//!
+//! The wire format is a strict, flat subset of JSON: one object per
+//! line, string values without escape sequences, unsigned integer
+//! numbers. Anything else is a malformed request — turned into an
+//! error *response* by the caller, never a panic or a daemon exit.
+//! Scanning borrows from the request line and produces only `Copy`
+//! values, so a well-formed single query allocates nothing
+//! (`rust/tests/serve_alloc.rs` pins this with the counting
+//! allocator). Error messages are `String`s: only the error path
+//! allocates.
+
+use crate::algorithms::registry::OpKind;
+use crate::model::PersonaName;
+
+/// One parsed single-query request. All fields are `Copy`: building a
+/// `Query` allocates nothing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Query {
+    pub op: OpKind,
+    pub persona: PersonaName,
+    pub nodes: u32,
+    pub cores: u32,
+    pub lanes: u32,
+    pub count: u64,
+}
+
+/// Daemon control commands (`{"cmd":"..."}` lines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cmd {
+    Reload,
+    Stats,
+    Quit,
+}
+
+/// How one request line should be handled.
+pub enum Line<'a> {
+    /// `{"op":...,"persona":...,...}` — answer one query.
+    Query(Query),
+    /// `{"batch":[...]}` — the cursor sits at the first element;
+    /// drain it with [`batch_next`].
+    Batch(Cursor<'a>),
+    /// `{"cmd":"..."}`.
+    Cmd(Cmd),
+}
+
+/// A byte cursor over one request line.
+pub struct Cursor<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(line: &'a str) -> Cursor<'a> {
+        Cursor { s: line.as_bytes(), i: 0 }
+    }
+
+    fn pos(&self) -> usize {
+        self.i
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+
+    fn bump(&mut self) {
+        self.i += 1;
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\r' | b'\n')) {
+            self.bump();
+        }
+    }
+
+    fn eat(&mut self, want: u8) -> Result<(), String> {
+        match self.peek() {
+            Some(b) if b == want => {
+                self.bump();
+                Ok(())
+            }
+            other => Err(expected(want as char, other, self.i)),
+        }
+    }
+
+    /// A `"…"` string without escapes, as a slice borrowed from the
+    /// line. The quote bytes are ASCII, so slicing between them can
+    /// never split a multi-byte character.
+    fn string(&mut self) -> Result<&'a str, String> {
+        self.eat(b'"')?;
+        let start = self.i;
+        loop {
+            match self.peek() {
+                Some(b'"') => break,
+                Some(b'\\') => {
+                    return Err(format!(
+                        "escape sequences are not allowed in requests (byte {})",
+                        self.i
+                    ));
+                }
+                Some(_) => self.bump(),
+                None => return Err("unterminated string".into()),
+            }
+        }
+        let end = self.i;
+        self.bump();
+        std::str::from_utf8(&self.s[start..end]).map_err(|_| "non-UTF-8 string".into())
+    }
+
+    /// An unsigned decimal integer with overflow checking.
+    fn uint(&mut self) -> Result<u64, String> {
+        let mut v: u64 = 0;
+        let mut any = false;
+        while let Some(b @ b'0'..=b'9') = self.peek() {
+            any = true;
+            v = v
+                .checked_mul(10)
+                .and_then(|v| v.checked_add(u64::from(b - b'0')))
+                .ok_or_else(|| format!("number overflows u64 (byte {})", self.i))?;
+            self.bump();
+        }
+        if !any {
+            return Err(format!("expected an unsigned integer at byte {}", self.i));
+        }
+        Ok(v)
+    }
+
+    /// Whitespace, then end of line.
+    fn end(&mut self) -> Result<(), String> {
+        self.ws();
+        if self.i == self.s.len() {
+            Ok(())
+        } else {
+            Err(format!("trailing data at byte {}", self.i))
+        }
+    }
+}
+
+fn expected(want: char, got: Option<u8>, at: usize) -> String {
+    match got {
+        Some(b) => format!("expected '{want}' at byte {at}, found {:?}", b as char),
+        None => format!("expected '{want}' at byte {at}, found end of line"),
+    }
+}
+
+/// Classify one request line. The single-query fast path borrows from
+/// `line` and allocates nothing.
+pub fn classify(line: &str) -> Result<Line<'_>, String> {
+    let mut cur = Cursor::new(line);
+    cur.ws();
+    cur.eat(b'{')?;
+    cur.ws();
+    let key = cur.string()?;
+    cur.ws();
+    cur.eat(b':')?;
+    cur.ws();
+    match key {
+        "batch" => {
+            cur.eat(b'[')?;
+            Ok(Line::Batch(cur))
+        }
+        "cmd" => {
+            let cmd = match cur.string()? {
+                "reload" => Cmd::Reload,
+                "stats" => Cmd::Stats,
+                "quit" => Cmd::Quit,
+                other => return Err(format!("unknown cmd {other:?} (reload|stats|quit)")),
+            };
+            cur.ws();
+            cur.eat(b'}')?;
+            cur.end()?;
+            Ok(Line::Cmd(cmd))
+        }
+        first => {
+            let q = query_fields(&mut cur, first)?;
+            cur.end()?;
+            Ok(Line::Query(q))
+        }
+    }
+}
+
+/// The next element of a `{"batch":[...]}` line, or `Ok(None)` after
+/// the closing `]}` (which also rejects trailing data).
+pub fn batch_next(cur: &mut Cursor<'_>) -> Result<Option<Query>, String> {
+    cur.ws();
+    match cur.peek() {
+        Some(b']') => {
+            cur.bump();
+            cur.ws();
+            cur.eat(b'}')?;
+            cur.end()?;
+            Ok(None)
+        }
+        Some(b'{') => {
+            cur.bump();
+            cur.ws();
+            let key = cur.string()?;
+            cur.ws();
+            cur.eat(b':')?;
+            cur.ws();
+            let q = query_fields(cur, key)?;
+            cur.ws();
+            if cur.peek() == Some(b',') {
+                cur.bump();
+                cur.ws();
+                // A separator must introduce another element: rejects
+                // trailing commas before `]`.
+                if cur.peek() != Some(b'{') {
+                    return Err(expected('{', cur.peek(), cur.pos()));
+                }
+            }
+            Ok(Some(q))
+        }
+        other => Err(expected('{', other, cur.pos())),
+    }
+}
+
+/// Cluster dimensions are u32 and at least 1 (`Cluster::new` rejects
+/// degenerate shapes by panicking; the wire layer must fail first).
+fn dim(cur: &mut Cursor<'_>, what: &str) -> Result<u32, String> {
+    let v = cur.uint()?;
+    if v == 0 {
+        return Err(format!("{what} must be >= 1"));
+    }
+    u32::try_from(v).map_err(|_| format!("{what} overflows u32"))
+}
+
+/// The body of a query object. On entry the cursor sits on the first
+/// key's value (`key` already consumed, colon too); on exit the
+/// closing `}` has been consumed. Each of the six keys must appear
+/// exactly once, tracked with a seen-bitmask; unknown or duplicate
+/// keys are errors.
+fn query_fields<'a>(cur: &mut Cursor<'a>, mut key: &'a str) -> Result<Query, String> {
+    const OP: u8 = 1 << 0;
+    const PERSONA: u8 = 1 << 1;
+    const NODES: u8 = 1 << 2;
+    const CORES: u8 = 1 << 3;
+    const LANES: u8 = 1 << 4;
+    const COUNT: u8 = 1 << 5;
+    const ALL: u8 = OP | PERSONA | NODES | CORES | LANES | COUNT;
+
+    let mut seen = 0u8;
+    let mut op = OpKind::Bcast;
+    let mut persona = PersonaName::OpenMpi;
+    let (mut nodes, mut cores, mut lanes) = (0u32, 0u32, 0u32);
+    let mut count = 0u64;
+    loop {
+        let bit = match key {
+            "op" => {
+                let s = cur.string()?;
+                op = OpKind::parse(s).ok_or_else(|| format!("unknown op {s:?}"))?;
+                OP
+            }
+            "persona" => {
+                let s = cur.string()?;
+                persona =
+                    PersonaName::parse(s).ok_or_else(|| format!("unknown persona {s:?}"))?;
+                PERSONA
+            }
+            "nodes" => {
+                nodes = dim(cur, "nodes")?;
+                NODES
+            }
+            "cores" => {
+                cores = dim(cur, "cores")?;
+                CORES
+            }
+            "lanes" => {
+                lanes = dim(cur, "lanes")?;
+                LANES
+            }
+            "count" => {
+                count = cur.uint()?;
+                COUNT
+            }
+            other => return Err(format!("unknown request key {other:?}")),
+        };
+        if seen & bit != 0 {
+            return Err(format!("duplicate request key {key:?}"));
+        }
+        seen |= bit;
+        cur.ws();
+        match cur.peek() {
+            Some(b',') => {
+                cur.bump();
+                cur.ws();
+                key = cur.string()?;
+                cur.ws();
+                cur.eat(b':')?;
+                cur.ws();
+            }
+            Some(b'}') => {
+                cur.bump();
+                break;
+            }
+            other => return Err(expected(',', other, cur.pos())),
+        }
+    }
+    if seen != ALL {
+        return Err("a query needs exactly op, persona, nodes, cores, lanes, count".into());
+    }
+    Ok(Query { op, persona, nodes, cores, lanes, count })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A well-formed query line with one field spliced in.
+    fn query_line(field: &str) -> String {
+        let base = concat!(
+            "{\"op\":\"bcast\",\"persona\":\"openmpi\",\"nodes\":2,",
+            "\"cores\":4,\"lanes\":2,\"count\":600"
+        );
+        if field.is_empty() {
+            format!("{base}}}")
+        } else {
+            format!("{base},{field}}}")
+        }
+    }
+
+    fn q(line: &str) -> Query {
+        match classify(line) {
+            Ok(Line::Query(q)) => q,
+            other => panic!("expected a query from {line:?}, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn single_queries_scan_in_any_key_order() {
+        let a = q(&query_line(""));
+        let b = q(concat!(
+            " { \"count\" : 600 , \"lanes\" : 2 , \"cores\" : 4 , \"nodes\" : 2 ,",
+            " \"persona\" : \"openmpi\" , \"op\" : \"bcast\" } "
+        ));
+        assert_eq!(a, b);
+        assert_eq!(a.op, OpKind::Bcast);
+        assert_eq!(a.persona, PersonaName::OpenMpi);
+        assert_eq!((a.nodes, a.cores, a.lanes, a.count), (2, 4, 2, 600));
+    }
+
+    #[test]
+    fn malformed_queries_are_errors_not_panics() {
+        let mut bad = vec![
+            String::new(),
+            "not json".into(),
+            "{}".into(),
+            "{\"op\":\"bcast\"}".into(),
+            query_line("").replace("bcast", "noop"),
+            query_line("").replace("openmpi", "nobody"),
+            query_line("").replace("\"nodes\":2", "\"nodes\":0"),
+            query_line("").replace("\"count\":600", "\"count\":-1"),
+            query_line("").replace("\"count\":600", "\"count\":1.5"),
+            query_line("").replace("\"count\":600", "\"count\":99999999999999999999999"),
+            query_line("\"count\":2"),
+            query_line("\"extra\":1"),
+            format!("{} trailing", query_line("")),
+            "{\"cmd\":\"explode\"}".into(),
+        ];
+        // Escapes are rejected wholesale, even where JSON allows them.
+        bad.push(query_line("").replace("bcast", "bc\\u0061st"));
+        for line in &bad {
+            assert!(classify(line).is_err(), "should reject {line:?}");
+        }
+    }
+
+    #[test]
+    fn commands_classify() {
+        assert!(matches!(classify("{\"cmd\":\"reload\"}"), Ok(Line::Cmd(Cmd::Reload))));
+        assert!(matches!(classify("{\"cmd\":\"stats\"}"), Ok(Line::Cmd(Cmd::Stats))));
+        assert!(matches!(classify("{\"cmd\":\"quit\"}"), Ok(Line::Cmd(Cmd::Quit))));
+    }
+
+    #[test]
+    fn batches_drain_element_by_element() {
+        let second = concat!(
+            "{\"op\":\"scatter\",\"persona\":\"mpich\",\"nodes\":2,",
+            "\"cores\":4,\"lanes\":2,\"count\":7}"
+        );
+        let line = format!("{{\"batch\":[{},{second}]}}", query_line(""));
+        let Ok(Line::Batch(mut cur)) = classify(&line) else {
+            panic!("batch should classify");
+        };
+        let first = batch_next(&mut cur).unwrap().unwrap();
+        assert_eq!((first.op, first.count), (OpKind::Bcast, 600));
+        let second = batch_next(&mut cur).unwrap().unwrap();
+        assert_eq!((second.op, second.persona), (OpKind::Scatter, PersonaName::Mpich));
+        assert!(batch_next(&mut cur).unwrap().is_none());
+
+        let Ok(Line::Batch(mut empty)) = classify("{\"batch\":[]}") else {
+            panic!("empty batch should classify");
+        };
+        assert!(batch_next(&mut empty).unwrap().is_none());
+
+        for bad in [
+            format!("{{\"batch\":[{},]}}", query_line("")),
+            "{\"batch\":[1]}".into(),
+            "{\"batch\":[]} trailing".into(),
+        ] {
+            let Ok(Line::Batch(mut cur)) = classify(&bad) else {
+                panic!("{bad:?} should classify as a batch");
+            };
+            let mut failed = false;
+            loop {
+                match batch_next(&mut cur) {
+                    Ok(None) => break,
+                    Ok(Some(_)) => {}
+                    Err(_) => {
+                        failed = true;
+                        break;
+                    }
+                }
+            }
+            assert!(failed, "should reject {bad:?}");
+        }
+    }
+}

@@ -47,7 +47,7 @@ use std::collections::HashMap;
 use std::fmt;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use crate::algorithms::registry::{registry, Alg, AlgError, OpKind};
 use crate::coordinator::Collectives;
@@ -119,6 +119,9 @@ pub enum TuneError {
     Parse(String),
     /// A persisted book could not be read or written.
     Io(String),
+    /// Two tables in one book cover the same (cluster, op, persona) —
+    /// dispatch would silently depend on table order.
+    DuplicateTable { label: String },
 }
 
 impl fmt::Display for TuneError {
@@ -135,6 +138,9 @@ impl fmt::Display for TuneError {
             }
             TuneError::Parse(msg) => write!(f, "decision tables: {msg}"),
             TuneError::Io(msg) => write!(f, "decision tables: {msg}"),
+            TuneError::DuplicateTable { label } => {
+                write!(f, "decision tables: duplicate table for {label}")
+            }
         }
     }
 }
@@ -216,18 +222,33 @@ impl DecisionTable {
 
     /// The breakpoint governing count `c` (total: counts below the
     /// first breakpoint saturate to it, the last is open-ended).
+    ///
+    /// Panics on an empty table; tables from `parse`/`tune_scenario`
+    /// are never empty ([`DecisionTable::validate`] rejects them).
+    /// Untrusted callers use [`DecisionTable::try_pick`].
     pub fn pick(&self, c: u64) -> &Breakpoint {
-        assert!(!self.entries.is_empty(), "decision table has no entries");
+        self.try_pick(c).expect("decision table has no entries")
+    }
+
+    /// Total variant of [`DecisionTable::pick`]: `None` on an empty
+    /// table instead of panicking.
+    pub fn try_pick(&self, c: u64) -> Option<&Breakpoint> {
         let i = self.entries.partition_point(|b| b.from <= c);
-        &self.entries[i.saturating_sub(1)]
+        self.entries.get(i.saturating_sub(1))
     }
 
     /// Resolve the winning algorithm at count `c` against the registry.
     pub fn resolve(&self, c: u64) -> Result<Alg, AlgError> {
-        let b = self.pick(c);
+        let b = self.try_pick(c).ok_or_else(|| AlgError::Engine {
+            detail: format!("decision table {} has no entries", self.label()),
+        })?;
         // `validate`/`tune_scenario` exclude self-reference; builds
         // would recurse forever if one slipped through.
-        debug_assert_ne!(b.alg, "tuned", "self-referential decision table");
+        if b.alg == "tuned" {
+            return Err(AlgError::Engine {
+                detail: format!("decision table {} dispatches back to `tuned`", self.label()),
+            });
+        }
         registry().resolve(&b.alg, b.k)
     }
 
@@ -433,7 +454,7 @@ impl TuningBook {
                 .iter()
                 .any(|p| p.cluster == t.cluster && p.op == t.op && p.persona == t.persona)
             {
-                return Err(TuneError::Parse(format!("duplicate table for {}", t.label())));
+                return Err(TuneError::DuplicateTable { label: t.label() });
             }
         }
         Ok(())
@@ -776,27 +797,35 @@ pub fn tune_shard_json(
 
 // ---- dispatch (the `tuned` meta-algorithm's brain) ---------------------
 
-fn installed_slot() -> &'static Mutex<Option<Arc<TuningBook>>> {
-    static SLOT: OnceLock<Mutex<Option<Arc<TuningBook>>>> = OnceLock::new();
-    SLOT.get_or_init(|| Mutex::new(None))
+/// The installed-book slot is an `RwLock` over an immutable `Arc`
+/// snapshot: `install` builds and validates the whole book *before*
+/// taking the brief write lock, so a concurrent [`dispatch`] either
+/// sees the old snapshot or the new one — never a half-installed book.
+/// Lock poisoning is recovered (`into_inner`): the slot only ever holds
+/// a fully-swapped `Option<Arc>`, so a panicked peer cannot leave it
+/// torn, and selection must keep serving.
+fn installed_slot() -> &'static RwLock<Option<Arc<TuningBook>>> {
+    static SLOT: OnceLock<RwLock<Option<Arc<TuningBook>>>> = OnceLock::new();
+    SLOT.get_or_init(|| RwLock::new(None))
 }
 
 /// Install a book process-wide: [`dispatch`] consults it before falling
 /// back to auto-built tables (`mlane run --table <file>` wires this).
 pub fn install(book: TuningBook) -> Result<(), TuneError> {
     book.validate()?;
-    *installed_slot().lock().unwrap() = Some(Arc::new(book));
+    let snapshot = Some(Arc::new(book));
+    *installed_slot().write().unwrap_or_else(|e| e.into_inner()) = snapshot;
     Ok(())
 }
 
 /// The currently installed book, if any.
 pub fn installed() -> Option<Arc<TuningBook>> {
-    installed_slot().lock().unwrap().clone()
+    installed_slot().read().unwrap_or_else(|e| e.into_inner()).clone()
 }
 
 /// Remove the installed book (test hygiene; auto tables take over).
 pub fn clear_installed() {
-    *installed_slot().lock().unwrap() = None;
+    *installed_slot().write().unwrap_or_else(|e| e.into_inner()) = None;
 }
 
 type AutoKey = (Cluster, OpKind, PersonaName);
@@ -817,7 +846,14 @@ pub fn auto_table(
     op: OpKind,
 ) -> Result<Arc<DecisionTable>, AlgError> {
     let key = (cluster, op, persona);
-    if let Some(t) = auto_cache().lock().unwrap().get(&key) {
+    // Poison recovery mirrors `installed_slot`: the cache maps keys to
+    // fully-constructed `Arc`s, so a panicked peer cannot leave a torn
+    // entry behind.
+    if let Some(t) = auto_cache()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .get(&key)
+    {
         return Ok(t.clone());
     }
     // Compute outside the cache lock: a tuning sweep can be slow and
@@ -826,7 +862,12 @@ pub fn auto_table(
     let table = tune_scenario(&shared_engine(), &sc, &TuneConfig::default())
         .map_err(|e| e.into_alg_error(op))?;
     let arc = Arc::new(table);
-    Ok(auto_cache().lock().unwrap().entry(key).or_insert(arc).clone())
+    Ok(auto_cache()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .entry(key)
+        .or_insert(arc)
+        .clone())
 }
 
 /// Resolve (cluster, persona, op, count) to the winning algorithm: the
@@ -1008,8 +1049,24 @@ mod tests {
         let t = tune_scenario(&eng, &sc, &fast()).unwrap();
         let book = TuningBook { tune: fast(), tables: vec![t.clone(), t] };
         let err = book.validate().unwrap_err();
+        assert!(matches!(err, TuneError::DuplicateTable { .. }), "{err:?}");
         assert!(err.to_string().contains("duplicate table"), "{err}");
         assert!(install(book).is_err());
+    }
+
+    #[test]
+    fn empty_tables_resolve_to_typed_errors_not_panics() {
+        let t = DecisionTable {
+            cluster: tiny(),
+            op: OpKind::Bcast,
+            persona: PersonaName::OpenMpi,
+            entries: vec![],
+        };
+        assert!(t.try_pick(0).is_none());
+        assert!(t.try_pick(u64::MAX).is_none());
+        let err = t.resolve(64).unwrap_err();
+        assert!(err.to_string().contains("no entries"), "{err}");
+        assert!(t.validate().is_err());
     }
 
     #[test]

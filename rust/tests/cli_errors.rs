@@ -111,6 +111,9 @@ fn help_and_algs_are_registry_driven() {
         "lint",
         "--eager-limit",
         "--max-per-lint",
+        "serve",
+        "zero-alloc",
+        "--once",
     ] {
         assert!(text.contains(needle), "help missing {needle:?}: {text}");
     }
@@ -628,6 +631,137 @@ fn contention_preset_and_backend_help_are_wired() {
     {
         assert!(text.contains(needle), "help missing {needle:?}: {text}");
     }
+}
+
+/// Spawn `mlane` with `input` piped to stdin (the `serve` transport).
+/// Dropping the pipe after the write is the EOF that ends `--once`.
+fn mlane_piped(args: &[&str], input: &str) -> Output {
+    use std::io::Write as _;
+    use std::process::Stdio;
+    let mut child = Command::new(env!("CARGO_BIN_EXE_mlane"))
+        .args(args)
+        .env("MLANE_REPS", "2")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn mlane");
+    child
+        .stdin
+        .take()
+        .expect("piped stdin")
+        .write_all(input.as_bytes())
+        .expect("write stdin");
+    child.wait_with_output().expect("wait mlane")
+}
+
+#[test]
+fn serve_flag_and_book_errors_are_clean() {
+    let out = mlane(&["serve"]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("serve needs --book"), "{}", stderr(&out));
+
+    // A missing book file is a typed load error, not a panic.
+    let out = mlane(&["serve", "--book", "/nonexistent-mlane/book.json"]);
+    assert_eq!(out.status.code(), Some(1));
+    let err = stderr(&out);
+    assert!(err.contains("serve book:"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+
+    // So is a corrupt one.
+    let bad = std::env::temp_dir().join("mlane_cli_serve_bad.json");
+    std::fs::write(&bad, "{\"version\":1").unwrap();
+    let out = mlane(&["serve", "--book", bad.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(!stderr(&out).contains("panicked"), "{}", stderr(&out));
+
+    let out = mlane(&["serve", "--book", "x", "--nope", "1"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("unknown flag --nope"), "{}", stderr(&out));
+
+    // --once is a drain-and-exit batch: daemon-only flags conflict, and
+    // the conflict is caught before any book i/o.
+    let out = mlane(&[
+        "serve", "--book", "/nonexistent-mlane/book.json", "--once", "--socket",
+        "/tmp/mlane_conflict.sock",
+    ]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("drop --socket"), "{}", stderr(&out));
+}
+
+#[test]
+fn serve_duplicate_table_book_is_a_typed_error() {
+    // Two tables covering the same (cluster, op, persona): before the
+    // duplicate check, dispatch silently depended on table order.
+    let table = concat!(
+        "{\"op\":\"bcast\",\"persona\":\"openmpi\",\"nodes\":2,\"cores\":4,",
+        "\"lanes\":2,\"entries\":[{\"from\":1,\"alg\":\"kported\",\"k\":2,",
+        "\"avg_us\":1}]}"
+    );
+    let book = format!(
+        "{{\"version\":1,\"tune\":{{\"reps\":1,\"warmup\":0,\"seed\":1}},\
+         \"tables\":[{table},{table}]}}"
+    );
+    let path = std::env::temp_dir().join("mlane_cli_serve_dup.json");
+    std::fs::write(&path, book).unwrap();
+    let out = mlane(&["serve", "--book", path.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("duplicate table"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+
+    // The same book through `run --alg tuned --table` — the dispatch
+    // path rejects it at install, same typed error.
+    let out = mlane(&[
+        "run", "--op", "bcast", "--alg", "tuned", "--nodes", "2", "--cores", "4",
+        "--lanes", "2", "--c", "64", "--table", path.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("duplicate table"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+#[test]
+fn serve_once_answers_batches_and_survives_garbage() {
+    // End to end through real processes: tune a book, serve it --once,
+    // mix well-formed queries, garbage, a batch and a stats command on
+    // one stdin; every line gets a response and the exit is clean.
+    let path = std::env::temp_dir().join("mlane_cli_serve_book.json");
+    let path = path.to_str().unwrap();
+    let out = mlane(&[
+        "tune", "--op", "bcast", "--nodes", "2", "--cores", "4", "--lanes", "2",
+        "--counts", "1,600", "--reps", "1", "--format", "json", "--out", path,
+    ]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+
+    let good = concat!(
+        "{\"op\":\"bcast\",\"persona\":\"openmpi\",\"nodes\":2,\"cores\":4,",
+        "\"lanes\":2,\"count\":600}"
+    );
+    let input = format!("{good}\ngarbage\n{{\"batch\":[{good},{good}]}}\n{{\"cmd\":\"stats\"}}\n");
+    let out = mlane_piped(&["serve", "--book", path, "--once"], &input);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    let s = stdout(&out);
+    let lines: Vec<&str> = s.lines().collect();
+    assert_eq!(lines.len(), 4, "one response per request line: {s}");
+    assert!(lines[0].starts_with("{\"ok\":true,\"op\":\"bcast\""), "{s}");
+    assert!(lines[1].starts_with("{\"ok\":false,\"error\":\"bad request"), "{s}");
+    assert!(lines[2].starts_with("{\"ok\":true,\"answers\":[{\"ok\":true"), "{s}");
+    assert!(lines[3].contains("\"queries\":3"), "{s}");
+    assert!(lines[3].contains("\"errors\":1"), "{s}");
+    // The --once summary lands on stderr, never polluting the protocol.
+    assert!(
+        stderr(&out).contains("served 3 queries (1 errors, 0 reloads)"),
+        "stderr: {}",
+        stderr(&out)
+    );
+
+    // quit ends the stream early: later lines are never answered.
+    let input = format!("{{\"cmd\":\"quit\"}}\n{good}\n");
+    let out = mlane_piped(&["serve", "--book", path, "--once"], &input);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    assert_eq!(stdout(&out), "{\"ok\":true,\"bye\":true}\n");
 }
 
 #[test]

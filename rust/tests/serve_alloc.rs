@@ -1,0 +1,95 @@
+//! The serve hot-path allocation contract, enforced with the counting
+//! allocator (`util::allocs`): once the service is warm, answering a
+//! covered single query — wire scan, snapshot lookup, response
+//! `push_str` — performs **zero** heap allocations, and so does a warm
+//! batch line. `benches/engine_perf.rs` measures the same loop at
+//! scale and CI gates `serve_steady_allocs == 0`.
+
+use std::sync::Arc;
+
+use mlane::algorithms::registry::{registry, OpKind};
+use mlane::model::PersonaName;
+use mlane::serve::{Flow, Service};
+use mlane::sim::SweepEngine;
+use mlane::topology::Cluster;
+use mlane::tuning::{self, Scenario, TuneConfig, TuningBook};
+use mlane::util::allocs::thread_allocations;
+
+fn two_table_service() -> Service {
+    let cl = Cluster::new(2, 4, 2);
+    let cfg = TuneConfig { reps: 1, warmup: 0, seed: 7, ..TuneConfig::default() };
+    let engine = Arc::new(SweepEngine::new());
+    let tables = [OpKind::Bcast, OpKind::Scatter]
+        .into_iter()
+        .map(|op| {
+            let sc = Scenario {
+                cluster: cl,
+                op,
+                persona: PersonaName::OpenMpi,
+                counts: vec![1, 600, 6000],
+                candidates: registry().candidates(cl, op),
+            };
+            tuning::tune_scenario(&engine, &sc, &cfg).expect("tiny scenario tunes")
+        })
+        .collect();
+    Service::from_book(&TuningBook { tune: cfg, tables }).expect("book compiles")
+}
+
+fn query(op: &str, count: u64) -> String {
+    format!(
+        "{{\"op\":\"{op}\",\"persona\":\"openmpi\",\"nodes\":2,\"cores\":4,\
+         \"lanes\":2,\"count\":{count}}}"
+    )
+}
+
+#[test]
+fn warm_single_queries_allocate_nothing() {
+    let svc = two_table_service();
+    let reqs = [
+        query("bcast", 0),
+        query("bcast", 600),
+        query("scatter", 6000),
+        query("scatter", u64::MAX),
+    ];
+    let mut out = String::new();
+    // Warm pass: size the buffer and fault in every code path.
+    for line in &reqs {
+        out.clear();
+        assert_eq!(svc.respond(line, &mut out), Flow::Continue);
+        assert!(out.starts_with("{\"ok\":true,"), "warm query must be covered: {out}");
+    }
+
+    let a0 = thread_allocations();
+    for _ in 0..1000 {
+        for line in &reqs {
+            out.clear();
+            svc.respond(line, &mut out);
+            std::hint::black_box(out.len());
+        }
+    }
+    let allocs = thread_allocations() - a0;
+    assert_eq!(allocs, 0, "warm single-query serve path must not touch the heap");
+    // The loop really did answer (paranoia against an optimized-out body).
+    assert!(out.starts_with("{\"ok\":true,"), "{out}");
+}
+
+#[test]
+fn warm_batches_allocate_nothing() {
+    let svc = two_table_service();
+    let items: Vec<String> = (0..64)
+        .map(|i| query(if i % 2 == 0 { "bcast" } else { "scatter" }, 600 + i as u64))
+        .collect();
+    let batch = format!("{{\"batch\":[{}]}}", items.join(","));
+    let mut out = String::new();
+    assert_eq!(svc.respond(&batch, &mut out), Flow::Continue);
+    assert!(out.starts_with("{\"ok\":true,\"answers\":["), "warm batch must be covered: {out}");
+
+    let a0 = thread_allocations();
+    for _ in 0..200 {
+        out.clear();
+        svc.respond(&batch, &mut out);
+        std::hint::black_box(out.len());
+    }
+    let allocs = thread_allocations() - a0;
+    assert_eq!(allocs, 0, "warm batch serve path must not touch the heap");
+}

@@ -1,0 +1,382 @@
+//! `mlane serve` correctness properties.
+//!
+//! The tentpole claim: the selection service is *semantics-preserving*
+//! — for every table in a generated book, a serve answer names exactly
+//! the algorithm the `tuned` registry dispatch would build, including
+//! at breakpoint boundaries (`from`, `from±1`), below the first entry
+//! (saturating) and past the last (open-ended). The rest of the file
+//! pins the failure envelope: malformed requests and uncovered
+//! scenarios become `{"ok":false,...}` responses (never a panic),
+//! malformed books are typed load errors, and hot reload is torn-free
+//! under concurrency.
+//!
+//! Responses are re-parsed with the *independent* strict JSON parser
+//! from `tests/common`, not the library's own reader.
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use mlane::algorithms::registry::{registry, OpKind};
+use mlane::model::PersonaName;
+use mlane::serve::{Flow, ServeError, Service};
+use mlane::sim::SweepEngine;
+use mlane::topology::Cluster;
+use mlane::tuning::{self, Scenario, TuneConfig, TuneError, TuningBook};
+
+use common::{parse_json, Json};
+
+fn cfg() -> TuneConfig {
+    TuneConfig { reps: 1, warmup: 0, seed: 7, ..TuneConfig::default() }
+}
+
+fn cl() -> Cluster {
+    Cluster::new(2, 4, 2)
+}
+
+fn tune_one(op: OpKind, persona: PersonaName, counts: &[u64]) -> tuning::DecisionTable {
+    let engine = Arc::new(SweepEngine::new());
+    let sc = Scenario {
+        cluster: cl(),
+        op,
+        persona,
+        counts: counts.to_vec(),
+        candidates: registry().candidates(cl(), op),
+    };
+    tuning::tune_scenario(&engine, &sc, &cfg()).expect("tiny scenario tunes")
+}
+
+/// Every op x every persona on the tiny cluster — the "full generated
+/// book" the equivalence property quantifies over.
+fn full_book() -> TuningBook {
+    let mut tables = Vec::new();
+    for op in OpKind::ALL {
+        for persona in PersonaName::all() {
+            tables.push(tune_one(op, persona, &[1, 600, 6000, 60_000]));
+        }
+    }
+    TuningBook { tune: cfg(), tables }
+}
+
+fn small_book() -> TuningBook {
+    TuningBook {
+        tune: cfg(),
+        tables: vec![tune_one(OpKind::Bcast, PersonaName::OpenMpi, &[1, 600])],
+    }
+}
+
+fn query_line(op: OpKind, persona: PersonaName, c: Cluster, count: u64) -> String {
+    format!(
+        "{{\"op\":\"{}\",\"persona\":\"{}\",\"nodes\":{},\"cores\":{},\
+         \"lanes\":{},\"count\":{}}}",
+        op.name(),
+        persona.key(),
+        c.nodes,
+        c.cores,
+        c.lanes,
+        count
+    )
+}
+
+fn respond(svc: &Service, line: &str) -> String {
+    let mut out = String::new();
+    assert_eq!(svc.respond(line, &mut out), Flow::Continue, "{line}");
+    out
+}
+
+fn ok_true(v: &Json) -> bool {
+    matches!(v.get("ok"), Some(Json::Bool(true)))
+}
+
+/// The acceptance-criteria property: serve answers are identical to
+/// what the `tuned` registry path dispatches, for every table in a
+/// full generated book and for boundary-hugging counts. The installed
+/// book is process-global state, so this is the ONE test that touches
+/// `tuning::install`.
+#[test]
+fn serve_answers_match_tuned_dispatch_across_a_full_book() {
+    let book = full_book();
+    let svc = Service::from_book(&book).expect("full book compiles");
+    tuning::install(book.clone()).expect("full book installs");
+
+    for t in &book.tables {
+        let mut counts = vec![0u64, 1, u64::MAX];
+        for b in &t.entries {
+            counts.push(b.from.saturating_sub(1));
+            counts.push(b.from);
+            counts.push(b.from.saturating_add(1));
+        }
+        for &c in &counts {
+            let line = query_line(t.op, t.persona, t.cluster, c);
+            let out = respond(&svc, &line);
+            let v = parse_json(out.trim_end())
+                .unwrap_or_else(|e| panic!("unparseable response {out:?}: {e}"));
+            assert!(ok_true(&v), "covered query must answer ok: {out}");
+
+            // The same scenario through the registry's `tuned` path.
+            let alg = tuning::dispatch(t.cluster, t.persona, t.op, c)
+                .expect("installed book covers the scenario");
+            assert_eq!(v.get("alg").expect("alg").string(), alg.name(), "{line}");
+            assert_eq!(v.get("label").expect("label").string(), alg.label(), "{line}");
+
+            // And the book's own pick governs k / from / avg_us.
+            let b = t.try_pick(c).expect("tuned tables are never empty");
+            assert_eq!(v.get("k").expect("k").num() as u32, b.k, "{line}");
+            assert_eq!(v.get("from").expect("from").num() as u64, b.from, "{line}");
+            assert_eq!(v.get("avg_us").expect("avg_us").num(), b.avg_us, "{line}");
+            assert_eq!(v.get("op").expect("op").string(), t.op.name(), "{line}");
+            assert_eq!(v.get("persona").expect("persona").string(), t.persona.key(), "{line}");
+        }
+    }
+    tuning::clear_installed();
+}
+
+/// A batch answers element-for-element what the single-query path
+/// answers, in order.
+#[test]
+fn batch_answers_equal_single_answers() {
+    let book = full_book();
+    let svc = Service::from_book(&book).expect("full book compiles");
+    let t = &book.tables[0];
+    let counts: Vec<u64> = t.entries.iter().map(|b| b.from).chain([0, u64::MAX]).collect();
+    let singles: Vec<String> = counts
+        .iter()
+        .map(|&c| respond(&svc, &query_line(t.op, t.persona, t.cluster, c)))
+        .collect();
+    let items: Vec<String> = counts
+        .iter()
+        .map(|&c| query_line(t.op, t.persona, t.cluster, c))
+        .collect();
+    let batch = respond(&svc, &format!("{{\"batch\":[{}]}}", items.join(",")));
+    let v = parse_json(batch.trim_end()).expect("batch response parses");
+    assert!(ok_true(&v), "{batch}");
+    let answers = v.get("answers").expect("answers").arr();
+    assert_eq!(answers.len(), singles.len());
+    for (a, s) in answers.iter().zip(&singles) {
+        let sv = parse_json(s.trim_end()).expect("single response parses");
+        for key in ["op", "persona", "alg", "label"] {
+            assert_eq!(
+                a.get(key).expect(key).string(),
+                sv.get(key).expect(key).string(),
+                "batch and single disagree on {key}"
+            );
+        }
+        for key in ["k", "from", "avg_us"] {
+            assert_eq!(a.get(key).expect(key).num(), sv.get(key).expect(key).num(), "{key}");
+        }
+    }
+}
+
+/// Every malformed line in the fuzz corpus gets a parseable
+/// `{"ok":false,...}` response, and the service keeps answering
+/// well-formed queries afterwards — the daemon-survival contract.
+#[test]
+fn malformed_requests_are_error_responses_never_panics() {
+    let svc = Service::from_book(&small_book()).expect("small book compiles");
+    let good = query_line(OpKind::Bcast, PersonaName::OpenMpi, cl(), 600);
+    let corpus: Vec<String> = vec![
+        // not JSON at all
+        "hello".into(),
+        "{".into(),
+        "[]".into(),
+        "null".into(),
+        // unknown vocabulary
+        good.replace("bcast", "noop"),
+        good.replace("openmpi", "nobody"),
+        // zero dims would panic Cluster::new if they got that far
+        good.replace("\"nodes\":2", "\"nodes\":0"),
+        good.replace("\"lanes\":2", "\"lanes\":0"),
+        // count: negative, float, overflow
+        good.replace("\"count\":600", "\"count\":-1"),
+        good.replace("\"count\":600", "\"count\":1.5"),
+        good.replace("\"count\":600", "\"count\":18446744073709551616"),
+        // missing / duplicate / unknown keys, trailing data
+        good.replace(",\"count\":600", ""),
+        good.replace("\"count\":600", "\"count\":600,\"count\":601"),
+        good.replace("\"count\":600", "\"count\":600,\"extra\":1"),
+        format!("{good} trailing"),
+        // batch malformations
+        format!("{{\"batch\":[{good},]}}"),
+        format!("{{\"batch\":[{good}"),
+        "{\"batch\":\"x\"}".into(),
+        format!("{{\"batch\":[\"x\",{good}]}}"),
+        // unknown command
+        "{\"cmd\":\"nope\"}".into(),
+        // valid shape, uncovered scenario
+        query_line(OpKind::Scatter, PersonaName::OpenMpi, cl(), 600),
+        query_line(OpKind::Bcast, PersonaName::OpenMpi, Cluster::new(9, 9, 1), 600),
+        format!(
+            "{{\"batch\":[{good},{}]}}",
+            query_line(OpKind::Bcast, PersonaName::Mpich, cl(), 600)
+        ),
+        // reload with no backing path (in-memory book)
+        "{\"cmd\":\"reload\"}".into(),
+    ];
+    for line in &corpus {
+        let out = respond(&svc, line);
+        assert!(
+            out.starts_with("{\"ok\":false,\"error\":\""),
+            "expected an error response for {line:?}, got {out:?}"
+        );
+        let v = parse_json(out.trim_end())
+            .unwrap_or_else(|e| panic!("error response must be JSON ({line:?}): {e}"));
+        assert!(!ok_true(&v));
+        // Survival: the very next well-formed query still answers.
+        let ok = respond(&svc, &good);
+        assert!(ok.starts_with("{\"ok\":true,"), "service died after {line:?}: {ok}");
+    }
+    // Blank lines are keep-alives: no output at all.
+    assert_eq!(respond(&svc, "\n"), "");
+    assert_eq!(respond(&svc, "   "), "");
+}
+
+#[test]
+fn stats_and_quit_follow_the_protocol() {
+    let svc = Service::from_book(&small_book()).expect("small book compiles");
+    let good = query_line(OpKind::Bcast, PersonaName::OpenMpi, cl(), 1);
+    respond(&svc, &good);
+    respond(&svc, "garbage");
+    let stats = respond(&svc, "{\"cmd\":\"stats\"}");
+    let v = parse_json(stats.trim_end()).expect("stats parses");
+    assert!(ok_true(&v), "{stats}");
+    assert_eq!(v.get("queries").expect("queries").num() as u64, 1);
+    assert_eq!(v.get("errors").expect("errors").num() as u64, 1);
+    assert_eq!(v.get("reloads").expect("reloads").num() as u64, 0);
+    assert_eq!(v.get("tables").expect("tables").num() as u64, 1);
+    assert_eq!(v.get("generation").expect("generation").num() as u64, 1);
+
+    let mut out = String::new();
+    assert_eq!(svc.respond("{\"cmd\":\"quit\"}", &mut out), Flow::Quit);
+    assert_eq!(out, "{\"ok\":true,\"bye\":true}\n");
+}
+
+/// Book-shaped failures are typed `ServeError::Book` values at load
+/// time — duplicate tables, empty tables, missing files — never
+/// assertion failures inside the query path.
+#[test]
+fn malformed_books_fail_load_with_typed_errors() {
+    let base = small_book();
+
+    let dup = TuningBook {
+        tune: cfg(),
+        tables: vec![base.tables[0].clone(), base.tables[0].clone()],
+    };
+    let err = Service::from_book(&dup).expect_err("duplicate tables must not compile");
+    assert!(matches!(&err, ServeError::Book(TuneError::DuplicateTable { .. })), "{err:?}");
+    assert!(err.to_string().contains("duplicate table"), "{err}");
+
+    let mut empty = base.clone();
+    empty.tables[0].entries.clear();
+    let err = Service::from_book(&empty).expect_err("empty tables must not compile");
+    assert!(matches!(&err, ServeError::Book(TuneError::Parse(_))), "{err:?}");
+    assert!(err.to_string().contains("no entries"), "{err}");
+
+    let err = Service::load("/nonexistent/mlane/book.json")
+        .expect_err("missing book file must not load");
+    assert!(matches!(&err, ServeError::Book(TuneError::Io(_))), "{err:?}");
+}
+
+/// Hot reload: generation bumps and answers change after a successful
+/// reload; a corrupt book keeps the old snapshot serving.
+#[test]
+fn reload_swaps_answers_and_keeps_old_snapshot_on_error() {
+    let dir = std::env::temp_dir().join(format!("mlane_serve_reload_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("book.json");
+
+    let mut book_a = small_book();
+    for b in &mut book_a.tables[0].entries {
+        b.avg_us = 1.0;
+    }
+    book_a.save(&path).expect("save book a");
+    let svc = Service::load(&path).expect("book a loads");
+    assert_eq!(svc.snapshot().generation(), 1);
+
+    let good = query_line(OpKind::Bcast, PersonaName::OpenMpi, cl(), 600);
+    let before = respond(&svc, &good);
+    assert!(before.contains("\"avg_us\":1}"), "{before}");
+
+    let mut book_b = book_a.clone();
+    for b in &mut book_b.tables[0].entries {
+        b.avg_us = 2.0;
+    }
+    book_b.save(&path).expect("save book b");
+    let out = respond(&svc, "{\"cmd\":\"reload\"}");
+    assert!(out.contains("\"reloaded\":true"), "{out}");
+    assert!(out.contains("\"generation\":2"), "{out}");
+    let after = respond(&svc, &good);
+    assert!(after.contains("\"avg_us\":2}"), "{after}");
+
+    // A corrupt book is an error response; the old snapshot survives.
+    std::fs::write(&path, "{not json").expect("corrupt book");
+    let out = respond(&svc, "{\"cmd\":\"reload\"}");
+    assert!(out.starts_with("{\"ok\":false,"), "{out}");
+    assert_eq!(svc.snapshot().generation(), 2);
+    assert_eq!(respond(&svc, &good), after);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Torn-free reload under fire: a reader hammering batch queries must
+/// never observe a response mixing two book versions — every answer in
+/// one batch carries the same `avg_us` tag.
+#[test]
+fn concurrent_reloads_never_tear_a_batch() {
+    let dir = std::env::temp_dir().join(format!("mlane_serve_torn_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("book.json");
+
+    let mut book = small_book();
+    // Two breakpoints so a batch can straddle table entries.
+    assert!(!book.tables[0].entries.is_empty());
+    for b in &mut book.tables[0].entries {
+        b.avg_us = 1.0;
+    }
+    book.save(&path).expect("save");
+    let svc = Arc::new(Service::load(&path).expect("loads"));
+
+    let froms: Vec<u64> = book.tables[0].entries.iter().map(|b| b.from).collect();
+    let items: Vec<String> = froms
+        .iter()
+        .chain(&[0, u64::MAX])
+        .map(|&c| query_line(OpKind::Bcast, PersonaName::OpenMpi, cl(), c))
+        .collect();
+    let batch = format!("{{\"batch\":[{}]}}", items.join(","));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let reader = {
+        let svc = Arc::clone(&svc);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut out = String::new();
+            while !stop.load(Ordering::Relaxed) {
+                out.clear();
+                svc.respond(&batch, &mut out);
+                let v = parse_json(out.trim_end()).expect("batch parses");
+                let answers = v.get("answers").expect("answers").arr();
+                let first = answers[0].get("avg_us").expect("avg_us").num();
+                for a in answers {
+                    assert_eq!(
+                        a.get("avg_us").expect("avg_us").num(),
+                        first,
+                        "torn batch: {out}"
+                    );
+                }
+            }
+        })
+    };
+
+    for i in 0..50u64 {
+        for b in &mut book.tables[0].entries {
+            b.avg_us = (i % 2 + 1) as f64;
+        }
+        book.save(&path).expect("save");
+        svc.reload().expect("reload");
+    }
+    stop.store(true, Ordering::Relaxed);
+    reader.join().expect("reader thread clean");
+    assert_eq!(svc.snapshot().generation(), 51);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
