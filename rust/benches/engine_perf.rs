@@ -10,7 +10,8 @@ use std::time::Instant;
 
 use mlane::algorithms::registry::OpKind;
 use mlane::algorithms::{alltoall, bcast, registry};
-use mlane::analysis::{analyze, LintConfig};
+use mlane::analysis::symbolic::entry_shapes;
+use mlane::analysis::{analyze, CertArena, CertifyOptions, LintConfig};
 use mlane::exec::ExecRuntime;
 use mlane::harness::{
     merge_dir, run_plan_with, write_shard, Grid, Merged, Plan, RunConfig, BCAST_COUNTS,
@@ -78,8 +79,9 @@ fn main() {
     let tune = bench_tune(cl);
     let shard = bench_shard_merge();
     let lint = bench_lint(cl);
+    let certify = bench_certify(cl);
     let serve = bench_serve();
-    write_bench_json(events_per_s, &event, &sweep, &series, &tune, &shard, &lint, &serve);
+    write_bench_json(events_per_s, &event, &sweep, &series, &tune, &shard, &lint, &certify, &serve);
 
     println!("\n=== exec backend (4x4, klane alltoall c=1024) ===");
     let cl = Cluster::new(4, 4, 2);
@@ -504,6 +506,75 @@ fn bench_lint(cl: Cluster) -> LintBench {
     bench
 }
 
+struct CertifyBench {
+    entries: usize,
+    intervals: usize,
+    certify_s: f64,
+    steady_allocs: u64,
+}
+
+/// Symbolic certification cost at Hydra scale: `entry_shapes` (schedule
+/// build + one structural pass run per structural cell) happens outside
+/// the timer, so the number is the steady-state interval evaluation the
+/// `mlane certify` CI job pays per certificate — exact crossover cuts
+/// plus a byte-dependent deadlock replay per interval, all through one
+/// reused arena. The warm loop is gated to zero allocations, the same
+/// contract the unit test in `analysis::symbolic` pins.
+fn bench_certify(cl: Cluster) -> CertifyBench {
+    println!("\n=== symbolic certification: full-registry intervals (hydra scale) ===");
+    let persona = Persona::get(PersonaName::OpenMpi);
+    let opts = CertifyOptions::default();
+    let mut entries = 0usize;
+    let mut cells = Vec::new();
+    for alg in registry::registry().validation_instances(cl) {
+        if alg.name() == "tuned" {
+            continue; // meta-entry: its auto-tuning cost is bench_tune's number
+        }
+        for op in OpKind::ALL {
+            if !alg.supports(op) {
+                continue;
+            }
+            entries += 1;
+            cells.extend(
+                entry_shapes(&alg, cl, &persona, op, &opts)
+                    .unwrap_or_else(|e| panic!("{} {op}: {e}", alg.label())),
+            );
+        }
+    }
+    let partition = (persona.model.eager_net, persona.model.eager_shm);
+    let mut arena = CertArena::new();
+    let run = |arena: &mut CertArena| {
+        let mut intervals = 0usize;
+        for cell in &cells {
+            cell.shape.eval_cells(cell.lo, cell.hi, partition, arena, &mut |_, _, out| {
+                assert!(out.deadlock.is_empty(), "buffered certification deadlocked");
+                intervals += 1;
+            });
+        }
+        intervals
+    };
+    let intervals = run(&mut arena); // warmup: size the arena buffers once
+    let reps = 10usize;
+    let a0 = thread_allocations();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        assert_eq!(run(&mut arena), intervals);
+    }
+    let certify_s = t0.elapsed().as_secs_f64() / reps as f64;
+    let steady_allocs = thread_allocations() - a0;
+    assert_eq!(steady_allocs, 0, "warm certification must not touch the heap");
+    let bench = CertifyBench { entries, intervals, certify_s, steady_allocs };
+    println!(
+        "certified {} entries / {} intervals in {:.2?} ({:.1} intervals/s, {} allocs)",
+        bench.entries,
+        bench.intervals,
+        std::time::Duration::from_secs_f64(bench.certify_s),
+        bench.intervals as f64 / bench.certify_s,
+        bench.steady_allocs
+    );
+    bench
+}
+
 struct ServeBench {
     queries: usize,
     serve_s: f64,
@@ -622,6 +693,7 @@ fn write_bench_json(
     tune: &TuneBench,
     shard: &ShardBench,
     lint: &LintBench,
+    certify: &CertifyBench,
     serve: &ServeBench,
 ) {
     let json = format!(
@@ -639,7 +711,10 @@ fn write_bench_json(
          \"shard_rows\": {},\n  \"shard_write_s\": {:.6},\n  \
          \"shard_merge_s\": {:.6},\n  \"lint_schedules\": {},\n  \
          \"lint_diagnostics\": {},\n  \"lint_full_registry_s\": {:.6},\n  \
-         \"lint_schedules_per_s\": {:.2},\n  \"event_backend_s\": {:.6},\n  \
+         \"lint_schedules_per_s\": {:.2},\n  \"certify_entries\": {},\n  \
+         \"certify_intervals\": {},\n  \"certify_s\": {:.6},\n  \
+         \"certify_intervals_per_s\": {:.2},\n  \"certify_steady_allocs\": {},\n  \
+         \"event_backend_s\": {:.6},\n  \
          \"event_events_per_s\": {:.0},\n  \"serve_queries\": {},\n  \
          \"serve_s\": {:.6},\n  \"serve_queries_per_s\": {:.0},\n  \
          \"serve_batch_s\": {:.9},\n  \"serve_batch_queries_per_s\": {:.0},\n  \
@@ -673,6 +748,11 @@ fn write_bench_json(
         lint.diags,
         lint.lint_s,
         lint.schedules as f64 / lint.lint_s,
+        certify.entries,
+        certify.intervals,
+        certify.certify_s,
+        certify.intervals as f64 / certify.certify_s,
+        certify.steady_allocs,
         event.event_s,
         event.events_per_s,
         serve.queries,

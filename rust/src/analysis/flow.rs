@@ -59,6 +59,9 @@ impl Flow {
             .is_ok_and(|i| test_bit(&self.held[rank], i))
     }
 
+    // Invariant expects only: the domain was built from exactly the
+    // initial layouts and addressed blocks probed below.
+    #[allow(clippy::expect_used)]
     pub(crate) fn run(s: &Schedule, sink: &mut DiagSink) -> Flow {
         let p = s.p() as usize;
         let nb = s.op.num_blocks(s.p());

@@ -4,9 +4,11 @@
 //! end. One shared flow computation ([`flow::Flow`]) replays the
 //! schedule once — per-rank holdings in domain-indexed bitsets, so full
 //! semantic analysis scales to the paper's p = 1152 alltoall schedules —
-//! and a registered set of lint passes ([`passes::PASSES`]) reads the
-//! result. Every finding becomes a structured [`Diagnostic`]; nothing
-//! stops at the first violation.
+//! and a registered set of lint passes (the staged tables in
+//! [`passes`]) reads the result. Every finding becomes a structured
+//! [`Diagnostic`]; nothing stops at the first violation. The
+//! [`symbolic`] layer lifts the same pass tables from single counts to
+//! whole count intervals (`mlane certify`).
 //!
 //! Severities:
 //! * **error** — the schedule does not implement its collective
@@ -21,8 +23,19 @@
 //! this driver; `mlane lint` and `registry_validation.rs` consume it
 //! exhaustively.
 
+// Production analysis code must surface findings as diagnostics or
+// typed errors, never by panicking on user input; load-time/invariant
+// panics carry a scoped, justified allow.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub(crate) mod flow;
 pub(crate) mod passes;
+pub mod symbolic;
+
+pub use symbolic::{
+    analyze_series, certify, certify_into, certify_registry, CertArena, CertInterval,
+    CertReport, Certificate, CertifyOptions,
+};
 
 use crate::harness::report::esc;
 use crate::topology::Cluster;
@@ -313,19 +326,33 @@ impl DiagSink {
     pub(crate) fn finish(mut self) -> Vec<Diagnostic> {
         let cap = self.cap;
         for (code, n) in std::mem::take(&mut self.dropped) {
-            self.diags.push(
-                Diagnostic::new(
-                    Severity::Info,
-                    codes::TRUNCATED,
-                    format!("{n} more {code} diagnostic(s) suppressed (cap {cap} per lint)"),
-                )
-                .with("lint", code)
-                .with("dropped", n)
-                .with("cap", cap),
-            );
+            self.diags.push(truncation_notice(code, n, cap));
         }
         self.diags
     }
+
+    /// The kept diagnostics plus the per-code drop counts (first-drop
+    /// order), *without* appending truncation notices — the symbolic
+    /// layer runs the pass stages through separate sinks and renders
+    /// the notices itself, in the exact order one combined sink would
+    /// have ([`truncation_notice`]).
+    pub(crate) fn into_parts(self) -> (Vec<Diagnostic>, Vec<(&'static str, usize)>) {
+        (self.diags, self.dropped)
+    }
+}
+
+/// The one rendering of a [`codes::TRUNCATED`] notice, shared by
+/// [`DiagSink::finish`] and the symbolic layer's segment reassembly so
+/// the two stay bitwise-identical.
+pub(crate) fn truncation_notice(code: &'static str, n: usize, cap: usize) -> Diagnostic {
+    Diagnostic::new(
+        Severity::Info,
+        codes::TRUNCATED,
+        format!("{n} more {code} diagnostic(s) suppressed (cap {cap} per lint)"),
+    )
+    .with("lint", code)
+    .with("dropped", n)
+    .with("cap", cap)
 }
 
 /// The result of linting one schedule: every finding, in pass order.
@@ -391,8 +418,10 @@ pub fn analyze(s: &Schedule, cfg: &LintConfig) -> Analysis {
     let mut sink = DiagSink::new(cfg.max_per_lint);
     let flow = flow::Flow::run(s, &mut sink);
     let ctx = passes::PassCtx { s, cfg, flow: &flow };
-    for (_, pass) in passes::PASSES {
-        pass(&ctx, &mut sink);
+    for stage in [passes::PREFIX_PASSES, passes::BYTE_PASSES, passes::SUFFIX_PASSES] {
+        for (_, pass) in stage {
+            pass(&ctx, &mut sink);
+        }
     }
     Analysis { diagnostics: sink.finish() }
 }
@@ -511,6 +540,8 @@ impl LintReport {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
 
     #[test]

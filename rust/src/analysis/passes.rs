@@ -22,14 +22,30 @@ pub(crate) struct PassCtx<'a> {
 
 pub(crate) type PassFn = fn(&PassCtx<'_>, &mut DiagSink);
 
-/// Registered lint passes, in emission order. The flow replay itself
-/// contributes the per-transfer facts (endpoints, unknown blocks,
-/// causality, redundant transfers) before any of these run.
-pub(crate) const PASSES: &[(&str, PassFn)] = &[
+/// Registered lint passes, in emission order, split by what they read.
+/// The flow replay itself contributes the per-transfer facts
+/// (endpoints, unknown blocks, causality, redundant transfers) before
+/// any of these run.
+///
+/// The split is the symbolic layer's contract ([`super::symbolic`]):
+/// `PREFIX_PASSES` and `SUFFIX_PASSES` read only schedule *structure*
+/// (blocks, endpoints, round shape, the port limit) — their output is
+/// identical at every element count of a fixed structure — while
+/// `BYTE_PASSES` read `Transfer::bytes` and must re-evaluate per count
+/// interval. A new pass that reads byte sizes **must** go in
+/// `BYTE_PASSES`; putting it in a structural stage silently breaks
+/// interval certification (`certify_crossval.rs` is the gate).
+pub(crate) const PREFIX_PASSES: &[(&str, PassFn)] = &[
     ("delivery", |ctx, sink| delivery(ctx.s, ctx.flow, sink)),
     ("port-budget", |ctx, sink| ports(ctx.s, ctx.cfg.port_limit, false, sink)),
     ("lane-contention", lane_contention),
-    ("deadlock", deadlock),
+];
+
+pub(crate) const BYTE_PASSES: &[(&str, PassFn)] = &[("deadlock", |ctx, sink| {
+    deadlock_with(ctx.s, ctx.cfg, None, &mut DeadlockScratch::default(), sink)
+})];
+
+pub(crate) const SUFFIX_PASSES: &[(&str, PassFn)] = &[
     ("dead-data", dead_data),
     ("round-bound", round_bound),
     ("mergeable-rounds", mergeable_rounds),
@@ -209,6 +225,31 @@ fn lane_contention(ctx: &PassCtx<'_>, sink: &mut DiagSink) {
     }
 }
 
+/// Reusable buffers for [`deadlock_with`]: per-round waits-for edges,
+/// the rank index, CSR adjacency, and the Kahn/cycle scratch. All
+/// `clear()`ed (never shrunk) between rounds and calls, so a warmed
+/// scratch evaluates clean schedules without allocating — the symbolic
+/// layer walks one scratch across every count interval of a
+/// certification run.
+#[derive(Default)]
+pub(crate) struct DeadlockScratch {
+    edges: Vec<(u32, u32)>,
+    ranks: Vec<u32>,
+    outdeg: Vec<u32>,
+    /// CSR adjacency, filled in edge order (cycle extraction follows
+    /// the first unresolved successor, so per-source edge order is part
+    /// of the diagnostic's identity).
+    succ_off: Vec<u32>,
+    succs: Vec<u32>,
+    pred_off: Vec<u32>,
+    preds: Vec<u32>,
+    cursor: Vec<u32>,
+    done: Vec<u32>,
+    stuck: Vec<u32>,
+    on_path: Vec<bool>,
+    path: Vec<u32>,
+}
+
 /// Rendezvous deadlock: under a synchronous backend, a message above
 /// the eager threshold blocks its sender until the receiver posts —
 /// and a rank posts its receives only after its own sends complete
@@ -217,94 +258,162 @@ fn lane_contention(ctx: &PassCtx<'_>, sink: &mut DiagSink) {
 /// means no rank in it can ever progress. Our threaded exec layer
 /// buffers every message (thresholds default to "never"), so findings
 /// here are portability errors against rendezvous MPIs.
-fn deadlock(ctx: &PassCtx<'_>, sink: &mut DiagSink) {
-    let s = ctx.s;
+///
+/// This is the single implementation behind both the concrete pass
+/// table and the symbolic certifier: `bytes` overrides every
+/// transfer's byte size with a flat round-major slice (the
+/// [`crate::schedule::CountSizer`] order) so one schedule structure
+/// can be re-judged at any element count without rebuilding it.
+/// Keeping one implementation is what makes certificate diagnostics
+/// bitwise-identical to `analyze()` output.
+// Invariant expects only: every edge endpoint was inserted into
+// `ranks`, and Kahn leftovers by construction wait on (and are reached
+// from) other leftovers.
+#[allow(clippy::expect_used)]
+pub(crate) fn deadlock_with(
+    s: &Schedule,
+    cfg: &LintConfig,
+    bytes: Option<&[u64]>,
+    scr: &mut DeadlockScratch,
+    sink: &mut DiagSink,
+) {
     let cl = s.cluster;
+    let mut flat = 0usize; // round-major transfer index, matching CountSizer
     for (ri, round) in s.rounds.iter().enumerate() {
-        let mut edges: Vec<(u32, u32)> = Vec::new();
+        scr.edges.clear();
         for t in &round.transfers {
+            let size = match bytes {
+                Some(b) => b[flat],
+                None => t.bytes,
+            };
+            flat += 1;
             if !endpoints_ok(s, t) {
                 continue;
             }
             let threshold = if cl.same_node(t.src, t.dst) {
-                ctx.cfg.rendezvous_shm
+                cfg.rendezvous_shm
             } else {
-                ctx.cfg.rendezvous_net
+                cfg.rendezvous_net
             };
-            if t.bytes > threshold {
-                edges.push((t.src, t.dst));
+            if size > threshold {
+                scr.edges.push((t.src, t.dst));
             }
         }
-        if edges.is_empty() {
+        if scr.edges.is_empty() {
             continue;
         }
-        let mut ranks: Vec<u32> = edges.iter().flat_map(|&(a, b)| [a, b]).collect();
-        ranks.sort_unstable();
-        ranks.dedup();
-        let idx = |r: u32| ranks.binary_search(&r).expect("endpoint is in the rank list");
+        scr.ranks.clear();
+        scr.ranks.extend(scr.edges.iter().flat_map(|&(a, b)| [a, b]));
+        scr.ranks.sort_unstable();
+        scr.ranks.dedup();
+        let ranks = &scr.ranks;
+        let idx =
+            |r: u32| ranks.binary_search(&r).expect("endpoint is in the rank list") as u32;
         let n = ranks.len();
-        let mut outdeg = vec![0u32; n];
-        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
-        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
-        for &(a, b) in &edges {
+        scr.outdeg.clear();
+        scr.outdeg.resize(n, 0);
+        scr.succ_off.clear();
+        scr.succ_off.resize(n + 1, 0);
+        scr.pred_off.clear();
+        scr.pred_off.resize(n + 1, 0);
+        for &(a, b) in &scr.edges {
             let (ai, bi) = (idx(a), idx(b));
-            outdeg[ai] += 1;
-            preds[bi].push(ai);
-            succs[ai].push(bi);
+            scr.outdeg[ai as usize] += 1;
+            scr.succ_off[ai as usize + 1] += 1;
+            scr.pred_off[bi as usize + 1] += 1;
+        }
+        for i in 0..n {
+            scr.succ_off[i + 1] += scr.succ_off[i];
+            scr.pred_off[i + 1] += scr.pred_off[i];
+        }
+        let m = scr.edges.len();
+        scr.succs.clear();
+        scr.succs.resize(m, 0);
+        scr.preds.clear();
+        scr.preds.resize(m, 0);
+        scr.cursor.clear();
+        scr.cursor.extend_from_slice(&scr.succ_off[..n]);
+        for ei in 0..m {
+            let (a, b) = scr.edges[ei];
+            let ai = idx(a);
+            let slot = scr.cursor[ai as usize];
+            scr.succs[slot as usize] = idx(b);
+            scr.cursor[ai as usize] = slot + 1;
+        }
+        scr.cursor.clear();
+        scr.cursor.extend_from_slice(&scr.pred_off[..n]);
+        for ei in 0..m {
+            let (a, b) = scr.edges[ei];
+            let bi = idx(b);
+            let slot = scr.cursor[bi as usize];
+            scr.preds[slot as usize] = idx(a);
+            scr.cursor[bi as usize] = slot + 1;
         }
         // A rank with no pending rendezvous send completes its round;
         // completing resolves every edge pointing at it. Fixpoint =
         // Kahn's algorithm on the waits-for graph; leftovers wait
         // forever.
-        let mut done: Vec<usize> = (0..n).filter(|&i| outdeg[i] == 0).collect();
+        scr.done.clear();
+        scr.done.extend((0..n as u32).filter(|&i| scr.outdeg[i as usize] == 0));
         let mut head = 0;
-        while head < done.len() {
-            let i = done[head];
+        while head < scr.done.len() {
+            let i = scr.done[head] as usize;
             head += 1;
-            for &a in &preds[i] {
-                outdeg[a] -= 1;
-                if outdeg[a] == 0 {
-                    done.push(a);
+            for pi in scr.pred_off[i]..scr.pred_off[i + 1] {
+                let a = scr.preds[pi as usize] as usize;
+                scr.outdeg[a] -= 1;
+                if scr.outdeg[a] == 0 {
+                    scr.done.push(a as u32);
                 }
             }
         }
-        let stuck: Vec<usize> = (0..n).filter(|&i| outdeg[i] > 0).collect();
-        if stuck.is_empty() {
+        scr.stuck.clear();
+        scr.stuck.extend((0..n as u32).filter(|&i| scr.outdeg[i as usize] > 0));
+        if scr.stuck.is_empty() {
             continue;
         }
         // Extract one concrete cycle: from any stuck rank, follow
         // unresolved edges (which stay within the stuck set) until a
         // rank repeats.
-        let mut on_path = vec![false; n];
-        let mut path: Vec<usize> = Vec::new();
-        let mut cur = stuck[0];
-        let cycle: Vec<u32> = loop {
-            if on_path[cur] {
-                let start = path.iter().position(|&x| x == cur).expect("repeat is on the path");
-                break path[start..].iter().map(|&i| ranks[i]).collect();
+        scr.on_path.clear();
+        scr.on_path.resize(n, false);
+        scr.path.clear();
+        let mut cur = scr.stuck[0];
+        let cycle_start = loop {
+            if scr.on_path[cur as usize] {
+                break scr
+                    .path
+                    .iter()
+                    .position(|&x| x == cur)
+                    .expect("repeat is on the path");
             }
-            on_path[cur] = true;
-            path.push(cur);
-            cur = *succs[cur]
-                .iter()
-                .find(|&&j| outdeg[j] > 0)
+            scr.on_path[cur as usize] = true;
+            scr.path.push(cur);
+            let i = cur as usize;
+            cur = (scr.succ_off[i]..scr.succ_off[i + 1])
+                .map(|si| scr.succs[si as usize])
+                .find(|&j| scr.outdeg[j as usize] > 0)
                 .expect("a stuck rank waits on a stuck rank");
         };
+        let cycle = &scr.path[cycle_start..];
         let mut desc = String::new();
-        for r in &cycle {
-            desc.push_str(&format!("{r} -> "));
+        for &i in cycle {
+            desc.push_str(&format!("{} -> ", ranks[i as usize]));
         }
-        desc.push_str(&cycle[0].to_string());
+        desc.push_str(&ranks[cycle[0] as usize].to_string());
         sink.push(
             Diagnostic::new(
                 Severity::Error,
                 codes::DEADLOCK,
-                format!("{} rank(s) wait in a rendezvous cycle: {desc}", stuck.len()),
+                format!("{} rank(s) wait in a rendezvous cycle: {desc}", scr.stuck.len()),
             )
             .at_round(ri)
-            .with("ranks", stuck.len())
+            .with("ranks", scr.stuck.len())
             .with("cycle_len", cycle.len()),
         );
+    }
+    if let Some(b) = bytes {
+        debug_assert_eq!(flat, b.len(), "bytes override must cover every transfer");
     }
 }
 

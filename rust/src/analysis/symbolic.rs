@@ -1,0 +1,1025 @@
+//! Symbolic count-range certification: the lint pass table lifted from
+//! single counts to whole count intervals.
+//!
+//! Per-transfer byte sizes are exact piecewise-affine functions of the
+//! element count ([`CountSizer`]), and every registered pass is either
+//! *structural* (reads blocks, endpoints, round shape — identical at
+//! every count of a fixed structure) or *byte-dependent* (reads
+//! `Transfer::bytes` — the deadlock pass). So the full analysis of an
+//! algorithm over `[1, max_count]` decomposes finitely:
+//!
+//! 1. **Structural cells** — counts where the builder emits the same
+//!    communication structure. Cacheable algorithms (`cache_id()` is
+//!    `Some`) have exactly one; `native`/`tuned` switch structure at
+//!    known selection thresholds ([`Persona::native_structure_breaks`],
+//!    decision-table breakpoints). Per cell the flow replay and the
+//!    structural pass stages run **once**.
+//! 2. **Byte cells** — within a structural cell, the only
+//!    byte-dependent facts are per-transfer threshold comparisons
+//!    (`bytes(c) > limit`). Each transfer crosses each threshold at
+//!    most once ([`CountSizer::first_count_above`], exact integer
+//!    math), so partitioning at those crossovers makes the deadlock
+//!    verdict — and the eager/rendezvous mode split — *constant* on
+//!    every cell. One evaluation at the cell floor certifies the whole
+//!    interval.
+//!
+//! Within a cell the certificate's diagnostics are bitwise-identical
+//! to a concrete [`super::analyze`] run at any count in it (the
+//! differential gate is `certify_crossval.rs`). Evaluation reuses one
+//! [`CertArena`] across cells, certificates and registry entries the
+//! way `recost_count` reuses the simulator: zero steady-state
+//! allocation on clean schedules, counting-allocator-gated by
+//! `bench_certify`.
+
+use crate::algorithms::registry::{registry, Alg, AlgError, OpKind};
+use crate::harness::plan::fnv1a;
+use crate::harness::report::esc;
+use crate::model::{Persona, PersonaName};
+use crate::schedule::{CountSizer, Schedule, ELEM_BYTES};
+use crate::topology::Cluster;
+
+use super::flow::{endpoints_ok, Flow};
+use super::passes::{deadlock_with, DeadlockScratch, PassCtx, PREFIX_PASSES, SUFFIX_PASSES};
+use super::{codes, truncation_notice, Analysis, DiagSink, Diagnostic, LintConfig, Severity};
+
+/// What to certify against. Distinct from [`LintConfig`] in one way:
+/// the *partition* thresholds (where the certificate records the
+/// eager→rendezvous mode flip) are separate from the *rendezvous*
+/// thresholds (what the deadlock pass judges), so certificates list
+/// mode crossovers even when deadlock modelling is off (the default —
+/// our exec layer buffers every message).
+#[derive(Clone, Copy, Debug)]
+pub struct CertifyOptions {
+    /// Deadlock-model rendezvous threshold for off-node transfers
+    /// (`u64::MAX` = fully buffered, the [`LintConfig`] default).
+    pub rendezvous_net: u64,
+    /// Same for on-node transfers.
+    pub rendezvous_shm: u64,
+    /// Per-lint-code diagnostic cap per interval.
+    pub max_per_lint: usize,
+    /// `(net, shm)` byte thresholds at which the certificate records a
+    /// transfer as rendezvous-mode; `None` uses the persona cost
+    /// model's eager limits.
+    pub partition: Option<(u64, u64)>,
+    /// Top of the certified count domain; `None` certifies up to the
+    /// u64-safe byte bound ([`CountSizer::max_safe_count`]).
+    pub max_count: Option<u64>,
+}
+
+impl Default for CertifyOptions {
+    fn default() -> Self {
+        CertifyOptions {
+            rendezvous_net: u64::MAX,
+            rendezvous_shm: u64::MAX,
+            max_per_lint: 50,
+            partition: None,
+            max_count: None,
+        }
+    }
+}
+
+/// Reusable evaluation buffers: the resized byte vector, the deadlock
+/// pass scratch, and the crossover-cut list. All `clear()`ed (never
+/// shrunk) between cells, so a warmed arena certifies clean schedules
+/// without allocating.
+#[derive(Default)]
+pub struct CertArena {
+    bytes: Vec<u64>,
+    scratch: DeadlockScratch,
+    cuts: Vec<u64>,
+}
+
+impl CertArena {
+    pub fn new() -> CertArena {
+        CertArena::default()
+    }
+}
+
+/// One structural cell's precomputed analysis state: the schedule, its
+/// count→bytes function, per-transfer masks, and the structural pass
+/// output (flow facts + prefix stage, suffix stage) that holds at
+/// *every* count of the structure. Everything byte-dependent is
+/// recomputed per byte cell by [`CertShape::eval_cell`].
+pub struct CertShape {
+    schedule: Schedule,
+    cfg: LintConfig,
+    sizer: CountSizer,
+    /// Per transfer (round-major): crosses nodes.
+    offnode: Vec<bool>,
+    /// Per transfer: endpoints are sane (in-range, no self-message) —
+    /// only these participate in rendezvous facts, matching the
+    /// deadlock pass.
+    ok: Vec<bool>,
+    num_ok: u64,
+    /// Flow-replay facts + `PREFIX_PASSES` findings, in emission order.
+    prefix: Vec<Diagnostic>,
+    prefix_dropped: Vec<(&'static str, usize)>,
+    /// `SUFFIX_PASSES` findings.
+    suffix: Vec<Diagnostic>,
+    suffix_dropped: Vec<(&'static str, usize)>,
+}
+
+/// The byte-dependent facts of one count interval, evaluated at its
+/// floor (constant across the interval by construction).
+pub struct CellOutcome {
+    pub rendezvous_transfers: u64,
+    pub eager_transfers: u64,
+    /// Total off-node bytes at the interval floor / ceiling
+    /// (saturating sums — the per-transfer sizes are exact, the
+    /// schedule-wide total may clamp at `u64::MAX`).
+    pub offnode_bytes_lo: u64,
+    pub offnode_bytes_hi: u64,
+    /// Deadlock findings (empty on clean cells — no allocation).
+    pub deadlock: Vec<Diagnostic>,
+    pub deadlock_dropped: usize,
+}
+
+impl CertShape {
+    /// Run the structural stages once and freeze their output. The
+    /// `LintConfig` is captured whole: its port limit parameterizes the
+    /// structural port-budget pass, its rendezvous thresholds the
+    /// per-cell deadlock pass.
+    pub fn build(schedule: Schedule, cfg: &LintConfig) -> CertShape {
+        let mut pre = DiagSink::new(cfg.max_per_lint);
+        let flow = Flow::run(&schedule, &mut pre);
+        let mut suf = DiagSink::new(cfg.max_per_lint);
+        {
+            let ctx = PassCtx { s: &schedule, cfg, flow: &flow };
+            for (_, pass) in PREFIX_PASSES {
+                pass(&ctx, &mut pre);
+            }
+            for (_, pass) in SUFFIX_PASSES {
+                pass(&ctx, &mut suf);
+            }
+        }
+        let (prefix, prefix_dropped) = pre.into_parts();
+        let (suffix, suffix_dropped) = suf.into_parts();
+        let sizer = schedule.count_sizer();
+        let n = sizer.num_transfers();
+        let mut offnode = Vec::with_capacity(n);
+        let mut ok = Vec::with_capacity(n);
+        let mut num_ok = 0u64;
+        for round in &schedule.rounds {
+            for t in &round.transfers {
+                offnode.push(!schedule.cluster.same_node(t.src, t.dst));
+                let good = endpoints_ok(&schedule, t);
+                ok.push(good);
+                num_ok += u64::from(good);
+            }
+        }
+        CertShape {
+            schedule,
+            cfg: *cfg,
+            sizer,
+            offnode,
+            ok,
+            num_ok,
+            prefix,
+            prefix_dropped,
+            suffix,
+            suffix_dropped,
+        }
+    }
+
+    /// The schedule structure this shape certifies.
+    pub fn structure(&self) -> &'static str {
+        self.schedule.algorithm
+    }
+
+    pub fn port_limit(&self) -> u32 {
+        self.cfg.port_limit
+    }
+
+    pub fn schedule(&self) -> &Schedule {
+        &self.schedule
+    }
+
+    /// Error-severity findings in the structural stages alone (they
+    /// recur in every interval's analysis).
+    pub fn structural_errors(&self) -> usize {
+        self.prefix
+            .iter()
+            .chain(&self.suffix)
+            .filter(|d| d.severity == Severity::Error)
+            .count()
+    }
+
+    /// Largest count with every transfer's byte size still in u64.
+    pub fn max_safe_count(&self) -> u64 {
+        self.sizer.max_safe_count()
+    }
+
+    /// All counts in `(lo, hi]` where some well-formed transfer crosses
+    /// one of the `(net, shm)` threshold pairs — the byte-cell
+    /// boundaries. Appended deduplicated and sorted into `out` (the
+    /// distinct crossover set is tiny: one candidate per distinct
+    /// per-transfer slope per threshold).
+    fn cuts_into(&self, lo: u64, hi: u64, thresholds: &[(u64, u64)], out: &mut Vec<u64>) {
+        out.clear();
+        for i in 0..self.sizer.num_transfers() {
+            if !self.ok[i] {
+                continue;
+            }
+            for &(net, shm) in thresholds {
+                let thr = if self.offnode[i] { net } else { shm };
+                if let Some(c) = self.sizer.first_count_above(i, thr, hi) {
+                    if c > lo && !out.contains(&c) {
+                        out.push(c);
+                    }
+                }
+            }
+        }
+        out.sort_unstable();
+    }
+
+    /// Byte-dependent facts of `[lo, hi]`, evaluated at `lo`. The
+    /// caller guarantees no transfer crosses a rendezvous or partition
+    /// threshold inside the interval ([`CertShape::eval_cells`] cuts at
+    /// exactly those counts), so the deadlock verdict and mode split
+    /// hold for every count in it.
+    pub fn eval_cell(
+        &self,
+        lo: u64,
+        hi: u64,
+        partition: (u64, u64),
+        arena: &mut CertArena,
+    ) -> CellOutcome {
+        let n = self.sizer.num_transfers();
+        arena.bytes.resize(n, 0);
+        self.sizer.resize_count_into(lo, &mut arena.bytes);
+        let mut rendezvous = 0u64;
+        let mut off_lo = 0u64;
+        for i in 0..n {
+            let b = arena.bytes[i];
+            if self.offnode[i] {
+                off_lo = off_lo.saturating_add(b);
+            }
+            if self.ok[i] {
+                let thr = if self.offnode[i] { partition.0 } else { partition.1 };
+                if b > thr {
+                    rendezvous += 1;
+                }
+            }
+        }
+        let mut sink = DiagSink::new(self.cfg.max_per_lint);
+        deadlock_with(&self.schedule, &self.cfg, Some(&arena.bytes), &mut arena.scratch, &mut sink);
+        let (deadlock, dropped) = sink.into_parts();
+        let deadlock_dropped = dropped.first().map_or(0, |&(_, d)| d);
+        let off_hi = if hi == lo {
+            off_lo
+        } else {
+            self.sizer.resize_count_into(hi, &mut arena.bytes);
+            let mut sum = 0u64;
+            for i in 0..n {
+                if self.offnode[i] {
+                    sum = sum.saturating_add(arena.bytes[i]);
+                }
+            }
+            sum
+        };
+        CellOutcome {
+            rendezvous_transfers: rendezvous,
+            eager_transfers: self.num_ok - rendezvous,
+            offnode_bytes_lo: off_lo,
+            offnode_bytes_hi: off_hi,
+            deadlock,
+            deadlock_dropped,
+        }
+    }
+
+    /// Partition `[lo, hi]` at every threshold crossover (both the
+    /// certificate's partition pair and the lint rendezvous pair) and
+    /// evaluate each byte cell, invoking `f(cell_lo, cell_hi, facts)`
+    /// in ascending order. The shared driver behind [`certify`] and
+    /// `bench_certify`'s allocation gate.
+    pub fn eval_cells(
+        &self,
+        lo: u64,
+        hi: u64,
+        partition: (u64, u64),
+        arena: &mut CertArena,
+        f: &mut dyn FnMut(u64, u64, CellOutcome),
+    ) {
+        let thresholds = [partition, (self.cfg.rendezvous_net, self.cfg.rendezvous_shm)];
+        let mut cuts = std::mem::take(&mut arena.cuts);
+        self.cuts_into(lo, hi, &thresholds, &mut cuts);
+        let mut cell_lo = lo;
+        for i in 0..=cuts.len() {
+            let cell_hi = if i < cuts.len() { cuts[i] - 1 } else { hi };
+            let out = self.eval_cell(cell_lo, cell_hi, partition, arena);
+            f(cell_lo, cell_hi, out);
+            if i < cuts.len() {
+                cell_lo = cuts[i];
+            }
+        }
+        arena.cuts = cuts;
+    }
+
+    /// Reassemble the full [`Analysis`] for one interval: structural
+    /// prefix ++ the cell's deadlock findings ++ structural suffix ++
+    /// truncation notices. Notices render through the same
+    /// [`truncation_notice`] as [`DiagSink::finish`], in first-drop
+    /// order (lint codes are unique per pass and the stages run in
+    /// order, so per-stage concatenation *is* chronological order) —
+    /// the result is bitwise-identical to [`super::analyze`].
+    pub fn assemble(&self, deadlock: &[Diagnostic], deadlock_dropped: usize) -> Analysis {
+        let cap = self.cfg.max_per_lint.max(1);
+        let extra = self.prefix_dropped.len()
+            + usize::from(deadlock_dropped > 0)
+            + self.suffix_dropped.len();
+        let mut diagnostics =
+            Vec::with_capacity(self.prefix.len() + deadlock.len() + self.suffix.len() + extra);
+        diagnostics.extend_from_slice(&self.prefix);
+        diagnostics.extend_from_slice(deadlock);
+        diagnostics.extend_from_slice(&self.suffix);
+        for &(code, n) in &self.prefix_dropped {
+            diagnostics.push(truncation_notice(code, n, cap));
+        }
+        if deadlock_dropped > 0 {
+            diagnostics.push(truncation_notice(codes::DEADLOCK, deadlock_dropped, cap));
+        }
+        for &(code, n) in &self.suffix_dropped {
+            diagnostics.push(truncation_notice(code, n, cap));
+        }
+        Analysis { diagnostics }
+    }
+
+    /// The exact [`super::analyze`] result for this structure at count
+    /// `c`, without rebuilding the schedule or replaying the flow.
+    /// Precondition: `c ≤ max_safe_count()`.
+    pub fn analysis_at(&self, c: u64, arena: &mut CertArena) -> Analysis {
+        let n = self.sizer.num_transfers();
+        arena.bytes.resize(n, 0);
+        self.sizer.resize_count_into(c, &mut arena.bytes);
+        let mut sink = DiagSink::new(self.cfg.max_per_lint);
+        deadlock_with(&self.schedule, &self.cfg, Some(&arena.bytes), &mut arena.scratch, &mut sink);
+        let (deadlock, dropped) = sink.into_parts();
+        self.assemble(&deadlock, dropped.first().map_or(0, |&(_, d)| d))
+    }
+}
+
+/// Lint one schedule structure at a list of counts through one shared
+/// flow replay — the analysis analog of `measure_series`, and the
+/// engine behind `mlane lint --counts`. Each returned [`Analysis`] is
+/// bitwise-identical to [`super::analyze`] on the schedule resized to
+/// that count. Precondition: every count is within the structure's
+/// u64-safe domain (the CLI rejects counts past
+/// [`CountSizer::max_safe_count`]).
+pub fn analyze_series(s: &Schedule, cfg: &LintConfig, counts: &[u64]) -> Vec<Analysis> {
+    let shape = CertShape::build(s.clone(), cfg);
+    let mut arena = CertArena::default();
+    counts.iter().map(|&c| shape.analysis_at(c, &mut arena)).collect()
+}
+
+/// One structural cell of a certification: the count range over which
+/// the builder emits this exact communication structure.
+pub struct CertCell {
+    pub lo: u64,
+    pub hi: u64,
+    pub shape: CertShape,
+}
+
+/// Structure-change counts of a non-cacheable algorithm on this
+/// (cluster, persona, op): counts `c` where `build(c)` first differs
+/// structurally from `build(c - 1)`. Cacheable algorithms promise
+/// count-invariant structure via [`Alg::cache_id`]; `native` switches
+/// at the persona's selection thresholds; `tuned` at its decision
+/// table's breakpoints (plus the native thresholds — native is always
+/// a candidate). Over-splitting is sound (two cells with equal
+/// structure certify identically), missing a break is not — so any
+/// other non-cacheable family is a typed error, never a silent guess.
+fn structure_breaks(
+    alg: &Alg,
+    cl: Cluster,
+    persona: &Persona,
+    op: OpKind,
+) -> Result<Vec<u64>, AlgError> {
+    if alg.cache_id().is_some() {
+        return Ok(Vec::new());
+    }
+    match alg.name() {
+        "native" => Ok(persona.native_structure_breaks(op)),
+        "tuned" => {
+            let mut breaks = persona.native_structure_breaks(op);
+            let table = crate::tuning::dispatch_table(cl, persona.name, op)?;
+            for e in &table.entries {
+                if e.from > 1 {
+                    breaks.push(e.from);
+                }
+            }
+            breaks.sort_unstable();
+            breaks.dedup();
+            Ok(breaks)
+        }
+        other => Err(AlgError::Engine {
+            detail: format!(
+                "certify: non-cacheable algorithm {other} has no registered structure-break rule"
+            ),
+        }),
+    }
+}
+
+/// The port budget in force at count `c` — for `tuned`, the winning
+/// candidate's requirement (mirrors the CLI's `port_budget`); constant
+/// within a structural cell by construction.
+fn port_limit_at(
+    alg: &Alg,
+    cl: Cluster,
+    persona: &Persona,
+    op: OpKind,
+    c: u64,
+) -> Result<u32, AlgError> {
+    if alg.name() == "tuned" {
+        Ok(crate::tuning::dispatch(cl, persona.name, op, c)?.ports_required(cl, op))
+    } else {
+        Ok(alg.ports_required(cl, op))
+    }
+}
+
+/// Partition `[1, max_count]` into structural cells and build each
+/// cell's [`CertShape`]. The domain is clipped to the u64-safe byte
+/// bound per cell (and to `u64::MAX / ELEM_BYTES` up front for
+/// non-cacheable algorithms, whose selection math evaluates
+/// `c · ELEM_BYTES` in u64); a cell whose floor already overflows ends
+/// the certified domain.
+pub fn entry_shapes(
+    alg: &Alg,
+    cl: Cluster,
+    persona: &Persona,
+    op: OpKind,
+    opts: &CertifyOptions,
+) -> Result<Vec<CertCell>, AlgError> {
+    let mut hi = opts.max_count.unwrap_or(u64::MAX);
+    if alg.cache_id().is_none() {
+        hi = hi.min(u64::MAX / ELEM_BYTES);
+    }
+    if hi == 0 {
+        return Ok(Vec::new());
+    }
+    let mut bounds = vec![1u64];
+    for b in structure_breaks(alg, cl, persona, op)? {
+        if b > 1 && b <= hi {
+            bounds.push(b);
+        }
+    }
+    bounds.sort_unstable();
+    bounds.dedup();
+    let mut cells = Vec::with_capacity(bounds.len());
+    for (i, &lo) in bounds.iter().enumerate() {
+        let cell_hi = if i + 1 < bounds.len() { bounds[i + 1] - 1 } else { hi };
+        let built = alg.build(cl, persona, op.op(lo))?;
+        let ports = port_limit_at(alg, cl, persona, op, lo)?;
+        let cfg = LintConfig {
+            port_limit: ports,
+            rendezvous_net: opts.rendezvous_net,
+            rendezvous_shm: opts.rendezvous_shm,
+            max_per_lint: opts.max_per_lint,
+        };
+        let shape = CertShape::build(built.schedule, &cfg);
+        let safe = shape.max_safe_count();
+        if safe < lo {
+            break;
+        }
+        let clipped = safe < cell_hi;
+        cells.push(CertCell { lo, hi: cell_hi.min(safe), shape });
+        if clipped {
+            break;
+        }
+    }
+    Ok(cells)
+}
+
+/// One certified count interval: the structure in force, the byte-mode
+/// facts, and the full diagnostic list — valid verbatim at **every**
+/// count in `[lo, hi]`.
+#[derive(Clone, Debug)]
+pub struct CertInterval {
+    pub lo: u64,
+    /// Inclusive.
+    pub hi: u64,
+    /// The schedule structure in force ([`Schedule::algorithm`]).
+    pub structure: &'static str,
+    pub port_limit: u32,
+    /// Well-formed transfers above / at-or-below the partition
+    /// thresholds (constant across the interval).
+    pub rendezvous_transfers: u64,
+    pub eager_transfers: u64,
+    /// Total off-node bytes at `lo` / `hi` (saturating sums).
+    pub offnode_bytes_lo: u64,
+    pub offnode_bytes_hi: u64,
+    pub analysis: Analysis,
+}
+
+/// The certificate for one (algorithm, op, persona, cluster) entry:
+/// a gap-free ascending partition of `[1, max_count]` with one
+/// [`CertInterval`] per cell.
+#[derive(Clone, Debug)]
+pub struct Certificate {
+    /// Instance label (e.g. "2-ported").
+    pub algorithm: String,
+    /// Registry family name (e.g. "kported").
+    pub family: &'static str,
+    pub op: OpKind,
+    pub persona: PersonaName,
+    pub cluster: Cluster,
+    /// Top of the certified domain (clipped at the u64-safe byte
+    /// bound; 0 when the domain is empty).
+    pub max_count: u64,
+    pub intervals: Vec<CertInterval>,
+}
+
+impl Certificate {
+    pub fn errors(&self) -> usize {
+        self.intervals.iter().map(|i| i.analysis.errors()).sum()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.intervals.iter().map(|i| i.analysis.warnings()).sum()
+    }
+
+    pub fn infos(&self) -> usize {
+        self.intervals.iter().map(|i| i.analysis.infos()).sum()
+    }
+
+    /// No error-severity finding in any interval.
+    pub fn is_clean(&self) -> bool {
+        self.intervals.iter().all(|i| i.analysis.is_clean())
+    }
+
+    /// The exact counts where behavior changes (each interval's floor
+    /// past the first).
+    pub fn crossovers(&self) -> Vec<u64> {
+        self.intervals.iter().skip(1).map(|i| i.lo).collect()
+    }
+
+    /// The interval covering count `c` (intervals are ascending and
+    /// gap-free over `[1, max_count]`).
+    pub fn interval_for(&self, c: u64) -> Option<&CertInterval> {
+        let i = self.intervals.partition_point(|iv| iv.hi < c);
+        self.intervals.get(i).filter(|iv| iv.lo <= c && c <= iv.hi)
+    }
+}
+
+/// Certify one registry algorithm instance for one operation: every
+/// count in `[1, max_count]` receives a verdict, in finitely many
+/// intervals.
+pub fn certify(
+    alg: &Alg,
+    cl: Cluster,
+    persona: &Persona,
+    op: OpKind,
+    opts: &CertifyOptions,
+) -> Result<Certificate, AlgError> {
+    certify_into(alg, cl, persona, op, opts, &mut CertArena::default())
+}
+
+/// [`certify`] with an explicit arena, for reuse across a registry
+/// sweep.
+pub fn certify_into(
+    alg: &Alg,
+    cl: Cluster,
+    persona: &Persona,
+    op: OpKind,
+    opts: &CertifyOptions,
+    arena: &mut CertArena,
+) -> Result<Certificate, AlgError> {
+    let cells = entry_shapes(alg, cl, persona, op, opts)?;
+    let partition = opts.partition.unwrap_or((persona.model.eager_net, persona.model.eager_shm));
+    let mut intervals = Vec::new();
+    for cell in &cells {
+        cell.shape.eval_cells(cell.lo, cell.hi, partition, arena, &mut |lo, hi, out| {
+            intervals.push(CertInterval {
+                lo,
+                hi,
+                structure: cell.shape.structure(),
+                port_limit: cell.shape.port_limit(),
+                rendezvous_transfers: out.rendezvous_transfers,
+                eager_transfers: out.eager_transfers,
+                offnode_bytes_lo: out.offnode_bytes_lo,
+                offnode_bytes_hi: out.offnode_bytes_hi,
+                analysis: cell.shape.assemble(&out.deadlock, out.deadlock_dropped),
+            });
+        });
+    }
+    let max_count = cells.last().map_or(0, |c| c.hi);
+    Ok(Certificate {
+        algorithm: alg.label(),
+        family: alg.name(),
+        op,
+        persona: persona.name,
+        cluster: cl,
+        max_count,
+        intervals,
+    })
+}
+
+/// Certify the full validation grid — every registry instance
+/// ([`crate::algorithms::registry::Registry::validation_instances`]) ×
+/// every supported op in `ops` — reusing one arena throughout.
+pub fn certify_registry(
+    cl: Cluster,
+    persona: &Persona,
+    ops: &[OpKind],
+    opts: &CertifyOptions,
+) -> Result<CertReport, AlgError> {
+    let mut arena = CertArena::default();
+    let mut certificates = Vec::new();
+    for alg in registry().validation_instances(cl) {
+        for &op in ops {
+            if !alg.supports(op) {
+                continue;
+            }
+            certificates.push(certify_into(&alg, cl, persona, op, opts, &mut arena)?);
+        }
+    }
+    Ok(CertReport::new(cl, persona.name, opts, certificates))
+}
+
+/// A full `mlane certify` run: one certificate per (algorithm, op)
+/// entry, fingerprinted like shard artifacts so downstream tooling can
+/// bind a certificate file to the exact spec that produced it.
+#[derive(Clone, Debug)]
+pub struct CertReport {
+    pub cluster: Cluster,
+    pub persona: PersonaName,
+    /// FNV-1a over the certification spec (cluster, persona,
+    /// thresholds, domain bound, entry list).
+    pub fingerprint: u64,
+    pub certificates: Vec<Certificate>,
+}
+
+impl CertReport {
+    pub fn new(
+        cluster: Cluster,
+        persona: PersonaName,
+        opts: &CertifyOptions,
+        certificates: Vec<Certificate>,
+    ) -> CertReport {
+        let mut spec = format!(
+            "certify v1|{}x{}x{}|{}|rnet={} rshm={} cap={}|part={:?}|max={:?}",
+            cluster.nodes,
+            cluster.cores,
+            cluster.lanes,
+            persona.key(),
+            opts.rendezvous_net,
+            opts.rendezvous_shm,
+            opts.max_per_lint,
+            opts.partition,
+            opts.max_count,
+        );
+        for c in &certificates {
+            spec.push_str(&format!("|{}:{}", c.algorithm, c.op.name()));
+        }
+        CertReport { cluster, persona, fingerprint: fnv1a(spec.as_bytes()), certificates }
+    }
+
+    pub fn errors(&self) -> usize {
+        self.certificates.iter().map(Certificate::errors).sum()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.certificates.iter().map(Certificate::warnings).sum()
+    }
+
+    pub fn infos(&self) -> usize {
+        self.certificates.iter().map(Certificate::infos).sum()
+    }
+
+    pub fn intervals(&self) -> usize {
+        self.certificates.iter().map(|c| c.intervals.len()).sum()
+    }
+
+    /// Text rendering: one header per certificate, one line per
+    /// interval, findings listed under intervals that have any, one
+    /// summary line at the end.
+    pub fn text(&self) -> String {
+        let mut out = String::new();
+        for c in &self.certificates {
+            out.push_str(&format!(
+                "== {} {} on {}x{} (lanes={}) [{}]: counts [1, {}] in {} interval(s), {} error(s)\n",
+                c.algorithm,
+                c.op,
+                c.cluster.nodes,
+                c.cluster.cores,
+                c.cluster.lanes,
+                c.persona.key(),
+                c.max_count,
+                c.intervals.len(),
+                c.errors(),
+            ));
+            for iv in &c.intervals {
+                out.push_str(&format!(
+                    "  [{}, {}] {} ports={} eager={} rendezvous={}: {} error(s), {} warning(s), {} info(s)\n",
+                    iv.lo,
+                    iv.hi,
+                    iv.structure,
+                    iv.port_limit,
+                    iv.eager_transfers,
+                    iv.rendezvous_transfers,
+                    iv.analysis.errors(),
+                    iv.analysis.warnings(),
+                    iv.analysis.infos(),
+                ));
+                for d in &iv.analysis.diagnostics {
+                    out.push_str("    ");
+                    out.push_str(&d.text_line());
+                    out.push('\n');
+                }
+            }
+        }
+        out.push_str(&format!(
+            "certified {} schedule(s) over {} interval(s): {} error(s), {} warning(s), {} info(s) [fingerprint {:016x}]\n",
+            self.certificates.len(),
+            self.intervals(),
+            self.errors(),
+            self.warnings(),
+            self.infos(),
+            self.fingerprint,
+        ));
+        out
+    }
+
+    /// Strict machine-readable JSON (hand-rolled like every artifact in
+    /// this crate; the report layer's escaping).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{{\n  \"fingerprint\": \"{:016x}\",\n  \"nodes\": {},\n  \"cores\": {},\n  \"lanes\": {},\n  \"persona\": \"{}\",\n  \"schedules\": {},\n  \"intervals\": {},\n  \"errors\": {},\n  \"warnings\": {},\n  \"infos\": {},\n  \"certificates\": [",
+            self.fingerprint,
+            self.cluster.nodes,
+            self.cluster.cores,
+            self.cluster.lanes,
+            self.persona.key(),
+            self.certificates.len(),
+            self.intervals(),
+            self.errors(),
+            self.warnings(),
+            self.infos(),
+        ));
+        for (i, c) in self.certificates.iter().enumerate() {
+            out.push_str(if i == 0 { "\n    " } else { ",\n    " });
+            out.push_str(&format!(
+                "{{\"algorithm\":\"{}\",\"family\":\"{}\",\"op\":\"{}\",\"max_count\":{},\"errors\":{},\"warnings\":{},\"infos\":{},\"crossovers\":[",
+                esc(&c.algorithm),
+                c.family,
+                c.op.name(),
+                c.max_count,
+                c.errors(),
+                c.warnings(),
+                c.infos(),
+            ));
+            for (j, x) in c.crossovers().iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&x.to_string());
+            }
+            out.push_str("],\"intervals\":[");
+            for (j, iv) in c.intervals.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!(
+                    "{{\"lo\":{},\"hi\":{},\"structure\":\"{}\",\"port_limit\":{},\"eager\":{},\"rendezvous\":{},\"offnode_bytes_lo\":{},\"offnode_bytes_hi\":{},\"errors\":{},\"warnings\":{},\"infos\":{},\"diagnostics\":{}}}",
+                    iv.lo,
+                    iv.hi,
+                    esc(iv.structure),
+                    iv.port_limit,
+                    iv.eager_transfers,
+                    iv.rendezvous_transfers,
+                    iv.offnode_bytes_lo,
+                    iv.offnode_bytes_hi,
+                    iv.analysis.errors(),
+                    iv.analysis.warnings(),
+                    iv.analysis.infos(),
+                    iv.analysis.to_json().replace("\n  ", "").replace('\n', ""),
+                ));
+            }
+            out.push_str("]}");
+        }
+        if !self.certificates.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str("]\n}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use crate::analysis::analyze;
+    use crate::schedule::{BlockSet, Collective, Round};
+
+    fn small() -> Cluster {
+        Cluster::new(4, 4, 2)
+    }
+
+    fn opts_bounded(max: u64) -> CertifyOptions {
+        CertifyOptions { max_count: Some(max), ..CertifyOptions::default() }
+    }
+
+    /// The differential core, small scale (the full-registry version
+    /// lives in tests/certify_crossval.rs): every interval's stored
+    /// analysis is bitwise-identical to a concrete analyze() at its
+    /// endpoints and an interior sample.
+    #[test]
+    fn certificate_matches_concrete_analyze() {
+        let cl = small();
+        let persona = Persona::openmpi();
+        let alg = registry().resolve("kported", 2).unwrap();
+        for op in [OpKind::Bcast, OpKind::Alltoall] {
+            let cert = certify(&alg, cl, &persona, op, &opts_bounded(1 << 20)).unwrap();
+            assert!(!cert.intervals.is_empty());
+            assert_eq!(cert.intervals[0].lo, 1);
+            assert_eq!(cert.max_count, 1 << 20);
+            for iv in &cert.intervals {
+                for c in [iv.lo, (iv.lo + iv.hi) / 2, iv.hi] {
+                    let built = alg.build(cl, &persona, op.op(c)).unwrap();
+                    let cfg = LintConfig::new(iv.port_limit);
+                    let concrete = analyze(&built.schedule, &cfg);
+                    assert_eq!(
+                        iv.analysis.to_json(),
+                        concrete.to_json(),
+                        "{} {op} mismatch at count {c} in [{}, {}]",
+                        cert.algorithm,
+                        iv.lo,
+                        iv.hi
+                    );
+                }
+            }
+        }
+    }
+
+    /// Intervals tile [1, max_count] with no gaps or overlaps, and
+    /// crossovers sit at the persona's eager thresholds for a uniform
+    /// single-block-per-transfer op (ring allgather: bytes = 4c).
+    #[test]
+    fn intervals_tile_the_domain() {
+        let cl = small();
+        let persona = Persona::openmpi();
+        let alg = registry().resolve("ring", 0).unwrap();
+        let cert =
+            certify(&alg, cl, &persona, OpKind::Allgather, &opts_bounded(1 << 30)).unwrap();
+        let mut expect_lo = 1u64;
+        for iv in &cert.intervals {
+            assert_eq!(iv.lo, expect_lo);
+            assert!(iv.hi >= iv.lo);
+            expect_lo = iv.hi + 1;
+        }
+        assert_eq!(expect_lo, cert.max_count + 1);
+        // openmpi eager_net 4096: a 1-block transfer flips at c = 1025.
+        assert!(
+            cert.crossovers().contains(&1025),
+            "crossovers {:?} missing eager flip",
+            cert.crossovers()
+        );
+        assert_eq!(cert.interval_for(1024).unwrap().hi, 1024);
+        assert_eq!(cert.interval_for(1025).unwrap().lo, 1025);
+        assert!(cert.interval_for(cert.max_count + 1).is_none());
+    }
+
+    /// A rendezvous exchange cycle is clean below the threshold and an
+    /// error-severity deadlock above it, with the flip at the exact
+    /// crossover count.
+    #[test]
+    fn deadlock_flips_at_exact_crossover() {
+        // Two single-core nodes exchanging alltoall blocks in one
+        // round: a waits-for cycle once both messages turn rendezvous.
+        let mut s = Schedule::new(Cluster::new(2, 1, 1), Collective::Alltoall { c: 1 }, "xchg");
+        let a = s.transfer(0, 1, BlockSet::single(1));
+        let b = s.transfer(1, 0, BlockSet::single(2));
+        s.push_round(Round::of(vec![a, b]));
+        let cfg = LintConfig::new(1).with_rendezvous(1024, 1024);
+        let shape = CertShape::build(s, &cfg);
+        let mut arena = CertArena::new();
+        let mut cells: Vec<(u64, u64, usize)> = Vec::new();
+        shape.eval_cells(1, 1 << 20, (1024, 1024), &mut arena, &mut |lo, hi, out| {
+            cells.push((lo, hi, out.deadlock.len()));
+        });
+        // 4c > 1024 ⇔ c ≥ 257.
+        assert_eq!(cells, vec![(1, 256, 0), (257, 1 << 20, 1)]);
+        let dirty = shape.analysis_at(257, &mut arena);
+        assert_eq!(dirty.errors(), 1);
+        assert_eq!(dirty.first_error().unwrap().code, codes::DEADLOCK);
+        assert!(shape.analysis_at(256, &mut arena).is_clean());
+    }
+
+    /// Truncation notices reassemble in the exact order one combined
+    /// sink would emit them, across prefix (flow) and byte (deadlock)
+    /// segments, on a deliberately messy schedule.
+    #[test]
+    fn truncation_reassembly_matches_single_sink() {
+        // 2 nodes × 2 cores; bcast root 0. Rounds 1–3 re-deliver block
+        // 0 (redundant-transfer drops at cap 1); rounds 2 and 3 each
+        // form a 1↔2 off-node rendezvous cycle (second deadlock drops);
+        // rank 3 never receives (a delivery error in the prefix).
+        let mut s = Schedule::new(
+            Cluster::new(2, 2, 1),
+            Collective::Bcast { root: 0, c: 8, segments: 1 },
+            "messy",
+        );
+        for _ in 0..2 {
+            let a = s.transfer(0, 1, BlockSet::single(0));
+            let b = s.transfer(0, 2, BlockSet::single(0));
+            s.push_round(Round::of(vec![a, b]));
+        }
+        for _ in 0..2 {
+            let a = s.transfer(1, 2, BlockSet::single(0));
+            let b = s.transfer(2, 1, BlockSet::single(0));
+            s.push_round(Round::of(vec![a, b]));
+        }
+        let cfg = LintConfig { max_per_lint: 1, ..LintConfig::new(2).with_rendezvous(16, 16) };
+        let shape = CertShape::build(s.clone(), &cfg);
+        let mut arena = CertArena::new();
+        // c = 8 → 32-byte messages: rendezvous everywhere, both
+        // truncation segments active. c = 2 → eager: prefix drops only.
+        for c in [2u64, 8] {
+            let mut resized = s.clone();
+            resized.resize_count(c);
+            let concrete = analyze(&resized, &cfg);
+            assert_eq!(shape.analysis_at(c, &mut arena).to_json(), concrete.to_json(), "c={c}");
+        }
+        let dirty = shape.analysis_at(8, &mut arena);
+        let trunc: Vec<_> = dirty
+            .diagnostics
+            .iter()
+            .filter(|d| d.code == codes::TRUNCATED)
+            .map(|d| d.u64_field("dropped").unwrap())
+            .collect();
+        assert!(!trunc.is_empty(), "expected truncation notices: {}", dirty.text());
+    }
+
+    /// analyze_series output is analyze() at each count, sharing one
+    /// replay.
+    #[test]
+    fn series_matches_pointwise_analyze() {
+        let cl = small();
+        let persona = Persona::openmpi();
+        let alg = registry().resolve("ring", 0).unwrap();
+        let built = alg.build(cl, &persona, OpKind::Allgather.op(8)).unwrap();
+        let ports = alg.ports_required(cl, OpKind::Allgather);
+        let cfg = LintConfig::new(ports).with_rendezvous(4096, 4096);
+        let counts = [1u64, 8, 1024, 1025, 65536];
+        let series = analyze_series(&built.schedule, &cfg, &counts);
+        assert_eq!(series.len(), counts.len());
+        for (&c, got) in counts.iter().zip(&series) {
+            let mut s = built.schedule.clone();
+            s.resize_count(c);
+            assert_eq!(got.to_json(), analyze(&s, &cfg).to_json(), "count {c}");
+        }
+    }
+
+    /// The report fingerprint binds the spec: different thresholds,
+    /// different fingerprint.
+    #[test]
+    fn fingerprint_binds_spec() {
+        let cl = small();
+        let persona = Persona::openmpi();
+        let alg = registry().resolve("ring", 0).unwrap();
+        let mk = |opts: &CertifyOptions| {
+            let cert = certify(&alg, cl, &persona, OpKind::Allgather, opts).unwrap();
+            CertReport::new(cl, persona.name, opts, vec![cert])
+        };
+        let a = mk(&opts_bounded(1024));
+        let b = mk(&opts_bounded(2048));
+        assert_ne!(a.fingerprint, b.fingerprint);
+        assert_eq!(a.fingerprint, mk(&opts_bounded(1024)).fingerprint);
+        // JSON shape sanity; the full parse gate is CI's json.tool.
+        let j = a.to_json();
+        assert!(j.contains("\"fingerprint\""), "{j}");
+        assert!(j.ends_with("]\n}\n"), "{j}");
+    }
+
+    /// Warmed arenas evaluate clean cells without allocating — the
+    /// property bench_certify gates; checked here with the counting
+    /// allocator so a regression fails in `cargo test` too.
+    #[test]
+    fn eval_is_alloc_free_after_warmup() {
+        let cl = small();
+        let persona = Persona::openmpi();
+        let alg = registry().resolve("kported", 2).unwrap();
+        let cells = entry_shapes(&alg, cl, &persona, OpKind::Alltoall, &opts_bounded(1 << 30))
+            .unwrap();
+        let mut arena = CertArena::new();
+        let mut evals = 0usize;
+        let mut run = |arena: &mut CertArena| {
+            let mut n = 0usize;
+            for cell in &cells {
+                cell.shape.eval_cells(cell.lo, cell.hi, (4096, 4096), arena, &mut |_, _, out| {
+                    assert!(out.deadlock.is_empty());
+                    n += 1;
+                });
+            }
+            n
+        };
+        evals += run(&mut arena); // warmup
+        let before = crate::util::allocs::thread_allocations();
+        evals += run(&mut arena);
+        let allocs = crate::util::allocs::thread_allocations() - before;
+        assert!(evals >= 4);
+        assert_eq!(allocs, 0, "steady-state certify eval allocated");
+    }
+}

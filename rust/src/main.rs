@@ -37,6 +37,14 @@
 //!              [--alg NAME[:K][,NAME[:K]...]] [--k K] [--counts C[,C...]]
 //!              [--persona P] [--format text|json] [--out FILE]
 //!              [--eager-limit BYTES] [--max-per-lint N]  # exhaustive diagnostics
+//!              # --counts on a cache-id algorithm replays one flow arena
+//!              # across the whole series instead of rebuilding per count
+//! mlane certify [--nodes N --cores n --lanes L] [--op OP[,OP...]]
+//!              [--alg NAME[:K][,NAME[:K]...]] [--k K] [--persona P]
+//!              [--format text|json] [--out FILE] [--max-count C]
+//!              [--eager-limit BYTES] [--max-per-lint N]
+//!              # symbolic lint over count *intervals*: every count in
+//!              # [1, max] receives a verdict; exit 1 on any error
 //! mlane validate [--nodes N] [--cores n]  # registry-exhaustive invariants
 //! mlane algs                          # list the algorithm catalog
 //! ```
@@ -57,7 +65,10 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Context, Result};
 
 use mlane::algorithms::registry::{registry, Alg, OpKind};
-use mlane::analysis::{analyze, LintConfig, LintEntry, LintReport};
+use mlane::analysis::{
+    analyze, analyze_series, certify_into, CertArena, CertReport, CertifyOptions, LintConfig,
+    LintEntry, LintReport,
+};
 use mlane::coordinator::{Collectives, Op};
 use mlane::exec::ExecRuntime;
 use mlane::harness::{
@@ -415,6 +426,26 @@ fn run() -> Result<()> {
             )?;
             cmd_lint(&args)
         }
+        "certify" => {
+            check_flags(
+                &args,
+                &[
+                    &[
+                        "op",
+                        "alg",
+                        "k",
+                        "persona",
+                        "format",
+                        "out",
+                        "eager-limit",
+                        "max-per-lint",
+                        "max-count",
+                    ],
+                    CLUSTER_FLAGS,
+                ],
+            )?;
+            cmd_certify(&args)
+        }
         "validate" => {
             check_flags(&args, &[&["persona"], CLUSTER_FLAGS])?;
             cmd_validate(&args)
@@ -472,6 +503,16 @@ commands:
                 [--counts C[,C] --persona P --format text|json --out FILE]
                 [--eager-limit BYTES  (model a rendezvous MPI; default: buffered)]
                 [--max-per-lint N  (per-code diagnostic cap, default 50)]
+              --counts on a cache-id algorithm runs as a series: one flow-replay
+              arena across all counts, structural passes run once
+  certify     symbolic lint over count *intervals*: partition [1, max] at exact
+              structure breaks and eager/rendezvous byte crossovers, then prove
+              a verdict for every count in each interval; machine-readable
+              fingerprinted certificates, exit 1 on any error-severity interval
+                [--nodes --cores --lanes --op OP[,OP] --alg NAME[:K][,NAME[:K]] --k K]
+                [--persona P --format text|json --out FILE]
+                [--max-count C  (certification domain ceiling, default u64 max)]
+                [--eager-limit BYTES] [--max-per-lint N]
   validate    check schedule invariants for the whole catalog  [--nodes --cores --lanes --persona]
   algs        list the algorithm catalog
 
@@ -1237,6 +1278,43 @@ fn cmd_lint(args: &Args) -> Result<()> {
                 Some(v) => v,
                 None => &[validation_count(kind)],
             };
+            // Cache-id algorithms have count-invariant structure and
+            // port budgets, so a `--counts` series is replayed through
+            // one flow arena (`analyze_series`) instead of rebuilding
+            // the schedule and re-running structural passes per count.
+            if cts.len() > 1 && alg.cache_id().is_some() {
+                let built = alg
+                    .build(cl, &persona, kind.op(cts[0]))
+                    .map_err(|e| anyhow!("{} {kind}: {e}", alg.label()))?;
+                let ports = port_budget(alg, cl, persona.name, kind, cts[0])?;
+                let mut cfg = LintConfig::new(ports);
+                if let Some(limit) = eager {
+                    cfg = cfg.with_rendezvous(limit, limit);
+                }
+                if let Some(cap) = max_per_lint {
+                    cfg.max_per_lint = cap;
+                }
+                let safe = built.schedule.count_sizer().max_safe_count();
+                if let Some(&c) = cts.iter().find(|&&c| c > safe) {
+                    bail!(
+                        "count {c} overflows byte sizes for {} {kind} (max safe count {safe})",
+                        alg.label()
+                    );
+                }
+                let series = analyze_series(&built.schedule, &cfg, cts);
+                for (&c, analysis) in cts.iter().zip(series) {
+                    report.entries.push(LintEntry {
+                        algorithm: alg.label(),
+                        op: kind.name(),
+                        count: c,
+                        persona: persona.name.key(),
+                        cluster: cl,
+                        port_limit: ports,
+                        analysis,
+                    });
+                }
+                continue;
+            }
             for &c in cts {
                 let built = alg
                     .build(cl, &persona, kind.op(c))
@@ -1278,6 +1356,76 @@ fn cmd_lint(args: &Args) -> Result<()> {
     }
     if report.errors() > 0 {
         bail!("lint found {} error-severity diagnostic(s)", report.errors());
+    }
+    Ok(())
+}
+
+/// `mlane certify`: symbolic count-range analysis over the same grid
+/// as `lint`, but covering *every* count in `[1, max]` rather than a
+/// sampled handful. The domain is partitioned into finitely many
+/// intervals (structure breaks, then exact eager/rendezvous byte
+/// crossovers) and each interval carries a verdict proven identical to
+/// concrete `analyze` at any count inside it.
+fn cmd_certify(args: &Args) -> Result<()> {
+    let cl = args.cluster()?;
+    let default_k = args.flag("k", cl.lanes)?;
+    let persona = Persona::get(args.persona()?);
+    let ops = match args.flags.get("op") {
+        None => OpKind::ALL.to_vec(),
+        Some(_) => parse_ops(args)?,
+    };
+    let algs = match parse_algs(args, default_k)? {
+        Some(list) => list,
+        None => registry().validation_instances(cl),
+    };
+    let mut opts = CertifyOptions::default();
+    if let Some(v) = args.flags.get("eager-limit") {
+        let limit =
+            v.parse::<u64>().map_err(|_| anyhow!("bad --eager-limit value: {v} (want bytes)"))?;
+        opts.rendezvous_net = limit;
+        opts.rendezvous_shm = limit;
+    }
+    if let Some(v) = args.flags.get("max-per-lint") {
+        opts.max_per_lint = parse_positive(v, "max-per-lint")?;
+    }
+    if let Some(v) = args.flags.get("max-count") {
+        let max = v
+            .parse::<u64>()
+            .ok()
+            .filter(|&m| m > 0)
+            .ok_or_else(|| anyhow!("bad --max-count value: {v} (want a positive count)"))?;
+        opts.max_count = Some(max);
+    }
+    let mut arena = CertArena::new();
+    let mut certificates = Vec::new();
+    for alg in &algs {
+        for &kind in &OpKind::ALL {
+            if !ops.contains(&kind) || !alg.supports(kind) {
+                continue;
+            }
+            let cert = certify_into(alg, cl, &persona, kind, &opts, &mut arena)
+                .map_err(|e| anyhow!("{} {kind}: {e}", alg.label()))?;
+            certificates.push(cert);
+        }
+    }
+    if certificates.is_empty() {
+        bail!("nothing to certify: no requested algorithm supports a requested op");
+    }
+    let report = CertReport::new(cl, persona.name, &opts, certificates);
+    let rendered = match args.flags.get("format").map(String::as_str) {
+        None | Some("text") => report.text(),
+        Some("json") => report.to_json(),
+        Some(other) => bail!("unknown format {other} (formats: text|json)"),
+    };
+    match args.flags.get("out") {
+        Some(path) => {
+            write_out(path, &rendered)?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{rendered}"),
+    }
+    if report.errors() > 0 {
+        bail!("certification found {} error-severity diagnostic(s)", report.errors());
     }
     Ok(())
 }

@@ -10,6 +10,7 @@
 //! collectives only; the paper's own algorithms run on the plain model.
 
 use super::CostModel;
+use crate::algorithms::registry::OpKind;
 use crate::algorithms::{allgather, alltoall, bcast, gather, scatter};
 use crate::schedule::Schedule;
 use crate::topology::{Cluster, Rank};
@@ -259,6 +260,38 @@ impl Persona {
             quirk_mult: mult,
         }
     }
+
+    /// The counts where this persona's native selection changes the
+    /// *schedule structure*: `c` is listed iff the native algorithm at
+    /// `c` differs from the one at `c - 1`. These are the structural
+    /// cell boundaries the symbolic certifier
+    /// (`analysis::symbolic`) partitions `[1, max]` at. Quirk-only
+    /// switches (pure cost adjustments on an unchanged schedule —
+    /// Open MPI's large-bcast cliff, the scatter plateaus, the
+    /// mid-size alltoall pathology) are deliberately absent: the
+    /// analyzer reads structure, never cost. Kept beside the
+    /// selection code above so a threshold edit cannot silently drift
+    /// from its break; `native_breaks_match_selection` probes every
+    /// boundary.
+    pub fn native_structure_breaks(&self, op: OpKind) -> Vec<u64> {
+        match op {
+            // Binomial → scatter-allgather at bytes > 32 KiB (64 KiB
+            // for Intel MPI); bytes = 4c.
+            OpKind::Bcast => match self.name {
+                PersonaName::OpenMpi | PersonaName::Mpich => vec![8_193],
+                PersonaName::IntelMpi => vec![16_385],
+            },
+            // Always binomial (gather is scatter's dual).
+            OpKind::Scatter | OpKind::Gather => Vec::new(),
+            // Recursive doubling → ring at bytes > 8 KiB, all personas.
+            OpKind::Allgather => vec![2_049],
+            // Bruck → pairwise at bytes > 32 (Open MPI) / 256 bytes.
+            OpKind::Alltoall => match self.name {
+                PersonaName::OpenMpi => vec![9],
+                PersonaName::IntelMpi | PersonaName::Mpich => vec![65],
+            },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -300,6 +333,54 @@ mod tests {
         // but not at small or large counts
         assert!(Persona::openmpi().native_alltoall(cl, 1).quirk_mult <= 1.0);
         assert!(Persona::openmpi().native_alltoall(cl, 869).quirk_mult <= 1.0);
+    }
+
+    #[test]
+    fn native_breaks_match_selection() {
+        // At every advertised break the built structure changes; at
+        // probes inside a cell it does not. This pins the break table
+        // to the selection code above — the symbolic certifier's
+        // soundness rests on it.
+        let cl = Cluster::new(4, 4, 2);
+        let structure = |p: &Persona, op: OpKind, c: u64| -> &'static str {
+            match op {
+                OpKind::Bcast => p.native_bcast(cl, 0, c).schedule.algorithm,
+                OpKind::Scatter => p.native_scatter(cl, 0, c).schedule.algorithm,
+                OpKind::Gather => p.native_gather(cl, 0, c).schedule.algorithm,
+                OpKind::Allgather => p.native_allgather(cl, c).schedule.algorithm,
+                OpKind::Alltoall => p.native_alltoall(cl, c).schedule.algorithm,
+            }
+        };
+        for name in PersonaName::all() {
+            let p = Persona::get(name);
+            for op in OpKind::ALL {
+                let breaks = p.native_structure_breaks(op);
+                for &b in &breaks {
+                    assert!(b > 1, "{name:?} {op}: break {b} below domain");
+                    assert_ne!(
+                        structure(&p, op, b - 1),
+                        structure(&p, op, b),
+                        "{name:?} {op}: no structure change at advertised break {b}"
+                    );
+                }
+                // Cell interiors: walk [1, 100k] boundaries and probe
+                // that structure is constant between adjacent breaks.
+                let mut bounds = vec![1u64];
+                bounds.extend(breaks.iter().copied());
+                bounds.push(100_001);
+                for w in bounds.windows(2) {
+                    let (lo, hi) = (w[0], w[1] - 1);
+                    let probe = [lo, (lo + hi) / 2, hi];
+                    for c in probe {
+                        assert_eq!(
+                            structure(&p, op, lo),
+                            structure(&p, op, c),
+                            "{name:?} {op}: structure changes inside cell [{lo}, {hi}] at {c}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

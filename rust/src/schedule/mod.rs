@@ -357,6 +357,96 @@ impl CountSizer {
         self.nblocks.is_empty()
     }
 
+    /// Byte size of transfer `i` (round-major index) at element count
+    /// `c` — one slot of [`CountSizer::resize_count_into`], same exact
+    /// u64 arithmetic.
+    pub fn bytes_at(&self, i: usize, c: u64) -> u64 {
+        let eb = self.elem_bytes;
+        if self.parts == 0 {
+            c * self.nblocks[i] * eb
+        } else {
+            let base = c / self.parts;
+            let extra = c % self.parts;
+            let ids = &self.ids[self.id_off[i] as usize..self.id_off[i + 1] as usize];
+            let below = ids.partition_point(|&id| id < extra) as u64;
+            (self.nblocks[i] * base + below) * eb
+        }
+    }
+
+    /// `bytes_at` in overflow-proof u128 arithmetic, for domain-bound
+    /// and crossover searches that probe counts past the u64-safe
+    /// range.
+    fn bytes_at_wide(&self, i: usize, c: u64) -> u128 {
+        let eb = u128::from(self.elem_bytes);
+        let nb = u128::from(self.nblocks[i]);
+        if self.parts == 0 {
+            u128::from(c) * nb * eb
+        } else {
+            let base = u128::from(c / self.parts);
+            let extra = c % self.parts;
+            let ids = &self.ids[self.id_off[i] as usize..self.id_off[i + 1] as usize];
+            let below = ids.partition_point(|&id| id < extra) as u128;
+            (nb * base + below) * eb
+        }
+    }
+
+    /// The largest element count at which **every** transfer's byte
+    /// size still fits in u64 — the overflow-safe certification domain
+    /// bound. `bytes(c)` is non-decreasing in `c` per transfer (Uniform
+    /// is affine, Split a monotone staircase), so the bound is exact.
+    /// A schedule with no transfers (or only empty ones) is safe at any
+    /// count.
+    pub fn max_safe_count(&self) -> u64 {
+        let mut safe = u64::MAX;
+        for i in 0..self.nblocks.len() {
+            if self.bytes_at_wide(i, safe) <= u128::from(u64::MAX) {
+                continue;
+            }
+            // Largest c with bytes(c) <= u64::MAX; bytes(0) = 0 always
+            // fits, so lo is a valid floor.
+            let (mut lo, mut hi) = (0u64, safe);
+            while lo < hi {
+                let mid = lo + (hi - lo).div_ceil(2);
+                if self.bytes_at_wide(i, mid) <= u128::from(u64::MAX) {
+                    lo = mid;
+                } else {
+                    hi = mid - 1;
+                }
+            }
+            safe = lo;
+        }
+        safe
+    }
+
+    /// The smallest count in `[1, hi]` at which transfer `i` exceeds
+    /// `threshold` bytes — the eager→rendezvous crossover for that
+    /// transfer. `None` when the transfer never exceeds the threshold
+    /// within the domain (including `threshold == u64::MAX`). Uniform
+    /// sizing solves in closed form; Split binary-searches the monotone
+    /// staircase (≤ 64 evaluations, exact integers throughout).
+    pub fn first_count_above(&self, i: usize, threshold: u64, hi: u64) -> Option<u64> {
+        if hi == 0 || self.bytes_at_wide(i, hi) <= u128::from(threshold) {
+            return None;
+        }
+        if self.parts == 0 {
+            // bytes = c·nb·eb > T  ⇔  c > T / (nb·eb)  (exact floor div;
+            // nb·eb > 0 here, else bytes(hi) would be 0 ≤ threshold).
+            let per = u128::from(self.nblocks[i]) * u128::from(self.elem_bytes);
+            let c = u128::from(threshold) / per + 1;
+            return u64::try_from(c).ok().filter(|&c| c >= 1 && c <= hi);
+        }
+        let (mut lo, mut hi) = (1u64, hi);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if self.bytes_at_wide(i, mid) > u128::from(threshold) {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        Some(lo)
+    }
+
     /// [`Schedule::resize_count`], flat form: write every transfer's
     /// byte size at element count `c` into `out` (round-major order) in
     /// one pass. `out.len()` must equal [`CountSizer::num_transfers`].
@@ -505,6 +595,88 @@ mod tests {
             s.resize_count(c);
             let want: Vec<u64> = s.rounds[0].transfers.iter().map(|t| t.bytes).collect();
             assert_eq!(out, want, "c={c}");
+        }
+    }
+
+    #[test]
+    fn bytes_at_matches_resize_count_into() {
+        let mut s = Schedule::new(
+            cl(),
+            Collective::Bcast { root: 0, c: 10, segments: 3 },
+            "test",
+        );
+        let t0 = s.transfer(0, 1, BlockSet::range(1, 3));
+        let t1 = s.transfer(0, 2, BlockSet::single(0));
+        s.push_round(Round::of(vec![t0, t1]));
+        let sizer = s.count_sizer();
+        let mut out = vec![0u64; 2];
+        for c in [0u64, 1, 2, 3, 7, 1000] {
+            sizer.resize_count_into(c, &mut out);
+            for i in 0..2 {
+                assert_eq!(sizer.bytes_at(i, c), out[i], "i={i} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn max_safe_count_is_tight() {
+        let mut s = Schedule::new(cl(), Collective::Alltoall { c: 1 }, "test");
+        let t = s.transfer(0, 1, BlockSet::range(0, 3)); // 3 blocks x 4 bytes
+        s.push_round(Round::of(vec![t]));
+        let sizer = s.count_sizer();
+        let safe = sizer.max_safe_count();
+        assert_eq!(safe, u64::MAX / 12);
+        assert_eq!(sizer.bytes_at(0, safe), safe * 12);
+        // one past the bound overflows in u128 terms
+        let wide = u128::from(safe + 1) * 12;
+        assert!(wide > u128::from(u64::MAX));
+    }
+
+    #[test]
+    fn max_safe_count_unbounded_without_transfers() {
+        let s = Schedule::new(cl(), Collective::Alltoall { c: 1 }, "test");
+        assert_eq!(s.count_sizer().max_safe_count(), u64::MAX);
+    }
+
+    #[test]
+    fn first_count_above_uniform_closed_form() {
+        let mut s = Schedule::new(cl(), Collective::Scatter { root: 0, c: 1 }, "test");
+        let t = s.transfer(0, 1, BlockSet::range(0, 2)); // 2 blocks: bytes = 8c
+        s.push_round(Round::of(vec![t]));
+        let sizer = s.count_sizer();
+        // 8c > 4096  ⇔  c >= 513
+        assert_eq!(sizer.first_count_above(0, 4096, 1 << 40), Some(513));
+        assert_eq!(sizer.bytes_at(0, 512), 4096);
+        assert_eq!(sizer.bytes_at(0, 513), 4104);
+        assert_eq!(sizer.first_count_above(0, 4096, 512), None);
+        assert_eq!(sizer.first_count_above(0, u64::MAX, u64::MAX), None);
+        assert_eq!(sizer.first_count_above(0, 0, 100), Some(1));
+    }
+
+    #[test]
+    fn first_count_above_split_staircase() {
+        // 3-way split, transfer carries segments {1, 2}: the staircase
+        // steps unevenly with c % 3.
+        let mut s = Schedule::new(
+            cl(),
+            Collective::Bcast { root: 0, c: 10, segments: 3 },
+            "test",
+        );
+        let t = s.transfer(0, 1, BlockSet::range(1, 3));
+        s.push_round(Round::of(vec![t]));
+        let sizer = s.count_sizer();
+        for threshold in [0u64, 4, 8, 100, 4096] {
+            let hit = sizer.first_count_above(0, threshold, 1 << 20);
+            match hit {
+                Some(c) => {
+                    assert!(sizer.bytes_at(0, c) > threshold, "t={threshold}");
+                    assert!(
+                        c == 1 || sizer.bytes_at(0, c - 1) <= threshold,
+                        "t={threshold} not minimal"
+                    );
+                }
+                None => assert!(sizer.bytes_at(0, 1 << 20) <= threshold),
+            }
         }
     }
 

@@ -36,6 +36,12 @@
 //!   resolved against the registry when the snapshot is compiled —
 //!   the query path never touches the registry or the book.
 
+// The service must answer malformed input with an error line, never a
+// panic: no unwrap/expect anywhere in serve (lock poisoning is handled
+// by into_inner — the snapshot swap is a single assignment and cannot
+// tear).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod wire;
 
 use std::fmt;

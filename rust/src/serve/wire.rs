@@ -304,6 +304,8 @@ fn query_fields<'a>(cur: &mut Cursor<'a>, mut key: &'a str) -> Result<Query, Str
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
 
     /// A well-formed query line with one field spliced in.

@@ -888,6 +888,27 @@ pub fn dispatch(
     auto_table(cluster, persona, op)?.resolve(c)
 }
 
+/// The whole decision table [`dispatch`] would consult for (cluster,
+/// persona, op) — the installed book's table if one covers the
+/// scenario, else the cached auto-built table. The symbolic certifier
+/// reads the table's breakpoints to partition count space exactly
+/// where `tuned` switches algorithms. A separate entry point (not a
+/// refactor of [`dispatch`]) on purpose: the serve hot path calls
+/// `dispatch` per query and must stay allocation-free, while this
+/// clones installed tables into an `Arc` once per certification entry.
+pub fn dispatch_table(
+    cluster: Cluster,
+    persona: PersonaName,
+    op: OpKind,
+) -> Result<Arc<DecisionTable>, AlgError> {
+    if let Some(book) = installed() {
+        if let Some(t) = book.get(cluster, op, persona) {
+            return Ok(Arc::new(t.clone()));
+        }
+    }
+    auto_table(cluster, persona, op)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

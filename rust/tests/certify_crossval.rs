@@ -1,0 +1,105 @@
+//! Differential property test for the symbolic certifier: a
+//! certificate's verdict for an interval must be **bitwise-identical**
+//! (serialized JSON, so ordering and truncation notices included) to
+//! what the concrete `analyze` driver produces on a freshly built
+//! schedule at any count inside that interval.
+//!
+//! Sampling at each interval endpoint, one step inside each endpoint,
+//! and one interior point exercises exactly the places an off-by-one in
+//! the crossover arithmetic would show up: a threshold computed one
+//! count too early or late moves a boundary, and the fresh concrete
+//! build at the stale boundary then disagrees with the certificate.
+
+use mlane::algorithms::registry::{registry, Alg, OpKind};
+use mlane::analysis::{analyze, certify, CertifyOptions, LintConfig};
+use mlane::model::{Persona, PersonaName};
+use mlane::topology::Cluster;
+use mlane::tuning;
+
+/// Sample points for `[lo, hi]`: endpoints, endpoint±1, interior.
+fn samples(lo: u64, hi: u64) -> Vec<u64> {
+    let mut out = vec![lo, hi, lo.saturating_add(1).min(hi), hi.saturating_sub(1).max(lo)];
+    out.push(lo + (hi - lo) / 2);
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// The port budget the certificate claims for this interval must match
+/// what a concrete lint at count `c` would use (`cmd_lint` semantics:
+/// `tuned` verifies the *dispatched* algorithm's budget).
+fn concrete_ports(alg: &Alg, cl: Cluster, persona: &Persona, op: OpKind, c: u64) -> u32 {
+    if alg.name() == "tuned" {
+        let d = tuning::dispatch(cl, persona.name, op, c)
+            .unwrap_or_else(|e| panic!("dispatch {op} c={c}: {e}"));
+        d.ports_required(cl, op)
+    } else {
+        alg.ports_required(cl, op)
+    }
+}
+
+fn crossval(cl: Cluster, opts: &CertifyOptions, rendezvous: Option<(u64, u64)>) {
+    let persona = Persona::get(PersonaName::OpenMpi);
+    for alg in registry().validation_instances(cl) {
+        for op in OpKind::ALL {
+            if !alg.supports(op) {
+                continue;
+            }
+            let cert = certify(&alg, cl, &persona, op, opts)
+                .unwrap_or_else(|e| panic!("certify {} {op} on {cl:?}: {e}", alg.label()));
+            for iv in &cert.intervals {
+                for c in samples(iv.lo, iv.hi) {
+                    let ctx = format!("{} {op} on {cl:?} c={c}", alg.label());
+                    assert_eq!(
+                        iv.port_limit,
+                        concrete_ports(&alg, cl, &persona, op, c),
+                        "{ctx}: port budget drifts inside [{}, {}]",
+                        iv.lo,
+                        iv.hi
+                    );
+                    let built = alg
+                        .build(cl, &persona, op.op(c))
+                        .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+                    assert_eq!(
+                        built.schedule.algorithm, iv.structure,
+                        "{ctx}: structure drifts inside [{}, {}]",
+                        iv.lo, iv.hi
+                    );
+                    let mut cfg = LintConfig::new(iv.port_limit);
+                    if let Some((net, shm)) = rendezvous {
+                        cfg = cfg.with_rendezvous(net, shm);
+                    }
+                    cfg.max_per_lint = opts.max_per_lint;
+                    let concrete = analyze(&built.schedule, &cfg);
+                    assert_eq!(
+                        iv.analysis.to_json(),
+                        concrete.to_json(),
+                        "{ctx}: certificate verdict differs from concrete analyze"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn certificates_match_concrete_analyze_buffered() {
+    // Default options: buffered MPI (no rendezvous), intervals cut only
+    // at structure breaks and eager-mode crossovers.
+    for cl in [Cluster::new(2, 2, 1), Cluster::new(3, 5, 2)] {
+        crossval(cl, &CertifyOptions::default(), None);
+    }
+}
+
+#[test]
+fn certificates_match_concrete_analyze_rendezvous() {
+    // A finite rendezvous limit arms the deadlock pass and adds byte
+    // crossovers at the limit itself — the interval boundaries most
+    // likely to be off by one.
+    let opts = CertifyOptions {
+        rendezvous_net: 4096,
+        rendezvous_shm: 4096,
+        ..CertifyOptions::default()
+    };
+    crossval(Cluster::new(3, 5, 2), &opts, Some((4096, 4096)));
+}

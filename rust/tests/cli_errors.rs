@@ -111,6 +111,9 @@ fn help_and_algs_are_registry_driven() {
         "lint",
         "--eager-limit",
         "--max-per-lint",
+        "certify",
+        "--max-count",
+        "crossovers",
         "serve",
         "zero-alloc",
         "--once",
@@ -154,6 +157,62 @@ fn lint_smoke_full_registry_exits_clean() {
 }
 
 #[test]
+fn lint_truncated_info_notices_never_flip_exit() {
+    // Regression guard on the exit-code contract: only error-severity
+    // findings flip `lint` (and `certify`) to exit 1. A lanes-starved
+    // alltoall floods lane-contention warnings; with --max-per-lint 1
+    // everything past the first is dropped and surfaced as
+    // info-severity `truncated` notices — warnings and notices alike
+    // must leave the exit at 0.
+    let fixture = [
+        "lint", "--nodes", "2", "--cores", "4", "--lanes", "1", "--alg", "kported:4",
+        "--op", "alltoall", "--max-per-lint", "1",
+    ];
+    let out = mlane(&fixture);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.contains("[truncated]"), "no truncation notice in: {s}");
+    assert!(s.contains(" 0 error(s)"), "{s}");
+
+    // Same through JSON: the notices really carry info severity.
+    let mut json_args = fixture.to_vec();
+    json_args.extend_from_slice(&["--format", "json"]);
+    let out = mlane(&json_args);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.contains("\"code\":\"truncated\""), "{s}");
+    assert!(s.contains("\"severity\":\"info\",\"code\":\"truncated\""), "{s}");
+}
+
+#[test]
+fn lint_counts_series_replays_one_arena() {
+    // --counts on a cache-id algorithm takes the series path (one build,
+    // one flow replay across the whole list); the report must still be
+    // one entry per count, in order.
+    let out = mlane(&[
+        "lint", "--nodes", "2", "--cores", "4", "--lanes", "2", "--alg", "kported:2",
+        "--op", "bcast", "--counts", "1,64,4096", "--format", "json",
+    ]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.contains("\"schedules\": 3"), "{s}");
+    for needle in ["\"count\":1,", "\"count\":64,", "\"count\":4096,"] {
+        assert!(s.contains(needle), "series entry missing {needle}: {s}");
+    }
+
+    // A count whose byte sizes overflow u64 is a clean error, not a
+    // wrapped size or a panic.
+    let out = mlane(&[
+        "lint", "--nodes", "2", "--cores", "4", "--lanes", "2", "--alg", "kported:2",
+        "--op", "bcast", "--counts", "1,18446744073709551615",
+    ]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("overflows byte sizes"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+#[test]
 fn lint_flag_errors_are_clean() {
     let out = mlane(&["lint", "--nodes", "2", "--cores", "2", "--format", "nosuch"]);
     assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
@@ -175,6 +234,67 @@ fn lint_flag_errors_are_clean() {
     ]);
     assert_eq!(out.status.code(), Some(1));
     assert!(stderr(&out).contains("nothing to lint"), "{}", stderr(&out));
+}
+
+#[test]
+fn certify_smoke_full_registry_exits_clean() {
+    // The certification acceptance path through a real process: the
+    // whole registry on a small cluster certifies every count in
+    // [1, max] with zero error-severity intervals.
+    let out = mlane(&["certify", "--nodes", "2", "--cores", "2", "--lanes", "2"]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.contains("certified "), "no summary line: {s}");
+    assert!(s.contains(" 0 error(s)"), "errors on a clean registry: {s}");
+    assert!(s.contains("[fingerprint "), "no fingerprint: {s}");
+
+    // JSON is the machine-readable certificate set: strict, with the
+    // spec fingerprint and per-interval verdicts.
+    let out = mlane(&[
+        "certify", "--nodes", "2", "--cores", "2", "--lanes", "2", "--format", "json",
+    ]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.trim_start().starts_with('{'), "{s}");
+    assert!(s.contains("\"fingerprint\": \""), "{s}");
+    assert!(s.contains("\"certificates\": ["), "{s}");
+    assert!(s.contains("\"intervals\":["), "{s}");
+    assert!(s.contains("\"crossovers\":["), "{s}");
+    assert!(s.contains("\"errors\": 0"), "{s}");
+
+    // --max-count bounds the domain (and changes the fingerprint, but
+    // the verdicts must stay clean).
+    let out = mlane(&[
+        "certify", "--nodes", "2", "--cores", "2", "--lanes", "2", "--alg", "kported:2",
+        "--op", "bcast", "--max-count", "1024",
+    ]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", stderr(&out));
+    assert!(stdout(&out).contains("[1, 1024]"), "{}", stdout(&out));
+}
+
+#[test]
+fn certify_flag_errors_are_clean() {
+    let out = mlane(&["certify", "--nodes", "2", "--cores", "2", "--format", "nosuch"]);
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", stderr(&out));
+    assert!(stderr(&out).contains("unknown format nosuch"), "{}", stderr(&out));
+
+    let out = mlane(&["certify", "--nodes", "2", "--cores", "2", "--max-count", "0"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("bad --max-count value"), "{}", stderr(&out));
+
+    // certify is a symbolic sweep over *all* counts: --counts is a lint
+    // flag and must be rejected, not silently ignored.
+    let out = mlane(&["certify", "--nodes", "2", "--cores", "2", "--counts", "1,64"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("unknown flag --counts"), "{}", stderr(&out));
+
+    // An op/alg narrowing with an empty intersection is an error, not a
+    // vacuously green certificate set.
+    let out = mlane(&[
+        "certify", "--nodes", "2", "--cores", "2", "--op", "bcast", "--alg", "ring",
+    ]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("nothing to certify"), "{}", stderr(&out));
 }
 
 #[test]

@@ -1,23 +1,24 @@
-//! Registry-exhaustive validation, rewritten on the static-analysis
-//! driver: every registered algorithm × every operation it supports ×
-//! a grid of cluster shapes must lint **clean of errors** under the
-//! algorithm's own `ports_required` — causality, port budget, delivery,
-//! and endpoint/block sanity all come from one `analyze` call, and the
-//! exhaustive driver reports *every* finding, not just the first.
+//! Registry-exhaustive validation, rewritten on **certificates**: every
+//! registered algorithm × every operation it supports × a grid of
+//! cluster shapes is certified clean of errors over the *entire* count
+//! domain `[1, max]` — not a sampled handful of counts. The symbolic
+//! driver partitions the domain at structure breaks and exact
+//! eager/rendezvous byte crossovers and proves one verdict per
+//! interval, so a clean report here covers every count a user could
+//! pass.
 //!
-//! This replaces the old hand-maintained checklist in `cmd_validate`:
-//! a newly registered algorithm (e.g. the two-phase k-lane broadcast
-//! variant, `klane2p`) is covered here with **no edits to this test**.
+//! This replaces the old per-count spot checks: a newly registered
+//! algorithm (e.g. the two-phase k-lane broadcast variant, `klane2p`)
+//! is covered here with **no edits to this test**.
 
 use mlane::algorithms::registry::{registry, OpKind};
-use mlane::analysis::{analyze, codes, LintConfig};
+use mlane::analysis::{analyze, certify, certify_registry, codes, CertifyOptions, LintConfig};
 use mlane::model::{Persona, PersonaName};
-use mlane::schedule::Schedule;
 use mlane::topology::Cluster;
 use mlane::tuning;
 
 /// Small, structure-exercising counts (uneven splits included via the
-/// 3×5 cluster below).
+/// 3×5 cluster below) for the concrete spot checks that remain.
 fn count_for(op: OpKind) -> u64 {
     match op {
         OpKind::Bcast => 64,
@@ -31,76 +32,84 @@ fn clusters() -> [Cluster; 3] {
     [Cluster::new(2, 2, 1), Cluster::new(4, 4, 2), Cluster::new(3, 5, 2)]
 }
 
-/// Lint `s` under `ports` and panic with the full diagnostic list if
-/// any error-severity finding survives.
-fn assert_lints_clean(s: &Schedule, ports: u32, ctx: &str) {
-    let a = analyze(s, &LintConfig::new(ports));
-    assert!(
-        a.is_clean(),
-        "{ctx}: {} has {} error diagnostic(s):\n{}",
-        s.algorithm,
-        a.errors(),
-        a.text()
-    );
-}
-
 #[test]
-fn every_registered_algorithm_lints_clean_on_every_supported_op() {
+fn every_registered_algorithm_certifies_clean_on_every_supported_op() {
     let persona = Persona::get(PersonaName::OpenMpi);
-    let mut checked = 0usize;
+    let opts = CertifyOptions::default();
+    let mut certified = 0usize;
     for cl in clusters() {
+        let report = certify_registry(cl, &persona, &OpKind::ALL, &opts)
+            .unwrap_or_else(|e| panic!("certify_registry on {cl:?}: {e}"));
+        assert_eq!(report.errors(), 0, "{cl:?} has error intervals:\n{}", report.text());
+        for cert in &report.certificates {
+            let ctx = format!("{} {} on {cl:?}", cert.algorithm, cert.op.name());
+            // The intervals must tile [1, max_count] gap-free, in order.
+            assert!(!cert.intervals.is_empty(), "{ctx}: empty certificate");
+            let mut next = 1u64;
+            for iv in &cert.intervals {
+                assert_eq!(iv.lo, next, "{ctx}: gap before [{}, {}]", iv.lo, iv.hi);
+                assert!(iv.hi >= iv.lo, "{ctx}: inverted interval");
+                next = iv.hi.saturating_add(1);
+            }
+            assert_eq!(
+                cert.intervals.last().unwrap().hi,
+                cert.max_count,
+                "{ctx}: domain ceiling mismatch"
+            );
+            certified += cert.intervals.len();
+        }
+        // Unsupported pairs must be typed errors, not panics — and must
+        // stay *out* of the report.
         for alg in registry().validation_instances(cl) {
             for op in OpKind::ALL {
                 if !alg.supports(op) {
-                    // Unsupported pairs must be typed errors, not panics.
                     assert!(
                         alg.build(cl, &persona, op.op(count_for(op))).is_err(),
                         "{} should reject {op}",
                         alg.label()
                     );
-                    continue;
                 }
-                let c = count_for(op);
-                let built = alg
-                    .build(cl, &persona, op.op(c))
-                    .unwrap_or_else(|e| panic!("{} {op} on {cl:?}: {e}", alg.label()));
-                // `tuned` is a meta-entry: what it built is the schedule
-                // of whatever its decision table dispatched to, so the
-                // port budget to verify is the *dispatched* algorithm's
-                // own, not the meta budget (max over candidates) — a
-                // 1-ported winner must still fit 1 port.
-                let ports = if alg.name() == "tuned" {
-                    let d = tuning::dispatch(cl, PersonaName::OpenMpi, op, c)
-                        .unwrap_or_else(|e| panic!("tuned {op} on {cl:?}: {e}"));
-                    assert_ne!(d.name(), "tuned", "self-dispatch");
-                    d.ports_required(cl, op)
-                } else {
-                    alg.ports_required(cl, op)
-                };
-                assert_lints_clean(&built.schedule, ports, &format!("{op} on {cl:?}"));
-                checked += 1;
             }
         }
     }
-    // Sanity: the sweep actually covered a substantial grid (9 families,
-    // parameterized ones over k ranges, up to 5 ops each).
-    assert!(checked >= 60, "only {checked} combinations checked");
+    // Sanity: the sweep really covered a substantial grid (10 families,
+    // parameterized ones over k ranges, up to 5 ops each, multiple
+    // intervals per entry).
+    assert!(certified >= 100, "only {certified} intervals certified");
 }
 
 #[test]
-fn native_schedules_lint_clean_for_every_persona() {
-    // Native selection depends on the persona; exercise all three.
+fn native_certifies_clean_for_every_persona() {
+    // Native selection depends on the persona; certify all three over
+    // the full count domain so every structure break is covered from
+    // both sides, not just at spot counts.
     let cl = Cluster::new(3, 4, 2);
     let native = registry().resolve("native", 0).unwrap();
+    let opts = CertifyOptions::default();
     for name in PersonaName::all() {
         let persona = Persona::get(name);
         for op in OpKind::ALL {
-            for c in [1u64, 64, 100_000] {
-                let built = native
-                    .build(cl, &persona, op.op(c))
-                    .unwrap_or_else(|e| panic!("native {op} c={c}: {e}"));
-                let ports = native.ports_required(cl, op);
-                assert_lints_clean(&built.schedule, ports, &format!("{name:?} native {op} c={c}"));
+            let cert = certify(&native, cl, &persona, op, &opts)
+                .unwrap_or_else(|e| panic!("native {op} [{name:?}]: {e}"));
+            assert_eq!(cert.errors(), 0, "{name:?} native {op} has error intervals");
+            // Every persona switches native structure at least once for
+            // bcast/allgather/alltoall — the certificate must see it.
+            let distinct: std::collections::BTreeSet<&str> =
+                cert.intervals.iter().map(|iv| iv.structure).collect();
+            match op {
+                OpKind::Bcast | OpKind::Allgather | OpKind::Alltoall => {
+                    assert!(
+                        distinct.len() >= 2,
+                        "{name:?} native {op}: expected a structure switch, got {distinct:?}"
+                    );
+                }
+                OpKind::Scatter | OpKind::Gather => {
+                    assert_eq!(
+                        distinct.len(),
+                        1,
+                        "{name:?} native {op}: unexpected structure switch {distinct:?}"
+                    );
+                }
             }
         }
     }
@@ -131,11 +140,8 @@ fn tuned_dispatch_lints_clean_for_every_persona() {
                     built.schedule.algorithm, direct.schedule.algorithm,
                     "{name:?} {op} c={c}"
                 );
-                assert_lints_clean(
-                    &built.schedule,
-                    d.ports_required(cl, op),
-                    &format!("{name:?} tuned {op} c={c}"),
-                );
+                let a = analyze(&built.schedule, &LintConfig::new(d.ports_required(cl, op)));
+                assert!(a.is_clean(), "{name:?} tuned {op} c={c}:\n{}", a.text());
             }
         }
     }
